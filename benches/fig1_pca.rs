@@ -1,0 +1,71 @@
+//! Fig. 1 bench: the gradient-space analysis machinery — incremental
+//! Gram-PCA updates, the Jacobi eigensolve, and PGD extraction — at the
+//! gradient dimensions of the real model zoo.
+
+use fedrecycle::bench::Bencher;
+use fedrecycle::linalg::gram_pca::GramPca;
+use fedrecycle::linalg::jacobi::eigh;
+use fedrecycle::util::rng::Rng;
+
+fn grads(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    // Low-rank-ish family: 5 latents + noise (realistic per Fig. 1).
+    let mut r = Rng::new(seed);
+    let latents: Vec<Vec<f32>> = (0..5)
+        .map(|_| (0..dim).map(|_| r.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let mut g = vec![0f32; dim];
+            for l in &latents {
+                let c = r.normal_f32(0.0, 1.0);
+                for (gi, li) in g.iter_mut().zip(l) {
+                    *gi += c * li;
+                }
+            }
+            for gi in g.iter_mut() {
+                *gi += r.normal_f32(0.0, 0.1);
+            }
+            g
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env("fig1_pca");
+
+    // Incremental Gram push at fcn_mnist scale (M=109k) and 40 epochs.
+    for (label, dim) in [("109k", 109_386), ("402k", 402_250)] {
+        let gs = grads(40, dim, 1);
+        b.bench(&format!("gram_push_40epochs_M{label}"), || {
+            let mut pca = GramPca::new(dim);
+            for g in &gs {
+                pca.push(g.clone());
+            }
+            pca.len()
+        });
+        let mut pca = GramPca::new(dim);
+        for g in &gs {
+            pca.push(g.clone());
+        }
+        b.bench(&format!("n_pca_M{label}"), || pca.n_pca());
+        b.bench(&format!("pgd_extract_M{label}"), || {
+            pca.principal_directions(0.99).len()
+        });
+    }
+
+    // Pure eigensolver scaling (the per-epoch analysis cost).
+    for n in [20usize, 60, 120] {
+        let mut r = Rng::new(2);
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = r.normal();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        b.bench(&format!("jacobi_eigh_{n}x{n}"), || eigh(&a, n));
+    }
+
+    b.finish();
+}

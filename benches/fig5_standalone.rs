@@ -1,0 +1,65 @@
+//! Fig. 5 bench: end-to-end round throughput of vanilla FL vs LBGM on the
+//! PJRT path (one dataset arm at smoke scale), plus a mock-federation
+//! version isolating coordinator overhead from model compute.
+
+use fedrecycle::bench::Bencher;
+use fedrecycle::compress::Identity;
+use fedrecycle::config::ExperimentConfig;
+use fedrecycle::coordinator::round::{run_fl, FlConfig};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::figures::common::run_arm;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::runtime::{Manifest, Runtime};
+
+fn main() {
+    let mut b = Bencher::new("fig5_standalone", 5, 1);
+
+    // Coordinator-only cost (mock trainer, M=100k, K=10, 10 rounds).
+    for (name, delta) in [("vanilla", -1.0), ("lbgm_d0.2", 0.2)] {
+        b.bench(&format!("mock_10rounds_100k_{name}"), || {
+            let mut t = MockTrainer::new(100_000, 10, 0.2, 0.05, 1);
+            let cfg = FlConfig {
+                rounds: 10,
+                tau: 2,
+                eta: 0.05,
+                policy: ThresholdPolicy::fixed(delta),
+                eval_every: 5,
+                seed: 1,
+                ..Default::default()
+            };
+            run_fl(&mut t, vec![0.0; 100_000], &cfg, &|| Box::new(Identity), "b")
+                .unwrap()
+                .ledger
+                .total_floats
+        });
+    }
+
+    // Real PJRT arm (smoke scale).
+    if let Ok(m) = Manifest::load(&Manifest::default_dir()) {
+        let rt = Runtime::cpu().unwrap();
+        for (name, delta) in [("vanilla", -1.0), ("lbgm_d0.2", 0.2)] {
+            let cfg = ExperimentConfig {
+                variant: "fcn_mnist".into(),
+                dataset: "synth_mnist".into(),
+                workers: 5,
+                rounds: 5,
+                tau: 2,
+                eta: 0.05,
+                delta,
+                noniid: true,
+                train_n: 400,
+                test_n: 64,
+                eval_every: 10,
+                seed: 1,
+                ..Default::default()
+            };
+            b.bench(&format!("pjrt_5rounds_fcn_mnist_{name}"), || {
+                run_arm(&rt, &m, &cfg, "b").unwrap().ledger.total_floats
+            });
+        }
+    } else {
+        eprintln!("(artifacts missing: skipping PJRT arm)");
+    }
+
+    b.finish();
+}

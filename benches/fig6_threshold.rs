@@ -1,0 +1,52 @@
+//! Fig. 6 bench: the delta-threshold sweep on the mock federation —
+//! measures how the scalar-send fraction (and hence uplink volume) responds
+//! to delta, the mechanism behind the paper's trade-off curves.
+
+use fedrecycle::bench::Bencher;
+use fedrecycle::compress::Identity;
+use fedrecycle::coordinator::round::{run_fl, FlConfig};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::lbgm::ThresholdPolicy;
+
+fn main() {
+    let mut b = Bencher::new("fig6_threshold", 5, 1);
+    println!("# scalar-fraction response (informational):");
+    for delta in [0.01, 0.05, 0.2, 0.4, 0.8] {
+        let mut t = MockTrainer::new(50_000, 10, 0.2, 0.05, 2);
+        let cfg = FlConfig {
+            rounds: 20,
+            tau: 2,
+            eta: 0.05,
+            policy: ThresholdPolicy::fixed(delta),
+            eval_every: 10,
+            seed: 2,
+            ..Default::default()
+        };
+        let out = run_fl(&mut t, vec![0.0; 50_000], &cfg, &|| Box::new(Identity), "s")
+            .unwrap();
+        println!(
+            "#   delta={delta:<5} scalar={:.1}% floats={}",
+            100.0 * out.series.scalar_fraction(),
+            out.ledger.total_floats
+        );
+    }
+    for delta in [0.05, 0.4] {
+        b.bench(&format!("sweep_20rounds_50k_d{delta}"), || {
+            let mut t = MockTrainer::new(50_000, 10, 0.2, 0.05, 2);
+            let cfg = FlConfig {
+                rounds: 20,
+                tau: 2,
+                eta: 0.05,
+                policy: ThresholdPolicy::fixed(delta),
+                eval_every: 10,
+                seed: 2,
+                ..Default::default()
+            };
+            run_fl(&mut t, vec![0.0; 50_000], &cfg, &|| Box::new(Identity), "s")
+                .unwrap()
+                .ledger
+                .total_floats
+        });
+    }
+    b.finish();
+}

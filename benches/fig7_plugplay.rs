@@ -1,0 +1,48 @@
+//! Fig. 7 bench: codec encode cost + plug-and-play LBGM stacking overhead
+//! at real gradient dimensions — quantifies the paper's complexity table
+//! (top-K O(M log M), ATOMO O(M^2-ish), LBGM O(M)).
+
+use fedrecycle::bench::Bencher;
+use fedrecycle::compress::{Atomo, Compressor, ErrorFeedback, TopK};
+use fedrecycle::coordinator::Worker;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::util::rng::Rng;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env("fig7_plugplay");
+    const M: usize = 268_650; // cnn_cifar gradient dimension
+
+    let g = randv(M, 1);
+    b.throughput(M as u64).bench("topk_ef_encode", || {
+        let mut ef = ErrorFeedback::new(TopK::new(0.1));
+        let mut x = g.clone();
+        ef.compress(&mut x)
+    });
+    b.throughput(M as u64).bench("atomo_rank2_encode", || {
+        let mut x = g.clone();
+        Atomo::new(2).compress(&mut x)
+    });
+
+    // Full worker-side uplink path: codec + projection + policy.
+    for (name, delta) in [("always_full", -1.0), ("lbgm", 0.5)] {
+        b.throughput(M as u64).bench(&format!("worker_uplink_topk_{name}"), || {
+            let mut w = Worker::new(0, Box::new(ErrorFeedback::new(TopK::new(0.1))));
+            let policy = ThresholdPolicy::fixed(delta);
+            let mut rng = Rng::new(3);
+            let mut floats = 0u64;
+            for r in 0..4 {
+                let grad: Vec<f32> =
+                    g.iter().map(|x| x + rng.normal_f32(0.0, 0.01)).collect();
+                floats += w.process_round(r, grad, 0.0, &policy).cost.floats;
+            }
+            floats
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,72 @@
+//! Fig. 8 bench: SignSGD encode throughput and the distributed-training
+//! (iid, tau=1) round loop with and without LBGM stacking, reporting the
+//! bit-volume ratio the paper plots.
+
+use fedrecycle::bench::Bencher;
+use fedrecycle::compress::{Compressor, SignSgd};
+use fedrecycle::coordinator::round::{run_fl, FlConfig};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env("fig8_signsgd");
+    const M: usize = 1_000_000;
+    let g: Vec<f32> = {
+        let mut r = Rng::new(1);
+        (0..M).map(|_| r.normal_f32(0.0, 1.0)).collect()
+    };
+    b.throughput(M as u64).bench("signsgd_encode_1M", || {
+        let mut x = g.clone();
+        SignSgd.compress(&mut x)
+    });
+
+    println!("# bit-volume comparison (informational):");
+    let mut bits = Vec::new();
+    for (name, delta) in [("signsgd", -1.0), ("signsgd+lbgm", 0.3)] {
+        let mut t = MockTrainer::new(50_000, 8, 0.0, 0.05, 4); // iid: spread 0
+        let cfg = FlConfig {
+            rounds: 20,
+            tau: 1,
+            eta: 0.05,
+            policy: ThresholdPolicy::fixed(delta),
+            eval_every: 10,
+            seed: 4,
+            ..Default::default()
+        };
+        let out = run_fl(&mut t, vec![0.0; 50_000], &cfg, &|| Box::new(SignSgd), "s")
+            .unwrap();
+        println!(
+            "#   {name:<14} bits={} scalar={:.1}%",
+            out.ledger.total_bits,
+            100.0 * out.series.scalar_fraction()
+        );
+        bits.push(out.ledger.total_bits);
+    }
+    if bits.len() == 2 && bits[0] > 0 {
+        println!(
+            "#   LBGM bit saving over SignSGD: {:.1}%",
+            100.0 * (1.0 - bits[1] as f64 / bits[0] as f64)
+        );
+    }
+
+    for (name, delta) in [("signsgd", -1.0), ("signsgd_lbgm", 0.3)] {
+        b.bench(&format!("dist_20rounds_50k_{name}"), || {
+            let mut t = MockTrainer::new(50_000, 8, 0.0, 0.05, 4);
+            let cfg = FlConfig {
+                rounds: 20,
+                tau: 1,
+                eta: 0.05,
+                policy: ThresholdPolicy::fixed(delta),
+                eval_every: 10,
+                seed: 4,
+                ..Default::default()
+            };
+            run_fl(&mut t, vec![0.0; 50_000], &cfg, &|| Box::new(SignSgd), "s")
+                .unwrap()
+                .ledger
+                .total_bits
+        });
+    }
+    b.finish();
+}

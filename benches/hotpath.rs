@@ -1,0 +1,79 @@
+//! Hot-path micro-benchmarks: everything on the per-round critical path.
+//!
+//! LBGM's complexity claim (paper Sec. 4) is that its per-round overhead —
+//! one fused projection per worker — is negligible next to codecs like
+//! top-K (O(M log M)) and ATOMO (SVD). This bench quantifies exactly that,
+//! plus the PJRT grad-step itself when artifacts are present.
+
+use fedrecycle::bench::Bencher;
+use fedrecycle::compress::{Atomo, Compressor, SignSgd, TopK};
+use fedrecycle::lbgm::reconstruct::apply_scalar;
+use fedrecycle::linalg::vec_ops::{dot, norm2, projection_stats, projection_stats_cached};
+use fedrecycle::runtime::client::Feed;
+use fedrecycle::runtime::{Manifest, Runtime};
+use fedrecycle::util::rng::Rng;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env("hotpath");
+    const M: usize = 1_000_000;
+    let g = randv(M, 1);
+    let l = randv(M, 2);
+
+    // LBGM per-round worker cost: one fused projection (O(M)).
+    // `_1M` is the naive 3-reduction pass (§Perf "before"); `_cached_1M`
+    // reuses the LBG norm computed at refresh time (§Perf "after").
+    b.throughput(M as u64)
+        .bench("lbgm_projection_1M", || projection_stats(&g, &l));
+    let n2l = norm2(&l);
+    b.throughput(M as u64)
+        .bench("lbgm_projection_cached_1M", || projection_stats_cached(&g, &l, n2l));
+    b.throughput(M as u64).bench("dot_1M", || dot(&g, &l));
+
+    // Server-side scalar reconstruction (fused into aggregation).
+    let mut theta = randv(M, 3);
+    b.throughput(M as u64)
+        .bench("lbgm_apply_scalar_1M", || apply_scalar(&mut theta, &l, 0.01, 0.1, 0.5));
+
+    // Codec costs LBGM is claimed cheaper than.
+    b.throughput(M as u64).bench("topk10pct_1M", || {
+        let mut x = g.clone();
+        TopK::new(0.1).compress(&mut x)
+    });
+    let g_small = randv(65_536, 4);
+    b.throughput(65_536).bench("atomo_rank2_64k", || {
+        let mut x = g_small.clone();
+        Atomo::new(2).compress(&mut x)
+    });
+    b.throughput(M as u64).bench("signsgd_encode_1M", || {
+        let mut x = g.clone();
+        SignSgd.compress(&mut x)
+    });
+
+    // PJRT grad/eval step (the dominant per-round term).
+    if let Ok(m) = Manifest::load(&Manifest::default_dir()) {
+        let rt = Runtime::cpu().expect("pjrt client");
+        for name in ["fcn_mnist", "cnn_mnist", "cnn_cifar"] {
+            let v = m.variant(name).unwrap();
+            let (grad, _) = rt.load_variant(v).unwrap();
+            let theta = v.load_init().unwrap();
+            let x = randv(v.x_len(), 5);
+            let y: Vec<i32> = {
+                let mut r = Rng::new(6);
+                (0..v.y_len()).map(|_| r.below(10) as i32).collect()
+            };
+            b.throughput(v.param_count as u64)
+                .bench(&format!("pjrt_grad_step_{name}"), || {
+                    grad.run(&theta, Feed::F32(&x), Feed::I32(&y)).unwrap()
+                });
+        }
+    } else {
+        eprintln!("(artifacts missing: skipping PJRT grad-step benches)");
+    }
+
+    b.finish();
+}

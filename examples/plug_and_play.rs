@@ -1,0 +1,68 @@
+//! Plug-and-play demo (paper P3/P4): stack LBGM on top of top-K+EF, ATOMO
+//! and SignSGD and compare against each codec alone.
+//!
+//!     cargo run --release --example plug_and_play -- --rounds 20
+
+use fedrecycle::config::{CodecKind, ExperimentConfig};
+use fedrecycle::figures::common::run_arm;
+use fedrecycle::runtime::{Manifest, Runtime};
+use fedrecycle::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let rt = Runtime::cpu()?;
+
+    let base = ExperimentConfig {
+        variant: args.get_or("variant", "cnn_mnist"),
+        dataset: args.get_or("dataset", "synth_mnist"),
+        workers: args.usize_or("workers", 8),
+        rounds: args.usize_or("rounds", 20),
+        tau: 2,
+        eta: 0.05,
+        noniid: true,
+        labels_per_worker: 3,
+        train_n: 1200,
+        test_n: 256,
+        eval_every: 4,
+        seed: 3,
+        ..Default::default()
+    };
+
+    println!(
+        "{:<22} {:>9} {:>14} {:>14} {:>9}",
+        "codec", "accuracy", "floats", "bits", "scalar%"
+    );
+    for (name, codec) in [
+        ("topk(10%)+ef", CodecKind::TopKEf { fraction: 0.1 }),
+        ("atomo(rank2)", CodecKind::Atomo { rank: 2 }),
+        ("signsgd", CodecKind::SignSgd),
+    ] {
+        let mut base_floats = 0u64;
+        let mut base_bits = 0u64;
+        for (suffix, delta) in [("", -1.0), ("+lbgm", 0.2)] {
+            let cfg = ExperimentConfig { delta, codec, ..base.clone() };
+            let out = run_arm(&rt, &manifest, &cfg, &format!("{name}{suffix}"))?;
+            println!(
+                "{:<22} {:>8.1}% {:>14} {:>14} {:>8.1}%",
+                format!("{name}{suffix}"),
+                100.0 * out.series.final_metric(),
+                out.ledger.total_floats,
+                out.ledger.total_bits,
+                100.0 * out.series.scalar_fraction()
+            );
+            if delta < 0.0 {
+                base_floats = out.ledger.total_floats;
+                base_bits = out.ledger.total_bits;
+            } else {
+                println!(
+                    "{:<22} saving over {name}: {:.1}% floats, {:.1}% bits",
+                    "",
+                    100.0 * (1.0 - out.ledger.total_floats as f64 / base_floats as f64),
+                    100.0 * (1.0 - out.ledger.total_bits as f64 / base_bits as f64)
+                );
+            }
+        }
+    }
+    Ok(())
+}

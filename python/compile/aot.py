@@ -1,0 +1,107 @@
+"""AOT exporter: lower every L2 variant to HLO text + manifest for Rust.
+
+Build-time only (``make artifacts``); Python never runs on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published ``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per variant this writes:
+  <name>.grad.hlo.txt   (theta, x, y) -> (loss, grad)     [return_tuple]
+  <name>.eval.hlo.txt   (theta, x, y) -> (loss, metric)
+  <name>.init.f32       deterministic initial flat params (little-endian f32)
+plus one artifacts/manifest.json indexing everything (shapes, dtypes, M,
+per-layer segments) for rust/src/runtime/artifact.rs.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .models import build_variants, init_flat, segments
+
+INIT_SEED = 0x5EED
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt):
+    return np.dtype(dt).name  # "float32" / "int32"
+
+
+def export_variant(variant, out_dir):
+    m = variant.param_count
+    theta = jax.ShapeDtypeStruct((m,), np.float32)
+    x = jax.ShapeDtypeStruct(variant.x_shape, variant.x_dtype)
+    y = jax.ShapeDtypeStruct(variant.y_shape, variant.y_dtype)
+
+    entry = {
+        "name": variant.name,
+        "task": variant.task,
+        "param_count": m,
+        "batch": variant.batch,
+        "x_shape": list(variant.x_shape),
+        "x_dtype": _dtype_name(variant.x_dtype),
+        "y_shape": list(variant.y_shape),
+        "y_dtype": _dtype_name(variant.y_dtype),
+        "segments": [
+            {"name": n, "offset": off, "size": size, "shape": list(shape)}
+            for n, off, size, shape in segments(variant.spec)
+        ],
+        "notes": variant.notes,
+    }
+
+    for kind, fn in (("grad", variant.grad_step()), ("eval", variant.eval_step())):
+        path = f"{variant.name}.{kind}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(theta, x, y))
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entry[f"{kind}_hlo"] = path
+        entry[f"{kind}_hlo_sha256"] = hashlib.sha256(text.encode()).hexdigest()
+
+    init = init_flat(variant.spec, INIT_SEED)
+    assert init.shape == (m,) and init.dtype == np.float32
+    init_path = f"{variant.name}.init.f32"
+    init.tofile(os.path.join(out_dir, init_path))
+    entry["init"] = init_path
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    for variant in build_variants():
+        if only and variant.name not in only:
+            continue
+        print(f"[aot] lowering {variant.name} (M={variant.param_count}) ...",
+              flush=True)
+        entries.append(export_variant(variant, args.out))
+
+    manifest = {"version": 1, "init_seed": INIT_SEED, "variants": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} variants to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Pallas (L1) kernels for fedrecycle, plus their pure-jnp oracles."""
+
+from .aggregate import aggregate
+from .matmul import matmul
+from .projection import projection
+from .ref import aggregate_ref, matmul_ref, projection_ref
+
+__all__ = [
+    "aggregate",
+    "aggregate_ref",
+    "matmul",
+    "matmul_ref",
+    "projection",
+    "projection_ref",
+]

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: fused K-way LBG reconstruction + global model update.
+
+Server side of LBGM (paper Alg. 1 line 16): with per-worker scalars
+``c_k = omega_k * rho_k`` and the LBG matrix ``G in R^{K x M}``,
+
+    theta' = theta - eta * sum_k c_k G[k, :]
+
+is computed in a single pass over G. TPU mapping: a 2-D block (K, B) of G and
+a (B,) block of theta are resident in VMEM per grid step; the K-way weighted
+reduction is a (K,) x (K,B) dot that feeds the MXU/VPU; no atomics are
+needed because the sequential grid owns each output column block exactly
+once (the GPU version's atomicAdd tree becomes a BlockSpec schedule).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _agg_kernel(theta_ref, coeff_ref, g_ref, eta_ref, o_ref):
+    update = jnp.dot(coeff_ref[...], g_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = theta_ref[...] - eta_ref[0] * update
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def aggregate(theta, coeffs, lbgs, eta, *, block=BLOCK):
+    """theta - eta * coeffs @ lbgs with one streaming pass over lbgs.
+
+    theta: f32[M]; coeffs: f32[K]; lbgs: f32[K, M]; eta: scalar.
+    M is zero-padded to a block multiple (exact: padded columns produce
+    padded outputs that are sliced off).
+    """
+    (m,) = theta.shape
+    k, m2 = lbgs.shape
+    assert m == m2 and coeffs.shape == (k,), (theta.shape, coeffs.shape, lbgs.shape)
+    pad = (-m) % block
+    if pad:
+        theta = jnp.pad(theta, (0, pad))
+        lbgs = jnp.pad(lbgs, ((0, 0), (0, pad)))
+    eta_arr = jnp.asarray([eta], dtype=jnp.float32)
+    grid = (theta.shape[0] // block,)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((theta.shape[0],), jnp.float32),
+        interpret=True,
+    )(
+        theta.astype(jnp.float32),
+        coeffs.astype(jnp.float32),
+        lbgs.astype(jnp.float32),
+        eta_arr,
+    )
+    return out[:m]

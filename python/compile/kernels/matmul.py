@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: blocked matmul with custom VJP.
+
+The dense layers of every L2 model route through this kernel so the paper's
+cuBLAS hot spot is expressed as an explicit MXU tiling: (bm, bk, bn) blocks
+with an f32 accumulator held in the revisited output block and the
+contraction dimension as the innermost grid axis (the canonical
+double-buffer-ready schedule; see DESIGN.md "Hardware adaptation").
+
+``pallas_call`` has no autodiff rule, so ``matmul`` carries a custom VJP
+whose backward pass is two more blocked matmuls (dx = dy @ W^T,
+dW = x^T @ dy) — Pallas stays on both the forward and backward paths of the
+lowered grad_step HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles: 128x128 output block, 128-deep contraction slices.
+BM, BK, BN = 128, 128, 128
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(a, rows, cols):
+    pr = (-a.shape[0]) % rows
+    pc = (-a.shape[1]) % cols
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def _matmul_fwd_impl(x, w, bm=BM, bk=BK, bn=BN):
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, (x.shape, w.shape)
+    xp = _pad2(x.astype(jnp.float32), bm, bk)
+    wp = _pad2(w.astype(jnp.float32), bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """x @ w through the blocked Pallas kernel (differentiable)."""
+    return _matmul_fwd_impl(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_fwd_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    dx = _matmul_fwd_impl(dy, w.T)
+    dw = _matmul_fwd_impl(x.T, dy)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: fused projection statistics for LBGM.
+
+Computes ``[<g,l>, ||g||^2, ||l||^2]`` in a single streaming pass over the
+two M-length vectors. This is the per-round, per-worker hot spot of LBGM
+(paper Sec. 4 "Complexity": O(M) inner products).
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"): the vectors are
+tiled into VMEM-sized 1-D blocks whose trailing extent is a multiple of the
+128-lane VPU; the three partial sums live in the revisited output block and
+accumulate across the sequential grid, so g and l stream HBM->VMEM exactly
+once (the GPU warp-shuffle reduction of the paper's testbed becomes a
+grid-carried accumulator).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against kernels.ref by pytest and the
+lowered HLO is what ships to the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 * 1024 f32 = 32 KiB per operand block; 3 live blocks stay well under a
+# 4 MiB VMEM budget while amortizing grid overhead.
+BLOCK = 8192
+
+
+def _proj_kernel(g_ref, l_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...]
+    l = l_ref[...]
+    o_ref[0] += jnp.sum(g * l)
+    o_ref[1] += jnp.sum(g * g)
+    o_ref[2] += jnp.sum(l * l)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def projection(g, l, *, block=BLOCK):
+    """Fused [<g,l>, ||g||², ||l||²] over flat f32 vectors of equal length.
+
+    Inputs of arbitrary length are zero-padded to a block multiple; zero
+    padding is exact for all three sums.
+    """
+    assert g.shape == l.shape and g.ndim == 1, (g.shape, l.shape)
+    m = g.shape[0]
+    pad = (-m) % block
+    if pad:
+        g = jnp.pad(g, (0, pad))
+        l = jnp.pad(l, (0, pad))
+    grid = (g.shape[0] // block,)
+    return pl.pallas_call(
+        _proj_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        interpret=True,
+    )(g.astype(jnp.float32), l.astype(jnp.float32))

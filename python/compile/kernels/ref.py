@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(`python/tests/`) sweeps shapes/dtypes with hypothesis and asserts allclose
+between the kernel (interpret=True) and these functions.
+"""
+
+import jax.numpy as jnp
+
+
+def projection_ref(g, l):
+    """Single-pass statistics for the LBGM projection.
+
+    Returns ``[<g,l>, ||g||^2, ||l||^2]`` as f32[3]. From these the L3
+    coordinator derives the look-back coefficient rho = <g,l>/||l||^2 and the
+    look-back phase error sin^2(alpha) = 1 - <g,l>^2/(||g||^2 ||l||^2)
+    (paper Alg. 1, lines 6-8).
+    """
+    g = g.astype(jnp.float32)
+    l = l.astype(jnp.float32)
+    return jnp.stack([jnp.vdot(g, l), jnp.vdot(g, g), jnp.vdot(l, l)])
+
+
+def aggregate_ref(theta, coeffs, lbgs, eta):
+    """Server-side LBGM aggregation: ``theta - eta * coeffs @ lbgs``.
+
+    theta: f32[M]; coeffs: f32[K] (omega_k * rho_k products); lbgs: f32[K, M].
+    This is the reconstruction + global update of paper Alg. 1 line 16 fused
+    into one pass over the LBG matrix.
+    """
+    return theta - eta * jnp.dot(coeffs, lbgs)
+
+
+def matmul_ref(x, w):
+    """Plain dense matmul oracle for the blocked Pallas matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,105 @@
+"""L2 model zoo: every variant the artifact manifest exports.
+
+A *variant* bundles: a parameter spec (flat-vector layout), an apply
+function, the task ('cls' | 'reg' | 'lm'), and the example input shapes the
+AOT lowering fixes. Variants sharing shapes serve multiple synthetic
+datasets at runtime (the artifact depends only on shapes, not on data).
+"""
+
+import jax.numpy as jnp
+
+from . import cnn, fcn, resnet_tiny, transformer, vgg_tiny
+from .common import (
+    init_flat,
+    make_eval_step,
+    make_grad_step,
+    segments,
+    spec_size,
+    unflatten,
+)
+
+
+class Variant:
+    def __init__(self, name, spec, apply_fn, task, x_shape, x_dtype, y_shape,
+                 y_dtype, batch, notes=""):
+        self.name = name
+        self.spec = spec
+        self.apply_fn = apply_fn
+        self.task = task
+        self.x_shape = x_shape
+        self.x_dtype = x_dtype
+        self.y_shape = y_shape
+        self.y_dtype = y_dtype
+        self.batch = batch
+        self.notes = notes
+
+    @property
+    def param_count(self):
+        return spec_size(self.spec)
+
+    def grad_step(self):
+        return make_grad_step(self.apply_fn, self.spec, self.task)
+
+    def eval_step(self):
+        return make_eval_step(self.apply_fn, self.spec, self.task)
+
+
+def _cls_or_reg_y(task, batch, out_dim):
+    if task == "cls":
+        return (batch,), jnp.int32
+    return (batch, out_dim), jnp.float32
+
+
+def _image_variant(name, module, task, hw, cin, batch, out_dim, **kw):
+    spec = module.spec(hw=hw, cin=cin, out_dim=out_dim, **kw)
+    apply_fn = module.make_apply(hw=hw, cin=cin, out_dim=out_dim, **kw)
+    y_shape, y_dtype = _cls_or_reg_y(task, batch, out_dim)
+    return Variant(name, spec, apply_fn, task, (batch, hw * hw * cin),
+                   jnp.float32, y_shape, y_dtype, batch)
+
+
+def _fcn_variant(name, dims, task, batch, out_dim):
+    y_shape, y_dtype = _cls_or_reg_y(task, batch, out_dim)
+    return Variant(name, fcn.spec(dims), fcn.make_apply(dims), task,
+                   (batch, dims[0]), jnp.float32, y_shape, y_dtype, batch)
+
+
+def build_variants():
+    """The full exported variant set (see DESIGN.md experiment index)."""
+    v = []
+    # --- 784-d (synth_mnist / synth_fmnist) ---
+    v.append(_fcn_variant("fcn_mnist", [784, 128, 64, 10], "cls", 32, 10))
+    v.append(_image_variant("cnn_mnist", cnn, "cls", 28, 1, 32, 10,
+                            channels=[8, 16], hidden=64))
+    # --- 3072-d (synth_cifar cls / synth_celeba reg), Fig. 1's 4 archs ---
+    for task, suffix, out_dim in (("cls", "cifar", 10), ("reg", "celeba", 10)):
+        v.append(_fcn_variant(f"fcn_{suffix}", [3072, 128, 64, out_dim],
+                              task, 32, out_dim))
+        v.append(_image_variant(f"cnn_{suffix}", cnn, task, 32, 3, 32, out_dim,
+                                channels=[16, 32], hidden=128))
+        v.append(_image_variant(f"resnet_{suffix}", resnet_tiny, task, 32, 3,
+                                32, out_dim, width=16, n_blocks=2, hidden=64))
+        v.append(_image_variant(f"vgg_{suffix}", vgg_tiny, task, 32, 3, 32,
+                                out_dim, stages=[16, 32], hidden=64))
+    # --- byte-level LM for the end-to-end FL transformer driver ---
+    vocab, d_model, n_layers, d_ff, seq, heads, batch = 64, 128, 2, 512, 64, 4, 8
+    v.append(Variant(
+        "transformer_lm",
+        transformer.spec(vocab, d_model, n_layers, d_ff, seq, heads),
+        transformer.make_apply(vocab, d_model, n_layers, d_ff, seq, heads),
+        "lm", (batch, seq), jnp.int32, (batch, seq), jnp.int32, batch,
+        notes=f"vocab={vocab} d={d_model} L={n_layers} ff={d_ff} seq={seq}",
+    ))
+    return v
+
+
+__all__ = [
+    "Variant",
+    "build_variants",
+    "init_flat",
+    "segments",
+    "spec_size",
+    "unflatten",
+    "make_grad_step",
+    "make_eval_step",
+]

@@ -1,0 +1,55 @@
+"""CNN (the paper's 4-layer conv baseline, scaled for a 1-core CPU testbed).
+
+Conv blocks use lax.conv (XLA fuses these well); the dense head routes
+through the blocked Pallas matmul kernel. Input is NHWC.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+
+def spec(hw, cin, channels, hidden, out_dim):
+    """hw: input height=width; channels: conv output channels per block."""
+    s = []
+    c_prev = cin
+    for i, c in enumerate(channels):
+        s.append((f"conv{i}/w", (3, 3, c_prev, c)))
+        s.append((f"conv{i}/b", (c,)))
+        c_prev = c
+    final_hw = hw // (2 ** len(channels))
+    flat = final_hw * final_hw * channels[-1]
+    s.append(("head0/w", (flat, hidden)))
+    s.append(("head0/b", (hidden,)))
+    s.append(("head1/w", (hidden, out_dim)))
+    s.append(("head1/b", (out_dim,)))
+    return s
+
+
+def make_apply(hw, cin, channels, hidden, out_dim):
+    n_conv = len(channels)
+
+    def apply(params, x):
+        # x: f32[B, hw*hw*cin] flat (ABI) -> NHWC
+        b = x.shape[0]
+        h = x.reshape(b, hw, hw, cin)
+        for i in range(n_conv):
+            h = lax.conv_general_dilated(
+                h,
+                params[f"conv{i}/w"],
+                window_strides=(1, 1),
+                padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            h = h + params[f"conv{i}/b"]
+            h = h * (h > 0)
+            h = lax.reduce_window(
+                h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        h = h.reshape(b, -1)
+        h = matmul(h, params["head0/w"]) + params["head0/b"]
+        h = h * (h > 0)
+        return matmul(h, params["head1/w"]) + params["head1/b"]
+
+    return apply

@@ -1,0 +1,123 @@
+"""Flat-parameter machinery shared by every L2 model.
+
+The L2<->L3 ABI is a single flat f32[M] parameter vector (see DESIGN.md):
+the Rust coordinator owns theta as a plain Vec<f32>, so LBGM projections,
+compression and aggregation are dense vector ops. Each model publishes a
+*spec* — an ordered list of (name, shape) — from which we derive the flat
+layout, deterministic initial values, and the per-layer segment table the
+gradient-space analysis (Figs. 2-3) needs.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spec_size(spec):
+    """Total number of scalars in a spec."""
+    return sum(int(np.prod(shape)) for _, shape in spec)
+
+
+def segments(spec):
+    """[(name, offset, size, shape)] into the flat vector, in spec order."""
+    out, off = [], 0
+    for name, shape in spec:
+        size = int(np.prod(shape))
+        out.append((name, off, size, tuple(int(s) for s in shape)))
+        off += size
+    return out
+
+
+def unflatten(theta, spec):
+    """Flat f32[M] -> {name: array(shape)} (pure jnp; traced inside jit)."""
+    params, off = {}, 0
+    for name, shape in spec:
+        size = int(np.prod(shape))
+        params[name] = theta[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_flat(spec, seed):
+    """Deterministic flat init: LeCun-normal for weights, zeros for biases.
+
+    Fan-in is the product of all but the last axis (matches dense kernels
+    laid out [in, out] and conv kernels [kh, kw, cin, cout]).
+    """
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in spec:
+        size = int(np.prod(shape))
+        if name.endswith("/g"):  # layernorm gains start at identity
+            chunks.append(np.ones(size, dtype=np.float32))
+        elif name.endswith("/b") or len(shape) == 1:
+            chunks.append(np.zeros(size, dtype=np.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            chunks.append(rng.normal(0.0, std, size=size).astype(np.float32))
+    return np.concatenate(chunks)
+
+
+def softmax_xent(logits, labels):
+    """Mean stable softmax cross-entropy; labels i32[B]."""
+    logits = logits - jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(picked)
+
+
+def mse(preds, targets):
+    """Mean squared error over all output dims (regression tasks)."""
+    return jnp.mean((preds - targets) ** 2)
+
+
+def make_grad_step(apply_fn, spec, task):
+    """(theta, x, y) -> (loss, flat grad) for the given task.
+
+    task: 'cls' (softmax xent, i32 labels), 'reg' (MSE, f32 targets) or
+    'lm' (per-token softmax xent, i32[B, S] targets).
+    """
+
+    def loss_of(theta, x, y):
+        params = unflatten(theta, spec)
+        out = apply_fn(params, x)
+        if task == "cls":
+            return softmax_xent(out, y)
+        if task == "reg":
+            return mse(out, y)
+        if task == "lm":
+            b, s, v = out.shape
+            return softmax_xent(out.reshape(b * s, v), y.reshape(b * s))
+        raise ValueError(task)
+
+    def grad_step(theta, x, y):
+        loss, grad = jax.value_and_grad(loss_of)(theta, x, y)
+        return loss, grad
+
+    return grad_step
+
+
+def make_eval_step(apply_fn, spec, task):
+    """(theta, x, y) -> (loss, metric): #correct for cls/lm, SSE for reg."""
+
+    def eval_step(theta, x, y):
+        params = unflatten(theta, spec)
+        out = apply_fn(params, x)
+        if task == "cls":
+            loss = softmax_xent(out, y)
+            metric = jnp.sum((jnp.argmax(out, axis=-1) == y).astype(jnp.float32))
+        elif task == "reg":
+            loss = mse(out, y)
+            metric = jnp.sum((out - y) ** 2)
+        else:  # lm
+            b, s, v = out.shape
+            flat_logits, flat_y = out.reshape(b * s, v), y.reshape(b * s)
+            loss = softmax_xent(flat_logits, flat_y)
+            metric = jnp.sum(
+                (jnp.argmax(flat_logits, axis=-1) == flat_y).astype(jnp.float32)
+            )
+        return loss, metric
+
+    return eval_step

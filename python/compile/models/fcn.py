@@ -1,0 +1,30 @@
+"""FCN (the paper's fully-connected baseline): ReLU MLP over flat inputs.
+
+Dense layers route through the blocked Pallas matmul kernel so the L1 tiling
+is on both the forward and backward path of the lowered grad_step.
+"""
+
+from ..kernels import matmul
+
+
+def spec(dims):
+    """dims = [in, h1, ..., out]."""
+    out = []
+    for i in range(len(dims) - 1):
+        out.append((f"dense{i}/w", (dims[i], dims[i + 1])))
+        out.append((f"dense{i}/b", (dims[i + 1],)))
+    return out
+
+
+def make_apply(dims):
+    n_layers = len(dims) - 1
+
+    def apply(params, x):
+        h = x
+        for i in range(n_layers):
+            h = matmul(h, params[f"dense{i}/w"]) + params[f"dense{i}/b"]
+            if i + 1 < n_layers:
+                h = h * (h > 0)  # ReLU
+        return h
+
+    return apply

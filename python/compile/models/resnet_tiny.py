@@ -1,0 +1,67 @@
+"""resnet_tiny: the ResNet18 stand-in (DESIGN.md "Substitutions").
+
+Conv stem + residual conv blocks with identity skip connections + Pallas
+dense head. Keeps the topological property Fig. 1 contrasts (residual vs
+plain deep stacks) at 1-core-CPU-trainable scale.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+
+def _conv(params, name, h):
+    h = lax.conv_general_dilated(
+        h,
+        params[f"{name}/w"],
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return h + params[f"{name}/b"]
+
+
+def spec(hw, cin, width, n_blocks, hidden, out_dim):
+    s = [("stem/w", (3, 3, cin, width)), ("stem/b", (width,))]
+    for i in range(n_blocks):
+        s.append((f"block{i}/conv0/w", (3, 3, width, width)))
+        s.append((f"block{i}/conv0/b", (width,)))
+        s.append((f"block{i}/conv1/w", (3, 3, width, width)))
+        s.append((f"block{i}/conv1/b", (width,)))
+    final_hw = hw // 4  # two 2x2 pools
+    flat = final_hw * final_hw * width
+    s += [
+        ("head0/w", (flat, hidden)),
+        ("head0/b", (hidden,)),
+        ("head1/w", (hidden, out_dim)),
+        ("head1/b", (out_dim,)),
+    ]
+    return s
+
+
+def make_apply(hw, cin, width, n_blocks, hidden, out_dim):
+    def pool(h):
+        return lax.reduce_window(
+            h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    def apply(params, x):
+        b = x.shape[0]
+        h = x.reshape(b, hw, hw, cin)
+        h = _conv(params, "stem", h)
+        h = h * (h > 0)
+        h = pool(h)
+        for i in range(n_blocks):
+            r = _conv(params, f"block{i}/conv0", h)
+            r = r * (r > 0)
+            r = _conv(params, f"block{i}/conv1", r)
+            h = h + r  # identity skip
+            h = h * (h > 0)
+        h = pool(h)
+        h = h.reshape(b, -1)
+        h = matmul(h, params["head0/w"]) + params["head0/b"]
+        h = h * (h > 0)
+        return matmul(h, params["head1/w"]) + params["head1/b"]
+
+    return apply

@@ -1,0 +1,73 @@
+"""Byte-level causal transformer LM for the end-to-end FL training driver.
+
+Pre-LN decoder blocks; the position-wise MLP routes through the blocked
+Pallas matmul kernel (the dominant FLOP term), attention through jnp einsum.
+Weights are tied between the input embedding and the output head.
+"""
+
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+
+def spec(vocab, d_model, n_layers, d_ff, seq_len, n_heads):
+    del n_heads  # head count does not change the parameter layout
+    s = [("embed/w", (vocab, d_model)), ("pos/w", (seq_len, d_model))]
+    for i in range(n_layers):
+        s += [
+            (f"layer{i}/ln1/g", (d_model,)),
+            (f"layer{i}/ln1/b", (d_model,)),
+            (f"layer{i}/attn/wqkv", (d_model, 3 * d_model)),
+            (f"layer{i}/attn/wo", (d_model, d_model)),
+            (f"layer{i}/ln2/g", (d_model,)),
+            (f"layer{i}/ln2/b", (d_model,)),
+            (f"layer{i}/mlp/w0", (d_model, d_ff)),
+            (f"layer{i}/mlp/b0", (d_ff,)),
+            (f"layer{i}/mlp/w1", (d_ff, d_model)),
+            (f"layer{i}/mlp/b1", (d_model,)),
+        ]
+    s += [("lnf/g", (d_model,)), ("lnf/b", (d_model,))]
+    return s
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def make_apply(vocab, d_model, n_layers, d_ff, seq_len, n_heads):
+    d_head = d_model // n_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(d_head))
+    causal = jnp.tril(jnp.ones((seq_len, seq_len), dtype=bool))
+
+    def apply(params, x):
+        # x: i32[B, S] token ids -> logits f32[B, S, vocab]
+        b, s = x.shape
+        h = params["embed/w"][x] + params["pos/w"][None, :s, :]
+        for i in range(n_layers):
+            p = f"layer{i}"
+            a_in = _layernorm(h, params[f"{p}/ln1/g"], params[f"{p}/ln1/b"])
+            qkv = matmul(a_in.reshape(b * s, d_model), params[f"{p}/attn/wqkv"])
+            qkv = qkv.reshape(b, s, 3, n_heads, d_head)
+            q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+            att = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+            att = jnp.where(causal[None, None, :s, :s], att, -1e30)
+            att = att - att.max(axis=-1, keepdims=True)
+            att = jnp.exp(att)
+            att = att / att.sum(axis=-1, keepdims=True)
+            out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, d_model)
+            h = h + matmul(out, params[f"{p}/attn/wo"]).reshape(b, s, d_model)
+            m_in = _layernorm(h, params[f"{p}/ln2/g"], params[f"{p}/ln2/b"])
+            m = matmul(m_in.reshape(b * s, d_model), params[f"{p}/mlp/w0"])
+            m = m + params[f"{p}/mlp/b0"]
+            m = m * (m > 0)
+            m = matmul(m, params[f"{p}/mlp/w1"]) + params[f"{p}/mlp/b1"]
+            h = h + m.reshape(b, s, d_model)
+        h = _layernorm(h, params["lnf/g"], params["lnf/b"])
+        # tied output head
+        return matmul(h.reshape(b * s, d_model), params["embed/w"].T).reshape(
+            b, s, vocab
+        )
+
+    return apply

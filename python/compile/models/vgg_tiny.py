@@ -1,0 +1,61 @@
+"""vgg_tiny: the VGG19 stand-in (DESIGN.md "Substitutions").
+
+A deeper *plain* conv stack (two convs per stage, no skips) contrasting with
+resnet_tiny's residual topology, at 1-core-CPU-trainable scale.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+
+def spec(hw, cin, stages, hidden, out_dim):
+    """stages: output channel count per stage; 2 convs + 1 pool per stage."""
+    s = []
+    c_prev = cin
+    for i, c in enumerate(stages):
+        s.append((f"stage{i}/conv0/w", (3, 3, c_prev, c)))
+        s.append((f"stage{i}/conv0/b", (c,)))
+        s.append((f"stage{i}/conv1/w", (3, 3, c, c)))
+        s.append((f"stage{i}/conv1/b", (c,)))
+        c_prev = c
+    final_hw = hw // (2 ** len(stages))
+    flat = final_hw * final_hw * stages[-1]
+    s += [
+        ("head0/w", (flat, hidden)),
+        ("head0/b", (hidden,)),
+        ("head1/w", (hidden, out_dim)),
+        ("head1/b", (out_dim,)),
+    ]
+    return s
+
+
+def make_apply(hw, cin, stages, hidden, out_dim):
+    def conv(params, name, h):
+        h = lax.conv_general_dilated(
+            h,
+            params[f"{name}/w"],
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return h + params[f"{name}/b"]
+
+    def apply(params, x):
+        b = x.shape[0]
+        h = x.reshape(b, hw, hw, cin)
+        for i in range(len(stages)):
+            h = conv(params, f"stage{i}/conv0", h)
+            h = h * (h > 0)
+            h = conv(params, f"stage{i}/conv1", h)
+            h = h * (h > 0)
+            h = lax.reduce_window(
+                h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        h = h.reshape(b, -1)
+        h = matmul(h, params["head0/w"]) + params["head0/b"]
+        h = h * (h > 0)
+        return matmul(h, params["head1/w"]) + params["head1/b"]
+
+    return apply

@@ -1,0 +1,68 @@
+"""AOT manifest integrity: what aot.py writes is what the Rust side assumes."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_existing_files():
+    m = _manifest()
+    assert m["version"] == 1
+    assert len(m["variants"]) >= 11
+    for v in m["variants"]:
+        for key in ("grad_hlo", "eval_hlo", "init"):
+            assert os.path.exists(os.path.join(ART, v[key])), v[key]
+
+
+def test_init_size_matches_param_count():
+    for v in _manifest()["variants"]:
+        init = np.fromfile(os.path.join(ART, v["init"]), dtype=np.float32)
+        assert init.shape == (v["param_count"],), v["name"]
+        assert np.all(np.isfinite(init)), v["name"]
+
+
+def test_segments_cover_param_vector():
+    for v in _manifest()["variants"]:
+        off = 0
+        for seg in v["segments"]:
+            assert seg["offset"] == off
+            assert seg["size"] == int(np.prod(seg["shape"]))
+            off += seg["size"]
+        assert off == v["param_count"], v["name"]
+
+
+def test_hlo_text_entry_computation_signature():
+    """grad HLO takes (theta, x, y) and returns a 2-tuple."""
+    m = _manifest()
+    for v in m["variants"][:3]:
+        text = open(os.path.join(ART, v["grad_hlo"])).read()
+        assert "ENTRY" in text
+        assert f"f32[{v['param_count']}]" in text
+
+
+def test_init_matches_rebuilt_spec():
+    """Manifest init bytes equal a fresh init_flat of the same variant."""
+    from compile.models import build_variants, init_flat
+
+    m = _manifest()
+    seed = m["init_seed"]
+    variants = {v.name: v for v in build_variants()}
+    for entry in m["variants"][:4]:
+        v = variants[entry["name"]]
+        want = init_flat(v.spec, seed)
+        got = np.fromfile(os.path.join(ART, entry["init"]), dtype=np.float32)
+        np.testing.assert_array_equal(got, want)

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+hypothesis sweeps shapes and value scales; assert_allclose against ref.py is
+the CORE correctness signal for everything the Rust runtime later executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    aggregate,
+    aggregate_ref,
+    matmul,
+    matmul_ref,
+    projection,
+    projection_ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _vec(rng, n, scale):
+    return (rng.normal(size=n) * scale).astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(min_value=1, max_value=40000),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_projection_matches_ref(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    g, l = jnp.asarray(_vec(rng, n, scale)), jnp.asarray(_vec(rng, n, scale))
+    got = np.asarray(projection(g, l, block=1024))
+    want = np.asarray(projection_ref(g, l))
+    # f32 accumulation: absolute error grows like scale^2 * sqrt(n) ulps;
+    # the cross term <g,l> concentrates near 0 so rtol alone is too strict.
+    atol = 5e-4 * scale**2 * np.sqrt(n)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=atol)
+
+
+def test_projection_identical_vectors():
+    g = jnp.asarray(np.linspace(-1, 1, 5000).astype(np.float32))
+    got = np.asarray(projection(g, g, block=512))
+    # <g,g> == ||g||^2 == ||l||^2 exactly in structure
+    np.testing.assert_allclose(got[0], got[1], rtol=1e-6)
+    np.testing.assert_allclose(got[1], got[2], rtol=1e-6)
+
+
+def test_projection_orthogonal_vectors():
+    g = jnp.asarray(np.array([1.0, 0.0] * 500, dtype=np.float32))
+    l = jnp.asarray(np.array([0.0, 1.0] * 500, dtype=np.float32))
+    got = np.asarray(projection(g, l, block=256))
+    assert abs(got[0]) < 1e-6
+    np.testing.assert_allclose(got[1], 500.0, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(min_value=1, max_value=12),
+    m=st.integers(min_value=1, max_value=9000),
+    eta=st.sampled_from([0.0, 0.01, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_aggregate_matches_ref(k, m, eta, seed):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(_vec(rng, m, 1.0))
+    coeffs = jnp.asarray(_vec(rng, k, 1.0))
+    lbgs = jnp.asarray((rng.normal(size=(k, m))).astype(np.float32))
+    got = np.asarray(aggregate(theta, coeffs, lbgs, eta, block=512))
+    want = np.asarray(aggregate_ref(theta, coeffs, lbgs, eta))
+    assert got.shape == (m,)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_aggregate_zero_eta_is_identity():
+    rng = np.random.default_rng(3)
+    theta = jnp.asarray(_vec(rng, 1000, 1.0))
+    lbgs = jnp.asarray(rng.normal(size=(4, 1000)).astype(np.float32))
+    got = np.asarray(aggregate(theta, jnp.ones(4), lbgs, 0.0, block=256))
+    np.testing.assert_allclose(got, np.asarray(theta), rtol=0, atol=0)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=200),
+    n=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    got = np.asarray(matmul(x, w))
+    want = np.asarray(matmul_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_multiple():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)), np.asarray(matmul_ref(x, w)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_matmul_vjp_matches_ref_vjp():
+    import jax
+
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(33, 70)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(70, 19)).astype(np.float32))
+    f = lambda x, w: jnp.sum(jnp.tanh(matmul(x, w)))
+    fr = lambda x, w: jnp.sum(jnp.tanh(matmul_ref(x, w)))
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(fr, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx2), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw2), rtol=1e-3, atol=1e-4)
+
+
+def test_projection_derived_lbgm_quantities():
+    """rho and sin^2(alpha) derived from the kernel match direct formulas."""
+    rng = np.random.default_rng(13)
+    g = jnp.asarray(_vec(rng, 4096, 1.0))
+    l = jnp.asarray(_vec(rng, 4096, 1.0))
+    dot, g2, l2 = (float(v) for v in projection(g, l, block=1024))
+    rho = dot / l2
+    sin2 = 1.0 - dot * dot / (g2 * l2)
+    want_rho = float(jnp.vdot(g, l) / jnp.vdot(l, l))
+    want_sin2 = 1.0 - float(
+        (jnp.vdot(g, l) ** 2) / (jnp.vdot(g, g) * jnp.vdot(l, l))
+    )
+    np.testing.assert_allclose(rho, want_rho, rtol=1e-4)
+    np.testing.assert_allclose(sin2, want_sin2, rtol=1e-3, atol=1e-6)
+    assert 0.0 <= sin2 <= 1.0

@@ -1,0 +1,145 @@
+//! Centralized-training gradient-space study (paper Alg. 2 / Fig. 1).
+//!
+//! Runs plain centralized SGD (K=1 "federation", tau = batches-per-epoch)
+//! through any [`LocalTrainer`], records the accumulated epoch gradients,
+//! and tracks N95/N99-PCA after every epoch together with the test metric —
+//! exactly the two rows of Fig. 1.
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::LocalTrainer;
+use crate::linalg::gram_pca::GramPca;
+use crate::runtime::Segment;
+
+use super::recorder::GradientRecorder;
+
+/// Per-epoch record of the Fig. 1 quantities.
+#[derive(Clone, Debug)]
+pub struct EpochPca {
+    pub epoch: usize,
+    pub n95: usize,
+    pub n99: usize,
+    pub test_loss: f64,
+    pub test_metric: f64,
+}
+
+/// Full output of the centralized analysis.
+pub struct CentralizedReport {
+    pub per_epoch: Vec<EpochPca>,
+    pub recorder: GradientRecorder,
+}
+
+impl CentralizedReport {
+    /// Max N99 over the run, as a fraction of epochs (H1's headline: the
+    /// paper observes this "often as low as 10%").
+    pub fn n99_fraction(&self) -> f64 {
+        let epochs = self.per_epoch.len().max(1);
+        let n99 = self.per_epoch.last().map(|e| e.n99).unwrap_or(0);
+        n99 as f64 / epochs as f64
+    }
+}
+
+/// Train centrally for `epochs` epochs of `steps_per_epoch` minibatch steps
+/// and perform the Alg. 2 analysis.
+pub fn centralized_analysis(
+    trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    segments: Vec<Segment>,
+    epochs: usize,
+    steps_per_epoch: usize,
+    eta: f32,
+) -> Result<CentralizedReport> {
+    let dim = trainer.dim();
+    anyhow::ensure!(trainer.workers() == 1, "centralized analysis uses 1 worker");
+    let mut theta = theta0;
+    let mut recorder = GradientRecorder::new(dim, segments);
+    let mut pca = GramPca::new(dim);
+    let mut per_epoch = Vec::with_capacity(epochs);
+
+    for epoch in 0..epochs {
+        // One "epoch" = steps_per_epoch local SGD steps; the accumulated
+        // gradient is what Alg. 2 stores for PCA.
+        let (_, acc) = trainer.local_round(0, &theta, steps_per_epoch, eta)?;
+        // Apply the accumulated update (equivalent to the local steps).
+        // local_round already simulated the trajectory; the global theta
+        // follows it: theta <- theta - eta * acc is NOT identical to the
+        // local endpoint under curvature, so we re-walk via a single round
+        // of the same trainer state. For analysis purposes the paper's
+        // Alg. 2 uses the epoch-end parameters; we approximate with the
+        // accumulated-gradient step, which matches for tau-step SGD on the
+        // recorded trajectory up to O(eta^2) and is exact for tau=1.
+        crate::linalg::vec_ops::axpy(-eta, &acc, &mut theta);
+        pca.push(acc.clone());
+        recorder.record(acc);
+        let (test_loss, test_metric) = trainer.eval(&theta)?;
+        let (n95, n99) = pca.n_pca();
+        per_epoch.push(EpochPca { epoch, n95, n99, test_loss, test_metric });
+    }
+
+    Ok(CentralizedReport { per_epoch, recorder })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::MockTrainer;
+
+    fn segments(dim: usize) -> Vec<Segment> {
+        vec![
+            Segment { name: "a".into(), offset: 0, size: dim / 2, shape: vec![dim / 2] },
+            Segment {
+                name: "b".into(),
+                offset: dim / 2,
+                size: dim - dim / 2,
+                shape: vec![dim - dim / 2],
+            },
+        ]
+    }
+
+    #[test]
+    fn quadratic_gradspace_is_low_rank() {
+        // Noise-free quadratic: gradients lie on a line toward the optimum
+        // => N99 stays tiny relative to epochs (H1 in its sharpest form).
+        let dim = 64;
+        let mut t = MockTrainer::new(dim, 1, 0.0, 0.0, 1);
+        let report = centralized_analysis(
+            &mut t,
+            vec![0.0; dim],
+            segments(dim),
+            20,
+            1,
+            0.05,
+        )
+        .unwrap();
+        let last = report.per_epoch.last().unwrap();
+        assert!(last.n99 <= 2, "n99={}", last.n99);
+        assert!(report.n99_fraction() < 0.2);
+        assert_eq!(report.recorder.epochs(), 20);
+    }
+
+    #[test]
+    fn noisy_gradspace_has_higher_rank() {
+        let dim = 64;
+        let mut clean = MockTrainer::new(dim, 1, 0.0, 0.0, 2);
+        let mut noisy = MockTrainer::new(dim, 1, 0.0, 0.5, 2);
+        let rc = centralized_analysis(&mut clean, vec![0.0; dim], segments(dim), 15, 1, 0.05)
+            .unwrap();
+        let rn = centralized_analysis(&mut noisy, vec![0.0; dim], segments(dim), 15, 1, 0.05)
+            .unwrap();
+        assert!(
+            rn.per_epoch.last().unwrap().n99 > rc.per_epoch.last().unwrap().n99,
+            "noise should raise rank"
+        );
+    }
+
+    #[test]
+    fn loss_decreases_during_analysis() {
+        let dim = 32;
+        let mut t = MockTrainer::new(dim, 1, 0.0, 0.01, 3);
+        let r = centralized_analysis(&mut t, vec![0.0; dim], segments(dim), 25, 2, 0.05)
+            .unwrap();
+        let first = r.per_epoch.first().unwrap().test_loss;
+        let last = r.per_epoch.last().unwrap().test_loss;
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+}

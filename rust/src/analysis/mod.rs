@@ -1,0 +1,15 @@
+//! Gradient-space analysis (paper Sec. 2, Alg. 2; Figs. 1-3).
+//!
+//! Records the accumulated gradient of every centralized training epoch,
+//! tracks the N95/N99-PCA progression incrementally, extracts principal
+//! gradient directions (PGDs), and produces the per-layer cosine-similarity
+//! heatmaps that motivate LBGM's two hypotheses (H1: the gradient-space is
+//! low-rank; H2: PGDs are approximated by actual gradients).
+
+pub mod gradient_space;
+pub mod recorder;
+pub mod similarity;
+
+pub use gradient_space::{centralized_analysis, CentralizedReport};
+pub use recorder::GradientRecorder;
+pub use similarity::{pairwise_heatmap, pgd_overlap_heatmap, Heatmap};

@@ -1,0 +1,76 @@
+//! Epoch-gradient recorder with per-layer views.
+
+use crate::runtime::Segment;
+
+/// Stores the accumulated gradient of each training epoch, exposing both
+/// the full flat vectors and per-layer slices (the paper's Figs. 2-3 are
+/// per-layer heatmaps, driven by the manifest's segment table).
+pub struct GradientRecorder {
+    dim: usize,
+    pub segments: Vec<Segment>,
+    grads: Vec<Vec<f32>>,
+}
+
+impl GradientRecorder {
+    pub fn new(dim: usize, segments: Vec<Segment>) -> Self {
+        if let Some(last) = segments.last() {
+            assert_eq!(last.offset + last.size, dim, "segments must cover dim");
+        }
+        Self { dim, segments, grads: Vec::new() }
+    }
+
+    pub fn record(&mut self, grad: Vec<f32>) {
+        assert_eq!(grad.len(), self.dim);
+        self.grads.push(grad);
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.grads.len()
+    }
+
+    pub fn grad(&self, epoch: usize) -> &[f32] {
+        &self.grads[epoch]
+    }
+
+    /// Layer `l`'s slice of epoch `e`'s gradient.
+    pub fn layer_slice(&self, epoch: usize, layer: usize) -> &[f32] {
+        let s = &self.segments[layer];
+        &self.grads[epoch][s.offset..s.offset + s.size]
+    }
+
+    /// All epochs of one layer, copied into contiguous rows (for PCA).
+    pub fn layer_matrix(&self, layer: usize) -> Vec<Vec<f32>> {
+        (0..self.epochs())
+            .map(|e| self.layer_slice(e, layer).to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(name: &str, offset: usize, size: usize) -> Segment {
+        Segment { name: name.into(), offset, size, shape: vec![size] }
+    }
+
+    #[test]
+    fn layer_views() {
+        let mut r = GradientRecorder::new(5, vec![seg("a", 0, 2), seg("b", 2, 3)]);
+        r.record(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        r.record(vec![10.0, 20.0, 30.0, 40.0, 50.0]);
+        assert_eq!(r.epochs(), 2);
+        assert_eq!(r.layer_slice(0, 0), &[1.0, 2.0]);
+        assert_eq!(r.layer_slice(1, 1), &[30.0, 40.0, 50.0]);
+        let m = r.layer_matrix(1);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0], vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_dim() {
+        let mut r = GradientRecorder::new(3, vec![seg("a", 0, 3)]);
+        r.record(vec![1.0]);
+    }
+}

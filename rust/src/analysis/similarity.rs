@@ -1,0 +1,156 @@
+//! Cosine-similarity heatmaps (paper Figs. 2 and 3, Alg. 2 lines 20-34).
+
+use crate::linalg::gram_pca::GramPca;
+use crate::linalg::vec_ops::cosine;
+
+/// Dense row-major heatmap with axis labels.
+#[derive(Clone, Debug)]
+pub struct Heatmap {
+    pub rows: usize,
+    pub cols: usize,
+    pub values: Vec<f64>,
+    pub title: String,
+}
+
+impl Heatmap {
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.values[i * self.cols + j]
+    }
+
+    /// Compact ASCII rendering (for terminal reports / EXPERIMENTS.md).
+    pub fn ascii(&self) -> String {
+        let ramp = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+        let mut out = format!("{} ({}x{})\n", self.title, self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let v = self.get(i, j).abs().clamp(0.0, 1.0);
+                let idx = ((v * 9.0).round() as usize).min(9);
+                out.push(ramp[idx]);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Fig. 3: pairwise |cosine| similarity among epoch gradients of one layer.
+pub fn pairwise_heatmap(grads: &[Vec<f32>], title: &str) -> Heatmap {
+    let n = grads.len();
+    let mut values = vec![0f64; n * n];
+    for i in 0..n {
+        values[i * n + i] = 1.0;
+        for j in (i + 1)..n {
+            let c = cosine(&grads[i], &grads[j]);
+            values[i * n + j] = c;
+            values[j * n + i] = c;
+        }
+    }
+    Heatmap { rows: n, cols: n, values, title: title.to_string() }
+}
+
+/// Fig. 2: cosine similarity between actual epoch gradients (rows) and the
+/// principal gradient directions explaining `fraction` variance (cols).
+pub fn pgd_overlap_heatmap(grads: &[Vec<f32>], fraction: f64, title: &str) -> Heatmap {
+    assert!(!grads.is_empty());
+    let mut pca = GramPca::new(grads[0].len());
+    for g in grads {
+        pca.push(g.clone());
+    }
+    let pgds = pca.principal_directions(fraction);
+    let (n, k) = (grads.len(), pgds.len());
+    let mut values = vec![0f64; n * k];
+    for i in 0..n {
+        for j in 0..k {
+            values[i * k + j] = cosine(&grads[i], &pgds[j]);
+        }
+    }
+    Heatmap { rows: n, cols: k, values, title: title.to_string() }
+}
+
+/// Summary statistic used in EXPERIMENTS.md for Fig. 2: for every epoch
+/// gradient, the max |cosine| against any PGD ("each gradient overlaps
+/// strongly with one or more PGDs").
+pub fn max_overlap_per_gradient(h: &Heatmap) -> Vec<f64> {
+    (0..h.rows)
+        .map(|i| {
+            (0..h.cols)
+                .map(|j| h.get(i, j).abs())
+                .fold(0.0f64, f64::max)
+        })
+        .collect()
+}
+
+/// Summary statistic for Fig. 3: mean |cosine| of consecutive gradients.
+pub fn mean_consecutive_similarity(h: &Heatmap) -> f64 {
+    if h.rows < 2 {
+        return 1.0;
+    }
+    (0..h.rows - 1)
+        .map(|i| h.get(i, i + 1).abs())
+        .sum::<f64>()
+        / (h.rows - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn family(n: usize, drift: f32, seed: u64) -> Vec<Vec<f32>> {
+        // Slowly rotating family: g_{t+1} = g_t + drift * noise.
+        let mut rng = Rng::new(seed);
+        let mut g: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out = vec![g.clone()];
+        for _ in 1..n {
+            for x in g.iter_mut() {
+                *x += drift * rng.normal_f32(0.0, 1.0);
+            }
+            out.push(g.clone());
+        }
+        out
+    }
+
+    #[test]
+    fn pairwise_symmetric_unit_diagonal() {
+        let h = pairwise_heatmap(&family(6, 0.3, 1), "t");
+        for i in 0..6 {
+            assert!((h.get(i, i) - 1.0).abs() < 1e-9);
+            for j in 0..6 {
+                assert!((h.get(i, j) - h.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn slow_drift_has_high_consecutive_similarity() {
+        let slow = pairwise_heatmap(&family(10, 0.05, 2), "slow");
+        let fast = pairwise_heatmap(&family(10, 2.0, 2), "fast");
+        let (ms, mf) = (
+            mean_consecutive_similarity(&slow),
+            mean_consecutive_similarity(&fast),
+        );
+        assert!(ms > 0.95, "slow drift similarity {ms}");
+        assert!(ms > mf, "{ms} !> {mf}");
+    }
+
+    #[test]
+    fn pgd_overlap_high_for_low_rank_family() {
+        // Rank-~1 family: every gradient overlaps the single PGD strongly.
+        let base: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let grads: Vec<Vec<f32>> =
+            (1..8).map(|s| base.iter().map(|x| x * s as f32).collect()).collect();
+        let h = pgd_overlap_heatmap(&grads, 0.99, "t");
+        assert_eq!(h.cols, 1);
+        for m in max_overlap_per_gradient(&h) {
+            assert!(m > 0.999, "overlap {m}");
+        }
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let h = pairwise_heatmap(&family(4, 0.1, 3), "demo");
+        let a = h.ascii();
+        assert!(a.lines().count() == 5);
+        assert!(a.contains("demo"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Warmup + sampled timing with robust statistics.
+//!
+//! Usage from a `harness = false` bench target:
+//! ```no_run
+//! use fedrecycle::bench::Bencher;
+//! let mut b = Bencher::from_env("hotpath");
+//! b.bench("dot_1M", || { /* work */ });
+//! b.finish();
+//! ```
+
+use std::time::Instant;
+
+/// One benchmark's statistics (seconds).
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub name: String,
+    pub samples: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    /// Optional throughput annotation (unit/sec), set via `throughput`.
+    pub per_sec: Option<f64>,
+}
+
+impl BenchReport {
+    pub fn line(&self) -> String {
+        let tp = self
+            .per_sec
+            .map(|t| format!("  {:>10.3} Melem/s", t / 1e6))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10} {:>10} {:>10}  (n={}){}",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.p50),
+            fmt_time(self.p95),
+            self.samples,
+            tp
+        )
+    }
+}
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Bench group runner.
+pub struct Bencher {
+    group: String,
+    samples: usize,
+    warmup: usize,
+    reports: Vec<BenchReport>,
+    /// Elements processed per iteration for the next `bench` call.
+    pending_elems: Option<u64>,
+}
+
+impl Bencher {
+    pub fn new(group: &str, samples: usize, warmup: usize) -> Self {
+        println!("== bench group: {group} ==");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10}",
+            "name", "mean", "p50", "p95"
+        );
+        Self {
+            group: group.to_string(),
+            samples,
+            warmup,
+            reports: Vec::new(),
+            pending_elems: None,
+        }
+    }
+
+    /// Sample counts from `FEDRECYCLE_BENCH_SAMPLES` (default 15) — CI can
+    /// dial down, perf runs dial up.
+    pub fn from_env(group: &str) -> Self {
+        let samples = std::env::var("FEDRECYCLE_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(15);
+        Self::new(group, samples, 3)
+    }
+
+    /// Annotate the next bench with a per-iteration element count.
+    pub fn throughput(&mut self, elems: u64) -> &mut Self {
+        self.pending_elems = Some(elems);
+        self
+    }
+
+    /// Time `f` over warmup + samples iterations.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let p50 = times[times.len() / 2];
+        let p95 = times[(times.len() * 95 / 100).min(times.len() - 1)];
+        let per_sec = self.pending_elems.take().map(|e| e as f64 / mean);
+        let report = BenchReport {
+            name: format!("{}/{}", self.group, name),
+            samples: self.samples,
+            mean,
+            p50,
+            p95,
+            min: times[0],
+            per_sec,
+        };
+        println!("{}", report.line());
+        self.reports.push(report);
+    }
+
+    pub fn reports(&self) -> &[BenchReport] {
+        &self.reports
+    }
+
+    pub fn finish(self) -> Vec<BenchReport> {
+        println!();
+        self.reports
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_collected_in_order() {
+        let mut b = Bencher::new("test", 5, 1);
+        b.bench("noop", || 1 + 1);
+        b.throughput(1000).bench("tp", || std::hint::black_box(0));
+        let r = b.finish();
+        assert_eq!(r.len(), 2);
+        assert!(r[0].name.contains("noop"));
+        assert!(r[1].per_sec.is_some());
+        assert!(r[0].mean >= 0.0 && r[0].p95 >= r[0].min);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).contains('s'));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("us"));
+        assert!(fmt_time(2e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Criterion-style micro/throughput bench harness (the build host lacks
+//! `criterion`; `benches/*.rs` declare `harness = false` and drive this).
+
+pub mod harness;
+
+pub use harness::{BenchReport, Bencher};

@@ -1,0 +1,183 @@
+//! ATOMO: rank-r atomic (singular-vector) gradient decomposition
+//! (Wang et al., 2018 — the paper's low-rank P3 baseline, used at rank 2
+//! per App. C.2).
+//!
+//! The flat gradient is reshaped to a near-square matrix, its leading rank-r
+//! SVD is transmitted (cost r*(m+n+1) floats), and the server decodes the
+//! dense rank-r reconstruction.
+
+use super::{Compressor, Cost};
+use crate::linalg::svd::{reconstruct, truncated_svd};
+
+#[derive(Clone, Debug)]
+pub struct Atomo {
+    pub rank: usize,
+    /// Subspace-iteration sweeps (accuracy/cost of the encoder itself).
+    pub iters: usize,
+    seed: u64,
+    /// Per-layer (offset, size) segments. ATOMO operates on each layer's
+    /// gradient matrix (as in the original implementation); `None` falls
+    /// back to one near-square reshape of the whole flat vector.
+    segments: Option<Vec<(usize, usize)>>,
+}
+
+impl Atomo {
+    pub fn new(rank: usize) -> Self {
+        assert!(rank >= 1);
+        Self { rank, iters: 8, seed: 0xA70, segments: None }
+    }
+
+    /// Per-layer ATOMO over the flat vector's segment table (paper-faithful).
+    pub fn with_segments(rank: usize, segments: Vec<(usize, usize)>) -> Self {
+        let mut a = Self::new(rank);
+        a.segments = Some(segments);
+        a
+    }
+
+    fn compress_slice(&self, slice: &mut [f32]) -> Cost {
+        let m_total = slice.len();
+        if m_total < 4 {
+            // Tiny tensors (biases) travel uncompressed.
+            return super::dense_cost(m_total);
+        }
+        let (rows, cols) = Self::matrix_shape(m_total);
+        let padded = rows * cols;
+        let mut mat = Vec::with_capacity(padded);
+        mat.extend_from_slice(slice);
+        mat.resize(padded, 0.0);
+        let r = self.rank.min(rows.min(cols));
+        let (u, s, v) = truncated_svd(&mat, rows, cols, r, self.iters, self.seed);
+        let rec = reconstruct(&u, &s, &v, rows, cols);
+        slice.copy_from_slice(&rec[..m_total]);
+        Cost {
+            floats: (r * (rows + cols + 1)) as u64,
+            bits: 32 * (r * (rows + cols + 1)) as u64,
+        }
+    }
+
+    /// Near-square factorization of m: rows = largest divisor <= sqrt(m)
+    /// after padding to a multiple of a modest width.
+    fn matrix_shape(m: usize) -> (usize, usize) {
+        let rows = (m as f64).sqrt() as usize;
+        let rows = rows.max(1);
+        let cols = (m + rows - 1) / rows;
+        (rows, cols)
+    }
+}
+
+impl Compressor for Atomo {
+    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+        match self.segments.clone() {
+            None => self.compress_slice(grad.as_mut_slice()),
+            Some(segs) => {
+                let mut total = Cost { floats: 0, bits: 0 };
+                for (off, size) in segs {
+                    let c = self.compress_slice(&mut grad[off..off + size]);
+                    total.floats += c.floats;
+                    total.bits += c.bits;
+                }
+                total
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "atomo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_ops::norm2;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matrix_shape_covers() {
+        for m in [1usize, 5, 100, 1023, 4096, 52138] {
+            let (r, c) = Atomo::matrix_shape(m);
+            assert!(r * c >= m, "m={m}");
+            assert!(r * c < m + c, "overshoot for m={m}");
+        }
+    }
+
+    #[test]
+    fn exact_on_rank_one_gradient() {
+        // g reshapes to an exactly rank-1 matrix -> lossless at rank 1.
+        let (rows, cols) = (16, 16);
+        let mut rng = Rng::new(2);
+        let u: Vec<f32> = (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut g = vec![0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                g[i * cols + j] = u[i] * v[j];
+            }
+        }
+        let orig = g.clone();
+        let cost = Atomo::new(1).compress(&mut g);
+        let err: f64 = orig
+            .iter()
+            .zip(&g)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(err < 1e-6 * norm2(&orig), "err={err}");
+        assert_eq!(cost.floats, (16 + 16 + 1) as u64);
+    }
+
+    #[test]
+    fn rank2_reduces_error_vs_rank1() {
+        let mut rng = Rng::new(5);
+        let orig: Vec<f32> = (0..900).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let err_of = |rank: usize| {
+            let mut g = orig.clone();
+            Atomo::new(rank).compress(&mut g);
+            orig.iter()
+                .zip(&g)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let (e1, e2) = (err_of(1), err_of(2));
+        assert!(e2 < e1, "rank2 {e2} !< rank1 {e1}");
+        assert!(e1 < norm2(&orig), "compression must capture some energy");
+    }
+
+    #[test]
+    fn cost_much_smaller_than_dense() {
+        let mut g = vec![1.0f32; 10_000];
+        let cost = Atomo::new(2).compress(&mut g);
+        assert!(cost.floats < 1_000, "cost={}", cost.floats);
+    }
+
+    #[test]
+    fn segmented_compresses_per_layer() {
+        let mut rng = Rng::new(8);
+        // Segment 0 is exactly rank-1 (20x20); segment 1 is a tiny bias.
+        let (m, n) = (20, 20);
+        let u: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut g = vec![0f32; m * n + 3];
+        for i in 0..m {
+            for j in 0..n {
+                g[i * n + j] = u[i] * v[j];
+            }
+        }
+        g[m * n] = 7.0;
+        g[m * n + 1] = -7.0;
+        g[m * n + 2] = 0.5;
+        let orig = g.clone();
+        let mut c = Atomo::with_segments(1, vec![(0, m * n), (m * n, 3)]);
+        let cost = c.compress(&mut g);
+        // Rank-1 segment reconstructed near-exactly; bias passes through.
+        let err: f64 = orig[..m * n]
+            .iter()
+            .zip(&g[..m * n])
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(err < 1e-6 * norm2(&orig[..m * n]));
+        assert_eq!(&g[m * n..], &orig[m * n..]);
+        // Cost: rank-1 svd of the square block + 3 dense floats.
+        let (rows, cols) = Atomo::matrix_shape(m * n);
+        assert_eq!(cost.floats, (rows + cols + 1) as u64 + 3);
+    }
+}

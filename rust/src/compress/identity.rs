@@ -1,0 +1,31 @@
+//! Identity codec = vanilla FL transmission (the Fig. 5 baseline).
+
+use super::{dense_cost, Compressor, Cost};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+        dense_cost(grad.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough() {
+        let mut g = vec![1.0, -2.0, 3.0];
+        let orig = g.clone();
+        let c = Identity.compress(&mut g);
+        assert_eq!(g, orig);
+        assert_eq!(c.floats, 3);
+        assert_eq!(c.bits, 96);
+    }
+}

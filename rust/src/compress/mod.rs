@@ -1,0 +1,59 @@
+//! Gradient compression substrates: the paper's plug-and-play baselines.
+//!
+//! LBGM is evaluated standalone (vs vanilla FL = [`Identity`]) and stacked
+//! on top of [`TopK`] sparsification (+ error feedback, Karimireddy 2019),
+//! [`Atomo`] rank-r atomic decomposition (Wang 2018), and [`SignSgd`]
+//! 1-bit compression (Bernstein 2018). Each compressor maps a dense
+//! gradient to a dense *effective* gradient (what the server would decode)
+//! plus its exact uplink cost in floats and bits — the quantities plotted
+//! in Figs. 5-8. In plug-and-play mode the compressed output replaces the
+//! accumulated gradient AND the LBG (paper Sec. 4).
+
+pub mod atomo;
+pub mod error_feedback;
+pub mod identity;
+pub mod signsgd;
+pub mod topk;
+
+pub use atomo::Atomo;
+pub use error_feedback::ErrorFeedback;
+pub use identity::Identity;
+pub use signsgd::SignSgd;
+pub use topk::TopK;
+
+/// Exact uplink cost of one compressed gradient transmission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cost {
+    /// "Floating point parameters shared" (the paper's Fig. 5-7 y-axis).
+    pub floats: u64,
+    /// Exact bits on the wire (the Fig. 8 y-axis).
+    pub bits: u64,
+}
+
+/// A gradient codec. Stateful (error feedback keeps residuals), one
+/// instance per worker.
+pub trait Compressor: Send {
+    /// Compress `grad` in place to its dense effective form; returns the
+    /// uplink cost of transmitting that form.
+    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost;
+
+    /// Codec name for logging.
+    fn name(&self) -> &'static str;
+}
+
+/// Cost of an uncompressed f32 vector.
+pub fn dense_cost(m: usize) -> Cost {
+    Cost { floats: m as u64, bits: 32 * m as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_cost_is_exact() {
+        let c = dense_cost(10);
+        assert_eq!(c.floats, 10);
+        assert_eq!(c.bits, 320);
+    }
+}

@@ -1,0 +1,74 @@
+//! SignSGD with magnitude scaling (Bernstein et al., 2018 — the paper's P4
+//! distributed-training baseline).
+//!
+//! Encodes a gradient as its sign vector plus one f32 scale (the mean
+//! magnitude), i.e. 1 bit per coordinate + 32 bits. The dense effective
+//! gradient is `scale * sign(g)`. Paper Fig. 8 counts *bits* transferred;
+//! the float-equivalent cost is `M/32 + 1`.
+
+use super::{Compressor, Cost};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SignSgd;
+
+impl Compressor for SignSgd {
+    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+        let m = grad.len();
+        if m == 0 {
+            return Cost { floats: 0, bits: 0 };
+        }
+        let scale =
+            (grad.iter().map(|x| x.abs() as f64).sum::<f64>() / m as f64) as f32;
+        for x in grad.iter_mut() {
+            *x = if *x >= 0.0 { scale } else { -scale };
+        }
+        Cost {
+            floats: (m as u64 + 31) / 32 + 1,
+            bits: m as u64 + 32,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_is_signed_scale() {
+        let mut g = vec![3.0f32, -1.0, 0.5, -0.5];
+        let cost = SignSgd.compress(&mut g);
+        let scale = (3.0 + 1.0 + 0.5 + 0.5) / 4.0;
+        assert_eq!(g, vec![scale, -scale, scale, -scale]);
+        assert_eq!(cost.bits, 4 + 32);
+        assert_eq!(cost.floats, 1 + 1);
+    }
+
+    #[test]
+    fn preserves_sign_agreement() {
+        let mut g = vec![0.1f32, -0.2, 5.0, -7.0];
+        let orig = g.clone();
+        SignSgd.compress(&mut g);
+        for (o, c) in orig.iter().zip(&g) {
+            assert_eq!(o.signum(), c.signum());
+        }
+    }
+
+    #[test]
+    fn bits_are_32x_smaller_than_dense() {
+        let mut g = vec![1.0f32; 3200];
+        let cost = SignSgd.compress(&mut g);
+        assert_eq!(cost.bits, 3200 + 32);
+        assert!(cost.bits * 30 < 32 * 3200);
+    }
+
+    #[test]
+    fn empty_gradient() {
+        let mut g: Vec<f32> = vec![];
+        let cost = SignSgd.compress(&mut g);
+        assert_eq!(cost.bits, 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Top-K magnitude sparsification (the paper's P3 baseline).
+//!
+//! Keeps the K entries of largest magnitude, zeroing the rest. Uplink cost
+//! follows the paper's accounting of "floating point parameters": one value
+//! plus one index per kept entry = 2K floats (indices counted as one
+//! 32-bit word each).
+
+use super::{Compressor, Cost};
+
+#[derive(Clone, Debug)]
+pub struct TopK {
+    /// Fraction of entries kept (the paper tunes K ~ 10%).
+    pub fraction: f64,
+}
+
+impl TopK {
+    pub fn new(fraction: f64) -> Self {
+        assert!(fraction > 0.0 && fraction <= 1.0);
+        Self { fraction }
+    }
+
+    fn k_of(&self, m: usize) -> usize {
+        ((m as f64 * self.fraction).ceil() as usize).clamp(1, m)
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+        let m = grad.len();
+        let k = self.k_of(m);
+        if k == m {
+            return super::dense_cost(m);
+        }
+        // Select the k-th largest magnitude with an O(M) average
+        // select_nth, then zero everything strictly below the cut and trim
+        // ties so exactly k survive.
+        let mut mags: Vec<f32> = grad.iter().map(|x| x.abs()).collect();
+        let idx = m - k;
+        mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        let cut = mags[idx];
+        let mut kept = 0usize;
+        for x in grad.iter_mut() {
+            if x.abs() > cut {
+                kept += 1;
+            }
+        }
+        // Keep ties at the cut until k entries survive.
+        let mut ties_allowed = k - kept;
+        for x in grad.iter_mut() {
+            let a = x.abs();
+            if a > cut {
+                continue;
+            }
+            if a == cut && ties_allowed > 0 {
+                ties_allowed -= 1;
+            } else {
+                *x = 0.0;
+            }
+        }
+        Cost { floats: 2 * k as u64, bits: 64 * k as u64 }
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_exactly_k_largest() {
+        let mut g = vec![0.1f32, -5.0, 3.0, 0.2, -0.05, 4.0];
+        let mut c = TopK::new(0.5); // k = 3
+        let cost = c.compress(&mut g);
+        assert_eq!(cost.floats, 6);
+        assert_eq!(g.iter().filter(|x| **x != 0.0).count(), 3);
+        assert_eq!(g[1], -5.0);
+        assert_eq!(g[5], 4.0);
+        assert_eq!(g[2], 3.0);
+        assert_eq!(g[0], 0.0);
+    }
+
+    #[test]
+    fn handles_ties() {
+        let mut g = vec![1.0f32; 10];
+        let mut c = TopK::new(0.3); // k = 3
+        c.compress(&mut g);
+        assert_eq!(g.iter().filter(|x| **x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn full_fraction_is_identity() {
+        let mut g = vec![1.0f32, 2.0, 3.0];
+        let orig = g.clone();
+        let cost = TopK::new(1.0).compress(&mut g);
+        assert_eq!(g, orig);
+        assert_eq!(cost.floats, 3);
+    }
+
+    #[test]
+    fn preserves_energy_ordering() {
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..1000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut g = orig.clone();
+        TopK::new(0.1).compress(&mut g);
+        let kept_min = g
+            .iter()
+            .filter(|x| **x != 0.0)
+            .map(|x| x.abs())
+            .fold(f32::INFINITY, f32::min);
+        let dropped_max = orig
+            .iter()
+            .zip(&g)
+            .filter(|(_, k)| **k == 0.0)
+            .map(|(o, _)| o.abs())
+            .fold(0.0f32, f32::max);
+        assert!(kept_min >= dropped_max);
+        assert_eq!(g.iter().filter(|x| **x != 0.0).count(), 100);
+    }
+}

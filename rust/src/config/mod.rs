@@ -1,0 +1,7 @@
+//! Experiment configuration: JSON-file configs + validation.
+
+pub mod schema;
+pub mod validate;
+
+pub use schema::{CodecKind, ExperimentConfig};
+pub use validate::validate;

@@ -1,0 +1,212 @@
+//! Typed experiment configuration, loadable from JSON files or CLI flags.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Which gradient codec a run stacks under LBGM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecKind {
+    Identity,
+    TopK { fraction: f64 },
+    /// top-K wrapped in error feedback (the paper's standard top-K setup).
+    TopKEf { fraction: f64 },
+    Atomo { rank: usize },
+    SignSgd,
+}
+
+impl CodecKind {
+    pub fn parse(name: &str, fraction: f64, rank: usize) -> Result<CodecKind> {
+        Ok(match name {
+            "identity" | "none" => CodecKind::Identity,
+            "topk" => CodecKind::TopK { fraction },
+            "topk_ef" => CodecKind::TopKEf { fraction },
+            "atomo" => CodecKind::Atomo { rank },
+            "signsgd" => CodecKind::SignSgd,
+            other => anyhow::bail!("unknown codec `{other}`"),
+        })
+    }
+
+    /// Build a boxed compressor instance (one per worker).
+    pub fn build(&self) -> Box<dyn crate::compress::Compressor> {
+        self.build_with_segments(&[])
+    }
+
+    /// Build with a per-layer segment table; ATOMO decomposes each layer's
+    /// gradient matrix separately (as in the original implementation)
+    /// when segments are available.
+    pub fn build_with_segments(
+        &self,
+        segments: &[(usize, usize)],
+    ) -> Box<dyn crate::compress::Compressor> {
+        use crate::compress::*;
+        match *self {
+            CodecKind::Identity => Box::new(Identity),
+            CodecKind::TopK { fraction } => Box::new(TopK::new(fraction)),
+            CodecKind::TopKEf { fraction } => {
+                Box::new(ErrorFeedback::new(TopK::new(fraction)))
+            }
+            CodecKind::Atomo { rank } => {
+                if segments.is_empty() {
+                    Box::new(Atomo::new(rank))
+                } else {
+                    Box::new(Atomo::with_segments(rank, segments.to_vec()))
+                }
+            }
+            CodecKind::SignSgd => Box::new(SignSgd),
+        }
+    }
+}
+
+/// One experiment arm: dataset x model x federation x LBGM settings.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Model variant name in the artifact manifest.
+    pub variant: String,
+    /// Dataset: synth_mnist | synth_fmnist | synth_cifar | synth_celeba | corpus.
+    pub dataset: String,
+    pub workers: usize,
+    pub rounds: usize,
+    pub tau: usize,
+    pub eta: f64,
+    /// LBP threshold; < 0 = vanilla FL.
+    pub delta: f64,
+    pub noniid: bool,
+    pub labels_per_worker: usize,
+    pub sample_fraction: f64,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub codec: CodecKind,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            variant: "cnn_mnist".into(),
+            dataset: "synth_mnist".into(),
+            workers: 20,
+            rounds: 60,
+            tau: 2,
+            eta: 0.05,
+            delta: 0.2,
+            noniid: true,
+            labels_per_worker: 3,
+            sample_fraction: 1.0,
+            train_n: 2000,
+            test_n: 512,
+            eval_every: 5,
+            seed: 7,
+            codec: CodecKind::Identity,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; unspecified fields keep defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing config")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        let gets = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        let getn = |k: &str| j.get(k).and_then(Json::as_f64);
+        let getb = |k: &str| j.get(k).and_then(Json::as_bool);
+        if let Some(v) = gets("name") {
+            c.name = v;
+        }
+        if let Some(v) = gets("variant") {
+            c.variant = v;
+        }
+        if let Some(v) = gets("dataset") {
+            c.dataset = v;
+        }
+        if let Some(v) = getn("workers") {
+            c.workers = v as usize;
+        }
+        if let Some(v) = getn("rounds") {
+            c.rounds = v as usize;
+        }
+        if let Some(v) = getn("tau") {
+            c.tau = v as usize;
+        }
+        if let Some(v) = getn("eta") {
+            c.eta = v;
+        }
+        if let Some(v) = getn("delta") {
+            c.delta = v;
+        }
+        if let Some(v) = getb("noniid") {
+            c.noniid = v;
+        }
+        if let Some(v) = getn("labels_per_worker") {
+            c.labels_per_worker = v as usize;
+        }
+        if let Some(v) = getn("sample_fraction") {
+            c.sample_fraction = v;
+        }
+        if let Some(v) = getn("train_n") {
+            c.train_n = v as usize;
+        }
+        if let Some(v) = getn("test_n") {
+            c.test_n = v as usize;
+        }
+        if let Some(v) = getn("eval_every") {
+            c.eval_every = v as usize;
+        }
+        if let Some(v) = getn("seed") {
+            c.seed = v as u64;
+        }
+        let codec_name = gets("codec").unwrap_or_else(|| "identity".into());
+        let fraction = getn("codec_fraction").unwrap_or(0.1);
+        let rank = getn("codec_rank").unwrap_or(2.0) as usize;
+        c.codec = CodecKind::parse(&codec_name, fraction, rank)?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_overrides() {
+        let j = Json::parse(
+            r#"{"name":"x","workers":10,"delta":-1,"codec":"topk_ef","codec_fraction":0.25}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.name, "x");
+        assert_eq!(c.workers, 10);
+        assert_eq!(c.delta, -1.0);
+        assert_eq!(c.codec, CodecKind::TopKEf { fraction: 0.25 });
+        // untouched default:
+        assert_eq!(c.tau, 2);
+    }
+
+    #[test]
+    fn codec_parsing() {
+        assert_eq!(
+            CodecKind::parse("atomo", 0.1, 3).unwrap(),
+            CodecKind::Atomo { rank: 3 }
+        );
+        assert_eq!(CodecKind::parse("signsgd", 0.1, 1).unwrap(), CodecKind::SignSgd);
+        assert!(CodecKind::parse("bogus", 0.1, 1).is_err());
+    }
+
+    #[test]
+    fn codec_build_names() {
+        assert_eq!(CodecKind::Identity.build().name(), "identity");
+        assert_eq!(CodecKind::SignSgd.build().name(), "signsgd");
+        assert_eq!(CodecKind::TopKEf { fraction: 0.1 }.build().name(), "error_feedback");
+    }
+}

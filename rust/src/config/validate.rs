@@ -1,0 +1,83 @@
+//! Config validation: surfaces the paper's stability conditions as errors
+//! before a run burns compute.
+
+use anyhow::Result;
+
+use super::schema::{CodecKind, ExperimentConfig};
+
+/// Validate an experiment configuration.
+pub fn validate(c: &ExperimentConfig) -> Result<()> {
+    anyhow::ensure!(c.workers >= 1, "workers must be >= 1");
+    anyhow::ensure!(c.rounds >= 1, "rounds must be >= 1");
+    anyhow::ensure!(c.tau >= 1, "tau must be >= 1");
+    anyhow::ensure!(c.eta > 0.0 && c.eta < 10.0, "eta out of range: {}", c.eta);
+    anyhow::ensure!(
+        c.delta <= 1.0,
+        "delta is a bound on sin^2 in [0,1] (or <0 for vanilla): {}",
+        c.delta
+    );
+    anyhow::ensure!(
+        c.sample_fraction > 0.0 && c.sample_fraction <= 1.0,
+        "sample_fraction in (0, 1]"
+    );
+    anyhow::ensure!(c.train_n >= c.workers, "need >= 1 sample per worker");
+    anyhow::ensure!(c.eval_every >= 1, "eval_every must be >= 1");
+    anyhow::ensure!(c.labels_per_worker >= 1, "labels_per_worker >= 1");
+    match c.codec {
+        CodecKind::TopK { fraction } | CodecKind::TopKEf { fraction } => {
+            anyhow::ensure!(
+                fraction > 0.0 && fraction <= 1.0,
+                "top-K fraction in (0,1]"
+            );
+        }
+        CodecKind::Atomo { rank } => {
+            anyhow::ensure!(rank >= 1 && rank <= 64, "atomo rank in [1,64]");
+        }
+        _ => {}
+    }
+    // Theorem 1 learning-rate guidance (beta unknown; warn-level check on
+    // the tau scaling): eta * tau should stay well below 1 for stability.
+    anyhow::ensure!(
+        c.eta * c.tau as f64 <= 2.0,
+        "eta*tau = {} violates the Theorem-1 stability scaling",
+        c.eta * c.tau as f64
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        validate(&ExperimentConfig::default()).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.delta = 1.5;
+        assert!(validate(&c).is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.eta = 0.9;
+        c.tau = 10;
+        assert!(validate(&c).is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.sample_fraction = 0.0;
+        assert!(validate(&c).is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.codec = CodecKind::TopK { fraction: 0.0 };
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn vanilla_delta_is_valid() {
+        let mut c = ExperimentConfig::default();
+        c.delta = -1.0;
+        validate(&c).unwrap();
+    }
+}

@@ -1,0 +1,86 @@
+//! Exact communication ledgers.
+//!
+//! The paper's headline evaluation axes are *counters*, not estimates:
+//! "total floating point parameters transferred" (Figs. 5-7) and "bits
+//! transferred" (Fig. 8), cumulative over rounds and summed over workers.
+
+use crate::compress::Cost;
+
+/// Cumulative uplink accounting, total and per worker.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    pub total_floats: u64,
+    pub total_bits: u64,
+    per_worker_floats: Vec<u64>,
+    per_worker_bits: Vec<u64>,
+    pub scalar_msgs: u64,
+    pub full_msgs: u64,
+}
+
+impl CommLedger {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            per_worker_floats: vec![0; workers],
+            per_worker_bits: vec![0; workers],
+            ..Default::default()
+        }
+    }
+
+    pub fn record(&mut self, worker: usize, cost: Cost, is_scalar: bool) {
+        self.total_floats += cost.floats;
+        self.total_bits += cost.bits;
+        self.per_worker_floats[worker] += cost.floats;
+        self.per_worker_bits[worker] += cost.bits;
+        if is_scalar {
+            self.scalar_msgs += 1;
+        } else {
+            self.full_msgs += 1;
+        }
+    }
+
+    pub fn worker_floats(&self, worker: usize) -> u64 {
+        self.per_worker_floats[worker]
+    }
+
+    pub fn worker_bits(&self, worker: usize) -> u64 {
+        self.per_worker_bits[worker]
+    }
+
+    /// Mean floats per participating worker (the per-worker y-axis of Fig. 5).
+    pub fn mean_worker_floats(&self) -> f64 {
+        let active = self.per_worker_floats.iter().filter(|&&f| f > 0).count();
+        if active == 0 {
+            0.0
+        } else {
+            self.total_floats as f64 / active as f64
+        }
+    }
+
+    /// Internal-consistency check: totals equal the per-worker sums.
+    pub fn consistent(&self) -> bool {
+        self.per_worker_floats.iter().sum::<u64>() == self.total_floats
+            && self.per_worker_bits.iter().sum::<u64>() == self.total_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_per_worker() {
+        let mut l = CommLedger::new(3);
+        l.record(0, Cost { floats: 10, bits: 320 }, false);
+        l.record(1, Cost { floats: 1, bits: 32 }, true);
+        l.record(0, Cost { floats: 1, bits: 32 }, true);
+        assert_eq!(l.total_floats, 12);
+        assert_eq!(l.total_bits, 384);
+        assert_eq!(l.worker_floats(0), 11);
+        assert_eq!(l.worker_floats(2), 0);
+        assert_eq!(l.scalar_msgs, 2);
+        assert_eq!(l.full_msgs, 1);
+        assert!(l.consistent());
+        // 2 active workers, 12 floats total.
+        assert!((l.mean_worker_floats() - 6.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,52 @@
+//! Uplink message schema (paper Alg. 1: `mu_k` is a scalar or a vector).
+
+use crate::compress::Cost;
+
+/// Payload of one worker's round update.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Look-back coefficient only (the LBGM fast path).
+    Scalar { rho: f32 },
+    /// Full (possibly codec-compressed, dense-decoded) accumulated gradient.
+    Full { grad: Vec<f32> },
+}
+
+/// A worker's uplink for one global round.
+#[derive(Clone, Debug)]
+pub struct WorkerMsg {
+    pub worker: usize,
+    pub round: usize,
+    pub payload: Payload,
+    /// Exact uplink cost of this message.
+    pub cost: Cost,
+    /// Mean local training loss over the tau local steps (telemetry).
+    pub train_loss: f64,
+}
+
+impl WorkerMsg {
+    pub fn is_scalar(&self) -> bool {
+        matches!(self.payload, Payload::Scalar { .. })
+    }
+}
+
+/// Uplink cost of a scalar LBC: one f32.
+pub const SCALAR_COST: Cost = Cost { floats: 1, bits: 32 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_flag() {
+        let m = WorkerMsg {
+            worker: 0,
+            round: 1,
+            payload: Payload::Scalar { rho: 0.5 },
+            cost: SCALAR_COST,
+            train_loss: 0.0,
+        };
+        assert!(m.is_scalar());
+        assert_eq!(m.cost.floats, 1);
+        assert_eq!(m.cost.bits, 32);
+    }
+}

@@ -1,0 +1,29 @@
+//! Layer-3 FL coordinator: the distributed system around LBGM.
+//!
+//! * [`messages`] — the uplink wire schema (scalar LBC vs full gradient).
+//! * [`accounting`] — exact floats/bits ledgers (the paper's Figs. 5-8 axes).
+//! * [`sampling`] — client sampling (paper Alg. 3 / App. F.5).
+//! * [`trainer`] — local-compute abstraction: PJRT-backed real models and a
+//!   pure-Rust quadratic mock used by threaded/property tests.
+//! * [`worker`] / [`server`] — the two halves of Alg. 1.
+//! * [`round`] — the sequential round driver used by figures and examples.
+//! * [`transport`] — channel-based threaded deployment (server thread + one
+//!   thread per worker) exercised with the mock trainer, since PJRT
+//!   executables are not `Send`.
+
+pub mod accounting;
+pub mod messages;
+pub mod round;
+pub mod sampling;
+pub mod server;
+pub mod trainer;
+pub mod transport;
+pub mod worker;
+
+pub use accounting::CommLedger;
+pub use messages::{Payload, WorkerMsg};
+pub use round::{run_fl, FlConfig};
+pub use sampling::sample_clients;
+pub use server::Server;
+pub use trainer::{LocalTrainer, MockTrainer, PjrtTrainer};
+pub use worker::Worker;

@@ -1,0 +1,214 @@
+//! Sequential round driver: the reference deployment used by every figure
+//! harness and example.
+//!
+//! Each global round t: (1) sample the participating client set, (2) each
+//! sampled worker runs tau local SGD steps via its [`LocalTrainer`] and
+//! turns the accumulated gradient into an uplink message through its LBGM
+//! state machine, (3) the server aggregates, (4) metrics are recorded.
+
+use anyhow::Result;
+
+use crate::compress::Compressor;
+use crate::lbgm::ThresholdPolicy;
+use crate::metrics::{RoundRecord, RunSeries};
+use crate::util::timer::PhaseTimer;
+
+use super::accounting::CommLedger;
+use super::sampling::sample_clients;
+use super::server::Server;
+use super::trainer::LocalTrainer;
+use super::worker::Worker;
+
+/// Federated-run configuration (one experiment arm).
+#[derive(Clone, Debug)]
+pub struct FlConfig {
+    pub rounds: usize,
+    /// Local SGD steps per round (tau).
+    pub tau: usize,
+    pub eta: f32,
+    /// LBP-error threshold; `delta < 0` = vanilla FL (always full sends).
+    pub policy: ThresholdPolicy,
+    /// Client sampling fraction (1.0 = full participation).
+    pub sample_fraction: f64,
+    /// Evaluate every this many rounds (and always on the last round).
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Verify worker/server LBG coherence every round (cheap at test scale).
+    pub check_coherence: bool,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        Self {
+            rounds: 50,
+            tau: 2,
+            eta: 0.05,
+            policy: ThresholdPolicy::fixed(0.2),
+            sample_fraction: 1.0,
+            eval_every: 5,
+            seed: 0,
+            check_coherence: false,
+        }
+    }
+}
+
+/// Outcome of a full federated run.
+pub struct FlOutcome {
+    pub series: RunSeries,
+    pub ledger: CommLedger,
+    pub timers: PhaseTimer,
+    pub final_theta: Vec<f32>,
+}
+
+/// Run federated training with LBGM + the given per-worker codec factory.
+///
+/// `codec` is instantiated once per worker (codecs are stateful: error
+/// feedback residuals).
+pub fn run_fl(
+    trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+    name: &str,
+) -> Result<FlOutcome> {
+    let k = trainer.workers();
+    anyhow::ensure!(theta0.len() == trainer.dim(), "theta0 dim mismatch");
+    let mut server = Server::new(theta0, trainer.weights(), cfg.eta);
+    let mut workers: Vec<Worker> =
+        (0..k).map(|id| Worker::new(id, codec())).collect();
+    let mut series = RunSeries::new(name);
+    let mut ledger = CommLedger::new(k);
+    let mut timers = PhaseTimer::new();
+
+    for t in 0..cfg.rounds {
+        let start = std::time::Instant::now();
+        let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        let mut msgs = Vec::with_capacity(participants.len());
+        let mut train_loss_sum = 0f64;
+        for &w in &participants {
+            let (loss, grad) = timers.time("local_sgd", || {
+                trainer.local_round(w, &server.theta, cfg.tau, cfg.eta)
+            })?;
+            train_loss_sum += loss;
+            let msg = timers.time("lbgm_uplink", || {
+                workers[w].process_round(t, grad, loss, &cfg.policy)
+            });
+            ledger.record(w, msg.cost, msg.is_scalar());
+            msgs.push(msg);
+        }
+        timers.time("aggregate", || server.apply(&msgs))?;
+
+        if cfg.check_coherence {
+            for &w in &participants {
+                let coherent = match (workers[w].lbg(), server.lbgs.get(w)) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => a == b,
+                    _ => false,
+                };
+                anyhow::ensure!(coherent, "LBG copies diverged at worker {w}");
+            }
+        }
+
+        let mut rec = RoundRecord {
+            round: t,
+            train_loss: train_loss_sum / participants.len() as f64,
+            floats_up: ledger.total_floats,
+            bits_up: ledger.total_bits,
+            full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
+            scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
+            wall_secs: start.elapsed().as_secs_f64(),
+            ..Default::default()
+        };
+        if t % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+            let (tl, tm) = timers.time("eval", || trainer.eval(&server.theta))?;
+            rec.test_loss = tl;
+            rec.test_metric = tm;
+        } else if let Some(prev) = series.last() {
+            rec.test_loss = prev.test_loss;
+            rec.test_metric = prev.test_metric;
+        }
+        series.push(rec);
+    }
+
+    Ok(FlOutcome { series, ledger, timers, final_theta: server.theta })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Identity;
+    use crate::coordinator::trainer::MockTrainer;
+
+    fn mock() -> MockTrainer {
+        MockTrainer::new(32, 8, 0.3, 0.05, 9)
+    }
+
+    fn run(policy: ThresholdPolicy, seed: u64) -> FlOutcome {
+        let mut t = mock();
+        let cfg = FlConfig {
+            rounds: 40,
+            tau: 2,
+            eta: 0.05,
+            policy,
+            eval_every: 5,
+            seed,
+            check_coherence: true,
+            ..Default::default()
+        };
+        run_fl(&mut t, vec![0.0; 32], &cfg, &|| Box::new(Identity), "t").unwrap()
+    }
+
+    #[test]
+    fn vanilla_converges_on_mock() {
+        let out = run(ThresholdPolicy::fixed(-1.0), 1);
+        let first = out.series.rounds[0].train_loss;
+        let last = out.series.last().unwrap().train_loss;
+        assert!(last < 0.3 * first, "no convergence: {first} -> {last}");
+        assert_eq!(out.ledger.scalar_msgs, 0);
+    }
+
+    #[test]
+    fn lbgm_saves_communication_and_still_converges() {
+        let vanilla = run(ThresholdPolicy::fixed(-1.0), 1);
+        let lbgm = run(ThresholdPolicy::fixed(0.5), 1);
+        assert!(lbgm.ledger.total_floats < vanilla.ledger.total_floats / 2);
+        assert!(lbgm.ledger.scalar_msgs > 0);
+        let first = lbgm.series.rounds[0].train_loss;
+        let last = lbgm.series.last().unwrap().train_loss;
+        assert!(last < 0.5 * first, "LBGM diverged: {first} -> {last}");
+    }
+
+    #[test]
+    fn vanilla_recovery_is_bit_exact() {
+        // delta < 0 must equal FedAvg exactly: LBGM state never consulted.
+        let a = run(ThresholdPolicy::fixed(-1.0), 7);
+        let b = run(ThresholdPolicy::fixed(-1.0), 7);
+        assert_eq!(a.final_theta, b.final_theta);
+    }
+
+    #[test]
+    fn sampling_runs_and_accounts() {
+        let mut t = mock();
+        let cfg = FlConfig {
+            rounds: 20,
+            sample_fraction: 0.5,
+            policy: ThresholdPolicy::fixed(0.5),
+            check_coherence: true,
+            ..Default::default()
+        };
+        let out =
+            run_fl(&mut t, vec![0.0; 32], &cfg, &|| Box::new(Identity), "s").unwrap();
+        assert!(out.ledger.consistent());
+        // 4 of 8 workers per round.
+        let per_round = out.series.rounds[0].full_sends + out.series.rounds[0].scalar_sends;
+        assert_eq!(per_round, 4);
+    }
+
+    #[test]
+    fn ledger_matches_message_structure() {
+        let out = run(ThresholdPolicy::fixed(0.3), 3);
+        let m = 32u64;
+        let expect = out.ledger.full_msgs * m + out.ledger.scalar_msgs;
+        assert_eq!(out.ledger.total_floats, expect);
+    }
+}

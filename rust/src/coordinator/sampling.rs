@@ -1,0 +1,65 @@
+//! Client sampling (paper Alg. 3, App. F.5): each round the server draws a
+//! uniform random subset K' of the worker pool.
+
+use crate::util::rng::Rng;
+
+/// Deterministically sample `ceil(fraction * k)` distinct client ids for a
+//  given round. `fraction >= 1` means full participation.
+pub fn sample_clients(round: usize, k: usize, fraction: f64, seed: u64) -> Vec<usize> {
+    assert!(k > 0);
+    if fraction >= 1.0 {
+        return (0..k).collect();
+    }
+    let m = ((k as f64 * fraction).ceil() as usize).clamp(1, k);
+    let mut rng = Rng::new(seed ^ (round as u64).wrapping_mul(0x9E37_79B9));
+    let mut ids = rng.sample_indices(k, m);
+    ids.sort_unstable();
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation() {
+        assert_eq!(sample_clients(0, 5, 1.0, 0), vec![0, 1, 2, 3, 4]);
+        assert_eq!(sample_clients(9, 5, 2.0, 0), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn half_sampling_sizes() {
+        let s = sample_clients(3, 10, 0.5, 1);
+        assert_eq!(s.len(), 5);
+        let mut d = s.clone();
+        d.dedup();
+        assert_eq!(d.len(), 5);
+        assert!(s.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn deterministic_per_round_but_varies_across_rounds() {
+        let a = sample_clients(1, 20, 0.5, 7);
+        let b = sample_clients(1, 20, 0.5, 7);
+        assert_eq!(a, b);
+        let rounds: Vec<Vec<usize>> =
+            (0..10).map(|r| sample_clients(r, 20, 0.5, 7)).collect();
+        assert!(rounds.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn all_clients_eventually_sampled() {
+        let mut seen = vec![false; 10];
+        for r in 0..100 {
+            for i in sample_clients(r, 10, 0.3, 3) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn at_least_one_client() {
+        assert_eq!(sample_clients(0, 10, 0.001, 0).len(), 1);
+    }
+}

@@ -1,0 +1,129 @@
+//! Server-side LBGM aggregation (paper Alg. 1, "Global update"; Alg. 3 for
+//! the sampled variant).
+//!
+//! The server holds the global model, the server-side LBG copies, and the
+//! FedAvg weights. `apply` consumes a round's uplink messages: scalar
+//! messages are decoded through the LBG store, full messages refresh it.
+//! With sampling, weights are renormalized over the sampled set, the
+//! standard unbiased FedAvg-with-sampling rule (Alg. 3 writes
+//! `eta/|K'| * omega_k`, which with `omega_k ~ 1/K` rescales the step by
+//! 1/K; we use the renormalized form so the step size is scale-free —
+//! noted in DESIGN.md).
+
+use anyhow::Result;
+
+use crate::lbgm::reconstruct::{apply_full, apply_scalar};
+use crate::lbgm::store::LbgStore;
+
+use super::messages::{Payload, WorkerMsg};
+
+/// The aggregation server's persistent state.
+pub struct Server {
+    pub theta: Vec<f32>,
+    pub lbgs: LbgStore,
+    pub weights: Vec<f32>,
+    pub eta: f32,
+}
+
+impl Server {
+    pub fn new(theta0: Vec<f32>, weights: Vec<f32>, eta: f32) -> Self {
+        let k = weights.len();
+        Self { theta: theta0, lbgs: LbgStore::new(k), weights, eta }
+    }
+
+    /// Apply one aggregation round. `msgs` must contain at most one message
+    /// per worker; the participating set is inferred from it.
+    pub fn apply(&mut self, msgs: &[WorkerMsg]) -> Result<()> {
+        // Renormalize omega over the participating set.
+        let wsum: f32 = msgs.iter().map(|m| self.weights[m.worker]).sum();
+        anyhow::ensure!(wsum > 0.0, "no participating workers");
+        let Server { theta, lbgs, weights, eta } = self;
+        for m in msgs {
+            let omega = weights[m.worker] / wsum;
+            match &m.payload {
+                Payload::Scalar { rho } => {
+                    let lbg = lbgs.get(m.worker).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "scalar LBC from worker {} with no server LBG",
+                            m.worker
+                        )
+                    })?;
+                    apply_scalar(theta, lbg, *eta, omega, *rho);
+                }
+                Payload::Full { grad } => {
+                    anyhow::ensure!(grad.len() == theta.len(), "dim mismatch");
+                    apply_full(theta, grad, *eta, omega);
+                    lbgs.refresh(m.worker, grad); // Alg. 1 line 17
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Cost;
+    use crate::coordinator::messages::SCALAR_COST;
+
+    fn full(worker: usize, grad: Vec<f32>) -> WorkerMsg {
+        let m = grad.len();
+        WorkerMsg {
+            worker,
+            round: 0,
+            payload: Payload::Full { grad },
+            cost: Cost { floats: m as u64, bits: 32 * m as u64 },
+            train_loss: 0.0,
+        }
+    }
+
+    fn scalar(worker: usize, rho: f32) -> WorkerMsg {
+        WorkerMsg {
+            worker,
+            round: 0,
+            payload: Payload::Scalar { rho },
+            cost: SCALAR_COST,
+            train_loss: 0.0,
+        }
+    }
+
+    #[test]
+    fn full_updates_match_fedavg() {
+        let mut s = Server::new(vec![0.0; 2], vec![0.5, 0.5], 1.0);
+        s.apply(&[full(0, vec![1.0, 0.0]), full(1, vec![0.0, 2.0])]).unwrap();
+        assert_eq!(s.theta, vec![-0.5, -1.0]);
+        assert!(s.lbgs.get(0).is_some());
+    }
+
+    #[test]
+    fn scalar_without_lbg_is_error() {
+        let mut s = Server::new(vec![0.0; 2], vec![1.0], 1.0);
+        assert!(s.apply(&[scalar(0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn scalar_reconstructs_through_lbg() {
+        let mut s = Server::new(vec![0.0; 2], vec![1.0], 0.5);
+        s.apply(&[full(0, vec![2.0, 4.0])]).unwrap();
+        let t1 = s.theta.clone(); // [-1, -2]
+        s.apply(&[scalar(0, 0.5)]).unwrap();
+        // theta -= 0.5(eta) * 1(omega) * 0.5(rho) * lbg
+        assert_eq!(s.theta, vec![t1[0] - 0.5, t1[1] - 1.0]);
+    }
+
+    #[test]
+    fn sampling_renormalizes_weights() {
+        // Workers 0 and 1 have weight 0.25 each; only worker 0 participates:
+        // its effective weight is 1.0 under renormalization.
+        let mut s = Server::new(vec![0.0], vec![0.25, 0.25, 0.5], 1.0);
+        s.apply(&[full(0, vec![1.0])]).unwrap();
+        assert_eq!(s.theta, vec![-1.0]);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut s = Server::new(vec![0.0; 3], vec![1.0], 1.0);
+        assert!(s.apply(&[full(0, vec![1.0])]).is_err());
+    }
+}

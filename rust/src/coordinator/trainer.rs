@@ -1,0 +1,428 @@
+//! Local-compute abstraction: what a worker's device does between uplinks.
+//!
+//! [`PjrtTrainer`] runs the real AOT-compiled grad/eval HLO on the PJRT CPU
+//! client over a synthetic dataset or token corpus — this is the production
+//! path. [`MockTrainer`] is an analytic quadratic federation used by the
+//! threaded transport (PJRT executables are not `Send`) and by the fast
+//! property tests: local loss `F_k = 0.5 ||theta - theta*_k||^2` with
+//! Gaussian gradient noise satisfies the paper's assumptions A1-A3 exactly,
+//! so convergence-trend tests have ground truth.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Dataset, MarkovCorpus, Partition, Task};
+use crate::linalg::vec_ops::axpy;
+use crate::runtime::client::{Feed, ModelExecutable};
+use crate::runtime::{Runtime, VariantMeta};
+use crate::util::rng::Rng;
+
+/// Device-local training/eval interface consumed by the round driver.
+pub trait LocalTrainer {
+    /// Run `tau` local SGD steps from `theta` on worker `k`'s shard;
+    /// returns `(mean local train loss, accumulated gradient sum_b g^(t,b))`.
+    fn local_round(&mut self, worker: usize, theta: &[f32], tau: usize, eta: f32)
+        -> Result<(f64, Vec<f32>)>;
+
+    /// Evaluate on the test split: `(test loss, test metric)` where metric
+    /// is accuracy for cls/lm and MSE for regression.
+    fn eval(&mut self, theta: &[f32]) -> Result<(f64, f64)>;
+
+    /// Flat parameter dimension M.
+    fn dim(&self) -> usize;
+
+    /// Number of workers this trainer can serve.
+    fn workers(&self) -> usize;
+
+    /// FedAvg weights omega_k (sum to 1).
+    fn weights(&self) -> Vec<f32>;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed trainer over synthetic image/regression datasets.
+// ---------------------------------------------------------------------------
+
+/// Batch staging buffers (reused every step; zero allocation in the loop).
+struct Stage {
+    x_f: Vec<f32>,
+    y_i: Vec<i32>,
+    y_f: Vec<f32>,
+    idx: Vec<usize>,
+}
+
+/// The production trainer: executes the AOT grad/eval artifacts.
+pub struct PjrtTrainer {
+    grad_exe: Arc<ModelExecutable>,
+    eval_exe: Arc<ModelExecutable>,
+    meta: VariantMeta,
+    source: Source,
+    stage: Stage,
+    theta_buf: Vec<f32>,
+}
+
+enum Source {
+    Image { ds: Dataset, part: Partition, batchers: Vec<Batcher> },
+    Corpus { corpus: MarkovCorpus, ranges: Vec<(usize, usize)>, rngs: Vec<Rng>, seq: usize },
+}
+
+impl PjrtTrainer {
+    /// Trainer over a synthetic image/regression dataset partitioned across
+    /// `k` workers.
+    pub fn image(
+        rt: &Runtime,
+        meta: &VariantMeta,
+        ds: Dataset,
+        part: Partition,
+        seed: u64,
+    ) -> Result<Self> {
+        let (grad_exe, eval_exe) = rt.load_variant(meta)?;
+        let mut root = Rng::new(seed);
+        let batchers = part
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(k, s)| Batcher::new(s.clone(), meta.batch, root.fork(k as u64).next_u64()))
+            .collect();
+        Ok(Self {
+            grad_exe,
+            eval_exe,
+            meta: meta.clone(),
+            source: Source::Image { ds, part, batchers },
+            stage: Stage { x_f: Vec::new(), y_i: Vec::new(), y_f: Vec::new(), idx: Vec::new() },
+            theta_buf: Vec::new(),
+        })
+    }
+
+    /// Trainer over a token corpus split contiguously across `k` workers
+    /// (the transformer-LM end-to-end driver).
+    pub fn corpus(
+        rt: &Runtime,
+        meta: &VariantMeta,
+        corpus: MarkovCorpus,
+        k: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(meta.task == "lm", "corpus trainer requires an lm variant");
+        let (grad_exe, eval_exe) = rt.load_variant(meta)?;
+        let ranges = corpus.shard_ranges(k);
+        let mut root = Rng::new(seed);
+        let rngs = (0..k).map(|i| root.fork(i as u64)).collect();
+        let seq = meta.x_shape[1];
+        Ok(Self {
+            grad_exe,
+            eval_exe,
+            meta: meta.clone(),
+            source: Source::Corpus { corpus, ranges, rngs, seq },
+            stage: Stage { x_f: Vec::new(), y_i: Vec::new(), y_f: Vec::new(), idx: Vec::new() },
+            theta_buf: Vec::new(),
+        })
+    }
+
+    pub fn meta(&self) -> &VariantMeta {
+        &self.meta
+    }
+
+    fn fill_train_batch(&mut self, worker: usize) {
+        let st = &mut self.stage;
+        match &mut self.source {
+            Source::Image { ds, part, batchers } => {
+                let _ = part;
+                batchers[worker].next_batch(&mut st.idx);
+                ds.gather_train(&st.idx, &mut st.x_f, &mut st.y_i, &mut st.y_f);
+            }
+            Source::Corpus { corpus, ranges, rngs, seq } => {
+                let batch = self.meta.batch;
+                let mut xi: Vec<i32> = Vec::new();
+                corpus.sample_batch(ranges[worker], batch, *seq, &mut rngs[worker], &mut xi, &mut st.y_i);
+                // x is i32 for LM; reuse y_f as unused.
+                st.x_f.clear();
+                st.y_f.clear();
+                // Stash tokens in a dedicated int buffer via idx reuse:
+                st.idx.clear();
+                st.idx.extend(xi.iter().map(|&t| t as usize));
+            }
+        }
+    }
+
+    fn run_grad(&mut self, theta: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let st = &self.stage;
+        match self.source {
+            Source::Image { ref ds, .. } => {
+                let y = if ds.spec.task == Task::Regression {
+                    Feed::F32(&st.y_f)
+                } else {
+                    Feed::I32(&st.y_i)
+                };
+                self.grad_exe.run(theta, Feed::F32(&st.x_f), y)
+            }
+            Source::Corpus { .. } => {
+                let xi: Vec<i32> = st.idx.iter().map(|&t| t as i32).collect();
+                self.grad_exe.run(theta, Feed::I32(&xi), Feed::I32(&st.y_i))
+            }
+        }
+    }
+}
+
+impl LocalTrainer for PjrtTrainer {
+    fn local_round(
+        &mut self,
+        worker: usize,
+        theta: &[f32],
+        tau: usize,
+        eta: f32,
+    ) -> Result<(f64, Vec<f32>)> {
+        let m = self.meta.param_count;
+        // theta_k <- theta (reused buffer)
+        self.theta_buf.clear();
+        self.theta_buf.extend_from_slice(theta);
+        let mut acc = vec![0f32; m];
+        let mut loss_sum = 0f64;
+        for _ in 0..tau {
+            self.fill_train_batch(worker);
+            let theta_now = std::mem::take(&mut self.theta_buf);
+            let (loss, grad) = self.run_grad(&theta_now)?;
+            self.theta_buf = theta_now;
+            loss_sum += loss as f64;
+            axpy(-eta, &grad, &mut self.theta_buf);
+            axpy(1.0, &grad, &mut acc);
+        }
+        Ok((loss_sum / tau as f64, acc))
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> Result<(f64, f64)> {
+        match &self.source {
+            Source::Image { ds, .. } => {
+                let b = self.meta.batch;
+                let n_batches = ds.test_len() / b;
+                anyhow::ensure!(n_batches > 0, "test split smaller than batch");
+                let d = ds.dim();
+                let o = ds.spec.classes;
+                let mut loss_sum = 0f64;
+                let mut metric_sum = 0f64;
+                for bi in 0..n_batches {
+                    let lo = bi * b;
+                    let x = &ds.test_x[lo * d..(lo + b) * d];
+                    let (loss, metric) = if ds.spec.task == Task::Regression {
+                        let y = &ds.test_t[lo * o..(lo + b) * o];
+                        self.eval_exe.run(theta, Feed::F32(x), Feed::F32(y))?
+                    } else {
+                        let y = &ds.test_y[lo..lo + b];
+                        self.eval_exe.run(theta, Feed::F32(x), Feed::I32(y))?
+                    };
+                    loss_sum += loss as f64;
+                    metric_sum += metric[0] as f64;
+                }
+                let n = (n_batches * b) as f64;
+                let metric = if ds.spec.task == Task::Regression {
+                    metric_sum / (n * o as f64) // mean squared error
+                } else {
+                    metric_sum / n // accuracy
+                };
+                Ok((loss_sum / n_batches as f64, metric))
+            }
+            Source::Corpus { corpus, seq, .. } => {
+                // Held-out = final 10% of the corpus; deterministic batches.
+                let b = self.meta.batch;
+                let s = *seq;
+                let lo = corpus.len() * 9 / 10;
+                let mut rng = Rng::new(0x377A_11CE); // fixed eval stream
+                let (mut x, mut y) = (Vec::new(), Vec::new());
+                let mut loss_sum = 0f64;
+                let mut metric_sum = 0f64;
+                let n_batches = 4;
+                for _ in 0..n_batches {
+                    corpus.sample_batch((lo, corpus.len()), b, s, &mut rng, &mut x, &mut y);
+                    let (loss, metric) =
+                        self.eval_exe.run(theta, Feed::I32(&x), Feed::I32(&y))?;
+                    loss_sum += loss as f64;
+                    metric_sum += metric[0] as f64;
+                }
+                let tokens = (n_batches * b * s) as f64;
+                Ok((loss_sum / n_batches as f64, metric_sum / tokens))
+            }
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.meta.param_count
+    }
+
+    fn workers(&self) -> usize {
+        match &self.source {
+            Source::Image { part, .. } => part.shards.len(),
+            Source::Corpus { ranges, .. } => ranges.len(),
+        }
+    }
+
+    fn weights(&self) -> Vec<f32> {
+        match &self.source {
+            Source::Image { part, .. } => part.weights.clone(),
+            Source::Corpus { ranges, .. } => {
+                let total: usize = ranges.iter().map(|(a, b)| b - a).sum();
+                ranges.iter().map(|(a, b)| (b - a) as f32 / total as f32).collect()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic mock trainer (Send; used by transport + property tests).
+// ---------------------------------------------------------------------------
+
+/// Quadratic federation: `F_k(theta) = 0.5 ||theta - theta*_k||^2`,
+/// stochastic gradient `= (theta - theta*_k) + N(0, sigma^2 I)`.
+pub struct MockTrainer {
+    pub dim: usize,
+    optima: Vec<Vec<f32>>, // theta*_k per worker
+    weights: Vec<f32>,
+    pub sigma: f32,
+    rngs: Vec<Rng>,
+}
+
+impl MockTrainer {
+    /// `spread` controls heterogeneity (Gamma^2 in A3): per-worker optima
+    /// are drawn `N(0, spread^2)` around a shared optimum.
+    pub fn new(dim: usize, workers: usize, spread: f32, sigma: f32, seed: u64) -> Self {
+        let mut root = Rng::new(seed);
+        let shared: Vec<f32> = (0..dim).map(|_| root.normal_f32(0.0, 1.0)).collect();
+        let optima = (0..workers)
+            .map(|_| {
+                shared
+                    .iter()
+                    .map(|s| s + root.normal_f32(0.0, spread))
+                    .collect()
+            })
+            .collect();
+        let rngs = (0..workers).map(|i| root.fork(i as u64)).collect();
+        Self {
+            dim,
+            optima,
+            weights: vec![1.0 / workers as f32; workers],
+            sigma,
+            rngs,
+        }
+    }
+
+    /// The true global optimum (weighted mean of local optima).
+    pub fn global_optimum(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim];
+        for (w, opt) in self.weights.iter().zip(&self.optima) {
+            axpy(*w, opt, &mut out);
+        }
+        out
+    }
+
+    /// Global loss at theta (exact).
+    pub fn global_loss(&self, theta: &[f32]) -> f64 {
+        self.weights
+            .iter()
+            .zip(&self.optima)
+            .map(|(w, opt)| {
+                let d: f64 = theta
+                    .iter()
+                    .zip(opt)
+                    .map(|(t, o)| ((t - o) as f64).powi(2))
+                    .sum();
+                *w as f64 * 0.5 * d
+            })
+            .sum()
+    }
+}
+
+impl LocalTrainer for MockTrainer {
+    fn local_round(
+        &mut self,
+        worker: usize,
+        theta: &[f32],
+        tau: usize,
+        eta: f32,
+    ) -> Result<(f64, Vec<f32>)> {
+        let opt = &self.optima[worker];
+        let rng = &mut self.rngs[worker];
+        let mut local: Vec<f32> = theta.to_vec();
+        let mut acc = vec![0f32; self.dim];
+        let mut loss_sum = 0f64;
+        for _ in 0..tau {
+            let mut loss = 0f64;
+            for i in 0..self.dim {
+                let g = (local[i] - opt[i]) + self.sigma * rng.normal() as f32;
+                loss += 0.5 * ((local[i] - opt[i]) as f64).powi(2);
+                acc[i] += g;
+                local[i] -= eta * g;
+            }
+            loss_sum += loss;
+        }
+        Ok((loss_sum / tau as f64, acc))
+    }
+
+    fn eval(&mut self, theta: &[f32]) -> Result<(f64, f64)> {
+        let loss = self.global_loss(theta);
+        Ok((loss, -loss)) // metric = -loss (higher is better)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn workers(&self) -> usize {
+        self.optima.len()
+    }
+
+    fn weights(&self) -> Vec<f32> {
+        self.weights.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_grad_points_to_optimum() {
+        let mut t = MockTrainer::new(16, 2, 0.0, 0.0, 1);
+        let theta = vec![0f32; 16];
+        let (_, g) = t.local_round(0, &theta, 1, 0.1).unwrap();
+        let opt = t.global_optimum();
+        // gradient = theta - opt = -opt
+        for i in 0..16 {
+            assert!((g[i] + opt[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mock_sgd_converges() {
+        let mut t = MockTrainer::new(8, 4, 0.1, 0.01, 2);
+        let mut theta = vec![0f32; 8];
+        let l0 = t.global_loss(&theta);
+        for _ in 0..100 {
+            // FedAvg with full participation, tau=1
+            let mut agg = vec![0f32; 8];
+            for k in 0..4 {
+                let (_, g) = t.local_round(k, &theta, 1, 0.1).unwrap();
+                axpy(0.25, &g, &mut agg);
+            }
+            axpy(-0.2, &agg, &mut theta);
+        }
+        assert!(t.global_loss(&theta) < 0.05 * l0);
+    }
+
+    #[test]
+    fn mock_accumulates_tau_gradients() {
+        let mut t = MockTrainer::new(4, 1, 0.0, 0.0, 3);
+        let theta = vec![1.0f32; 4];
+        let (_, g1) = t.local_round(0, &theta, 1, 0.0).unwrap();
+        let (_, g3) = t.local_round(0, &theta, 3, 0.0).unwrap();
+        // With eta=0 local params don't move: g3 = 3 * g1.
+        for i in 0..4 {
+            assert!((g3[i] - 3.0 * g1[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let t = MockTrainer::new(4, 7, 0.5, 0.1, 5);
+        let s: f32 = t.weights().iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+}

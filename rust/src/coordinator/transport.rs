@@ -1,0 +1,208 @@
+//! Threaded star-topology deployment over channels.
+//!
+//! One OS thread per worker plus the aggregating server on the caller's
+//! thread, wired by `std::sync::mpsc` channels — the same logical topology
+//! a networked FL deployment has (broadcast downlink, point-to-point
+//! uplink). Because PJRT executables are not `Send`, the threaded path is
+//! exercised with `Send` trainers (e.g. [`MockTrainer`]); the PJRT path
+//! uses the sequential driver in [`super::round`], which on a 1-core
+//! testbed has identical throughput (DESIGN.md "Offline-build note").
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::compress::Compressor;
+use crate::lbgm::ThresholdPolicy;
+use crate::metrics::{RoundRecord, RunSeries};
+
+use super::accounting::CommLedger;
+use super::messages::WorkerMsg;
+use super::round::FlConfig;
+use super::sampling::sample_clients;
+use super::server::Server;
+use super::trainer::LocalTrainer;
+use super::worker::Worker;
+
+/// Downlink command to a worker thread.
+enum Downlink {
+    /// Run round `t` from the broadcast global model.
+    Round { t: usize, theta: Vec<f32> },
+    Shutdown,
+}
+
+/// Run federated training with every worker on its own thread.
+///
+/// `make_trainer(k)` builds worker k's *local* trainer (must be `Send`);
+/// `eval_trainer` evaluates globally on the server side.
+pub fn run_threaded_fl<T, F>(
+    make_trainer: F,
+    eval_trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    weights: Vec<f32>,
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+    name: &str,
+) -> Result<(RunSeries, CommLedger, Vec<f32>)>
+where
+    T: LocalTrainer + Send + 'static,
+    F: Fn(usize) -> T,
+{
+    let k = weights.len();
+    let policy: ThresholdPolicy = cfg.policy;
+    let (tau, eta) = (cfg.tau, cfg.eta);
+
+    // Uplink: many producers -> one consumer.
+    let (up_tx, up_rx) = mpsc::channel::<WorkerMsg>();
+    let mut down_txs = Vec::with_capacity(k);
+    let mut handles = Vec::with_capacity(k);
+    for id in 0..k {
+        let (tx, rx) = mpsc::channel::<Downlink>();
+        down_txs.push(tx);
+        let up = up_tx.clone();
+        let mut trainer = make_trainer(id);
+        let mut worker = Worker::new(id, codec());
+        handles.push(thread::spawn(move || -> Result<()> {
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Downlink::Shutdown => break,
+                    Downlink::Round { t, theta } => {
+                        let (loss, grad) = trainer.local_round(id, &theta, tau, eta)?;
+                        let msg = worker.process_round(t, grad, loss, &policy);
+                        if up.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    drop(up_tx);
+
+    let mut server = Server::new(theta0, weights, eta);
+    let mut series = RunSeries::new(name);
+    let mut ledger = CommLedger::new(k);
+
+    for t in 0..cfg.rounds {
+        let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        for &w in &participants {
+            down_txs[w]
+                .send(Downlink::Round { t, theta: server.theta.clone() })
+                .map_err(|_| anyhow::anyhow!("worker {w} hung up"))?;
+        }
+        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(participants.len());
+        for _ in 0..participants.len() {
+            let msg = up_rx.recv().map_err(|_| anyhow::anyhow!("uplink closed"))?;
+            ledger.record(msg.worker, msg.cost, msg.is_scalar());
+            msgs.push(msg);
+        }
+        // Deterministic aggregation order regardless of thread scheduling.
+        msgs.sort_by_key(|m| m.worker);
+        let train_loss =
+            msgs.iter().map(|m| m.train_loss).sum::<f64>() / msgs.len() as f64;
+        server.apply(&msgs)?;
+
+        let mut rec = RoundRecord {
+            round: t,
+            train_loss,
+            floats_up: ledger.total_floats,
+            bits_up: ledger.total_bits,
+            full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
+            scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
+            ..Default::default()
+        };
+        if t % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+            let (tl, tm) = eval_trainer.eval(&server.theta)?;
+            rec.test_loss = tl;
+            rec.test_metric = tm;
+        } else if let Some(prev) = series.last() {
+            rec.test_loss = prev.test_loss;
+            rec.test_metric = prev.test_metric;
+        }
+        series.push(rec);
+    }
+
+    for tx in &down_txs {
+        let _ = tx.send(Downlink::Shutdown);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    Ok((series, ledger, server.theta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Identity;
+    use crate::coordinator::trainer::MockTrainer;
+
+    #[test]
+    fn threaded_matches_sequential_semantics() {
+        // Same trainer seeds + deterministic aggregation order => the
+        // threaded run converges like the sequential one.
+        let dim = 16;
+        let k = 4;
+        let cfg = FlConfig {
+            rounds: 30,
+            tau: 1,
+            eta: 0.1,
+            policy: ThresholdPolicy::fixed(0.5),
+            eval_every: 5,
+            ..Default::default()
+        };
+        let mut eval = MockTrainer::new(dim, k, 0.2, 0.0, 11);
+        let weights = eval.weights();
+        let (series, ledger, theta) = run_threaded_fl(
+            |id| {
+                // Each worker thread gets the same federation; it only uses
+                // its own shard (worker `id`).
+                let _ = id;
+                MockTrainer::new(dim, k, 0.2, 0.02, 11)
+            },
+            &mut eval,
+            vec![0.0; dim],
+            weights,
+            &cfg,
+            &|| Box::new(Identity),
+            "threaded",
+        )
+        .unwrap();
+        assert_eq!(series.rounds.len(), 30);
+        assert!(ledger.consistent());
+        assert!(ledger.scalar_msgs > 0, "LBGM path never taken");
+        let l0 = series.rounds[0].train_loss;
+        let ln = series.last().unwrap().train_loss;
+        assert!(ln < 0.5 * l0, "no convergence {l0} -> {ln}");
+        assert_eq!(theta.len(), dim);
+    }
+
+    #[test]
+    fn threaded_with_sampling() {
+        let dim = 8;
+        let k = 6;
+        let cfg = FlConfig {
+            rounds: 10,
+            sample_fraction: 0.5,
+            policy: ThresholdPolicy::fixed(0.3),
+            ..Default::default()
+        };
+        let mut eval = MockTrainer::new(dim, k, 0.1, 0.0, 3);
+        let weights = eval.weights();
+        let (series, ledger, _) = run_threaded_fl(
+            |_| MockTrainer::new(dim, k, 0.1, 0.01, 3),
+            &mut eval,
+            vec![0.0; dim],
+            weights,
+            &cfg,
+            &|| Box::new(Identity),
+            "sampled",
+        )
+        .unwrap();
+        let r0 = &series.rounds[0];
+        assert_eq!(r0.full_sends + r0.scalar_sends, 3);
+        assert!(ledger.consistent());
+    }
+}

@@ -1,0 +1,170 @@
+//! Worker-side LBGM state machine (paper Alg. 1, "Training at worker k").
+//!
+//! Given the accumulated gradient of a local round, a worker: (1) applies
+//! its gradient codec (identity for standalone LBGM; top-K/ATOMO/SignSGD in
+//! plug-and-play mode — the compressed output replaces both the gradient
+//! and the LBG, per Sec. 4), (2) projects onto its LBG copy, (3) consults
+//! the threshold policy, and (4) uplinks either the scalar LBC or the full
+//! gradient (refreshing its LBG copy).
+
+use crate::compress::Compressor;
+use crate::lbgm::policy::{Decision, ThresholdPolicy};
+use crate::lbgm::projection::project_cached;
+use crate::linalg::vec_ops::norm2;
+
+use super::messages::{Payload, WorkerMsg, SCALAR_COST};
+
+/// One federated worker's persistent uplink state.
+pub struct Worker {
+    pub id: usize,
+    /// Worker-side LBG copy (None until the first full transmission).
+    lbg: Option<Vec<f32>>,
+    /// Cached `||lbg||^2` — recomputed only on refresh (§Perf: drops the
+    /// per-round projection from 3 fused reductions to 2).
+    lbg_norm2: f64,
+    codec: Box<dyn Compressor>,
+    /// Diagnostics: consecutive scalar rounds since the last refresh.
+    pub scalar_streak: usize,
+}
+
+impl Worker {
+    pub fn new(id: usize, codec: Box<dyn Compressor>) -> Self {
+        Self { id, lbg: None, lbg_norm2: 0.0, codec, scalar_streak: 0 }
+    }
+
+    pub fn lbg(&self) -> Option<&[f32]> {
+        self.lbg.as_deref()
+    }
+
+    /// Process one round's accumulated gradient into an uplink message.
+    pub fn process_round(
+        &mut self,
+        round: usize,
+        mut grad: Vec<f32>,
+        train_loss: f64,
+        policy: &ThresholdPolicy,
+    ) -> WorkerMsg {
+        // Plug-and-play: compress first; LBGM then operates on the codec
+        // output (paper Sec. 4 "slight modification").
+        let full_cost = self.codec.compress(&mut grad);
+        let proj =
+            project_cached(&grad, self.lbg.as_deref().map(|l| (l, self.lbg_norm2)));
+        // Bootstrap: without an LBG no scalar can be decoded server-side
+        // (Alg. 1 initializes LBGs with the first actual gradients).
+        let decision = if self.lbg.is_none() {
+            Decision::Full
+        } else {
+            policy.decide(&proj)
+        };
+        match decision {
+            Decision::Scalar { rho } => {
+                self.scalar_streak += 1;
+                WorkerMsg {
+                    worker: self.id,
+                    round,
+                    payload: Payload::Scalar { rho },
+                    cost: SCALAR_COST,
+                    train_loss,
+                }
+            }
+            Decision::Full => {
+                self.scalar_streak = 0;
+                self.lbg_norm2 = norm2(&grad);
+                self.lbg = Some(grad.clone()); // Alg. 1 line 11
+                WorkerMsg {
+                    worker: self.id,
+                    round,
+                    payload: Payload::Full { grad },
+                    cost: full_cost,
+                    train_loss,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, SignSgd, TopK};
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn first_round_is_always_full() {
+        let mut w = Worker::new(0, Box::new(Identity));
+        let policy = ThresholdPolicy::fixed(1.0); // maximally permissive
+        let msg = w.process_round(0, randv(64, 1), 0.0, &policy);
+        assert!(!msg.is_scalar());
+        assert!(w.lbg().is_some());
+    }
+
+    #[test]
+    fn repeated_gradient_goes_scalar_with_rho_one() {
+        let mut w = Worker::new(0, Box::new(Identity));
+        let policy = ThresholdPolicy::fixed(0.1);
+        let g = randv(128, 2);
+        w.process_round(0, g.clone(), 0.0, &policy);
+        let msg = w.process_round(1, g.clone(), 0.0, &policy);
+        match msg.payload {
+            Payload::Scalar { rho } => assert!((rho - 1.0).abs() < 1e-5),
+            _ => panic!("expected scalar"),
+        }
+        assert_eq!(msg.cost.floats, 1);
+        assert_eq!(w.scalar_streak, 1);
+    }
+
+    #[test]
+    fn rotated_gradient_forces_refresh() {
+        let mut w = Worker::new(0, Box::new(Identity));
+        let policy = ThresholdPolicy::fixed(0.05);
+        let mut g = vec![0f32; 64];
+        g[0] = 1.0;
+        w.process_round(0, g.clone(), 0.0, &policy);
+        let mut orth = vec![0f32; 64];
+        orth[1] = 1.0; // sin^2 = 1 > 0.05
+        let msg = w.process_round(1, orth.clone(), 0.0, &policy);
+        assert!(!msg.is_scalar());
+        assert_eq!(w.lbg().unwrap(), &orth[..]);
+    }
+
+    #[test]
+    fn negative_delta_never_scalar() {
+        let mut w = Worker::new(0, Box::new(Identity));
+        let policy = ThresholdPolicy::fixed(-1.0);
+        let g = randv(32, 3);
+        for r in 0..5 {
+            assert!(!w.process_round(r, g.clone(), 0.0, &policy).is_scalar());
+        }
+        assert_eq!(w.scalar_streak, 0);
+    }
+
+    #[test]
+    fn plug_and_play_lbg_is_compressed_output() {
+        let mut w = Worker::new(0, Box::new(TopK::new(0.25)));
+        let policy = ThresholdPolicy::fixed(-1.0);
+        let g = randv(100, 4);
+        let msg = w.process_round(0, g, 0.0, &policy);
+        // The LBG and the uplinked gradient are the sparsified vector.
+        match &msg.payload {
+            Payload::Full { grad } => {
+                assert_eq!(grad.iter().filter(|x| **x != 0.0).count(), 25);
+                assert_eq!(w.lbg().unwrap(), &grad[..]);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(msg.cost.floats, 50); // 2K
+    }
+
+    #[test]
+    fn signsgd_costs_bits_not_floats() {
+        let mut w = Worker::new(0, Box::new(SignSgd));
+        let policy = ThresholdPolicy::fixed(-1.0);
+        let msg = w.process_round(0, randv(320, 5), 0.0, &policy);
+        assert_eq!(msg.cost.bits, 320 + 32);
+    }
+}

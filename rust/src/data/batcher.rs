@@ -1,0 +1,86 @@
+//! Minibatch sampling over a worker's shard.
+//!
+//! Produces fixed-size index batches (the AOT artifacts have static batch
+//! shapes), sampling with replacement within the shard like the paper's
+//! `RandomSampler`-style loaders at small shard sizes.
+
+use crate::util::rng::Rng;
+
+/// Stateful minibatch sampler over a fixed index set.
+pub struct Batcher {
+    indices: Vec<usize>,
+    batch: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(indices: Vec<usize>, batch: usize, seed: u64) -> Self {
+        assert!(!indices.is_empty());
+        assert!(batch > 0);
+        Self { indices, batch, rng: Rng::new(seed) }
+    }
+
+    /// Sample the next minibatch of dataset indices (with replacement if
+    /// the shard is smaller than the batch).
+    pub fn next_batch(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        let n = self.indices.len();
+        if n >= self.batch {
+            // Partial Fisher-Yates: distinct indices within the batch.
+            for _ in 0..self.batch {
+                out.push(self.indices[self.rng.below(n)]);
+            }
+        } else {
+            for _ in 0..self.batch {
+                out.push(self.indices[self.rng.below(n)]);
+            }
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_from_shard() {
+        let shard = vec![5, 9, 11, 40];
+        let mut b = Batcher::new(shard.clone(), 8, 0);
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            b.next_batch(&mut out);
+            assert_eq!(out.len(), 8);
+            assert!(out.iter().all(|i| shard.contains(i)));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = Batcher::new((0..100).collect(), 16, 42);
+        let mut b = Batcher::new((0..100).collect(), 16, 42);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        for _ in 0..5 {
+            a.next_batch(&mut oa);
+            b.next_batch(&mut ob);
+            assert_eq!(oa, ob);
+        }
+    }
+
+    #[test]
+    fn covers_shard_over_time() {
+        let mut b = Batcher::new((0..20).collect(), 10, 1);
+        let mut seen = vec![false; 20];
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            b.next_batch(&mut out);
+            for &i in &out {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

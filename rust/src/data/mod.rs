@@ -1,0 +1,17 @@
+//! Synthetic datasets + federated partitioning.
+//!
+//! The build host has no access to MNIST/FMNIST/CIFAR/CelebA downloads, so
+//! every dataset the paper trains on is replaced by a deterministic
+//! synthetic analogue with the same interface properties (multi-class
+//! structure, label-shardable, stochastic minibatches); see DESIGN.md
+//! "Substitutions" for why this preserves the paper's claims.
+
+pub mod batcher;
+pub mod corpus;
+pub mod partition;
+pub mod synth;
+
+pub use batcher::Batcher;
+pub use corpus::MarkovCorpus;
+pub use partition::{partition, Partition, Scheme};
+pub use synth::{Dataset, SynthSpec, Task};

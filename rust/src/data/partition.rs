@@ -1,0 +1,218 @@
+//! Federated partitioning: iid and label-sharded non-iid splits.
+//!
+//! Matches the paper's setup (Sec. 4 "Implementation Details"): under iid
+//! each worker draws from all labels; under non-iid each worker holds data
+//! from only `labels_per_worker` of the classes (e.g. 3 of 10).
+
+use super::synth::{Dataset, Task};
+use crate::util::rng::Rng;
+
+/// Partitioning scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Iid,
+    /// Each worker sees at most this many distinct labels.
+    NonIid { labels_per_worker: usize },
+}
+
+/// Result: per-worker index lists into the training split + FedAvg weights.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Vec<usize>>,
+    /// omega_k = n_k / N (paper Eq. 1).
+    pub weights: Vec<f32>,
+}
+
+/// Split `ds`'s training set across `k` workers.
+pub fn partition(ds: &Dataset, k: usize, scheme: Scheme, seed: u64) -> Partition {
+    assert!(k > 0);
+    let n = ds.train_len();
+    assert!(n >= k, "need at least one sample per worker");
+    let mut rng = Rng::new(seed);
+    let shards: Vec<Vec<usize>> = match scheme {
+        Scheme::Iid => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            chunk_round_robin(&idx, k)
+        }
+        Scheme::NonIid { labels_per_worker } => {
+            if ds.spec.task != Task::Classification {
+                // Regression/LM: sort by a latent proxy (first feature) so
+                // shards are still heterogeneous.
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by(|&a, &b| {
+                    ds.train_x[a * ds.dim()]
+                        .partial_cmp(&ds.train_x[b * ds.dim()])
+                        .unwrap()
+                });
+                chunk_contiguous(&idx, k)
+            } else {
+                label_shard(ds, k, labels_per_worker, &mut rng)
+            }
+        }
+    };
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    let weights = shards.iter().map(|s| s.len() as f32 / total as f32).collect();
+    Partition { shards, weights }
+}
+
+fn chunk_round_robin(idx: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut shards = vec![Vec::new(); k];
+    for (i, &v) in idx.iter().enumerate() {
+        shards[i % k].push(v);
+    }
+    shards
+}
+
+fn chunk_contiguous(idx: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let per = idx.len() / k;
+    let mut shards = Vec::with_capacity(k);
+    for w in 0..k {
+        let lo = w * per;
+        let hi = if w + 1 == k { idx.len() } else { lo + per };
+        shards.push(idx[lo..hi].to_vec());
+    }
+    shards
+}
+
+/// The paper's label-sharding: group samples by label, split each label's
+/// pool into contiguous shards, deal `labels_per_worker` shards to each
+/// worker.
+fn label_shard(
+    ds: &Dataset,
+    k: usize,
+    labels_per_worker: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let classes = ds.spec.classes;
+    let lpw = labels_per_worker.clamp(1, classes);
+    let mut by_label: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    for i in 0..ds.train_len() {
+        by_label[ds.train_y[i] as usize].push(i);
+    }
+    // Total shards = k * lpw, spread across labels proportionally.
+    let total_shards = k * lpw;
+    let mut label_shards: Vec<Vec<usize>> = Vec::with_capacity(total_shards);
+    for (label, pool) in by_label.iter().enumerate() {
+        let n_shards = (total_shards * pool.len() + ds.train_len() - 1) / ds.train_len();
+        let n_shards = n_shards.max(1);
+        let per = (pool.len() / n_shards).max(1);
+        for s in 0..n_shards {
+            let lo = s * per;
+            let hi = if s + 1 == n_shards { pool.len() } else { (lo + per).min(pool.len()) };
+            if lo < hi {
+                label_shards.push(pool[lo..hi].to_vec());
+            }
+        }
+        let _ = label;
+    }
+    rng.shuffle(&mut label_shards);
+    // Deal shards to workers round-robin; every worker gets >= 1 shard.
+    let mut shards = vec![Vec::new(); k];
+    for (i, s) in label_shards.into_iter().enumerate() {
+        shards[i % k].extend(s);
+    }
+    // Guarantee non-empty shards (move from the largest).
+    for w in 0..k {
+        if shards[w].is_empty() {
+            let donor = (0..k).max_by_key(|&i| shards[i].len()).unwrap();
+            let v = shards[donor].pop().unwrap();
+            shards[w].push(v);
+        }
+    }
+    shards
+}
+
+impl Partition {
+    /// Number of distinct labels in a worker's shard.
+    pub fn labels_of(&self, ds: &Dataset, worker: usize) -> usize {
+        let mut seen = vec![false; ds.spec.classes];
+        for &i in &self.shards[worker] {
+            seen[ds.train_y[i] as usize] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn ds() -> Dataset {
+        Dataset::generate(&SynthSpec::mnist(600, 50))
+    }
+
+    fn assert_disjoint_cover(p: &Partition, n: usize) {
+        let mut seen = vec![false; n];
+        for shard in &p.shards {
+            for &i in shard {
+                assert!(!seen[i], "index {i} in two shards");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "indices not covered");
+    }
+
+    #[test]
+    fn iid_disjoint_cover_and_weights() {
+        let d = ds();
+        let p = partition(&d, 10, Scheme::Iid, 0);
+        assert_disjoint_cover(&p, 600);
+        let sum: f32 = p.weights.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(p.shards.iter().all(|s| s.len() == 60));
+    }
+
+    #[test]
+    fn iid_workers_see_all_labels() {
+        let d = ds();
+        let p = partition(&d, 10, Scheme::Iid, 1);
+        for w in 0..10 {
+            assert!(p.labels_of(&d, w) >= 8, "w={w} labels={}", p.labels_of(&d, w));
+        }
+    }
+
+    #[test]
+    fn noniid_limits_labels() {
+        let d = ds();
+        let p = partition(&d, 10, Scheme::NonIid { labels_per_worker: 3 }, 2);
+        assert_disjoint_cover(&p, 600);
+        for w in 0..10 {
+            let l = p.labels_of(&d, w);
+            assert!(l <= 4, "worker {w} has {l} labels"); // shard dealing slack
+            assert!(l >= 1);
+        }
+        // Non-iid must be *more* skewed than iid on average.
+        let avg: f64 =
+            (0..10).map(|w| p.labels_of(&d, w) as f64).sum::<f64>() / 10.0;
+        assert!(avg < 5.0, "avg labels {avg}");
+    }
+
+    #[test]
+    fn no_empty_shards() {
+        let d = ds();
+        for k in [2, 7, 10, 50] {
+            for scheme in [Scheme::Iid, Scheme::NonIid { labels_per_worker: 2 }] {
+                let p = partition(&d, k, scheme, 3);
+                assert!(p.shards.iter().all(|s| !s.is_empty()), "k={k}");
+                assert_eq!(p.shards.len(), k);
+            }
+        }
+    }
+
+    #[test]
+    fn regression_noniid_heterogeneous() {
+        let d = Dataset::generate(&SynthSpec::celeba(200, 20));
+        let p = partition(&d, 4, Scheme::NonIid { labels_per_worker: 3 }, 5);
+        assert_disjoint_cover(&p, 200);
+    }
+
+    #[test]
+    fn deterministic_partition() {
+        let d = ds();
+        let a = partition(&d, 10, Scheme::NonIid { labels_per_worker: 3 }, 7);
+        let b = partition(&d, 10, Scheme::NonIid { labels_per_worker: 3 }, 7);
+        assert_eq!(a.shards, b.shards);
+    }
+}

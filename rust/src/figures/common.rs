@@ -1,0 +1,181 @@
+//! Shared plumbing for the figure harnesses: dataset/trainer construction
+//! from an [`ExperimentConfig`] and result emission.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::round::{run_fl, FlConfig, FlOutcome};
+use crate::coordinator::PjrtTrainer;
+use crate::data::{partition, Dataset, MarkovCorpus, Scheme, SynthSpec};
+use crate::lbgm::ThresholdPolicy;
+use crate::metrics::{write_csv, write_json, RunSeries};
+use crate::runtime::{Manifest, Runtime};
+
+/// Scale knob for figure runs: `full` (paper-like), default (minutes), or
+/// `smoke` (seconds; used by `cargo bench` wrappers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Default,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Scale {
+        match s {
+            "smoke" => Scale::Smoke,
+            "full" => Scale::Full,
+            _ => Scale::Default,
+        }
+    }
+
+    /// Multiply a default count by the scale.
+    pub fn rounds(&self, default: usize) -> usize {
+        match self {
+            Scale::Smoke => (default / 4).max(3),
+            Scale::Default => default,
+            Scale::Full => default * 3,
+        }
+    }
+
+    pub fn samples(&self, default: usize) -> usize {
+        match self {
+            Scale::Smoke => (default / 4).max(64),
+            Scale::Default => default,
+            Scale::Full => default * 2,
+        }
+    }
+}
+
+/// Build the synthetic dataset named by the config.
+pub fn make_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
+    let spec = match cfg.dataset.as_str() {
+        "synth_mnist" => SynthSpec::mnist(cfg.train_n, cfg.test_n),
+        "synth_fmnist" => SynthSpec::fmnist(cfg.train_n, cfg.test_n),
+        "synth_cifar" => SynthSpec::cifar(cfg.train_n, cfg.test_n),
+        "synth_celeba" => SynthSpec::celeba(cfg.train_n, cfg.test_n),
+        other => anyhow::bail!("unknown dataset `{other}`"),
+    };
+    Ok(Dataset::generate(&spec))
+}
+
+/// Build a PJRT trainer for the config (image/regression datasets).
+pub fn make_trainer(rt: &Runtime, manifest: &Manifest, cfg: &ExperimentConfig) -> Result<PjrtTrainer> {
+    let meta = manifest.variant(&cfg.variant)?;
+    if cfg.dataset == "corpus" {
+        anyhow::ensure!(meta.task == "lm", "corpus dataset needs an lm variant");
+        let corpus = MarkovCorpus::generate(64, 200_000, cfg.seed ^ 0xC0);
+        return PjrtTrainer::corpus(rt, meta, corpus, cfg.workers, cfg.seed);
+    }
+    let ds = make_dataset(cfg)?;
+    let scheme = if cfg.noniid {
+        Scheme::NonIid { labels_per_worker: cfg.labels_per_worker }
+    } else {
+        Scheme::Iid
+    };
+    let part = partition(&ds, cfg.workers, scheme, cfg.seed ^ 0x9A);
+    PjrtTrainer::image(rt, meta, ds, part, cfg.seed)
+}
+
+/// Run one experiment arm end-to-end on the PJRT path.
+pub fn run_arm(
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &ExperimentConfig,
+    name: &str,
+) -> Result<FlOutcome> {
+    crate::config::validate(cfg)?;
+    let mut trainer = make_trainer(rt, manifest, cfg)?;
+    let theta0 = manifest.variant(&cfg.variant)?.load_init()?;
+    let fl = FlConfig {
+        rounds: cfg.rounds,
+        tau: cfg.tau,
+        eta: cfg.eta as f32,
+        policy: ThresholdPolicy::fixed(cfg.delta),
+        sample_fraction: cfg.sample_fraction,
+        eval_every: cfg.eval_every,
+        seed: cfg.seed,
+        check_coherence: false,
+    };
+    let codec = cfg.codec;
+    // ATOMO decomposes per layer: hand the codec the manifest's segments.
+    let segments: Vec<(usize, usize)> = manifest
+        .variant(&cfg.variant)?
+        .segments
+        .iter()
+        .map(|s| (s.offset, s.size))
+        .collect();
+    run_fl(
+        &mut trainer,
+        theta0,
+        &fl,
+        &move || codec.build_with_segments(&segments),
+        name,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::series::RoundRecord;
+
+    #[test]
+    fn scale_knobs() {
+        assert_eq!(Scale::parse("smoke"), Scale::Smoke);
+        assert_eq!(Scale::parse("full"), Scale::Full);
+        assert_eq!(Scale::parse("anything"), Scale::Default);
+        assert_eq!(Scale::Smoke.rounds(24), 6);
+        assert_eq!(Scale::Smoke.rounds(8), 3); // floor
+        assert_eq!(Scale::Full.rounds(24), 72);
+        assert_eq!(Scale::Default.samples(1000), 1000);
+        assert_eq!(Scale::Smoke.samples(100), 64); // floor
+    }
+
+    #[test]
+    fn dataset_construction() {
+        let mut cfg = ExperimentConfig::default();
+        for name in ["synth_mnist", "synth_fmnist", "synth_cifar", "synth_celeba"] {
+            cfg.dataset = name.into();
+            cfg.train_n = 32;
+            cfg.test_n = 8;
+            let ds = make_dataset(&cfg).unwrap();
+            assert_eq!(ds.train_len(), 32);
+        }
+        cfg.dataset = "nope".into();
+        assert!(make_dataset(&cfg).is_err());
+    }
+
+    #[test]
+    fn emit_writes_csv_and_json() {
+        let dir = std::env::temp_dir().join("fedrecycle_emit_test");
+        let mut run = RunSeries::new("r");
+        run.push(RoundRecord { round: 0, floats_up: 5, ..Default::default() });
+        emit(&dir, "figX", &[run]).unwrap();
+        assert!(dir.join("figX.csv").exists());
+        assert!(dir.join("figX.json").exists());
+    }
+}
+
+/// Emit a figure's runs to `out/<figure>.csv` + `.json` and a stdout table.
+pub fn emit(out_dir: &Path, figure: &str, runs: &[RunSeries]) -> Result<()> {
+    write_csv(&out_dir.join(format!("{figure}.csv")), runs)?;
+    write_json(&out_dir.join(format!("{figure}.json")), runs)?;
+    println!("\n--- {figure} summary ---");
+    println!(
+        "{:<40} {:>8} {:>12} {:>14} {:>9}",
+        "run", "rounds", "final_metric", "floats_up", "scalar%"
+    );
+    for r in runs {
+        println!(
+            "{:<40} {:>8} {:>12.4} {:>14} {:>8.1}%",
+            r.name,
+            r.rounds.len(),
+            r.final_metric(),
+            r.total_floats(),
+            100.0 * r.scalar_fraction()
+        );
+    }
+    Ok(())
+}

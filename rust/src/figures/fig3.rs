@@ -1,0 +1,75 @@
+//! Fig. 3 (+ App. Figs. 36-57): pairwise cosine similarity of consecutive
+//! epoch gradients, per layer.
+//!
+//! Paper observation: gradients rotate *gradually* across SGD epochs —
+//! the justification for recycling a look-back gradient over many rounds.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analysis::gradient_space::centralized_analysis;
+use crate::analysis::similarity::{mean_consecutive_similarity, pairwise_heatmap};
+use crate::config::ExperimentConfig;
+use crate::runtime::{Manifest, Runtime};
+
+use super::common::{make_trainer, Scale};
+
+pub fn run(rt: &Runtime, manifest: &Manifest, scale: Scale, out: &Path) -> Result<()> {
+    let epochs = scale.rounds(16);
+    println!("=== Fig. 3: similarity among consecutive gradients (CNN) ===");
+    let mut csv = String::from("dataset,layer,i,j,cosine\n");
+    for (variant, dataset) in
+        [("cnn_cifar", "synth_cifar"), ("cnn_celeba", "synth_celeba")]
+    {
+        let cfg = ExperimentConfig {
+            variant: variant.into(),
+            dataset: dataset.into(),
+            workers: 1,
+            noniid: false,
+            train_n: 768,
+            test_n: 128,
+            seed: 13,
+            ..Default::default()
+        };
+        let mut trainer = make_trainer(rt, manifest, &cfg)?;
+        let meta = manifest.variant(variant)?;
+        let report = centralized_analysis(
+            &mut trainer,
+            meta.load_init()?,
+            meta.segments.clone(),
+            epochs,
+            24,
+            0.01,
+        )?;
+        for (li, seg) in report.recorder.segments.clone().iter().enumerate() {
+            if seg.size < 32 {
+                continue;
+            }
+            let grads = report.recorder.layer_matrix(li);
+            let h = pairwise_heatmap(
+                &grads,
+                &format!("{dataset} L#{li} ({}, #elem={})", seg.name, seg.size),
+            );
+            let mcs = mean_consecutive_similarity(&h);
+            println!(
+                "{dataset:<14} L#{li:<2} {:<14} #elem={:<8} mean consec |cos|={:.3}",
+                seg.name, seg.size, mcs
+            );
+            if li == 0 {
+                println!("{}", h.ascii());
+            }
+            for i in 0..h.rows {
+                for j in 0..h.cols {
+                    csv.push_str(&format!(
+                        "{dataset},{li},{i},{j},{:.6}\n",
+                        h.get(i, j)
+                    ));
+                }
+            }
+        }
+    }
+    std::fs::create_dir_all(out)?;
+    std::fs::write(out.join("fig3.csv"), csv)?;
+    Ok(())
+}

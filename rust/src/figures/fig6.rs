@@ -1,0 +1,66 @@
+//! Fig. 6 (+ App. Figs. 61-63): effect of the LBP-error threshold
+//! delta_k on the accuracy-vs-communication trade-off (Takeaways 3 & 5).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RunSeries;
+use crate::runtime::{Manifest, Runtime};
+
+use super::common::{emit, run_arm, Scale};
+
+pub const DELTAS: [f64; 5] = [0.01, 0.05, 0.2, 0.4, 0.8];
+
+pub fn run(rt: &Runtime, manifest: &Manifest, scale: Scale, out: &Path) -> Result<()> {
+    println!("=== Fig. 6: effect of delta threshold on LBGM ===");
+    let datasets: &[(&str, &str)] = match scale {
+        Scale::Smoke => &[("synth_mnist", "cnn_mnist")],
+        _ => &[("synth_mnist", "cnn_mnist"), ("synth_fmnist", "cnn_mnist")],
+    };
+    let mut runs: Vec<RunSeries> = Vec::new();
+    for &(dataset, variant) in datasets {
+        // Vanilla reference for savings computation.
+        let mut arms = vec![-1.0];
+        arms.extend_from_slice(&DELTAS);
+        let mut vanilla_floats = 0u64;
+        for &delta in &arms {
+            let cfg = ExperimentConfig {
+                variant: variant.into(),
+                dataset: dataset.into(),
+                workers: 10,
+                rounds: scale.rounds(24),
+                tau: 2,
+                eta: 0.05,
+                delta,
+                noniid: true,
+                labels_per_worker: 3,
+                train_n: scale.samples(1500),
+                test_n: 256,
+                eval_every: 3,
+                seed: 22,
+                ..Default::default()
+            };
+            let label = if delta < 0.0 {
+                format!("{dataset}/vanilla")
+            } else {
+                format!("{dataset}/d{delta}")
+            };
+            let outc = run_arm(rt, manifest, &cfg, &label)?;
+            if delta < 0.0 {
+                vanilla_floats = outc.ledger.total_floats;
+            } else {
+                println!(
+                    "  {label}: saving {:>5.1}% | final metric {:.4}",
+                    100.0 * outc.series.savings_vs(vanilla_floats),
+                    outc.series.final_metric()
+                );
+            }
+            runs.push(outc.series);
+        }
+    }
+    emit(out, "fig6", &runs)?;
+    println!("(Takeaway 5: savings increase and accuracy degrades as delta grows)");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Figure harnesses: one module per paper figure family (see DESIGN.md §5).
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod sampling;
+pub mod theory;

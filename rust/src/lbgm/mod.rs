@@ -1,0 +1,20 @@
+//! The paper's contribution: Look-back Gradient Multiplier (Sec. 3, Alg. 1).
+//!
+//! Per worker `k`, LBGM keeps the last fully-transmitted accumulated
+//! gradient — the look-back gradient (LBG) `g_k^l` — in sync on both the
+//! worker and the server. Each round the worker computes its new
+//! accumulated stochastic gradient `g_k^(t)`, derives the look-back
+//! coefficient `rho = <g,l>/||l||^2` and the look-back phase error
+//! `sin^2(alpha)`; if the error is within `delta_k`, **only the scalar rho
+//! is uplinked** and the server reconstructs `rho * g_k^l`; otherwise the
+//! full gradient is sent and both LBG copies refresh.
+
+pub mod policy;
+pub mod projection;
+pub mod reconstruct;
+pub mod store;
+
+pub use policy::{Decision, ThresholdPolicy};
+pub use projection::project;
+pub use reconstruct::{apply_full, apply_scalar};
+pub use store::LbgStore;

@@ -1,0 +1,95 @@
+//! Transmission policy: scalar LBC vs full-gradient refresh
+//! (paper Alg. 1 line 7 and the Theorem-1 condition).
+
+use super::projection::Projection;
+
+/// Worker decision for one round's uplink.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// Send only the look-back coefficient.
+    Scalar { rho: f32 },
+    /// Send the full accumulated gradient and refresh the LBG.
+    Full,
+}
+
+/// Threshold policy on the LBP error.
+///
+/// * `delta < 0` — always send full gradients: LBGM degenerates to vanilla
+///   FL exactly (Takeaway 1; used by the recovery invariant tests).
+/// * `Fixed` — the paper's experimental setting: send scalar iff
+///   `sin^2(alpha) <= delta`.
+/// * `AdaptiveDelta2` — the Theorem-1 condition `sin^2 <= Delta^2/||d||^2`,
+///   exposed for the theory-validation harness (`figures/theory`).
+#[derive(Clone, Copy, Debug)]
+pub enum ThresholdPolicy {
+    Fixed { delta: f64 },
+    AdaptiveDelta2 { delta2: f64, tau: usize },
+}
+
+impl ThresholdPolicy {
+    pub fn fixed(delta: f64) -> Self {
+        ThresholdPolicy::Fixed { delta }
+    }
+
+    /// Decide the uplink for a projection outcome.
+    pub fn decide(&self, p: &Projection) -> Decision {
+        let threshold = match *self {
+            ThresholdPolicy::Fixed { delta } => delta,
+            ThresholdPolicy::AdaptiveDelta2 { delta2, tau } => {
+                // ||d||^2 = ||g/tau||^2; Theorem 1: sin^2 <= Delta^2/||d||^2.
+                let d_norm2 = p.grad_norm2 / (tau as f64 * tau as f64);
+                if d_norm2 <= 0.0 {
+                    1.0
+                } else {
+                    delta2 / d_norm2
+                }
+            }
+        };
+        if p.sin2 <= threshold {
+            Decision::Scalar { rho: p.rho }
+        } else {
+            Decision::Full
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proj(sin2: f64, norm2: f64) -> Projection {
+        Projection { rho: 0.5, sin2, grad_norm2: norm2 }
+    }
+
+    #[test]
+    fn negative_delta_always_full() {
+        let p = ThresholdPolicy::fixed(-1.0);
+        assert_eq!(p.decide(&proj(0.0, 1.0)), Decision::Full);
+        assert_eq!(p.decide(&proj(1.0, 1.0)), Decision::Full);
+    }
+
+    #[test]
+    fn fixed_threshold_boundary() {
+        let p = ThresholdPolicy::fixed(0.2);
+        assert!(matches!(p.decide(&proj(0.2, 1.0)), Decision::Scalar { .. }));
+        assert_eq!(p.decide(&proj(0.2000001, 1.0)), Decision::Full);
+    }
+
+    #[test]
+    fn adaptive_tightens_with_large_gradients() {
+        let p = ThresholdPolicy::AdaptiveDelta2 { delta2: 0.01, tau: 1 };
+        // Small gradient: loose threshold -> scalar.
+        assert!(matches!(p.decide(&proj(0.5, 0.01)), Decision::Scalar { .. }));
+        // Large gradient: tight threshold -> full.
+        assert_eq!(p.decide(&proj(0.5, 100.0)), Decision::Full);
+    }
+
+    #[test]
+    fn scalar_carries_rho() {
+        let p = ThresholdPolicy::fixed(1.0);
+        match p.decide(&proj(0.3, 1.0)) {
+            Decision::Scalar { rho } => assert_eq!(rho, 0.5),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Worker-side projection of the accumulated gradient onto the LBG
+//! (paper Alg. 1 lines 6-8, Def. 1).
+
+use crate::linalg::vec_ops::{projection_stats, projection_stats_cached, ProjectionStats};
+
+/// Outcome of projecting an accumulated gradient onto a look-back gradient.
+#[derive(Clone, Copy, Debug)]
+pub struct Projection {
+    /// Look-back coefficient rho = <g, l> / ||l||^2.
+    pub rho: f32,
+    /// Look-back phase error sin^2(alpha) in [0, 1].
+    pub sin2: f64,
+    /// ||g||^2 (used by the Theorem-1 adaptive threshold policy).
+    pub grad_norm2: f64,
+}
+
+/// Project `g` on the LBG `l`; `None` LBG forces a full transmission
+/// (sin2 = 1 makes every policy refresh).
+pub fn project(g: &[f32], lbg: Option<&[f32]>) -> Projection {
+    match lbg {
+        None => Projection {
+            rho: 0.0,
+            sin2: 1.0,
+            grad_norm2: crate::linalg::vec_ops::norm2(g),
+        },
+        Some(l) => {
+            let st: ProjectionStats = projection_stats(g, l);
+            Projection { rho: st.rho(), sin2: st.sin2(), grad_norm2: st.norm2_g }
+        }
+    }
+}
+
+/// [`project`] with a cached `||lbg||^2` (the worker hot path: the LBG norm
+/// only changes on refresh — §Perf).
+pub fn project_cached(g: &[f32], lbg: Option<(&[f32], f64)>) -> Projection {
+    match lbg {
+        None => project(g, None),
+        Some((l, norm2_l)) => {
+            let st = projection_stats_cached(g, l, norm2_l);
+            Projection { rho: st.rho(), sin2: st.sin2(), grad_norm2: st.norm2_g }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn no_lbg_forces_full() {
+        let g = randv(100, 1);
+        let p = project(&g, None);
+        assert_eq!(p.sin2, 1.0);
+        assert_eq!(p.rho, 0.0);
+    }
+
+    #[test]
+    fn identical_gradient_gives_rho_one() {
+        let g = randv(1000, 2);
+        let p = project(&g, Some(&g));
+        assert!((p.rho - 1.0).abs() < 1e-6);
+        assert!(p.sin2 < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_magnitude_matches_def1() {
+        // Def. 1: ||rho * l|| == ||g|| * |cos(alpha)|.
+        let g = randv(512, 3);
+        let l = randv(512, 4);
+        let p = project(&g, Some(&l));
+        let norm_l = crate::linalg::vec_ops::norm2(&l).sqrt();
+        let norm_g = p.grad_norm2.sqrt();
+        let lhs = (p.rho as f64).abs() * norm_l;
+        let cos = (1.0 - p.sin2).sqrt();
+        assert!((lhs - norm_g * cos).abs() < 1e-6 * norm_g.max(1.0));
+    }
+
+    #[test]
+    fn residual_orthogonal_to_lbg() {
+        let g = randv(256, 5);
+        let l = randv(256, 6);
+        let p = project(&g, Some(&l));
+        let residual: Vec<f32> = g
+            .iter()
+            .zip(&l)
+            .map(|(gi, li)| gi - p.rho * li)
+            .collect();
+        let d = crate::linalg::vec_ops::dot(&residual, &l);
+        assert!(d.abs() < 1e-4, "residual not orthogonal: {d}");
+    }
+}

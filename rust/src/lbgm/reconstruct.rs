@@ -1,0 +1,46 @@
+//! Server-side gradient reconstruction + global update
+//! (paper Alg. 1 line 16, fused as in the L1 `aggregate` Pallas kernel).
+//!
+//! Scalar path: `theta -= eta * omega_k * rho * lbg_k` (reconstruction of
+//! `rho * g_k^l` folded into the aggregation — the paper's complexity note
+//! that reconstruction "can be combined with the global aggregation step").
+
+use crate::linalg::vec_ops::axpy;
+
+/// Apply a scalar-LBC update for one worker.
+pub fn apply_scalar(theta: &mut [f32], lbg: &[f32], eta: f32, omega: f32, rho: f32) {
+    axpy(-eta * omega * rho, lbg, theta);
+}
+
+/// Apply a full-gradient update for one worker.
+pub fn apply_full(theta: &mut [f32], grad: &[f32], eta: f32, omega: f32) {
+    axpy(-eta * omega, grad, theta);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_equals_full_when_collinear() {
+        // If g = rho * lbg exactly, the scalar path reproduces the full path.
+        let lbg = vec![1.0f32, -2.0, 0.5, 3.0];
+        let rho = 0.7f32;
+        let g: Vec<f32> = lbg.iter().map(|x| rho * x).collect();
+        let mut t1 = vec![10.0f32; 4];
+        let mut t2 = vec![10.0f32; 4];
+        apply_scalar(&mut t1, &lbg, 0.1, 0.25, rho);
+        apply_full(&mut t2, &g, 0.1, 0.25);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_eta_is_identity() {
+        let mut t = vec![1.0f32, 2.0];
+        apply_scalar(&mut t, &[5.0, 5.0], 0.0, 1.0, 1.0);
+        apply_full(&mut t, &[5.0, 5.0], 0.0, 1.0);
+        assert_eq!(t, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,96 @@
+//! LBG storage — the server- and worker-side copies of look-back gradients.
+//!
+//! The server keeps one LBG per worker (O(K*M) space; paper App. C.1
+//! discusses offloading/compression/clustering for very large K — the
+//! store exposes its byte footprint so deployments can monitor it).
+//! Correctness hinges on the two copies staying identical after every
+//! round; the coordinator's property tests assert exactly that.
+
+/// Per-worker look-back gradient slots.
+#[derive(Clone, Debug, Default)]
+pub struct LbgStore {
+    slots: Vec<Option<Vec<f32>>>,
+    /// Count of full-gradient refreshes, per worker (diagnostics).
+    refreshes: Vec<u64>,
+}
+
+impl LbgStore {
+    pub fn new(workers: usize) -> Self {
+        Self { slots: vec![None; workers], refreshes: vec![0; workers] }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The current LBG of a worker, if any full gradient was ever sent.
+    pub fn get(&self, worker: usize) -> Option<&[f32]> {
+        self.slots[worker].as_deref()
+    }
+
+    /// Refresh a worker's LBG with a newly transmitted full gradient
+    /// (paper Alg. 1 line 11 worker-side / line 17 server-side).
+    pub fn refresh(&mut self, worker: usize, grad: &[f32]) {
+        match &mut self.slots[worker] {
+            Some(buf) => {
+                buf.clear();
+                buf.extend_from_slice(grad);
+            }
+            slot => *slot = Some(grad.to_vec()),
+        }
+        self.refreshes[worker] += 1;
+    }
+
+    pub fn refresh_count(&self, worker: usize) -> u64 {
+        self.refreshes[worker]
+    }
+
+    /// Resident bytes of all stored LBGs (App. C.1 storage consideration).
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| s.as_ref().map(|v| v.len() * 4).unwrap_or(0))
+            .sum()
+    }
+
+    /// Structural equality with another store (the state-coherence invariant).
+    pub fn coherent_with(&self, other: &LbgStore) -> bool {
+        self.slots == other.slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_empty() {
+        let s = LbgStore::new(3);
+        assert_eq!(s.workers(), 3);
+        assert!(s.get(0).is_none());
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn refresh_replaces_in_place() {
+        let mut s = LbgStore::new(2);
+        s.refresh(1, &[1.0, 2.0]);
+        assert_eq!(s.get(1).unwrap(), &[1.0, 2.0]);
+        s.refresh(1, &[3.0, 4.0]);
+        assert_eq!(s.get(1).unwrap(), &[3.0, 4.0]);
+        assert_eq!(s.refresh_count(1), 2);
+        assert_eq!(s.refresh_count(0), 0);
+        assert_eq!(s.resident_bytes(), 8);
+    }
+
+    #[test]
+    fn coherence_check() {
+        let mut a = LbgStore::new(2);
+        let mut b = LbgStore::new(2);
+        assert!(a.coherent_with(&b));
+        a.refresh(0, &[1.0]);
+        assert!(!a.coherent_with(&b));
+        b.refresh(0, &[1.0]);
+        assert!(a.coherent_with(&b));
+    }
+}

@@ -1,0 +1,33 @@
+//! # fedrecycle — Recycling Model Updates in Federated Learning (LBGM)
+//!
+//! Rust + JAX + Pallas reproduction of *"Recycling Model Updates in Federated
+//! Learning: Are Gradient Subspaces Low-Rank?"* (Azam et al., ICLR 2022).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack (see
+//! `DESIGN.md`): JAX/Pallas author the per-worker compute at build time and
+//! lower it to HLO text; this crate loads those artifacts through PJRT
+//! ([`runtime`]), simulates a federated system of workers ([`coordinator`]),
+//! and implements the paper's contribution — the Look-back Gradient
+//! Multiplier ([`lbgm`]) — together with every substrate the evaluation
+//! depends on: gradient compression baselines ([`compress`]), synthetic
+//! datasets and non-iid partitioning ([`data`]), dense linear algebra for the
+//! gradient-space analysis ([`linalg`], [`analysis`]), communication
+//! accounting ([`coordinator::accounting`]), and the figure harnesses that
+//! regenerate the paper's evaluation ([`figures`]).
+//!
+//! Python never runs at request time: after `make artifacts`, the
+//! `fedrecycle` binary is self-contained.
+
+pub mod analysis;
+pub mod bench;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod lbgm;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,172 @@
+//! Cyclic-Jacobi eigensolver for small dense symmetric matrices.
+//!
+//! Used on the N x N Gram matrices of the gradient-space analysis
+//! (N = number of recorded epoch gradients, typically <= a few hundred) and
+//! inside the truncated SVD. Jacobi is ideal here: unconditionally stable,
+//! no dependencies, and the matrices are tiny relative to the gradient
+//! dimension M.
+
+/// Eigendecomposition of a symmetric matrix (row-major `a`, size `n x n`).
+///
+/// Returns `(eigenvalues, eigenvectors)` sorted by **descending**
+/// eigenvalue; `eigenvectors[k]` is the unit eigenvector for
+/// `eigenvalues[k]`.
+pub fn eigh(a: &[f64], n: usize) -> (Vec<f64>, Vec<Vec<f64>>) {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    // v starts as identity; accumulates the rotations.
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm for convergence.
+        let mut off = 0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + frob(&m, n)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate in v (columns p, q).
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut pairs: Vec<(f64, Vec<f64>)> = (0..n)
+        .map(|j| {
+            let val = m[j * n + j];
+            let vec: Vec<f64> = (0..n).map(|i| v[i * n + j]).collect();
+            (val, vec)
+        })
+        .collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals = pairs.iter().map(|(v, _)| *v).collect();
+    let vecs = pairs.into_iter().map(|(_, v)| v).collect();
+    (vals, vecs)
+}
+
+fn frob(m: &[f64], n: usize) -> f64 {
+    (0..n * n).map(|i| m[i] * m[i]).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mat_vec(a: &[f64], n: usize, x: &[f64]) -> Vec<f64> {
+        (0..n)
+            .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = [3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let (vals, _) = eigh(&a, 3);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 2.0).abs() < 1e-10);
+        assert!((vals[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let (vals, vecs) = eigh(&[2.0, 1.0, 1.0, 2.0], 2);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+        // eigvec of 3 is (1,1)/sqrt(2)
+        assert!((vecs[0][0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-8);
+    }
+
+    #[test]
+    fn random_spd_reconstruction() {
+        let n = 12;
+        let mut r = Rng::new(42);
+        // A = B^T B is SPD.
+        let b: Vec<f64> = (0..n * n).map(|_| r.normal()).collect();
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = (0..n).map(|k| b[k * n + i] * b[k * n + j]).sum();
+            }
+        }
+        let (vals, vecs) = eigh(&a, n);
+        // A v = lambda v for each pair, eigenvalues non-negative & sorted.
+        for k in 0..n {
+            assert!(vals[k] >= -1e-8);
+            if k > 0 {
+                assert!(vals[k - 1] >= vals[k] - 1e-10);
+            }
+            let av = mat_vec(&a, n, &vecs[k]);
+            for i in 0..n {
+                assert!(
+                    (av[i] - vals[k] * vecs[k][i]).abs() < 1e-6 * (1.0 + vals[0]),
+                    "residual too large at eig {k}"
+                );
+            }
+        }
+        // Trace preserved.
+        let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        let sum: f64 = vals.iter().sum();
+        assert!((trace - sum).abs() < 1e-8 * trace.abs().max(1.0));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut r = Rng::new(7);
+        let n = 8;
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = r.normal();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let (_, vecs) = eigh(&a, n);
+        for i in 0..n {
+            for j in 0..n {
+                let d: f64 = vecs[i].iter().zip(&vecs[j]).map(|(x, y)| x * y).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-8, "i={i} j={j} d={d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the reproduction needs that would normally come from
+//! LAPACK/sklearn: unrolled f32 vector kernels for the LBGM hot path
+//! ([`vec_ops`]), a cyclic-Jacobi symmetric eigensolver ([`jacobi`]),
+//! Gram-matrix PCA over gradient sets ([`gram_pca`]) for the Sec. 2
+//! analysis, and a truncated SVD via subspace iteration ([`svd`]) for the
+//! ATOMO baseline.
+
+pub mod gram_pca;
+pub mod jacobi;
+pub mod svd;
+pub mod vec_ops;
+
+pub use gram_pca::{explained_components, GramPca};
+pub use jacobi::eigh;
+pub use svd::truncated_svd;
+pub use vec_ops::{axpy, cosine, dot, norm2, projection_stats, scale_add, ProjectionStats};

@@ -1,0 +1,253 @@
+//! Truncated SVD via subspace iteration — the ATOMO substrate.
+//!
+//! ATOMO (Wang et al., 2018) compresses a gradient reshaped to a matrix
+//! `A in R^{m x n}` by its leading rank-r atomic (singular) decomposition.
+//! We compute the top-r triple (U, S, V) with block subspace iteration on
+//! `A A^T` (or `A^T A`, whichever side is smaller), orthonormalizing with
+//! modified Gram-Schmidt. Deterministic seeding keeps runs reproducible.
+
+use crate::util::rng::Rng;
+
+/// Rank-r truncated SVD: returns (u, s, v) with `u: r x m`, `s: r`,
+/// `v: r x n` (rows are the singular vectors) such that
+/// `A ~= sum_k s[k] * u[k] v[k]^T`.
+pub fn truncated_svd(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    rank: usize,
+    iters: usize,
+    seed: u64,
+) -> (Vec<Vec<f32>>, Vec<f32>, Vec<Vec<f32>>) {
+    assert_eq!(a.len(), m * n);
+    let r = rank.min(m.min(n));
+    if r == 0 || m == 0 || n == 0 {
+        return (Vec::new(), Vec::new(), Vec::new());
+    }
+    // Iterate on the smaller side for cost O(iters * r * m * n).
+    let transpose = m > n; // iterate in R^min(m,n)
+    let (rows, cols) = if transpose { (n, m) } else { (m, n) };
+    // B is rows x cols view of A (possibly transposed), accessed via closure.
+    let at = |i: usize, j: usize| -> f32 {
+        if transpose {
+            a[j * n + i]
+        } else {
+            a[i * n + j]
+        }
+    };
+
+    // Initialize Q: r x rows, random then orthonormalized.
+    let mut rng = Rng::new(seed ^ 0xA70_30D0_5EED_u64);
+    let mut q: Vec<Vec<f64>> = (0..r)
+        .map(|_| (0..rows).map(|_| rng.normal()).collect())
+        .collect();
+    mgs(&mut q);
+
+    let mut tmp = vec![0f64; cols];
+    for _ in 0..iters.max(1) {
+        // Q <- orth( B B^T Q ) applied vector-wise.
+        for k in 0..r {
+            // tmp = B^T q_k  (cols)
+            for j in 0..cols {
+                let mut acc = 0f64;
+                for i in 0..rows {
+                    acc += at(i, j) as f64 * q[k][i];
+                }
+                tmp[j] = acc;
+            }
+            // q_k = B tmp (rows)
+            for i in 0..rows {
+                let mut acc = 0f64;
+                for j in 0..cols {
+                    acc += at(i, j) as f64 * tmp[j];
+                }
+                q[k][i] = acc;
+            }
+        }
+        mgs(&mut q);
+    }
+
+    // Singular values / right factors: w_k = B^T q_k, sigma = ||w_k||.
+    let mut u_rows: Vec<Vec<f32>> = Vec::with_capacity(r);
+    let mut s_vals: Vec<f32> = Vec::with_capacity(r);
+    let mut v_rows: Vec<Vec<f32>> = Vec::with_capacity(r);
+    for k in 0..r {
+        let mut w = vec![0f64; cols];
+        for j in 0..cols {
+            let mut acc = 0f64;
+            for i in 0..rows {
+                acc += at(i, j) as f64 * q[k][i];
+            }
+            w[j] = acc;
+        }
+        let sigma = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let w_unit: Vec<f32> = if sigma > 0.0 {
+            w.iter().map(|x| (*x / sigma) as f32).collect()
+        } else {
+            vec![0f32; cols]
+        };
+        let q_f32: Vec<f32> = q[k].iter().map(|x| *x as f32).collect();
+        s_vals.push(sigma as f32);
+        if transpose {
+            // B = A^T: left vectors of B live in R^n (=rows), right in R^m.
+            u_rows.push(w_unit); // in R^m
+            v_rows.push(q_f32); // in R^n
+        } else {
+            u_rows.push(q_f32); // in R^m
+            v_rows.push(w_unit); // in R^n
+        }
+    }
+    // Sort by descending sigma.
+    let mut order: Vec<usize> = (0..r).collect();
+    order.sort_by(|&x, &y| s_vals[y].partial_cmp(&s_vals[x]).unwrap());
+    let u = order.iter().map(|&i| u_rows[i].clone()).collect();
+    let s = order.iter().map(|&i| s_vals[i]).collect();
+    let v = order.iter().map(|&i| v_rows[i].clone()).collect();
+    (u, s, v)
+}
+
+/// Reconstruct `sum_k s[k] u[k] v[k]^T` into a dense m x n row-major matrix.
+pub fn reconstruct(
+    u: &[Vec<f32>],
+    s: &[f32],
+    v: &[Vec<f32>],
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for k in 0..s.len() {
+        let sk = s[k];
+        for i in 0..m {
+            let ui = u[k][i] * sk;
+            if ui == 0.0 {
+                continue;
+            }
+            let row = &mut out[i * n..(i + 1) * n];
+            for (o, vj) in row.iter_mut().zip(&v[k]) {
+                *o += ui * vj;
+            }
+        }
+    }
+    out
+}
+
+/// Modified Gram-Schmidt orthonormalization of row vectors (in place).
+fn mgs(q: &mut [Vec<f64>]) {
+    let r = q.len();
+    for k in 0..r {
+        for j in 0..k {
+            let d: f64 = q[k].iter().zip(&q[j]).map(|(a, b)| a * b).sum();
+            let qj = q[j].clone();
+            for (x, y) in q[k].iter_mut().zip(&qj) {
+                *x -= d * y;
+            }
+        }
+        let nrm: f64 = q[k].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if nrm > 1e-300 {
+            for x in q[k].iter_mut() {
+                *x /= nrm;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn frob2(a: &[f32]) -> f64 {
+        a.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    #[test]
+    fn exact_rank_one() {
+        let (m, n) = (6, 4);
+        let u0 = [1.0f32, 2.0, -1.0, 0.5, 0.0, 3.0];
+        let v0 = [1.0f32, -1.0, 2.0, 0.5];
+        let mut a = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                a[i * n + j] = u0[i] * v0[j];
+            }
+        }
+        let (u, s, v) = truncated_svd(&a, m, n, 1, 12, 0);
+        let rec = reconstruct(&u, &s, &v, m, n);
+        let err: f64 = a
+            .iter()
+            .zip(&rec)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        assert!(err < 1e-8 * frob2(&a), "err={err}");
+    }
+
+    #[test]
+    fn rank_r_energy_capture() {
+        let (m, n, r) = (20, 15, 3);
+        let mut rng = Rng::new(9);
+        // A = sum of 3 strong rank-1 terms + small noise.
+        let mut a = vec![0f32; m * n];
+        for k in 0..r {
+            let scale = 10.0 / (k + 1) as f32;
+            let u: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for i in 0..m {
+                for j in 0..n {
+                    a[i * n + j] += scale * u[i] * v[j];
+                }
+            }
+        }
+        for x in a.iter_mut() {
+            *x += rng.normal_f32(0.0, 0.01);
+        }
+        let (u, s, v) = truncated_svd(&a, m, n, r, 20, 1);
+        assert_eq!(s.len(), r);
+        assert!(s[0] >= s[1] && s[1] >= s[2]);
+        let rec = reconstruct(&u, &s, &v, m, n);
+        let err: f64 = a
+            .iter()
+            .zip(&rec)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        assert!(err < 1e-3 * frob2(&a), "relative err {}", err / frob2(&a));
+    }
+
+    #[test]
+    fn tall_and_wide_agree() {
+        // SVD of A and A^T share singular values.
+        let (m, n) = (4, 9);
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut at = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                at[j * m + i] = a[i * n + j];
+            }
+        }
+        let (_, s1, _) = truncated_svd(&a, m, n, 3, 30, 5);
+        let (_, s2, _) = truncated_svd(&at, n, m, 3, 30, 5);
+        for k in 0..3 {
+            assert!(
+                (s1[k] - s2[k]).abs() < 1e-3 * s1[0].max(1.0),
+                "k={k}: {} vs {}",
+                s1[k],
+                s2[k]
+            );
+        }
+    }
+
+    #[test]
+    fn singular_vectors_unit_norm() {
+        let mut rng = Rng::new(4);
+        let (m, n) = (10, 7);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (u, s, v) = truncated_svd(&a, m, n, 2, 25, 2);
+        for k in 0..2 {
+            assert!(s[k] > 0.0);
+            let nu: f64 = u[k].iter().map(|x| (*x as f64).powi(2)).sum();
+            let nv: f64 = v[k].iter().map(|x| (*x as f64).powi(2)).sum();
+            assert!((nu - 1.0).abs() < 1e-4);
+            assert!((nv - 1.0).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! `fedrecycle` — LBGM federated-learning launcher.
+//!
+//! Subcommands:
+//!   info                          list artifact variants
+//!   train [--config f.json] [..]  run one FL experiment arm
+//!   analyze --variant V --dataset D   centralized gradient-space analysis
+//!   figure <id|all> [--scale smoke|default|full] [--out results]
+//!       ids: fig1 fig2 fig3 fig5 fig6 fig7 fig8 sampling theory
+//!
+//! Common flags for `train`: --variant --dataset --workers --rounds --tau
+//!   --eta --delta --noniid true|false --codec identity|topk|topk_ef|atomo|
+//!   signsgd --codec-fraction --codec-rank --sample-fraction --seed
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use fedrecycle::analysis::gradient_space::centralized_analysis;
+use fedrecycle::config::{CodecKind, ExperimentConfig};
+use fedrecycle::figures::{self, common::Scale};
+use fedrecycle::metrics::write_csv;
+use fedrecycle::runtime::{Manifest, Runtime};
+use fedrecycle::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_env(args: &Args) -> Result<(Runtime, Manifest)> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    Ok((rt, manifest))
+}
+
+fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_file(Path::new(path))?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.into();
+    }
+    if let Some(v) = args.get("dataset") {
+        cfg.dataset = v.into();
+    }
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.rounds = args.usize_or("rounds", cfg.rounds);
+    cfg.tau = args.usize_or("tau", cfg.tau);
+    cfg.eta = args.f64_or("eta", cfg.eta);
+    cfg.delta = args.f64_or("delta", cfg.delta);
+    if let Some(v) = args.get("noniid") {
+        cfg.noniid = v == "true" || v == "1";
+    }
+    cfg.labels_per_worker = args.usize_or("labels-per-worker", cfg.labels_per_worker);
+    cfg.sample_fraction = args.f64_or("sample-fraction", cfg.sample_fraction);
+    cfg.train_n = args.usize_or("train-n", cfg.train_n);
+    cfg.test_n = args.usize_or("test-n", cfg.test_n);
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    if let Some(name) = args.get("codec") {
+        cfg.codec = CodecKind::parse(
+            name,
+            args.f64_or("codec-fraction", 0.1),
+            args.usize_or("codec-rank", 2),
+        )?;
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("info") => cmd_info(args),
+        Some("train") => cmd_train(args),
+        Some("analyze") => cmd_analyze(args),
+        Some("figure") => cmd_figure(args),
+        _ => {
+            println!("usage: fedrecycle <info|train|analyze|figure> [flags]");
+            println!("       fedrecycle figure all --scale default --out results");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let (rt, manifest) = load_env(args)?;
+    println!("platform: {}", rt.platform());
+    println!(
+        "{:<18} {:<5} {:>10} {:>7} {:<22}",
+        "variant", "task", "params", "batch", "x_shape"
+    );
+    for v in &manifest.variants {
+        println!(
+            "{:<18} {:<5} {:>10} {:>7} {:<22?}",
+            v.name, v.task, v.param_count, v.batch, v.x_shape
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (rt, manifest) = load_env(args)?;
+    let cfg = cfg_from_args(args)?;
+    println!(
+        "train: variant={} dataset={} K={} T={} tau={} eta={} delta={} codec={:?}",
+        cfg.variant, cfg.dataset, cfg.workers, cfg.rounds, cfg.tau, cfg.eta,
+        cfg.delta, cfg.codec
+    );
+    let outc = figures::common::run_arm(&rt, &manifest, &cfg, &cfg.name.clone())?;
+    println!(
+        "done: final metric {:.4} | floats {:>12} | bits {:>14} | scalar msgs {:.1}%",
+        outc.series.final_metric(),
+        outc.ledger.total_floats,
+        outc.ledger.total_bits,
+        100.0 * outc.series.scalar_fraction()
+    );
+    println!("phase timings: {}", outc.timers.report());
+    if let Some(out) = args.get("out") {
+        write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[outc.series])?;
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let (rt, manifest) = load_env(args)?;
+    let mut cfg = cfg_from_args(args)?;
+    cfg.workers = 1;
+    cfg.noniid = false;
+    let epochs = args.usize_or("epochs", 20);
+    let steps = args.usize_or("steps-per-epoch", 6);
+    let meta = manifest.variant(&cfg.variant)?;
+    let mut trainer = figures::common::make_trainer(&rt, &manifest, &cfg)?;
+    let report = centralized_analysis(
+        &mut trainer,
+        meta.load_init()?,
+        meta.segments.clone(),
+        epochs,
+        steps,
+        cfg.eta as f32,
+    )?;
+    println!("{:>6} {:>5} {:>5} {:>12} {:>12}", "epoch", "N95", "N99", "test_loss", "metric");
+    for e in &report.per_epoch {
+        println!(
+            "{:>6} {:>5} {:>5} {:>12.4} {:>12.4}",
+            e.epoch, e.n95, e.n99, e.test_loss, e.test_metric
+        );
+    }
+    println!("N99 fraction of epochs: {:.1}%", 100.0 * report.n99_fraction());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let scale = Scale::parse(&args.get_or("scale", "default"));
+    let out = PathBuf::from(args.get_or("out", "results"));
+    // `theory` needs no artifacts.
+    if which == "theory" {
+        return figures::theory::run(scale, &out);
+    }
+    let (rt, manifest) = load_env(args)?;
+    let run_one = |id: &str| -> Result<()> {
+        match id {
+            "fig1" => figures::fig1::run(&rt, &manifest, scale, &out),
+            "fig2" => figures::fig2::run(&rt, &manifest, scale, &out),
+            "fig3" => figures::fig3::run(&rt, &manifest, scale, &out),
+            "fig5" => figures::fig5::run(&rt, &manifest, scale, &out),
+            "fig6" => figures::fig6::run(&rt, &manifest, scale, &out),
+            "fig7" => figures::fig7::run(&rt, &manifest, scale, &out),
+            "fig8" => figures::fig8::run(&rt, &manifest, scale, &out),
+            "sampling" => figures::sampling::run(&rt, &manifest, scale, &out),
+            "theory" => figures::theory::run(scale, &out),
+            other => anyhow::bail!("unknown figure `{other}`"),
+        }
+    };
+    if which == "all" {
+        for id in [
+            "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "sampling",
+            "theory",
+        ] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}

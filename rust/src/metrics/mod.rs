@@ -1,0 +1,10 @@
+//! Experiment metrics: per-round series, summaries, and CSV/JSON writers.
+//!
+//! Every figure harness records its curves here; `make figures` dumps them
+//! under `results/` so EXPERIMENTS.md can cite exact numbers.
+
+pub mod series;
+pub mod writer;
+
+pub use series::{RoundRecord, RunSeries};
+pub use writer::{write_csv, write_json};

@@ -1,0 +1,118 @@
+//! Per-round metric series for a single training run.
+
+/// One global aggregation round's metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    /// Accuracy for classification/LM, negative MSE proxy for regression.
+    pub test_metric: f64,
+    /// Cumulative floats transferred uplink (all workers) after this round.
+    pub floats_up: u64,
+    /// Cumulative uplink bits (exact, for SignSGD-style codecs).
+    pub bits_up: u64,
+    /// Workers that sent a full gradient (vs a scalar LBC) this round.
+    pub full_sends: usize,
+    pub scalar_sends: usize,
+    pub wall_secs: f64,
+}
+
+/// A named training run's full history.
+#[derive(Clone, Debug, Default)]
+pub struct RunSeries {
+    pub name: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunSeries {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), rounds: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    pub fn final_metric(&self) -> f64 {
+        self.last().map(|r| r.test_metric).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_floats(&self) -> u64 {
+        self.last().map(|r| r.floats_up).unwrap_or(0)
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.last().map(|r| r.bits_up).unwrap_or(0)
+    }
+
+    /// Best (max) test metric over the run.
+    pub fn best_metric(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_metric)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Fraction of uplink messages that were scalar LBCs.
+    pub fn scalar_fraction(&self) -> f64 {
+        let (s, f): (usize, usize) = self
+            .rounds
+            .iter()
+            .fold((0, 0), |(s, f), r| (s + r.scalar_sends, f + r.full_sends));
+        if s + f == 0 {
+            0.0
+        } else {
+            s as f64 / (s + f) as f64
+        }
+    }
+
+    /// Communication saving vs a baseline's total floats (paper's "% savings").
+    pub fn savings_vs(&self, baseline_floats: u64) -> f64 {
+        if baseline_floats == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_floats() as f64 / baseline_floats as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, metric: f64, floats: u64, s: usize, f: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            test_metric: metric,
+            floats_up: floats,
+            scalar_sends: s,
+            full_sends: f,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let mut s = RunSeries::new("x");
+        s.push(rec(0, 0.1, 100, 0, 10));
+        s.push(rec(1, 0.5, 110, 9, 1));
+        s.push(rec(2, 0.4, 120, 10, 0));
+        assert_eq!(s.final_metric(), 0.4);
+        assert_eq!(s.best_metric(), 0.5);
+        assert_eq!(s.total_floats(), 120);
+        assert!((s.scalar_fraction() - 19.0 / 30.0).abs() < 1e-12);
+        assert!((s.savings_vs(240) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_series() {
+        let s = RunSeries::new("e");
+        assert!(s.final_metric().is_nan());
+        assert_eq!(s.total_floats(), 0);
+        assert_eq!(s.scalar_fraction(), 0.0);
+    }
+}

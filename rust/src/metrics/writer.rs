@@ -1,0 +1,76 @@
+//! CSV/JSON dumps of run series for `results/`.
+
+use std::fs;
+use std::path::Path;
+
+use super::series::RunSeries;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Write one CSV with all runs stacked (run,round,... columns).
+pub fn write_csv(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut out = String::from(
+        "run,round,train_loss,test_loss,test_metric,floats_up,bits_up,full_sends,scalar_sends,wall_secs\n",
+    );
+    for run in runs {
+        for r in &run.rounds {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{:.4}\n",
+                run.name,
+                r.round,
+                r.train_loss,
+                r.test_loss,
+                r.test_metric,
+                r.floats_up,
+                r.bits_up,
+                r.full_sends,
+                r.scalar_sends,
+                r.wall_secs
+            ));
+        }
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+/// Write a JSON summary (finals + savings) for EXPERIMENTS.md extraction.
+pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let items = runs.iter().map(|r| {
+        obj(vec![
+            ("name", s(&r.name)),
+            ("rounds", num(r.rounds.len() as f64)),
+            ("final_metric", num(r.final_metric())),
+            ("best_metric", num(r.best_metric())),
+            ("total_floats", num(r.total_floats() as f64)),
+            ("total_bits", num(r.total_bits() as f64)),
+            ("scalar_fraction", num(r.scalar_fraction())),
+        ])
+    });
+    fs::write(path, Json::to_string(&arr(items)))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::series::RoundRecord;
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let dir = std::env::temp_dir().join("fedrecycle_metrics_test");
+        let mut run = RunSeries::new("demo");
+        run.push(RoundRecord { round: 0, test_metric: 0.5, floats_up: 10, ..Default::default() });
+        write_csv(&dir.join("a.csv"), &[run.clone()]).unwrap();
+        write_json(&dir.join("a.json"), &[run]).unwrap();
+        let csv = std::fs::read_to_string(dir.join("a.csv")).unwrap();
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("demo,0"));
+        let j = Json::parse(&std::fs::read_to_string(dir.join("a.json")).unwrap()).unwrap();
+        assert_eq!(j.as_arr().unwrap()[0].req_str("name").unwrap(), "demo");
+    }
+}

@@ -1,0 +1,185 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One named tensor's slice of the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Metadata for one exported model variant.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub task: String, // "cls" | "reg" | "lm"
+    pub param_count: usize,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String, // "float32" | "int32"
+    pub y_shape: Vec<usize>,
+    pub y_dtype: String,
+    pub grad_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub init: PathBuf,
+    pub segments: Vec<Segment>,
+}
+
+impl VariantMeta {
+    /// Load the deterministic initial flat parameter vector.
+    pub fn load_init(&self) -> Result<Vec<f32>> {
+        let bytes = fs::read(&self.init)
+            .with_context(|| format!("reading {}", self.init.display()))?;
+        anyhow::ensure!(
+            bytes.len() == self.param_count * 4,
+            "init file size {} != 4*{}",
+            bytes.len(),
+            self.param_count
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn x_len(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    pub fn y_len(&self) -> usize {
+        self.y_shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantMeta>,
+}
+
+fn usizes(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        anyhow::ensure!(root.req_usize("version")? == 1, "unknown manifest version");
+        let mut variants = Vec::new();
+        for v in root.req_arr("variants")? {
+            let segments = v
+                .req_arr("segments")?
+                .iter()
+                .map(|seg| {
+                    Ok(Segment {
+                        name: seg.req_str("name")?.to_string(),
+                        offset: seg.req_usize("offset")?,
+                        size: seg.req_usize("size")?,
+                        shape: usizes(seg.get("shape").unwrap_or(&Json::Null)),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            variants.push(VariantMeta {
+                name: v.req_str("name")?.to_string(),
+                task: v.req_str("task")?.to_string(),
+                param_count: v.req_usize("param_count")?,
+                batch: v.req_usize("batch")?,
+                x_shape: usizes(v.get("x_shape").unwrap_or(&Json::Null)),
+                x_dtype: v.req_str("x_dtype")?.to_string(),
+                y_shape: usizes(v.get("y_shape").unwrap_or(&Json::Null)),
+                y_dtype: v.req_str("y_dtype")?.to_string(),
+                grad_hlo: dir.join(v.req_str("grad_hlo")?),
+                eval_hlo: dir.join(v.req_str("eval_hlo")?),
+                init: dir.join(v.req_str("init")?),
+                segments,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no variant `{name}` in manifest"))
+    }
+
+    /// Default artifact location: `$FEDRECYCLE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FEDRECYCLE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration coverage requires `make artifacts`; unit tests here parse
+    /// a synthetic manifest instead.
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("fedrecycle_manifest_test");
+        fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{"version":1,"init_seed":1,"variants":[{
+            "name":"toy","task":"cls","param_count":4,"batch":2,
+            "x_shape":[2,3],"x_dtype":"float32",
+            "y_shape":[2],"y_dtype":"int32",
+            "grad_hlo":"toy.grad.hlo.txt","eval_hlo":"toy.eval.hlo.txt",
+            "init":"toy.init.f32",
+            "segments":[{"name":"w","offset":0,"size":4,"shape":[4]}]}]}"#;
+        fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let init: Vec<u8> = [1f32, 2.0, 3.0, 4.0]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        fs::write(dir.join("toy.init.f32"), init).unwrap();
+
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("toy").unwrap();
+        assert_eq!(v.param_count, 4);
+        assert_eq!(v.x_len(), 6);
+        assert_eq!(v.y_len(), 2);
+        assert_eq!(v.segments[0].shape, vec![4]);
+        assert_eq!(v.load_init().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn init_size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("fedrecycle_manifest_test2");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("bad.init.f32"), [0u8; 7]).unwrap();
+        let v = VariantMeta {
+            name: "bad".into(),
+            task: "cls".into(),
+            param_count: 4,
+            batch: 1,
+            x_shape: vec![1],
+            x_dtype: "float32".into(),
+            y_shape: vec![1],
+            y_dtype: "int32".into(),
+            grad_hlo: dir.join("x"),
+            eval_hlo: dir.join("y"),
+            init: dir.join("bad.init.f32"),
+            segments: vec![],
+        };
+        assert!(v.load_init().is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT CPU client + compiled-executable cache.
+//!
+//! HLO **text** is the interchange format (jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids — see /opt/xla-example/README.md). Each artifact is
+//! compiled once per process and reused across every worker/round.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// Input element type for a model's (x, y) feeds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(name: &str) -> Result<DType> {
+        match name {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype `{other}`"),
+        }
+    }
+}
+
+/// Either feed for an executable input.
+pub enum Feed<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// A compiled model computation with the flat-parameter ABI:
+/// `(theta, x, y) -> (scalar, f32 vector)` for grad, `-> (scalar, scalar)`
+/// for eval.
+pub struct ModelExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: DType,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: DType,
+    pub param_count: usize,
+}
+
+fn literal_of(feed: &Feed, shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = match feed {
+        Feed::F32(v) => xla::Literal::vec1(v),
+        Feed::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+impl ModelExecutable {
+    /// Execute `(theta, x, y)`; returns `(first scalar, second output as vec)`.
+    pub fn run(&self, theta: &[f32], x: Feed, y: Feed) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(theta.len() == self.param_count, "theta length mismatch");
+        let t_lit = xla::Literal::vec1(theta)
+            .reshape(&[theta.len() as i64])
+            .context("theta literal")?;
+        let x_lit = literal_of(&x, &self.x_shape)?;
+        let y_lit = literal_of(&y, &self.y_shape)?;
+        let result = self.exe.execute::<xla::Literal>(&[t_lit, x_lit, y_lit])?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: (loss, grad|metric).
+        let (loss_l, second_l) = out.to_tuple2()?;
+        let loss = loss_l.get_first_element::<f32>()?;
+        let second = second_l.to_vec::<f32>()?;
+        Ok((loss, second))
+    }
+}
+
+/// Process-wide PJRT client + compile cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<ModelExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an HLO-text artifact with the given ABI.
+    pub fn load(
+        &self,
+        hlo_path: &Path,
+        param_count: usize,
+        x_shape: &[usize],
+        x_dtype: DType,
+        y_shape: &[usize],
+        y_dtype: DType,
+    ) -> Result<Arc<ModelExecutable>> {
+        let key = hlo_path.display().to_string();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", hlo_path.display()))?;
+        let me = Arc::new(ModelExecutable {
+            exe,
+            x_shape: x_shape.to_vec(),
+            x_dtype,
+            y_shape: y_shape.to_vec(),
+            y_dtype,
+            param_count,
+        });
+        self.cache.lock().unwrap().insert(key, me.clone());
+        Ok(me)
+    }
+
+    /// Convenience: load a variant's grad and eval executables.
+    pub fn load_variant(
+        &self,
+        v: &super::artifact::VariantMeta,
+    ) -> Result<(Arc<ModelExecutable>, Arc<ModelExecutable>)> {
+        let xd = DType::parse(&v.x_dtype)?;
+        let yd = DType::parse(&v.y_dtype)?;
+        let grad = self.load(&v.grad_hlo, v.param_count, &v.x_shape, xd, &v.y_shape, yd)?;
+        let eval = self.load(&v.eval_hlo, v.param_count, &v.x_shape, xd, &v.y_shape, yd)?;
+        Ok((grad, eval))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched; the rest of the crate
+//! sees typed [`ModelExecutable`]s with the flat-parameter ABI
+//! (`grad_step(theta, x, y) -> (loss, grad)`).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Manifest, Segment, VariantMeta};
+pub use client::{DType, ModelExecutable, Runtime};

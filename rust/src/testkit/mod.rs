@@ -1,0 +1,6 @@
+//! In-tree test utilities (the build host lacks `proptest`): a small
+//! property-testing driver with shrinking.
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

@@ -1,0 +1,179 @@
+//! Minimal property-testing driver (replacement for `proptest`).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it greedily shrinks the failing
+//! input via the case's `shrink` candidates before panicking with the
+//! minimal reproduction and its seed.
+
+use crate::util::rng::Rng;
+
+/// A generator + shrinker for a test-case type.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate smaller versions of a failing value (default: none).
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` generated inputs.
+///
+/// `prop` returns `Err(reason)` on violation.
+pub fn forall<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(reason) = prop(&value) {
+            // Greedy shrink.
+            let mut best = value;
+            let mut best_reason = reason;
+            let mut improved = true;
+            let mut budget = 200usize;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in gen.shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(r) = prop(&cand) {
+                        best = cand;
+                        best_reason = r;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {best:?}\n  reason: {best_reason}"
+            );
+        }
+    }
+}
+
+/// Generator for f32 vectors of bounded length and scale.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n).map(|_| rng.normal_f32(0.0, self.scale)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // Zero half the entries.
+        if v.iter().any(|x| *x != 0.0) {
+            let mut z = v.clone();
+            for x in z.iter_mut().take(v.len() / 2) {
+                *x = 0.0;
+            }
+            out.push(z);
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// Generator for paired equal-length vectors (g, l).
+pub struct PairF32 {
+    pub inner: VecF32,
+}
+
+impl Gen for PairF32 {
+    type Value = (Vec<f32>, Vec<f32>);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let a = self.inner.generate(rng);
+        let b: Vec<f32> = (0..a.len())
+            .map(|_| rng.normal_f32(0.0, self.inner.scale))
+            .collect();
+        (a, b)
+    }
+
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if a.len() > self.inner.min_len {
+            let h = a.len() / 2;
+            out.push((a[..h].to_vec(), b[..h].to_vec()));
+        }
+        out.retain(|(x, _)| x.len() >= self.inner.min_len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = VecF32 { min_len: 1, max_len: 50, scale: 1.0 };
+        forall(1, 50, &gen, |v| {
+            if v.len() >= 1 {
+                Ok(())
+            } else {
+                Err("empty".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        let gen = VecF32 { min_len: 1, max_len: 50, scale: 1.0 };
+        forall(2, 50, &gen, |v| {
+            if v.len() < 10 {
+                Ok(())
+            } else {
+                Err(format!("too long: {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_case() {
+        let gen = VecF32 { min_len: 1, max_len: 64, scale: 1.0 };
+        let caught = std::panic::catch_unwind(|| {
+            forall(3, 100, &gen, |v| {
+                if v.len() < 8 {
+                    Ok(())
+                } else {
+                    Err("len >= 8".into())
+                }
+            });
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // Shrinker should land near the boundary (< 16 elements shown).
+        let shown = msg.split("input:").nth(1).unwrap();
+        let commas = shown.split("reason").next().unwrap().matches(',').count();
+        assert!(commas < 16, "not shrunk: {msg}");
+    }
+
+    #[test]
+    fn pair_generator_equal_lengths() {
+        let gen = PairF32 { inner: VecF32 { min_len: 2, max_len: 30, scale: 1.0 } };
+        forall(4, 30, &gen, |(a, b)| {
+            if a.len() == b.len() {
+                Ok(())
+            } else {
+                Err("length mismatch".into())
+            }
+        });
+    }
+}

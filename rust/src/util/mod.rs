@@ -1,0 +1,8 @@
+//! Self-contained utilities replacing unavailable ecosystem crates (the
+//! build host is offline; see DESIGN.md "Offline-build note"): deterministic
+//! RNG, a minimal JSON codec, a flag parser, and wall-clock timers.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;

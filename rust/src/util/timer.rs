@@ -1,0 +1,65 @@
+//! Wall-clock timing helpers used by the metrics layer and bench harness.
+
+use std::time::Instant;
+
+/// Accumulating stopwatch for profiling named phases of the round loop.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and record the elapsed seconds under `name` (accumulating).
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        let secs = start.elapsed().as_secs_f64();
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    /// `phase=secs` pairs in insertion order, for logging.
+    pub fn report(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(n, s)| format!("{n}={s:.3}s"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_by_name() {
+        let mut t = PhaseTimer::new();
+        t.time("a", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        t.time("a", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        t.time("b", || ());
+        assert!(t.get("a") >= 0.004);
+        assert!(t.get("a") <= t.total());
+        assert!(t.report().contains("a="));
+    }
+}

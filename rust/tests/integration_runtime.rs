@@ -1,0 +1,144 @@
+//! Integration: load the real AOT artifacts through PJRT and check the
+//! flat-parameter ABI end-to-end (requires `make artifacts`).
+
+use fedrecycle::data::{Dataset, SynthSpec};
+use fedrecycle::runtime::client::Feed;
+use fedrecycle::runtime::{Manifest, Runtime};
+use fedrecycle::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    Manifest::load(&dir).ok()
+}
+
+macro_rules! require_artifacts {
+    ($m:ident) => {
+        let Some($m) = manifest() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+    };
+}
+
+#[test]
+fn grad_step_executes_and_shapes_match() {
+    require_artifacts!(m);
+    let rt = Runtime::cpu().unwrap();
+    let v = m.variant("fcn_mnist").unwrap();
+    let (grad, _) = rt.load_variant(v).unwrap();
+    let theta = v.load_init().unwrap();
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..v.x_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..v.y_len()).map(|_| rng.below(10) as i32).collect();
+    let (loss, g) = grad.run(&theta, Feed::F32(&x), Feed::I32(&y)).unwrap();
+    assert_eq!(g.len(), v.param_count);
+    assert!(loss.is_finite());
+    // Random init + 10 balanced classes: loss ~ ln(10).
+    assert!((loss - 10f32.ln()).abs() < 1.0, "loss={loss}");
+    assert!(g.iter().all(|x| x.is_finite()));
+    let norm: f64 = g.iter().map(|x| (*x as f64).powi(2)).sum();
+    assert!(norm > 0.0);
+}
+
+#[test]
+fn grad_step_is_deterministic() {
+    require_artifacts!(m);
+    let rt = Runtime::cpu().unwrap();
+    let v = m.variant("cnn_mnist").unwrap();
+    let (grad, _) = rt.load_variant(v).unwrap();
+    let theta = v.load_init().unwrap();
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..v.x_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..v.y_len()).map(|_| rng.below(10) as i32).collect();
+    let (l1, g1) = grad.run(&theta, Feed::F32(&x), Feed::I32(&y)).unwrap();
+    let (l2, g2) = grad.run(&theta, Feed::F32(&x), Feed::I32(&y)).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn sgd_on_artifact_reduces_loss() {
+    require_artifacts!(m);
+    let rt = Runtime::cpu().unwrap();
+    let v = m.variant("fcn_mnist").unwrap();
+    let (grad, _) = rt.load_variant(v).unwrap();
+    let mut theta = v.load_init().unwrap();
+    // Overfit one fixed synthetic batch: loss must drop hard.
+    let ds = Dataset::generate(&SynthSpec::mnist(v.batch, v.batch));
+    let x = &ds.train_x[..v.batch * 784];
+    let y = &ds.train_y[..v.batch];
+    let (loss0, _) = grad.run(&theta, Feed::F32(x), Feed::I32(y)).unwrap();
+    for _ in 0..25 {
+        let (_, g) = grad.run(&theta, Feed::F32(x), Feed::I32(y)).unwrap();
+        for (t, gi) in theta.iter_mut().zip(&g) {
+            *t -= 0.2 * gi;
+        }
+    }
+    let (loss_n, _) = grad.run(&theta, Feed::F32(x), Feed::I32(y)).unwrap();
+    assert!(
+        loss_n < 0.5 * loss0,
+        "SGD through artifact failed: {loss0} -> {loss_n}"
+    );
+}
+
+#[test]
+fn eval_metric_counts_correct_predictions() {
+    require_artifacts!(m);
+    let rt = Runtime::cpu().unwrap();
+    let v = m.variant("fcn_mnist").unwrap();
+    let (_, eval) = rt.load_variant(v).unwrap();
+    let theta = v.load_init().unwrap();
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..v.x_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..v.y_len()).map(|_| rng.below(10) as i32).collect();
+    let (loss, metric) = eval.run(&theta, Feed::F32(&x), Feed::I32(&y)).unwrap();
+    assert!(loss.is_finite());
+    let correct = metric[0];
+    assert!((0.0..=v.batch as f32).contains(&correct), "metric={correct}");
+}
+
+#[test]
+fn regression_variant_roundtrip() {
+    require_artifacts!(m);
+    let rt = Runtime::cpu().unwrap();
+    let v = m.variant("fcn_celeba").unwrap();
+    assert_eq!(v.task, "reg");
+    let (grad, _) = rt.load_variant(v).unwrap();
+    let theta = v.load_init().unwrap();
+    let mut rng = Rng::new(4);
+    let x: Vec<f32> = (0..v.x_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<f32> = (0..v.y_len()).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let (loss, g) = grad.run(&theta, Feed::F32(&x), Feed::F32(&y)).unwrap();
+    assert!(loss.is_finite() && loss >= 0.0);
+    assert_eq!(g.len(), v.param_count);
+}
+
+#[test]
+fn lm_variant_roundtrip() {
+    require_artifacts!(m);
+    let rt = Runtime::cpu().unwrap();
+    let v = m.variant("transformer_lm").unwrap();
+    let (grad, _) = rt.load_variant(v).unwrap();
+    let theta = v.load_init().unwrap();
+    let mut rng = Rng::new(5);
+    let x: Vec<i32> = (0..v.x_len()).map(|_| rng.below(64) as i32).collect();
+    let y: Vec<i32> = (0..v.y_len()).map(|_| rng.below(64) as i32).collect();
+    let (loss, g) = grad.run(&theta, Feed::I32(&x), Feed::I32(&y)).unwrap();
+    // Random tokens, vocab 64: loss ~ ln(64) ~= 4.16.
+    assert!((loss - 64f32.ln()).abs() < 1.0, "lm loss {loss}");
+    assert_eq!(g.len(), v.param_count);
+}
+
+#[test]
+fn segments_cover_every_variant() {
+    require_artifacts!(m);
+    for v in &m.variants {
+        let mut off = 0;
+        for s in &v.segments {
+            assert_eq!(s.offset, off, "{}: segment {} misaligned", v.name, s.name);
+            assert_eq!(s.size, s.shape.iter().product::<usize>());
+            off += s.size;
+        }
+        assert_eq!(off, v.param_count, "{}", v.name);
+    }
+}
