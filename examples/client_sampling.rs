@@ -6,7 +6,7 @@
 
 use fedrecycle::compress::Identity;
 use fedrecycle::config::ExperimentConfig;
-use fedrecycle::coordinator::round::FlConfig;
+use fedrecycle::coordinator::round::{FlConfig, Parallelism};
 use fedrecycle::coordinator::trainer::{LocalTrainer, MockTrainer};
 use fedrecycle::coordinator::transport::run_threaded_fl;
 use fedrecycle::figures::common::run_arm;
@@ -64,6 +64,9 @@ fn main() -> anyhow::Result<()> {
         eval_every: 10,
         seed: 21,
         check_coherence: false,
+        // The channel transport below owns its threading (one long-lived
+        // thread per worker); the engine knob is not consulted there.
+        parallelism: Parallelism::Sequential,
     };
     let (series, ledger, _) = run_threaded_fl(
         |_| MockTrainer::new(dim, k, 0.3, 0.02, 21),

@@ -1,14 +1,17 @@
 //! Fig. 5-style standalone-LBGM experiment with full CLI control.
 //!
 //!     cargo run --release --example fl_noniid -- \
-//!         --dataset synth_cifar --variant cnn_cifar --delta 0.5 --rounds 30
+//!         --dataset synth_cifar --variant cnn_cifar --delta 0.5 --rounds 30 \
+//!         --parallelism auto
 //!
 //! Runs vanilla + LBGM arms on a non-iid federation and writes the round
-//! curves to results/fl_noniid.csv.
+//! curves to results/fl_noniid.csv. `--parallelism seq|auto|<threads>`
+//! selects the round engine (results are bit-identical across settings).
 
 use std::path::Path;
 
 use fedrecycle::config::ExperimentConfig;
+use fedrecycle::coordinator::Parallelism;
 use fedrecycle::figures::common::run_arm;
 use fedrecycle::metrics::write_csv;
 use fedrecycle::runtime::{Manifest, Runtime};
@@ -32,6 +35,7 @@ fn main() -> anyhow::Result<()> {
         test_n: args.usize_or("test-n", 256),
         eval_every: 3,
         seed: args.u64_or("seed", 2),
+        parallelism: Parallelism::parse(&args.get_or("parallelism", "auto"))?,
         ..Default::default()
     };
     let delta = args.f64_or("delta", 0.2);

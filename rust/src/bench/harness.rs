@@ -10,6 +10,16 @@
 
 use std::time::Instant;
 
+/// Worker-thread count for round-engine benches, from
+/// `FEDRECYCLE_BENCH_THREADS` (unset or `0` = one thread per available
+/// core — i.e. `Parallelism::Threads(0)` semantics).
+pub fn threads_from_env() -> usize {
+    std::env::var("FEDRECYCLE_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
 /// One benchmark's statistics (seconds).
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -89,6 +99,14 @@ impl Bencher {
         Self::new(group, samples, 3)
     }
 
+    /// Named report lookup (for post-bench summaries, e.g. speedup ratios).
+    pub fn mean_of(&self, name_fragment: &str) -> Option<f64> {
+        self.reports
+            .iter()
+            .find(|r| r.name.contains(name_fragment))
+            .map(|r| r.mean)
+    }
+
     /// Annotate the next bench with a per-iteration element count.
     pub fn throughput(&mut self, elems: u64) -> &mut Self {
         self.pending_elems = Some(elems);
@@ -143,6 +161,8 @@ mod tests {
         let mut b = Bencher::new("test", 5, 1);
         b.bench("noop", || 1 + 1);
         b.throughput(1000).bench("tp", || std::hint::black_box(0));
+        assert!(b.mean_of("noop").is_some());
+        assert!(b.mean_of("nonexistent").is_none());
         let r = b.finish();
         assert_eq!(r.len(), 2);
         assert!(r[0].name.contains("noop"));

@@ -3,4 +3,4 @@
 
 pub mod harness;
 
-pub use harness::{BenchReport, Bencher};
+pub use harness::{threads_from_env, BenchReport, Bencher};

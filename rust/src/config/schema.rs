@@ -4,6 +4,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::round::Parallelism;
 use crate::util::json::Json;
 
 /// Which gradient codec a run stacks under LBGM.
@@ -82,6 +83,9 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     pub seed: u64,
     pub codec: CodecKind,
+    /// Round-engine concurrency (`seq` | `auto` | thread count). Results
+    /// are independent of this knob; it only changes wall-clock.
+    pub parallelism: Parallelism,
 }
 
 impl Default for ExperimentConfig {
@@ -103,6 +107,7 @@ impl Default for ExperimentConfig {
             eval_every: 5,
             seed: 7,
             codec: CodecKind::Identity,
+            parallelism: Parallelism::default(),
         }
     }
 }
@@ -170,6 +175,12 @@ impl ExperimentConfig {
         let fraction = getn("codec_fraction").unwrap_or(0.1);
         let rank = getn("codec_rank").unwrap_or(2.0) as usize;
         c.codec = CodecKind::parse(&codec_name, fraction, rank)?;
+        // `"parallelism": "seq" | "auto" | "<n>"` or a plain number.
+        if let Some(v) = gets("parallelism") {
+            c.parallelism = Parallelism::parse(&v)?;
+        } else if let Some(n) = getn("parallelism") {
+            c.parallelism = Parallelism::Threads(n as usize);
+        }
         Ok(c)
     }
 }
@@ -189,8 +200,27 @@ mod tests {
         assert_eq!(c.workers, 10);
         assert_eq!(c.delta, -1.0);
         assert_eq!(c.codec, CodecKind::TopKEf { fraction: 0.25 });
-        // untouched default:
+        // untouched defaults:
         assert_eq!(c.tau, 2);
+        assert_eq!(c.parallelism, Parallelism::Threads(0));
+    }
+
+    #[test]
+    fn parallelism_parsing() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"parallelism":"seq"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.parallelism, Parallelism::Sequential);
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"parallelism":8}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.parallelism, Parallelism::Threads(8));
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"parallelism":"many"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Uplink message schema (paper Alg. 1: `mu_k` is a scalar or a vector).
 
+use std::sync::Arc;
+
 use crate::compress::Cost;
 
 /// Payload of one worker's round update.
@@ -8,7 +10,15 @@ pub enum Payload {
     /// Look-back coefficient only (the LBGM fast path).
     Scalar { rho: f32 },
     /// Full (possibly codec-compressed, dense-decoded) accumulated gradient.
-    Full { grad: Vec<f32> },
+    ///
+    /// Shared (`Arc`) with the sending worker's LBG copy, so a refresh
+    /// round costs one allocation total instead of allocate-and-copy
+    /// (§Perf). The server still materializes its own [`LbgStore`] copy —
+    /// the two stores model independent machines and the coherence
+    /// invariant checks they stay equal.
+    ///
+    /// [`LbgStore`]: crate::lbgm::store::LbgStore
+    Full { grad: Arc<Vec<f32>> },
 }
 
 /// A worker's uplink for one global round.

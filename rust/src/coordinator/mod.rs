@@ -4,9 +4,11 @@
 //! * [`accounting`] — exact floats/bits ledgers (the paper's Figs. 5-8 axes).
 //! * [`sampling`] — client sampling (paper Alg. 3 / App. F.5).
 //! * [`trainer`] — local-compute abstraction: PJRT-backed real models and a
-//!   pure-Rust quadratic mock used by threaded/property tests.
+//!   pure-Rust quadratic mock; `Send` trainers expose per-worker
+//!   [`TrainerShard`]s for the threaded engine.
 //! * [`worker`] / [`server`] — the two halves of Alg. 1.
-//! * [`round`] — the sequential round driver used by figures and examples.
+//! * [`round`] — the round engine used by figures and examples: sequential
+//!   or scoped-thread parallel ([`Parallelism`]), bit-identical either way.
 //! * [`transport`] — channel-based threaded deployment (server thread + one
 //!   thread per worker) exercised with the mock trainer, since PJRT
 //!   executables are not `Send`.
@@ -22,8 +24,8 @@ pub mod worker;
 
 pub use accounting::CommLedger;
 pub use messages::{Payload, WorkerMsg};
-pub use round::{run_fl, FlConfig};
+pub use round::{run_fl, FlConfig, Parallelism};
 pub use sampling::sample_clients;
 pub use server::Server;
-pub use trainer::{LocalTrainer, MockTrainer, PjrtTrainer};
+pub use trainer::{LocalTrainer, MockTrainer, PjrtTrainer, TrainerShard};
 pub use worker::Worker;

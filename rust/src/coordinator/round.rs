@@ -1,10 +1,21 @@
-//! Sequential round driver: the reference deployment used by every figure
+//! Federated round engine: the reference deployment used by every figure
 //! harness and example.
 //!
 //! Each global round t: (1) sample the participating client set, (2) each
 //! sampled worker runs tau local SGD steps via its [`LocalTrainer`] and
 //! turns the accumulated gradient into an uplink message through its LBGM
 //! state machine, (3) the server aggregates, (4) metrics are recorded.
+//!
+//! Step (2) — local SGD, the fused `projection_stats` pass, and codec
+//! compression (paper Alg. 1, "Training at worker k") — is embarrassingly
+//! parallel across workers. With [`Parallelism::Threads`] the engine fans
+//! the sampled workers out over `std::thread::scope` threads against a
+//! shared read-only `&theta` (per-worker [`TrainerShard`]s, see
+//! [`LocalTrainer::shards`]), then aggregates with a deterministic
+//! participant-ordered reduction, so the threaded engine is **bit-identical
+//! to the sequential one for a fixed seed** (asserted by
+//! `tests/engine_parity.rs`). Backends that cannot shard (PJRT executables
+//! are not `Send`) fall back to the sequential path automatically.
 
 use anyhow::Result;
 
@@ -14,10 +25,58 @@ use crate::metrics::{RoundRecord, RunSeries};
 use crate::util::timer::PhaseTimer;
 
 use super::accounting::CommLedger;
+use super::messages::WorkerMsg;
 use super::sampling::sample_clients;
 use super::server::Server;
-use super::trainer::LocalTrainer;
+use super::trainer::{LocalTrainer, TrainerShard};
 use super::worker::Worker;
+
+/// Intra-round concurrency of [`run_fl`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Train sampled workers one at a time on the caller's thread (the
+    /// historical reference engine).
+    Sequential,
+    /// Fan sampled workers out over up to `n` scoped threads per round;
+    /// `Threads(0)` means one thread per available core. Requires the
+    /// trainer to provide [`TrainerShard`]s; falls back to the sequential
+    /// path otherwise. Bit-identical to [`Parallelism::Sequential`] for a
+    /// fixed seed.
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// Resolve to a concrete worker-thread count (always >= 1).
+    pub fn threads(&self) -> usize {
+        match *self {
+            Parallelism::Sequential => 1,
+            Parallelism::Threads(0) => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            Parallelism::Threads(n) => n,
+        }
+    }
+
+    /// Parse a CLI/JSON spelling: `seq`/`sequential`, `auto` (or `0`) for
+    /// one thread per core, or an explicit thread count.
+    pub fn parse(s: &str) -> Result<Parallelism> {
+        match s {
+            "seq" | "sequential" => Ok(Parallelism::Sequential),
+            "auto" => Ok(Parallelism::Threads(0)),
+            n => n
+                .parse::<usize>()
+                .map(Parallelism::Threads)
+                .map_err(|_| anyhow::anyhow!("bad parallelism `{n}` (want seq|auto|<count>)")),
+        }
+    }
+}
+
+impl Default for Parallelism {
+    /// One thread per available core.
+    fn default() -> Self {
+        Parallelism::Threads(0)
+    }
+}
 
 /// Federated-run configuration (one experiment arm).
 #[derive(Clone, Debug)]
@@ -35,6 +94,8 @@ pub struct FlConfig {
     pub seed: u64,
     /// Verify worker/server LBG coherence every round (cheap at test scale).
     pub check_coherence: bool,
+    /// Intra-round engine concurrency; results are independent of it.
+    pub parallelism: Parallelism,
 }
 
 impl Default for FlConfig {
@@ -48,6 +109,7 @@ impl Default for FlConfig {
             eval_every: 5,
             seed: 0,
             check_coherence: false,
+            parallelism: Parallelism::default(),
         }
     }
 }
@@ -60,10 +122,83 @@ pub struct FlOutcome {
     pub final_theta: Vec<f32>,
 }
 
+/// Disjoint mutable references to the elements of `xs` at the strictly
+/// increasing indices `ids` (the sampled participant set is sorted).
+fn select_mut<'a, T>(xs: &'a mut [T], ids: &[usize]) -> Vec<&'a mut T> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut rest: &'a mut [T] = xs;
+    let mut base = 0usize;
+    for &id in ids {
+        debug_assert!(id >= base, "ids must be strictly increasing");
+        let take = std::mem::take(&mut rest);
+        let (head, tail) = take.split_at_mut(id - base + 1);
+        out.push(&mut head[id - base]);
+        rest = tail;
+        base = id + 1;
+    }
+    out
+}
+
+/// Run one round's sampled workers concurrently on scoped threads.
+///
+/// Participants are chunked contiguously over at most `threads` threads
+/// (per-worker cost is uniform, so chunking balances); each thread owns its
+/// participants' `(shard, Worker)` pairs exclusively and reads the global
+/// model through a shared `&theta`. Results come back in participant order
+/// — `(mean local loss, uplink message)` per participant — so downstream
+/// accounting and aggregation are bit-identical to the sequential engine.
+fn parallel_round(
+    shards: &mut [Box<dyn TrainerShard>],
+    workers: &mut [Worker],
+    participants: &[usize],
+    theta: &[f32],
+    round: usize,
+    cfg: &FlConfig,
+    threads: usize,
+) -> Result<Vec<(f64, WorkerMsg)>> {
+    if participants.is_empty() {
+        return Ok(Vec::new());
+    }
+    let policy = cfg.policy;
+    let (tau, eta) = (cfg.tau, cfg.eta);
+    let shard_refs = select_mut(shards, participants);
+    let worker_refs = select_mut(workers, participants);
+    let mut tasks: Vec<(&mut Box<dyn TrainerShard>, &mut Worker)> =
+        shard_refs.into_iter().zip(worker_refs).collect();
+    let mut outs: Vec<Option<Result<(f64, WorkerMsg)>>> =
+        (0..tasks.len()).map(|_| None).collect();
+    let n = threads.min(tasks.len()).max(1);
+    let chunk = (tasks.len() + n - 1) / n;
+    std::thread::scope(|scope| {
+        for (task_chunk, out_chunk) in
+            tasks.chunks_mut(chunk).zip(outs.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for ((shard, worker), out) in
+                    task_chunk.iter_mut().zip(out_chunk.iter_mut())
+                {
+                    *out = Some(shard.local_round(theta, tau, eta).map(
+                        |(loss, grad)| {
+                            (loss, worker.process_round(round, grad, loss, &policy))
+                        },
+                    ));
+                }
+            });
+        }
+    });
+    outs.into_iter()
+        .map(|o| o.expect("every participant slot is filled by its thread"))
+        .collect()
+}
+
 /// Run federated training with LBGM + the given per-worker codec factory.
 ///
 /// `codec` is instantiated once per worker (codecs are stateful: error
-/// feedback residuals).
+/// feedback residuals). `cfg.parallelism` selects the engine; both engines
+/// produce bit-identical results for a fixed seed **given a fresh
+/// trainer** — a threaded run advances detached shards rather than the
+/// trainer's own per-worker streams (see [`LocalTrainer::shards`]), so a
+/// trainer should not be reused across `run_fl` calls.
 pub fn run_fl(
     trainer: &mut dyn LocalTrainer,
     theta0: Vec<f32>,
@@ -73,6 +208,13 @@ pub fn run_fl(
 ) -> Result<FlOutcome> {
     let k = trainer.workers();
     anyhow::ensure!(theta0.len() == trainer.dim(), "theta0 dim mismatch");
+    let threads = cfg.parallelism.threads();
+    // The threaded engine needs detached Send shards; trainers that cannot
+    // provide them (PJRT) run on the sequential path regardless of config.
+    let mut shards = if threads > 1 { trainer.shards() } else { None };
+    if let Some(s) = &shards {
+        anyhow::ensure!(s.len() == k, "trainer produced {} shards for {k} workers", s.len());
+    }
     let mut server = Server::new(theta0, trainer.weights(), cfg.eta);
     let mut workers: Vec<Worker> =
         (0..k).map(|id| Worker::new(id, codec())).collect();
@@ -85,16 +227,37 @@ pub fn run_fl(
         let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
         let mut msgs = Vec::with_capacity(participants.len());
         let mut train_loss_sum = 0f64;
-        for &w in &participants {
-            let (loss, grad) = timers.time("local_sgd", || {
-                trainer.local_round(w, &server.theta, cfg.tau, cfg.eta)
+        if let Some(shards) = shards.as_deref_mut() {
+            // Threaded engine: local SGD + LBGM uplink fan out together;
+            // the fan-out is timed as one "local_sgd" phase.
+            let results = timers.time("local_sgd", || {
+                parallel_round(
+                    shards,
+                    &mut workers,
+                    &participants,
+                    &server.theta,
+                    t,
+                    cfg,
+                    threads,
+                )
             })?;
-            train_loss_sum += loss;
-            let msg = timers.time("lbgm_uplink", || {
-                workers[w].process_round(t, grad, loss, &cfg.policy)
-            });
-            ledger.record(w, msg.cost, msg.is_scalar());
-            msgs.push(msg);
+            for (loss, msg) in results {
+                train_loss_sum += loss;
+                ledger.record(msg.worker, msg.cost, msg.is_scalar());
+                msgs.push(msg);
+            }
+        } else {
+            for &w in &participants {
+                let (loss, grad) = timers.time("local_sgd", || {
+                    trainer.local_round(w, &server.theta, cfg.tau, cfg.eta)
+                })?;
+                train_loss_sum += loss;
+                let msg = timers.time("lbgm_uplink", || {
+                    workers[w].process_round(t, grad, loss, &cfg.policy)
+                });
+                ledger.record(w, msg.cost, msg.is_scalar());
+                msgs.push(msg);
+            }
         }
         timers.time("aggregate", || server.apply(&msgs))?;
 
@@ -210,5 +373,57 @@ mod tests {
         let m = 32u64;
         let expect = out.ledger.full_msgs * m + out.ledger.scalar_msgs;
         assert_eq!(out.ledger.total_floats, expect);
+    }
+
+    #[test]
+    fn parallelism_resolution_and_parsing() {
+        assert_eq!(Parallelism::Sequential.threads(), 1);
+        assert_eq!(Parallelism::Threads(3).threads(), 3);
+        assert!(Parallelism::Threads(0).threads() >= 1);
+        assert_eq!(Parallelism::parse("seq").unwrap(), Parallelism::Sequential);
+        assert_eq!(
+            Parallelism::parse("sequential").unwrap(),
+            Parallelism::Sequential
+        );
+        assert_eq!(Parallelism::parse("auto").unwrap(), Parallelism::Threads(0));
+        assert_eq!(Parallelism::parse("4").unwrap(), Parallelism::Threads(4));
+        assert!(Parallelism::parse("lots").is_err());
+    }
+
+    #[test]
+    fn select_mut_picks_disjoint_elements() {
+        let mut xs = vec![0, 10, 20, 30, 40];
+        let picked = select_mut(&mut xs, &[1, 2, 4]);
+        assert_eq!(
+            picked.iter().map(|x| **x).collect::<Vec<_>>(),
+            vec![10, 20, 40]
+        );
+        for p in picked {
+            *p += 1;
+        }
+        assert_eq!(xs, vec![0, 11, 21, 30, 41]);
+    }
+
+    #[test]
+    fn threaded_engine_matches_sequential_bitwise() {
+        let mk = |par: Parallelism| {
+            let mut t = mock();
+            let cfg = FlConfig {
+                rounds: 25,
+                policy: ThresholdPolicy::fixed(0.4),
+                sample_fraction: 0.75,
+                check_coherence: true,
+                parallelism: par,
+                ..Default::default()
+            };
+            run_fl(&mut t, vec![0.0; 32], &cfg, &|| Box::new(Identity), "e")
+                .unwrap()
+        };
+        let a = mk(Parallelism::Sequential);
+        let b = mk(Parallelism::Threads(3));
+        assert_eq!(a.final_theta, b.final_theta);
+        assert_eq!(a.ledger.total_floats, b.ledger.total_floats);
+        assert_eq!(a.ledger.scalar_msgs, b.ledger.scalar_msgs);
+        assert_eq!(a.ledger.full_msgs, b.ledger.full_msgs);
     }
 }

@@ -4,7 +4,7 @@
 use crate::util::rng::Rng;
 
 /// Deterministically sample `ceil(fraction * k)` distinct client ids for a
-//  given round. `fraction >= 1` means full participation.
+/// given round. `fraction >= 1` means full participation.
 pub fn sample_clients(round: usize, k: usize, fraction: f64, seed: u64) -> Vec<usize> {
     assert!(k > 0);
     if fraction >= 1.0 {

@@ -31,30 +31,59 @@ impl Server {
         Self { theta: theta0, lbgs: LbgStore::new(k), weights, eta }
     }
 
-    /// Apply one aggregation round. `msgs` must contain at most one message
-    /// per worker; the participating set is inferred from it.
+    /// Apply one aggregation round in a single fused pass. `msgs` must
+    /// contain at most one message per worker; the participating set is
+    /// inferred from it.
+    ///
+    /// The round is applied in three batched sweeps — validate + precompute
+    /// renormalized `omega`, one `axpy` per message in message order, then
+    /// the LBG refreshes — so a malformed round errors before mutating any
+    /// state, and the per-message arithmetic order is exactly that of the
+    /// historical interleaved loop (bit-identical updates). Deferring the
+    /// refreshes is sound because no scalar can reference an LBG refreshed
+    /// in the same round (one message per worker).
     pub fn apply(&mut self, msgs: &[WorkerMsg]) -> Result<()> {
         // Renormalize omega over the participating set.
         let wsum: f32 = msgs.iter().map(|m| self.weights[m.worker]).sum();
         anyhow::ensure!(wsum > 0.0, "no participating workers");
         let Server { theta, lbgs, weights, eta } = self;
+        let eta = *eta;
+
+        // Pass 1: validate everything and precompute the renormalized
+        // FedAvg weights, so errors leave the server untouched.
+        let mut omegas = Vec::with_capacity(msgs.len());
         for m in msgs {
-            let omega = weights[m.worker] / wsum;
+            match &m.payload {
+                Payload::Scalar { .. } => anyhow::ensure!(
+                    lbgs.get(m.worker).is_some(),
+                    "scalar LBC from worker {} with no server LBG",
+                    m.worker
+                ),
+                Payload::Full { grad } => {
+                    anyhow::ensure!(grad.len() == theta.len(), "dim mismatch")
+                }
+            }
+            omegas.push(weights[m.worker] / wsum);
+        }
+
+        // Pass 2: one axpy sweep per message, in message order — the
+        // deterministic reduction the sequential and threaded engines share.
+        for (m, &omega) in msgs.iter().zip(&omegas) {
             match &m.payload {
                 Payload::Scalar { rho } => {
-                    let lbg = lbgs.get(m.worker).ok_or_else(|| {
-                        anyhow::anyhow!(
-                            "scalar LBC from worker {} with no server LBG",
-                            m.worker
-                        )
-                    })?;
-                    apply_scalar(theta, lbg, *eta, omega, *rho);
+                    let lbg = lbgs.get(m.worker).expect("validated in pass 1");
+                    apply_scalar(theta, lbg, eta, omega, *rho);
                 }
                 Payload::Full { grad } => {
-                    anyhow::ensure!(grad.len() == theta.len(), "dim mismatch");
-                    apply_full(theta, grad, *eta, omega);
-                    lbgs.refresh(m.worker, grad); // Alg. 1 line 17
+                    apply_full(theta, grad.as_slice(), eta, omega)
                 }
+            }
+        }
+
+        // Pass 3: batch the LBG refreshes (Alg. 1 line 17).
+        for m in msgs {
+            if let Payload::Full { grad } = &m.payload {
+                lbgs.refresh(m.worker, grad.as_slice());
             }
         }
         Ok(())
@@ -63,6 +92,8 @@ impl Server {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::compress::Cost;
     use crate::coordinator::messages::SCALAR_COST;
@@ -72,7 +103,7 @@ mod tests {
         WorkerMsg {
             worker,
             round: 0,
-            payload: Payload::Full { grad },
+            payload: Payload::Full { grad: Arc::new(grad) },
             cost: Cost { floats: m as u64, bits: 32 * m as u64 },
             train_loss: 0.0,
         }

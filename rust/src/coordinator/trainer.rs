@@ -3,10 +3,11 @@
 //! [`PjrtTrainer`] runs the real AOT-compiled grad/eval HLO on the PJRT CPU
 //! client over a synthetic dataset or token corpus — this is the production
 //! path. [`MockTrainer`] is an analytic quadratic federation used by the
-//! threaded transport (PJRT executables are not `Send`) and by the fast
-//! property tests: local loss `F_k = 0.5 ||theta - theta*_k||^2` with
+//! threaded engine/transport (PJRT executables are not `Send`) and by the
+//! fast property tests: local loss `F_k = 0.5 ||theta - theta*_k||^2` with
 //! Gaussian gradient noise satisfies the paper's assumptions A1-A3 exactly,
-//! so convergence-trend tests have ground truth.
+//! so convergence-trend tests have ground truth. `Send` trainers split into
+//! per-worker [`TrainerShard`]s for the threaded round engine.
 
 use std::sync::Arc;
 
@@ -37,6 +38,38 @@ pub trait LocalTrainer {
 
     /// FedAvg weights omega_k (sum to 1).
     fn weights(&self) -> Vec<f32>;
+
+    /// Split this trainer into one detached [`TrainerShard`] per worker for
+    /// the threaded round engine ([`Parallelism::Threads`]). Shard `k` must
+    /// continue worker `k`'s exact training stream (same per-worker RNG
+    /// state, same arithmetic), so a threaded run is bit-identical to a
+    /// sequential run of the same seed.
+    ///
+    /// The default returns `None`: the backend cannot run off the calling
+    /// thread (PJRT executables are not `Send`) and the engine falls back
+    /// to the sequential path.
+    ///
+    /// Note: shards *detach* the per-worker training state — a threaded
+    /// run advances the shards, not the trainer's own streams. Engine
+    /// parity is therefore guaranteed per `run_fl` call on a fresh
+    /// trainer; don't reuse one trainer across runs and expect its
+    /// worker streams to have advanced.
+    ///
+    /// [`Parallelism::Threads`]: super::round::Parallelism::Threads
+    fn shards(&mut self) -> Option<Vec<Box<dyn TrainerShard>>> {
+        None
+    }
+}
+
+/// One worker's slice of a [`LocalTrainer`], detached so it can run on its
+/// own thread against a shared read-only global model (the paper's
+/// "Training at worker k" half of Alg. 1 is embarrassingly parallel across
+/// workers).
+pub trait TrainerShard: Send {
+    /// Run `tau` local SGD steps from `theta` on this worker's shard;
+    /// returns `(mean local train loss, accumulated gradient)`.
+    fn local_round(&mut self, theta: &[f32], tau: usize, eta: f32)
+        -> Result<(f64, Vec<f32>)>;
 }
 
 // ---------------------------------------------------------------------------
@@ -330,6 +363,62 @@ impl MockTrainer {
     }
 }
 
+/// The quadratic-federation local round, shared by [`MockTrainer`] and its
+/// detached per-worker shards so the sequential and threaded engines run
+/// the exact same arithmetic (and hence stay bit-identical per seed).
+fn quadratic_local_round(
+    opt: &[f32],
+    rng: &mut Rng,
+    sigma: f32,
+    theta: &[f32],
+    tau: usize,
+    eta: f32,
+) -> (f64, Vec<f32>) {
+    let dim = theta.len();
+    let mut local: Vec<f32> = theta.to_vec();
+    let mut acc = vec![0f32; dim];
+    let mut loss_sum = 0f64;
+    for _ in 0..tau {
+        let mut loss = 0f64;
+        for i in 0..dim {
+            let g = (local[i] - opt[i]) + sigma * rng.normal() as f32;
+            loss += 0.5 * ((local[i] - opt[i]) as f64).powi(2);
+            acc[i] += g;
+            local[i] -= eta * g;
+        }
+        loss_sum += loss;
+    }
+    (loss_sum / tau as f64, acc)
+}
+
+/// One [`MockTrainer`] worker detached for threaded execution: it owns its
+/// optimum and a clone of the worker's RNG, continuing that worker's exact
+/// stream from where the trainer-side state stood when the shards were
+/// taken.
+struct MockShard {
+    optimum: Vec<f32>,
+    sigma: f32,
+    rng: Rng,
+}
+
+impl TrainerShard for MockShard {
+    fn local_round(
+        &mut self,
+        theta: &[f32],
+        tau: usize,
+        eta: f32,
+    ) -> Result<(f64, Vec<f32>)> {
+        Ok(quadratic_local_round(
+            &self.optimum,
+            &mut self.rng,
+            self.sigma,
+            theta,
+            tau,
+            eta,
+        ))
+    }
+}
+
 impl LocalTrainer for MockTrainer {
     fn local_round(
         &mut self,
@@ -338,22 +427,14 @@ impl LocalTrainer for MockTrainer {
         tau: usize,
         eta: f32,
     ) -> Result<(f64, Vec<f32>)> {
-        let opt = &self.optima[worker];
-        let rng = &mut self.rngs[worker];
-        let mut local: Vec<f32> = theta.to_vec();
-        let mut acc = vec![0f32; self.dim];
-        let mut loss_sum = 0f64;
-        for _ in 0..tau {
-            let mut loss = 0f64;
-            for i in 0..self.dim {
-                let g = (local[i] - opt[i]) + self.sigma * rng.normal() as f32;
-                loss += 0.5 * ((local[i] - opt[i]) as f64).powi(2);
-                acc[i] += g;
-                local[i] -= eta * g;
-            }
-            loss_sum += loss;
-        }
-        Ok((loss_sum / tau as f64, acc))
+        Ok(quadratic_local_round(
+            &self.optima[worker],
+            &mut self.rngs[worker],
+            self.sigma,
+            theta,
+            tau,
+            eta,
+        ))
     }
 
     fn eval(&mut self, theta: &[f32]) -> Result<(f64, f64)> {
@@ -372,11 +453,47 @@ impl LocalTrainer for MockTrainer {
     fn weights(&self) -> Vec<f32> {
         self.weights.clone()
     }
+
+    fn shards(&mut self) -> Option<Vec<Box<dyn TrainerShard>>> {
+        Some(
+            self.optima
+                .iter()
+                .zip(&self.rngs)
+                .map(|(opt, rng)| {
+                    Box::new(MockShard {
+                        optimum: opt.clone(),
+                        sigma: self.sigma,
+                        rng: rng.clone(),
+                    }) as Box<dyn TrainerShard>
+                })
+                .collect(),
+        )
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shards_replay_the_sequential_stream() {
+        // A shard must produce bit-identical rounds to the trainer's own
+        // worker stream — the foundation of the engine-parity guarantee.
+        let dim = 32;
+        let mut a = MockTrainer::new(dim, 3, 0.2, 0.05, 17);
+        let mut b = MockTrainer::new(dim, 3, 0.2, 0.05, 17);
+        let mut shards = b.shards().unwrap();
+        assert_eq!(shards.len(), 3);
+        let theta = vec![0.1f32; dim];
+        for w in 0..3 {
+            for _ in 0..4 {
+                let (la, ga) = a.local_round(w, &theta, 2, 0.05).unwrap();
+                let (lb, gb) = shards[w].local_round(&theta, 2, 0.05).unwrap();
+                assert_eq!(la.to_bits(), lb.to_bits());
+                assert_eq!(ga, gb);
+            }
+        }
+    }
 
     #[test]
     fn mock_grad_points_to_optimum() {

@@ -5,8 +5,11 @@
 //! a networked FL deployment has (broadcast downlink, point-to-point
 //! uplink). Because PJRT executables are not `Send`, the threaded path is
 //! exercised with `Send` trainers (e.g. [`MockTrainer`]); the PJRT path
-//! uses the sequential driver in [`super::round`], which on a 1-core
-//! testbed has identical throughput (DESIGN.md "Offline-build note").
+//! uses the sequential engine in [`super::round`]. This module keeps the
+//! *deployment-shaped* topology (long-lived worker threads + channels); for
+//! raw intra-round throughput use the scoped-thread engine in
+//! [`super::round`] ([`super::round::Parallelism::Threads`]), which shares
+//! its deterministic reduction with the sequential path.
 
 use std::sync::mpsc;
 use std::thread;

@@ -7,6 +7,8 @@
 //! the threshold policy, and (4) uplinks either the scalar LBC or the full
 //! gradient (refreshing its LBG copy).
 
+use std::sync::Arc;
+
 use crate::compress::Compressor;
 use crate::lbgm::policy::{Decision, ThresholdPolicy};
 use crate::lbgm::projection::project_cached;
@@ -17,8 +19,10 @@ use super::messages::{Payload, WorkerMsg, SCALAR_COST};
 /// One federated worker's persistent uplink state.
 pub struct Worker {
     pub id: usize,
-    /// Worker-side LBG copy (None until the first full transmission).
-    lbg: Option<Vec<f32>>,
+    /// Worker-side LBG copy (None until the first full transmission);
+    /// shared refcount-only with the outgoing `Payload::Full` message, so
+    /// refresh rounds never copy the full gradient (§Perf).
+    lbg: Option<Arc<Vec<f32>>>,
     /// Cached `||lbg||^2` — recomputed only on refresh (§Perf: drops the
     /// per-round projection from 3 fused reductions to 2).
     lbg_norm2: f64,
@@ -33,7 +37,7 @@ impl Worker {
     }
 
     pub fn lbg(&self) -> Option<&[f32]> {
-        self.lbg.as_deref()
+        self.lbg.as_ref().map(|l| l.as_slice())
     }
 
     /// Process one round's accumulated gradient into an uplink message.
@@ -47,8 +51,10 @@ impl Worker {
         // Plug-and-play: compress first; LBGM then operates on the codec
         // output (paper Sec. 4 "slight modification").
         let full_cost = self.codec.compress(&mut grad);
-        let proj =
-            project_cached(&grad, self.lbg.as_deref().map(|l| (l, self.lbg_norm2)));
+        let proj = project_cached(
+            &grad,
+            self.lbg.as_ref().map(|l| (l.as_slice(), self.lbg_norm2)),
+        );
         // Bootstrap: without an LBG no scalar can be decoded server-side
         // (Alg. 1 initializes LBGs with the first actual gradients).
         let decision = if self.lbg.is_none() {
@@ -70,7 +76,10 @@ impl Worker {
             Decision::Full => {
                 self.scalar_streak = 0;
                 self.lbg_norm2 = norm2(&grad);
-                self.lbg = Some(grad.clone()); // Alg. 1 line 11
+                // Alg. 1 line 11: the LBG and the uplinked gradient are the
+                // same buffer; the Arc clone is a refcount bump, not a copy.
+                let grad = Arc::new(grad);
+                self.lbg = Some(Arc::clone(&grad));
                 WorkerMsg {
                     worker: self.id,
                     round,

@@ -98,6 +98,7 @@ pub fn run_arm(
         eval_every: cfg.eval_every,
         seed: cfg.seed,
         check_coherence: false,
+        parallelism: cfg.parallelism,
     };
     let codec = cfg.codec;
     // ATOMO decomposes per layer: hand the codec the manifest's segments.

@@ -13,7 +13,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::compress::Identity;
-use crate::coordinator::round::{run_fl, FlConfig};
+use crate::coordinator::round::{run_fl, FlConfig, Parallelism};
 use crate::coordinator::trainer::{LocalTrainer, MockTrainer};
 use crate::lbgm::ThresholdPolicy;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -55,6 +55,9 @@ pub fn run(scale: Scale, out: &Path) -> Result<()> {
             eval_every: 5,
             seed: 1,
             check_coherence: true,
+            // Threaded engine: the K=10 quadratic workers fan out per
+            // round; bit-exactness checks below hold regardless.
+            parallelism: Parallelism::Threads(0),
             ..Default::default()
         };
         let outc = run_fl(&mut t, vec![0.0; dim], &cfg, &|| Box::new(Identity), name)?;

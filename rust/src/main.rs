@@ -10,6 +10,8 @@
 //! Common flags for `train`: --variant --dataset --workers --rounds --tau
 //!   --eta --delta --noniid true|false --codec identity|topk|topk_ef|atomo|
 //!   signsgd --codec-fraction --codec-rank --sample-fraction --seed
+//!   --parallelism seq|auto|<threads>  (round-engine concurrency; results
+//!   are bit-identical across settings)
 
 use std::path::{Path, PathBuf};
 
@@ -17,6 +19,7 @@ use anyhow::Result;
 
 use fedrecycle::analysis::gradient_space::centralized_analysis;
 use fedrecycle::config::{CodecKind, ExperimentConfig};
+use fedrecycle::coordinator::Parallelism;
 use fedrecycle::figures::{self, common::Scale};
 use fedrecycle::metrics::write_csv;
 use fedrecycle::runtime::{Manifest, Runtime};
@@ -73,6 +76,9 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             args.usize_or("codec-rank", 2),
         )?;
     }
+    if let Some(v) = args.get("parallelism") {
+        cfg.parallelism = Parallelism::parse(v)?;
+    }
     Ok(cfg)
 }
 
@@ -110,9 +116,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (rt, manifest) = load_env(args)?;
     let cfg = cfg_from_args(args)?;
     println!(
-        "train: variant={} dataset={} K={} T={} tau={} eta={} delta={} codec={:?}",
+        "train: variant={} dataset={} K={} T={} tau={} eta={} delta={} codec={:?} par={:?}",
         cfg.variant, cfg.dataset, cfg.workers, cfg.rounds, cfg.tau, cfg.eta,
-        cfg.delta, cfg.codec
+        cfg.delta, cfg.codec, cfg.parallelism
     );
     let outc = figures::common::run_arm(&rt, &manifest, &cfg, &cfg.name.clone())?;
     println!(

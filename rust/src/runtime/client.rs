@@ -11,6 +11,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+// The PJRT bindings: the in-tree stub on offline builds (see its module
+// docs). Swap for `use xla;` of the real crate to run on hardware.
+use super::xla;
+
 /// Input element type for a model's (x, y) feeds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {

@@ -1,12 +1,15 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced by
 //! `python/compile/aot.py` and executes them on the CPU PJRT client.
 //!
-//! This is the only place the `xla` crate is touched; the rest of the crate
+//! This is the only place the `xla` API is touched; the rest of the crate
 //! sees typed [`ModelExecutable`]s with the flat-parameter ABI
-//! (`grad_step(theta, x, y) -> (loss, grad)`).
+//! (`grad_step(theta, x, y) -> (loss, grad)`). In the offline build the
+//! `xla` API is provided by the in-tree [`xla`] stub module (see its docs);
+//! linking the real bindings back in is a one-line swap in `client.rs`.
 
 pub mod artifact;
 pub mod client;
+pub mod xla;
 
 pub use artifact::{Manifest, Segment, VariantMeta};
 pub use client::{DType, ModelExecutable, Runtime};

@@ -1,0 +1,131 @@
+//! Regression: the threaded round engine must be **bit-identical** to the
+//! sequential engine for a fixed seed — same `final_theta`, same
+//! `CommLedger` totals (global and per worker), same per-round scalar/full
+//! send counts, same loss curves — across vanilla (`delta < 0`), standalone
+//! LBGM, client sampling, and plug-and-play (top-K codec) configurations.
+//!
+//! This is the contract that lets every harness default to
+//! `Parallelism::Threads(0)`: the knob changes wall-clock only, never
+//! results.
+
+use fedrecycle::compress::{Compressor, Identity, TopK};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, FlOutcome, Parallelism};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::lbgm::ThresholdPolicy;
+
+const DIM: usize = 48;
+const WORKERS: usize = 8;
+
+fn outcome(
+    base: &FlConfig,
+    par: Parallelism,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+) -> FlOutcome {
+    let cfg = FlConfig { parallelism: par, ..base.clone() };
+    let mut t = MockTrainer::new(DIM, WORKERS, 0.25, 0.05, cfg.seed);
+    run_fl(&mut t, vec![0.0; DIM], &cfg, codec, "parity").unwrap()
+}
+
+/// Run `base` sequentially and under several thread counts and assert
+/// everything observable is equal bit-for-bit.
+fn assert_parity(base: FlConfig, codec: &dyn Fn() -> Box<dyn Compressor>) {
+    let seq = outcome(&base, Parallelism::Sequential, codec);
+    for par in [
+        Parallelism::Threads(2),
+        Parallelism::Threads(4),
+        Parallelism::Threads(0), // auto: one thread per core
+    ] {
+        let thr = outcome(&base, par, codec);
+        assert_eq!(
+            seq.final_theta, thr.final_theta,
+            "final_theta diverged under {par:?}"
+        );
+        assert_eq!(seq.ledger.total_floats, thr.ledger.total_floats);
+        assert_eq!(seq.ledger.total_bits, thr.ledger.total_bits);
+        assert_eq!(seq.ledger.scalar_msgs, thr.ledger.scalar_msgs);
+        assert_eq!(seq.ledger.full_msgs, thr.ledger.full_msgs);
+        assert!(thr.ledger.consistent());
+        for w in 0..WORKERS {
+            assert_eq!(
+                seq.ledger.worker_floats(w),
+                thr.ledger.worker_floats(w),
+                "worker {w} floats diverged under {par:?}"
+            );
+            assert_eq!(seq.ledger.worker_bits(w), thr.ledger.worker_bits(w));
+        }
+        assert_eq!(seq.series.rounds.len(), thr.series.rounds.len());
+        for (a, b) in seq.series.rounds.iter().zip(&thr.series.rounds) {
+            assert_eq!(a.full_sends, b.full_sends, "round {}", a.round);
+            assert_eq!(a.scalar_sends, b.scalar_sends, "round {}", a.round);
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "train loss diverged at round {}",
+                a.round
+            );
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+            assert_eq!(a.test_metric.to_bits(), b.test_metric.to_bits());
+            assert_eq!(a.floats_up, b.floats_up);
+            assert_eq!(a.bits_up, b.bits_up);
+        }
+    }
+}
+
+fn base_cfg(delta: f64, seed: u64) -> FlConfig {
+    FlConfig {
+        rounds: 30,
+        tau: 2,
+        eta: 0.05,
+        policy: ThresholdPolicy::fixed(delta),
+        sample_fraction: 1.0,
+        eval_every: 5,
+        seed,
+        check_coherence: true,
+        parallelism: Parallelism::Sequential,
+    }
+}
+
+#[test]
+fn parity_vanilla() {
+    // delta < 0: every round full-sends (exact FedAvg recovery path).
+    assert_parity(base_cfg(-1.0, 11), &|| Box::new(Identity));
+}
+
+#[test]
+fn parity_lbgm() {
+    let cfg = base_cfg(0.3, 12);
+    assert_parity(cfg, &|| Box::new(Identity));
+}
+
+#[test]
+fn parity_sampled() {
+    let cfg = FlConfig { sample_fraction: 0.5, ..base_cfg(0.3, 13) };
+    assert_parity(cfg, &|| Box::new(Identity));
+}
+
+#[test]
+fn parity_plug_and_play_topk() {
+    let cfg = base_cfg(0.5, 14);
+    assert_parity(cfg, &|| Box::new(TopK::new(0.25)));
+}
+
+#[test]
+fn parity_adaptive_policy() {
+    // The Theorem-1 adaptive policy exercises grad_norm2 in the decision.
+    let cfg = FlConfig {
+        policy: ThresholdPolicy::AdaptiveDelta2 { delta2: 0.05, tau: 2 },
+        ..base_cfg(0.0, 15)
+    };
+    assert_parity(cfg, &|| Box::new(Identity));
+}
+
+#[test]
+fn lbgm_actually_engages_in_parity_runs() {
+    // Guard against the parity suite silently degenerating to all-full
+    // sends (which would make parity trivially true).
+    let out = outcome(&base_cfg(0.3, 12), Parallelism::Threads(2), &|| {
+        Box::new(Identity)
+    });
+    assert!(out.ledger.scalar_msgs > 0, "no scalar uplinks at delta=0.3");
+    assert!(out.ledger.full_msgs > 0);
+}

@@ -3,7 +3,7 @@
 //! on pure-Rust substrates and the analytic mock federation).
 
 use fedrecycle::compress::{Compressor, ErrorFeedback, Identity, SignSgd, TopK};
-use fedrecycle::coordinator::round::{run_fl, FlConfig};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, Parallelism};
 use fedrecycle::coordinator::trainer::{LocalTrainer, MockTrainer};
 use fedrecycle::coordinator::{CommLedger, Worker};
 use fedrecycle::lbgm::{project, ThresholdPolicy};
@@ -181,6 +181,8 @@ fn prop_fl_coherence_and_accounting_under_any_schedule() {
             eval_every: 4,
             seed: s.seed,
             check_coherence: true, // asserts worker/server LBG equality
+            // Exercise the threaded engine under random schedules too.
+            parallelism: Parallelism::Threads(2),
         };
         let out = run_fl(&mut trainer, vec![0.0; dim], &cfg, &|| Box::new(Identity), "p")
             .map_err(|e| format!("run failed: {e}"))?;
@@ -218,6 +220,7 @@ fn prop_vanilla_recovery_equals_fedavg() {
             eval_every: 100,
             seed: s.seed,
             check_coherence: false,
+            parallelism: Parallelism::Sequential,
         };
         let mut t1 = MockTrainer::new(dim, s.workers, 0.2, 0.05, s.seed);
         let out = run_fl(&mut t1, vec![0.0; dim], &cfg, &|| Box::new(Identity), "l")
