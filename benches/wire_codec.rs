@@ -1,0 +1,60 @@
+//! Wire-codec micro-benchmarks: encode/decode throughput of the frames on
+//! the networked hot path. The Round broadcast and the full-gradient
+//! Update dominate a deployment's bytes (a 1M-param model is ~4 MB per
+//! frame); the scalar Update is the LBGM fast path the protocol exists to
+//! exploit (fixed ~70 bytes regardless of model size).
+
+use std::sync::Arc;
+
+use fedrecycle::bench::Bencher;
+use fedrecycle::compress::Cost;
+use fedrecycle::coordinator::messages::{Payload, WorkerMsg};
+use fedrecycle::net::Frame;
+use fedrecycle::util::rng::Rng;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env("wire_codec");
+    const M: usize = 1 << 20;
+
+    let round = Frame::Round { t: 7, theta: randv(M, 1) };
+    b.throughput(M as u64).bench("encode_round_1M", || round.to_bytes());
+    let round_bytes = round.to_bytes();
+    b.throughput(M as u64)
+        .bench("decode_round_1M", || Frame::from_bytes(&round_bytes).unwrap());
+
+    let update = Frame::Update(WorkerMsg {
+        worker: 3,
+        round: 7,
+        payload: Payload::Full { grad: Arc::new(randv(M, 2)) },
+        cost: Cost { floats: M as u64, bits: 32 * M as u64 },
+        train_loss: 0.5,
+    });
+    b.throughput(M as u64).bench("encode_update_full_1M", || update.to_bytes());
+    let update_bytes = update.to_bytes();
+    b.throughput(M as u64)
+        .bench("decode_update_full_1M", || Frame::from_bytes(&update_bytes).unwrap());
+
+    let scalar = Frame::Update(WorkerMsg {
+        worker: 3,
+        round: 7,
+        payload: Payload::Scalar { rho: 0.875 },
+        cost: Cost { floats: 1, bits: 32 },
+        train_loss: 0.5,
+    });
+    b.bench("encode_update_scalar", || scalar.to_bytes());
+    let scalar_bytes = scalar.to_bytes();
+    b.bench("decode_update_scalar", || Frame::from_bytes(&scalar_bytes).unwrap());
+
+    println!(
+        "frame sizes: round(1M)={}B, update_full(1M)={}B, update_scalar={}B",
+        round.wire_bytes(),
+        update.wire_bytes(),
+        scalar.wire_bytes()
+    );
+    b.finish();
+}

@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         // The channel transport below owns its threading (one long-lived
         // thread per worker); the engine knob is not consulted there.
         parallelism: Parallelism::Sequential,
+        ..Default::default()
     };
     let (series, ledger, _) = run_threaded_fl(
         |_| MockTrainer::new(dim, k, 0.3, 0.02, 21),

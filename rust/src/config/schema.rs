@@ -4,7 +4,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::round::Parallelism;
+use crate::coordinator::round::{FlConfig, Parallelism, Transport};
+use crate::lbgm::ThresholdPolicy;
 use crate::util::json::Json;
 
 /// Which gradient codec a run stacks under LBGM.
@@ -86,6 +87,9 @@ pub struct ExperimentConfig {
     /// Round-engine concurrency (`seq` | `auto` | thread count). Results
     /// are independent of this knob; it only changes wall-clock.
     pub parallelism: Parallelism,
+    /// Deployment transport (`memory` | `threads` | `tcp`). Results are
+    /// independent of this knob too; it selects which engine runs.
+    pub transport: Transport,
 }
 
 impl Default for ExperimentConfig {
@@ -108,6 +112,7 @@ impl Default for ExperimentConfig {
             seed: 7,
             codec: CodecKind::Identity,
             parallelism: Parallelism::default(),
+            transport: Transport::default(),
         }
     }
 }
@@ -181,7 +186,28 @@ impl ExperimentConfig {
         } else if let Some(n) = getn("parallelism") {
             c.parallelism = Parallelism::Threads(n as usize);
         }
+        if let Some(v) = gets("transport") {
+            c.transport = Transport::parse(&v)?;
+        }
         Ok(c)
+    }
+
+    /// Lower this experiment arm to the round engine's [`FlConfig`] (the
+    /// one place the mapping lives; used by the figure harnesses and every
+    /// launcher subcommand).
+    pub fn fl_config(&self) -> FlConfig {
+        FlConfig {
+            rounds: self.rounds,
+            tau: self.tau,
+            eta: self.eta as f32,
+            policy: ThresholdPolicy::fixed(self.delta),
+            sample_fraction: self.sample_fraction,
+            eval_every: self.eval_every,
+            seed: self.seed,
+            check_coherence: false,
+            parallelism: self.parallelism,
+            transport: self.transport,
+        }
     }
 }
 
@@ -203,6 +229,35 @@ mod tests {
         // untouched defaults:
         assert_eq!(c.tau, 2);
         assert_eq!(c.parallelism, Parallelism::Threads(0));
+        assert_eq!(c.transport, Transport::Memory);
+    }
+
+    #[test]
+    fn transport_parsing_from_json() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"transport":"tcp"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.transport, Transport::Tcp);
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"transport":"smoke-signals"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fl_config_lowering_preserves_fields() {
+        let c = ExperimentConfig {
+            rounds: 9,
+            delta: 0.4,
+            transport: Transport::Threads,
+            ..Default::default()
+        };
+        let fl = c.fl_config();
+        assert_eq!(fl.rounds, 9);
+        assert_eq!(fl.transport, Transport::Threads);
+        assert_eq!(fl.tau, c.tau);
+        assert!(!fl.check_coherence);
     }
 
     #[test]

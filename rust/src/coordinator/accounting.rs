@@ -3,18 +3,43 @@
 //! The paper's headline evaluation axes are *counters*, not estimates:
 //! "total floating point parameters transferred" (Figs. 5-7) and "bits
 //! transferred" (Fig. 8), cumulative over rounds and summed over workers.
+//!
+//! Two layers of accounting coexist:
+//!
+//! * **Modeled** floats/bits — the paper's axes, recorded by every engine
+//!   for both directions: uplink ([`CommLedger::record`]) and the theta
+//!   broadcast downlink ([`CommLedger::record_down`]).
+//! * **Measured** wire bytes — exact framed bytes that crossed a real
+//!   [`Link`], recorded only by the `net` deployment
+//!   ([`CommLedger::record_wire_up`]/[`record_wire_down`]); zero for the
+//!   in-memory transports.
+//!
+//! [`Link`]: crate::net::Link
+//! [`record_wire_down`]: CommLedger::record_wire_down
 
 use crate::compress::Cost;
 
-/// Cumulative uplink accounting, total and per worker.
+/// Cumulative communication accounting, total and per worker.
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
+    /// Cumulative uplink floats (the paper's Fig. 5-7 y-axis).
     pub total_floats: u64,
+    /// Cumulative uplink bits (exact, for SignSGD-style codecs).
     pub total_bits: u64,
     per_worker_floats: Vec<u64>,
     per_worker_bits: Vec<u64>,
     pub scalar_msgs: u64,
     pub full_msgs: u64,
+    /// Cumulative modeled downlink floats (theta broadcasts).
+    pub down_floats: u64,
+    /// Cumulative modeled downlink bits.
+    pub down_bits: u64,
+    per_worker_down_floats: Vec<u64>,
+    per_worker_down_bits: Vec<u64>,
+    /// Measured framed bytes received over real links (0 in-memory).
+    pub wire_up_bytes: u64,
+    /// Measured framed bytes sent over real links (0 in-memory).
+    pub wire_down_bytes: u64,
 }
 
 impl CommLedger {
@@ -22,10 +47,13 @@ impl CommLedger {
         Self {
             per_worker_floats: vec![0; workers],
             per_worker_bits: vec![0; workers],
+            per_worker_down_floats: vec![0; workers],
+            per_worker_down_bits: vec![0; workers],
             ..Default::default()
         }
     }
 
+    /// Record one worker's uplink message.
     pub fn record(&mut self, worker: usize, cost: Cost, is_scalar: bool) {
         self.total_floats += cost.floats;
         self.total_bits += cost.bits;
@@ -38,12 +66,47 @@ impl CommLedger {
         }
     }
 
+    /// Record one downlink broadcast to `worker` (the theta transmission;
+    /// cost is [`dense_cost`] of the model dimension).
+    ///
+    /// [`dense_cost`]: crate::compress::dense_cost
+    pub fn record_down(&mut self, worker: usize, cost: Cost) {
+        self.down_floats += cost.floats;
+        self.down_bits += cost.bits;
+        self.per_worker_down_floats[worker] += cost.floats;
+        self.per_worker_down_bits[worker] += cost.bits;
+    }
+
+    /// Record measured wire bytes of one received (uplink) frame.
+    pub fn record_wire_up(&mut self, bytes: u64) {
+        self.wire_up_bytes += bytes;
+    }
+
+    /// Record measured wire bytes of one sent (downlink) frame.
+    pub fn record_wire_down(&mut self, bytes: u64) {
+        self.wire_down_bytes += bytes;
+    }
+
     pub fn worker_floats(&self, worker: usize) -> u64 {
         self.per_worker_floats[worker]
     }
 
     pub fn worker_bits(&self, worker: usize) -> u64 {
         self.per_worker_bits[worker]
+    }
+
+    pub fn worker_down_floats(&self, worker: usize) -> u64 {
+        self.per_worker_down_floats[worker]
+    }
+
+    /// Total modeled downlink bits (the theta broadcasts).
+    pub fn total_down_bits(&self) -> u64 {
+        self.down_bits
+    }
+
+    /// Total modeled downlink floats.
+    pub fn total_down_floats(&self) -> u64 {
+        self.down_floats
     }
 
     /// Mean floats per participating worker (the per-worker y-axis of Fig. 5).
@@ -56,10 +119,13 @@ impl CommLedger {
         }
     }
 
-    /// Internal-consistency check: totals equal the per-worker sums.
+    /// Internal-consistency check: totals equal the per-worker sums, in
+    /// both directions.
     pub fn consistent(&self) -> bool {
         self.per_worker_floats.iter().sum::<u64>() == self.total_floats
             && self.per_worker_bits.iter().sum::<u64>() == self.total_bits
+            && self.per_worker_down_floats.iter().sum::<u64>() == self.down_floats
+            && self.per_worker_down_bits.iter().sum::<u64>() == self.down_bits
     }
 }
 
@@ -82,5 +148,31 @@ mod tests {
         assert!(l.consistent());
         // 2 active workers, 12 floats total.
         assert!((l.mean_worker_floats() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downlink_accounting_is_tracked_separately() {
+        let mut l = CommLedger::new(2);
+        l.record_down(0, Cost { floats: 10, bits: 320 });
+        l.record_down(1, Cost { floats: 10, bits: 320 });
+        l.record_down(0, Cost { floats: 10, bits: 320 });
+        assert_eq!(l.total_down_floats(), 30);
+        assert_eq!(l.total_down_bits(), 960);
+        assert_eq!(l.worker_down_floats(0), 20);
+        assert_eq!(l.worker_down_floats(1), 10);
+        // Uplink untouched.
+        assert_eq!(l.total_floats, 0);
+        assert!(l.consistent());
+    }
+
+    #[test]
+    fn wire_bytes_accumulate() {
+        let mut l = CommLedger::new(1);
+        l.record_wire_down(56);
+        l.record_wire_up(41);
+        l.record_wire_up(41);
+        assert_eq!(l.wire_down_bytes, 56);
+        assert_eq!(l.wire_up_bytes, 82);
+        assert!(l.consistent());
     }
 }

@@ -12,6 +12,10 @@
 //! * [`transport`] — channel-based threaded deployment (server thread + one
 //!   thread per worker) exercised with the mock trainer, since PJRT
 //!   executables are not `Send`.
+//!
+//! The networked deployment of the same protocol (wire codec, TCP links,
+//! serve/worker processes) lives one layer up in [`crate::net`]; the
+//! [`round::Transport`] knob selects which deployment a run uses.
 
 pub mod accounting;
 pub mod messages;
@@ -24,7 +28,7 @@ pub mod worker;
 
 pub use accounting::CommLedger;
 pub use messages::{Payload, WorkerMsg};
-pub use round::{run_fl, FlConfig, Parallelism};
+pub use round::{run_fl, FlConfig, Parallelism, Transport};
 pub use sampling::sample_clients;
 pub use server::Server;
 pub use trainer::{LocalTrainer, MockTrainer, PjrtTrainer, TrainerShard};

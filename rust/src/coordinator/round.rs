@@ -19,7 +19,7 @@
 
 use anyhow::Result;
 
-use crate::compress::Compressor;
+use crate::compress::{dense_cost, Compressor};
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
 use crate::util::timer::PhaseTimer;
@@ -78,6 +78,42 @@ impl Default for Parallelism {
     }
 }
 
+/// Deployment transport the launcher dispatches a run onto. The in-memory
+/// engines themselves ignore this knob; it selects *which* engine runs:
+///
+/// * `Memory` — [`run_fl`]: in-process function calls (sequential or
+///   scoped-thread parallel per [`Parallelism`]).
+/// * `Threads` — [`run_threaded_fl`]: one long-lived OS thread per worker
+///   wired by channels.
+/// * `Tcp` — [`run_tcp_fl`]: a real client/server deployment over framed
+///   loopback sockets with the exact wire codec.
+///
+/// All three produce bit-identical results for a fixed seed.
+///
+/// [`run_threaded_fl`]: super::transport::run_threaded_fl
+/// [`run_tcp_fl`]: crate::net::run_tcp_fl
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Transport {
+    #[default]
+    Memory,
+    Threads,
+    Tcp,
+}
+
+impl Transport {
+    /// Parse a CLI/JSON spelling: `memory`/`mem`, `threads`, or `tcp`.
+    pub fn parse(s: &str) -> Result<Transport> {
+        match s {
+            "memory" | "mem" => Ok(Transport::Memory),
+            "threads" => Ok(Transport::Threads),
+            "tcp" => Ok(Transport::Tcp),
+            other => {
+                anyhow::bail!("bad transport `{other}` (want memory|threads|tcp)")
+            }
+        }
+    }
+}
+
 /// Federated-run configuration (one experiment arm).
 #[derive(Clone, Debug)]
 pub struct FlConfig {
@@ -96,6 +132,9 @@ pub struct FlConfig {
     pub check_coherence: bool,
     /// Intra-round engine concurrency; results are independent of it.
     pub parallelism: Parallelism,
+    /// Deployment transport the launcher dispatches on; results are
+    /// independent of it too (asserted by `tests/net_loopback.rs`).
+    pub transport: Transport,
 }
 
 impl Default for FlConfig {
@@ -110,8 +149,33 @@ impl Default for FlConfig {
             seed: 0,
             check_coherence: false,
             parallelism: Parallelism::default(),
+            transport: Transport::default(),
         }
     }
+}
+
+/// Fill a round record's test columns: evaluate on the eval cadence (every
+/// `eval_every` rounds and always on the last round), otherwise carry the
+/// previous round's values forward. Shared by every engine — sequential,
+/// threaded-channel, and networked — so the cadence semantics cannot
+/// drift apart.
+pub(crate) fn eval_or_carry(
+    rec: &mut RoundRecord,
+    series: &RunSeries,
+    t: usize,
+    rounds: usize,
+    eval_every: usize,
+    eval: &mut dyn FnMut() -> Result<(f64, f64)>,
+) -> Result<()> {
+    if t % eval_every == 0 || t + 1 == rounds {
+        let (tl, tm) = eval()?;
+        rec.test_loss = tl;
+        rec.test_metric = tm;
+    } else if let Some(prev) = series.last() {
+        rec.test_loss = prev.test_loss;
+        rec.test_metric = prev.test_metric;
+    }
+    Ok(())
 }
 
 /// Outcome of a full federated run.
@@ -222,9 +286,14 @@ pub fn run_fl(
     let mut ledger = CommLedger::new(k);
     let mut timers = PhaseTimer::new();
 
+    let dim = server.theta.len();
     for t in 0..cfg.rounds {
         let start = std::time::Instant::now();
         let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        // The theta broadcast is a real transmission: account the downlink.
+        for &w in &participants {
+            ledger.record_down(w, dense_cost(dim));
+        }
         let mut msgs = Vec::with_capacity(participants.len());
         let mut train_loss_sum = 0f64;
         if let Some(shards) = shards.as_deref_mut() {
@@ -277,19 +346,16 @@ pub fn run_fl(
             train_loss: train_loss_sum / participants.len() as f64,
             floats_up: ledger.total_floats,
             bits_up: ledger.total_bits,
+            floats_down: ledger.down_floats,
+            bits_down: ledger.down_bits,
             full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
             scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
             wall_secs: start.elapsed().as_secs_f64(),
             ..Default::default()
         };
-        if t % cfg.eval_every == 0 || t + 1 == cfg.rounds {
-            let (tl, tm) = timers.time("eval", || trainer.eval(&server.theta))?;
-            rec.test_loss = tl;
-            rec.test_metric = tm;
-        } else if let Some(prev) = series.last() {
-            rec.test_loss = prev.test_loss;
-            rec.test_metric = prev.test_metric;
-        }
+        eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
+            timers.time("eval", || trainer.eval(&server.theta))
+        })?;
         series.push(rec);
     }
 
@@ -388,6 +454,29 @@ mod tests {
         assert_eq!(Parallelism::parse("auto").unwrap(), Parallelism::Threads(0));
         assert_eq!(Parallelism::parse("4").unwrap(), Parallelism::Threads(4));
         assert!(Parallelism::parse("lots").is_err());
+    }
+
+    #[test]
+    fn transport_parsing() {
+        assert_eq!(Transport::parse("memory").unwrap(), Transport::Memory);
+        assert_eq!(Transport::parse("mem").unwrap(), Transport::Memory);
+        assert_eq!(Transport::parse("threads").unwrap(), Transport::Threads);
+        assert_eq!(Transport::parse("tcp").unwrap(), Transport::Tcp);
+        assert!(Transport::parse("carrier-pigeon").is_err());
+        assert_eq!(Transport::default(), Transport::Memory);
+    }
+
+    #[test]
+    fn downlink_broadcast_is_accounted() {
+        let out = run(ThresholdPolicy::fixed(0.3), 4);
+        // One dim-float broadcast per uplink message (full participation).
+        let broadcasts = out.ledger.full_msgs + out.ledger.scalar_msgs;
+        assert_eq!(out.ledger.total_down_floats(), broadcasts * 32);
+        assert_eq!(out.ledger.total_down_bits(), broadcasts * 32 * 32);
+        // In-memory engines measure no wire bytes.
+        assert_eq!(out.ledger.wire_up_bytes, 0);
+        assert_eq!(out.ledger.wire_down_bytes, 0);
+        assert!(out.ledger.consistent());
     }
 
     #[test]

@@ -12,17 +12,18 @@
 //! its deterministic reduction with the sequential path.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::Result;
 
-use crate::compress::Compressor;
+use crate::compress::{dense_cost, Compressor};
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
 
 use super::accounting::CommLedger;
 use super::messages::WorkerMsg;
-use super::round::FlConfig;
+use super::round::{eval_or_carry, FlConfig};
 use super::sampling::sample_clients;
 use super::server::Server;
 use super::trainer::LocalTrainer;
@@ -30,8 +31,11 @@ use super::worker::Worker;
 
 /// Downlink command to a worker thread.
 enum Downlink {
-    /// Run round `t` from the broadcast global model.
-    Round { t: usize, theta: Vec<f32> },
+    /// Run round `t` from the broadcast global model. The model is
+    /// `Arc`-shared: a broadcast costs one clone of theta total instead of
+    /// one per participant (§Perf; mirrors the Arc-shared LBG in
+    /// [`super::messages::Payload::Full`]).
+    Round { t: usize, theta: Arc<Vec<f32>> },
     Shutdown,
 }
 
@@ -71,7 +75,8 @@ where
                 match cmd {
                     Downlink::Shutdown => break,
                     Downlink::Round { t, theta } => {
-                        let (loss, grad) = trainer.local_round(id, &theta, tau, eta)?;
+                        let (loss, grad) =
+                            trainer.local_round(id, theta.as_slice(), tau, eta)?;
                         let msg = worker.process_round(t, grad, loss, &policy);
                         if up.send(msg).is_err() {
                             break;
@@ -88,12 +93,16 @@ where
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
 
+    let dim = server.theta.len();
     for t in 0..cfg.rounds {
         let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        // One clone of theta per round, refcount-bumped per participant.
+        let theta = Arc::new(server.theta.clone());
         for &w in &participants {
             down_txs[w]
-                .send(Downlink::Round { t, theta: server.theta.clone() })
+                .send(Downlink::Round { t, theta: Arc::clone(&theta) })
                 .map_err(|_| anyhow::anyhow!("worker {w} hung up"))?;
+            ledger.record_down(w, dense_cost(dim));
         }
         let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(participants.len());
         for _ in 0..participants.len() {
@@ -112,18 +121,15 @@ where
             train_loss,
             floats_up: ledger.total_floats,
             bits_up: ledger.total_bits,
+            floats_down: ledger.down_floats,
+            bits_down: ledger.down_bits,
             full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
             scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
             ..Default::default()
         };
-        if t % cfg.eval_every == 0 || t + 1 == cfg.rounds {
-            let (tl, tm) = eval_trainer.eval(&server.theta)?;
-            rec.test_loss = tl;
-            rec.test_metric = tm;
-        } else if let Some(prev) = series.last() {
-            rec.test_loss = prev.test_loss;
-            rec.test_metric = prev.test_metric;
-        }
+        eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
+            eval_trainer.eval(&server.theta)
+        })?;
         series.push(rec);
     }
 
@@ -176,6 +182,8 @@ mod tests {
         assert_eq!(series.rounds.len(), 30);
         assert!(ledger.consistent());
         assert!(ledger.scalar_msgs > 0, "LBGM path never taken");
+        // Downlink: every worker received dim floats per round.
+        assert_eq!(ledger.total_down_floats(), (30 * 4 * 16) as u64);
         let l0 = series.rounds[0].train_loss;
         let ln = series.last().unwrap().train_loss;
         assert!(ln < 0.5 * l0, "no convergence {l0} -> {ln}");

@@ -6,10 +6,9 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::round::{run_fl, FlConfig, FlOutcome};
+use crate::coordinator::round::{run_fl, FlOutcome};
 use crate::coordinator::PjrtTrainer;
 use crate::data::{partition, Dataset, MarkovCorpus, Scheme, SynthSpec};
-use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{write_csv, write_json, RunSeries};
 use crate::runtime::{Manifest, Runtime};
 
@@ -89,17 +88,7 @@ pub fn run_arm(
     crate::config::validate(cfg)?;
     let mut trainer = make_trainer(rt, manifest, cfg)?;
     let theta0 = manifest.variant(&cfg.variant)?.load_init()?;
-    let fl = FlConfig {
-        rounds: cfg.rounds,
-        tau: cfg.tau,
-        eta: cfg.eta as f32,
-        policy: ThresholdPolicy::fixed(cfg.delta),
-        sample_fraction: cfg.sample_fraction,
-        eval_every: cfg.eval_every,
-        seed: cfg.seed,
-        check_coherence: false,
-        parallelism: cfg.parallelism,
-    };
+    let fl = cfg.fl_config();
     let codec = cfg.codec;
     // ATOMO decomposes per layer: hand the codec the manifest's segments.
     let segments: Vec<(usize, usize)> = manifest

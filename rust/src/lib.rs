@@ -17,6 +17,19 @@
 //!
 //! Python never runs at request time: after `make artifacts`, the
 //! `fedrecycle` binary is self-contained.
+//!
+//! # Networked deployment
+//!
+//! The [`net`] layer turns the simulation into a real client/server
+//! system: a versioned, checksummed binary wire codec ([`net::wire`]),
+//! framed TCP links plus a deterministic latency/bandwidth/loss shaper
+//! ([`net::link`]), and a round-driving server / worker-client pair
+//! ([`net::server`], [`net::client`]) exposed as the `fedrecycle serve`
+//! and `fedrecycle worker` subcommands (and `train --transport tcp` for a
+//! one-process loopback). A networked run is bit-identical to the
+//! sequential engine per seed, and its ledgers additionally report
+//! *measured* uplink/downlink wire bytes next to the paper's modeled
+//! float/bit counters.
 
 pub mod analysis;
 pub mod bench;
@@ -28,6 +41,7 @@ pub mod figures;
 pub mod lbgm;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod testkit;
 pub mod util;

@@ -6,22 +6,36 @@
 //!   analyze --variant V --dataset D   centralized gradient-space analysis
 //!   figure <id|all> [--scale smoke|default|full] [--out results]
 //!       ids: fig1 fig2 fig3 fig5 fig6 fig7 fig8 sampling theory
+//!   serve  --listen ADDR [..]     networked aggregation server (TCP)
+//!   worker --connect ADDR --id K  one networked worker process
 //!
 //! Common flags for `train`: --variant --dataset --workers --rounds --tau
 //!   --eta --delta --noniid true|false --codec identity|topk|topk_ef|atomo|
 //!   signsgd --codec-fraction --codec-rank --sample-fraction --seed
 //!   --parallelism seq|auto|<threads>  (round-engine concurrency; results
 //!   are bit-identical across settings)
+//!   --transport memory|threads|tcp  (deployment; results are bit-identical
+//!   across settings — threads/tcp run the analytic mock federation in one
+//!   process, since PJRT executables cannot cross threads)
+//!
+//! `serve`/`worker` run the mock federation over real sockets; the two
+//! sides must agree on --workers --dim --spread --sigma --seed, and every
+//! worker must use the same --codec (the handshake checks id/dim/protocol;
+//! federation shape and codec are the operator's contract, like the seed).
 
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use fedrecycle::analysis::gradient_space::centralized_analysis;
 use fedrecycle::config::{CodecKind, ExperimentConfig};
-use fedrecycle::coordinator::Parallelism;
+use fedrecycle::coordinator::transport::run_threaded_fl;
+use fedrecycle::coordinator::{LocalTrainer, MockTrainer, Parallelism, Transport};
 use fedrecycle::figures::{self, common::Scale};
-use fedrecycle::metrics::write_csv;
+use fedrecycle::metrics::{write_csv, RunSeries};
+use fedrecycle::net::{accept_workers, connect_worker, run_server_rounds, run_tcp_fl};
 use fedrecycle::runtime::{Manifest, Runtime};
 use fedrecycle::util::cli::Args;
 
@@ -79,7 +93,28 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("parallelism") {
         cfg.parallelism = Parallelism::parse(v)?;
     }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = Transport::parse(v)?;
+    }
     Ok(cfg)
+}
+
+/// Shape of the analytic mock federation used by the deployment paths
+/// (`train --transport threads|tcp`, `serve`, `worker`). Server and worker
+/// processes must agree on these (and on --workers/--seed) for the run to
+/// be well-defined.
+struct MockSpec {
+    dim: usize,
+    spread: f32,
+    sigma: f32,
+}
+
+fn mock_spec(args: &Args) -> MockSpec {
+    MockSpec {
+        dim: args.usize_or("dim", 64),
+        spread: args.f64_or("spread", 0.3) as f32,
+        sigma: args.f64_or("sigma", 0.02) as f32,
+    }
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -88,9 +123,13 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("analyze") => cmd_analyze(args),
         Some("figure") => cmd_figure(args),
+        Some("serve") => cmd_serve(args),
+        Some("worker") => cmd_worker(args),
         _ => {
-            println!("usage: fedrecycle <info|train|analyze|figure> [flags]");
+            println!("usage: fedrecycle <info|train|analyze|figure|serve|worker> [flags]");
             println!("       fedrecycle figure all --scale default --out results");
+            println!("       fedrecycle serve --listen 127.0.0.1:7878 --workers 4 --dim 64");
+            println!("       fedrecycle worker --connect 127.0.0.1:7878 --id 0 --workers 4 --dim 64");
             Ok(())
         }
     }
@@ -113,8 +152,11 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let (rt, manifest) = load_env(args)?;
     let cfg = cfg_from_args(args)?;
+    if cfg.transport != Transport::Memory {
+        return cmd_train_deployment(args, cfg);
+    }
+    let (rt, manifest) = load_env(args)?;
     println!(
         "train: variant={} dataset={} K={} T={} tau={} eta={} delta={} codec={:?} par={:?}",
         cfg.variant, cfg.dataset, cfg.workers, cfg.rounds, cfg.tau, cfg.eta,
@@ -132,6 +174,141 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[outc.series])?;
     }
+    Ok(())
+}
+
+/// `train --transport threads|tcp`: run the experiment arm as a deployment.
+/// Single-process deployments need `Send` trainers and PJRT executables are
+/// not `Send`, so these paths run the analytic mock federation (same
+/// protocol, same ledgers); real-model networked runs use one `serve` and
+/// K `worker` *processes* instead.
+fn cmd_train_deployment(args: &Args, cfg: ExperimentConfig) -> Result<()> {
+    // Guard the *resolved* config (flags or --config JSON): a non-default
+    // variant/dataset cannot be honored on an in-process deployment.
+    let defaults = ExperimentConfig::default();
+    anyhow::ensure!(
+        cfg.variant == defaults.variant && cfg.dataset == defaults.dataset,
+        "--transport {:?} runs the analytic mock federation in-process (PJRT \
+         executables are not Send), so variant/dataset `{}`/`{}` cannot be \
+         honored here; use the memory transport, or a `serve` + `worker` \
+         process deployment for real models",
+        cfg.transport,
+        cfg.variant,
+        cfg.dataset
+    );
+    fedrecycle::config::validate(&cfg)?;
+    let spec = mock_spec(args);
+    let k = cfg.workers;
+    let fl = cfg.fl_config();
+    let mut eval = MockTrainer::new(spec.dim, k, spec.spread, 0.0, cfg.seed);
+    let weights = eval.weights();
+    let codec = cfg.codec;
+    let make =
+        |_id: usize| MockTrainer::new(spec.dim, k, spec.spread, spec.sigma, cfg.seed);
+    println!(
+        "train[{:?}]: mock federation K={k} dim={} T={} tau={} eta={} delta={}",
+        cfg.transport, spec.dim, cfg.rounds, cfg.tau, cfg.eta, cfg.delta
+    );
+    let (series, ledger, _theta) = match cfg.transport {
+        Transport::Threads => run_threaded_fl(
+            make,
+            &mut eval,
+            vec![0.0; spec.dim],
+            weights,
+            &fl,
+            &move || codec.build(),
+            &cfg.name,
+        )?,
+        Transport::Tcp => run_tcp_fl(
+            make,
+            &mut eval,
+            vec![0.0; spec.dim],
+            weights,
+            &fl,
+            &move || codec.build(),
+            &cfg.name,
+        )?,
+        Transport::Memory => unreachable!("dispatched above"),
+    };
+    print_deployment_summary(&series, &ledger);
+    if let Some(out) = args.get("out") {
+        write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[series])?;
+    }
+    Ok(())
+}
+
+fn print_deployment_summary(
+    series: &RunSeries,
+    ledger: &fedrecycle::coordinator::CommLedger,
+) {
+    println!(
+        "done: final metric {:.4} | up {} floats / {} bits | down {} floats / {} bits",
+        series.final_metric(),
+        ledger.total_floats,
+        ledger.total_bits,
+        ledger.total_down_floats(),
+        ledger.total_down_bits(),
+    );
+    println!(
+        "wire: {} bytes up, {} bytes down (measured; 0 = in-memory) | scalar msgs {:.1}%",
+        ledger.wire_up_bytes,
+        ledger.wire_down_bytes,
+        100.0 * series.scalar_fraction()
+    );
+}
+
+/// `serve`: the networked aggregation server. Binds `--listen`, accepts
+/// `--workers` connections, handshakes, and drives the full run.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    fedrecycle::config::validate(&cfg)?;
+    let spec = mock_spec(args);
+    let k = cfg.workers;
+    let fl = cfg.fl_config();
+    let listen = args.get_or("listen", "127.0.0.1:7878");
+    let listener = TcpListener::bind(&listen)?;
+    println!(
+        "serve: listening on {} for K={k} workers (dim={}, T={}, delta={})",
+        listener.local_addr()?,
+        spec.dim,
+        cfg.rounds,
+        cfg.delta
+    );
+    let mut eval = MockTrainer::new(spec.dim, k, spec.spread, 0.0, cfg.seed);
+    let weights = eval.weights();
+    let handshake = Duration::from_secs(args.u64_or("handshake-timeout", 120));
+    let deadline = Duration::from_secs(args.u64_or("round-deadline", 600));
+    let mut links = accept_workers(&listener, k, spec.dim, &fl, handshake)?;
+    println!("all {k} workers connected; training");
+    let (series, ledger, _theta) = run_server_rounds(
+        &mut links,
+        &mut eval,
+        vec![0.0; spec.dim],
+        weights,
+        &fl,
+        deadline,
+        &cfg.name,
+    )?;
+    print_deployment_summary(&series, &ledger);
+    if let Some(out) = args.get("out") {
+        write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[series])?;
+    }
+    Ok(())
+}
+
+/// `worker`: one networked worker process. Connects to `--connect`, serves
+/// rounds until the server shuts the session down.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let spec = mock_spec(args);
+    let id = args.usize_or("id", 0);
+    let addr = args.get_or("connect", "127.0.0.1:7878");
+    anyhow::ensure!(id < cfg.workers, "--id {id} out of range (K={})", cfg.workers);
+    let mut trainer =
+        MockTrainer::new(spec.dim, cfg.workers, spec.spread, spec.sigma, cfg.seed);
+    println!("worker {id}: connecting to {addr}");
+    let served = connect_worker(addr.as_str(), id, &mut trainer, cfg.codec.build())?;
+    println!("worker {id}: served {served} rounds, shut down cleanly");
     Ok(())
 }
 

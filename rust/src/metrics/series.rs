@@ -12,6 +12,15 @@ pub struct RoundRecord {
     pub floats_up: u64,
     /// Cumulative uplink bits (exact, for SignSGD-style codecs).
     pub bits_up: u64,
+    /// Cumulative modeled downlink floats (theta broadcasts).
+    pub floats_down: u64,
+    /// Cumulative modeled downlink bits.
+    pub bits_down: u64,
+    /// Cumulative measured wire bytes received by the server (0 for
+    /// in-memory transports; exact framed bytes for the net deployment).
+    pub wire_up_bytes: u64,
+    /// Cumulative measured wire bytes sent by the server.
+    pub wire_down_bytes: u64,
     /// Workers that sent a full gradient (vs a scalar LBC) this round.
     pub full_sends: usize,
     pub scalar_sends: usize,
@@ -48,6 +57,19 @@ impl RunSeries {
 
     pub fn total_bits(&self) -> u64 {
         self.last().map(|r| r.bits_up).unwrap_or(0)
+    }
+
+    /// Total modeled downlink floats (theta broadcasts) over the run.
+    pub fn total_floats_down(&self) -> u64 {
+        self.last().map(|r| r.floats_down).unwrap_or(0)
+    }
+
+    /// Total measured wire bytes, `(uplink, downlink)`; zero for runs on
+    /// the in-memory transports.
+    pub fn total_wire_bytes(&self) -> (u64, u64) {
+        self.last()
+            .map(|r| (r.wire_up_bytes, r.wire_down_bytes))
+            .unwrap_or((0, 0))
     }
 
     /// Best (max) test metric over the run.

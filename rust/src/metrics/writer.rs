@@ -12,12 +12,12 @@ pub fn write_csv(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
         fs::create_dir_all(dir)?;
     }
     let mut out = String::from(
-        "run,round,train_loss,test_loss,test_metric,floats_up,bits_up,full_sends,scalar_sends,wall_secs\n",
+        "run,round,train_loss,test_loss,test_metric,floats_up,bits_up,floats_down,bits_down,wire_up_bytes,wire_down_bytes,full_sends,scalar_sends,wall_secs\n",
     );
     for run in runs {
         for r in &run.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{:.4}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.4}\n",
                 run.name,
                 r.round,
                 r.train_loss,
@@ -25,6 +25,10 @@ pub fn write_csv(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
                 r.test_metric,
                 r.floats_up,
                 r.bits_up,
+                r.floats_down,
+                r.bits_down,
+                r.wire_up_bytes,
+                r.wire_down_bytes,
                 r.full_sends,
                 r.scalar_sends,
                 r.wall_secs
@@ -48,6 +52,9 @@ pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
             ("best_metric", num(r.best_metric())),
             ("total_floats", num(r.total_floats() as f64)),
             ("total_bits", num(r.total_bits() as f64)),
+            ("total_floats_down", num(r.total_floats_down() as f64)),
+            ("wire_up_bytes", num(r.total_wire_bytes().0 as f64)),
+            ("wire_down_bytes", num(r.total_wire_bytes().1 as f64)),
             ("scalar_fraction", num(r.scalar_fraction())),
         ])
     });

@@ -1,0 +1,138 @@
+//! `net::client` — the worker-side protocol loop.
+//!
+//! A worker process owns one [`Link`] to the server, its local trainer
+//! (any [`LocalTrainer`] — PJRT works here because the client runs on its
+//! own process/thread), and its LBGM uplink state machine ([`Worker`]).
+//! The session hyperparameters (tau, eta, delta) arrive in the `Welcome`
+//! frame, so worker processes need no config file beyond the federation
+//! shape used to build their trainer.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::Compressor;
+use crate::coordinator::trainer::LocalTrainer;
+use crate::coordinator::worker::Worker;
+use crate::lbgm::ThresholdPolicy;
+
+use super::link::{Link, TcpLink};
+use super::wire::{self, Frame};
+
+/// Handshake and serve rounds over an established link until the server
+/// sends `Shutdown`. Returns the number of rounds served.
+///
+/// `trainer.local_round(id, ..)` is driven with this worker's shard only;
+/// the trainer's other worker streams are never touched, which is what
+/// keeps a distributed run bit-identical to the sequential engine.
+pub fn run_worker(
+    link: &mut dyn Link,
+    id: usize,
+    trainer: &mut dyn LocalTrainer,
+    codec: Box<dyn Compressor>,
+) -> Result<usize> {
+    let dim = trainer.dim();
+    // Until the server proves itself with a valid Welcome, cap what we are
+    // willing to allocate for a frame (mirror of the server-side guard).
+    link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
+    link.send(&Frame::Hello { worker: id as u32, dim: dim as u64 })?;
+    let reply = link.recv()?;
+    let tag = reply.tag();
+    let Frame::Welcome { dim: sdim, tau, eta, delta } = reply else {
+        bail!("expected Welcome, got tag {tag}");
+    };
+    ensure!(
+        sdim == dim as u64,
+        "server runs dim {sdim}, this worker has {dim}"
+    );
+    // Largest legal downlink: a Round frame carrying dim params.
+    link.set_recv_limit(64 + 4 * dim);
+    let policy = ThresholdPolicy::fixed(delta);
+    let mut worker = Worker::new(id, codec);
+    let mut served = 0usize;
+    loop {
+        let frame = link.recv()?;
+        match frame {
+            Frame::Shutdown => break,
+            Frame::Round { t, theta } => {
+                let (loss, grad) =
+                    trainer.local_round(id, &theta, tau as usize, eta)?;
+                let msg = worker.process_round(t as usize, grad, loss, &policy);
+                link.send(&Frame::Update(msg))?;
+                served += 1;
+            }
+            other => bail!("unexpected frame tag {} from server", other.tag()),
+        }
+    }
+    Ok(served)
+}
+
+/// Connect to a serving `fedrecycle` instance over TCP and run the worker
+/// loop to completion.
+pub fn connect_worker<A: ToSocketAddrs>(
+    addr: A,
+    id: usize,
+    trainer: &mut dyn LocalTrainer,
+    codec: Box<dyn Compressor>,
+) -> Result<usize> {
+    let stream = TcpStream::connect(addr)?;
+    let mut link = TcpLink::new(stream)?;
+    run_worker(&mut link, id, trainer, codec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Identity;
+    use crate::coordinator::messages::Payload;
+    use crate::coordinator::trainer::MockTrainer;
+    use crate::net::link::MemLink;
+
+    /// Script a two-round server by hand and check the client's protocol
+    /// behavior frame by frame.
+    #[test]
+    fn worker_serves_rounds_until_shutdown() {
+        let dim = 8;
+        let (mut srv, mut wrk) = MemLink::pair();
+        let client = std::thread::spawn(move || {
+            let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 5);
+            run_worker(&mut wrk, 1, &mut trainer, Box::new(Identity)).unwrap()
+        });
+
+        match srv.recv().unwrap() {
+            Frame::Hello { worker, dim: d } => {
+                assert_eq!(worker, 1);
+                assert_eq!(d, dim as u64);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        srv.send(&Frame::Welcome { dim: dim as u64, tau: 2, eta: 0.05, delta: 0.5 })
+            .unwrap();
+
+        srv.send(&Frame::Round { t: 0, theta: vec![0.0; dim] }).unwrap();
+        let Frame::Update(m0) = srv.recv().unwrap() else { panic!("no update") };
+        assert_eq!(m0.worker, 1);
+        assert_eq!(m0.round, 0);
+        // Bootstrap round: always a full gradient.
+        assert!(matches!(m0.payload, Payload::Full { .. }));
+
+        srv.send(&Frame::Round { t: 1, theta: vec![0.1; dim] }).unwrap();
+        let Frame::Update(m1) = srv.recv().unwrap() else { panic!("no update") };
+        assert_eq!(m1.round, 1);
+
+        srv.send(&Frame::Shutdown).unwrap();
+        assert_eq!(client.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn worker_rejects_dim_mismatch() {
+        let (mut srv, mut wrk) = MemLink::pair();
+        let client = std::thread::spawn(move || {
+            let mut trainer = MockTrainer::new(8, 2, 0.2, 0.0, 5);
+            run_worker(&mut wrk, 0, &mut trainer, Box::new(Identity))
+        });
+        let _ = srv.recv().unwrap();
+        srv.send(&Frame::Welcome { dim: 99, tau: 1, eta: 0.05, delta: 0.5 }).unwrap();
+        assert!(client.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,395 @@
+//! `net::link` — pluggable point-to-point frame transports.
+//!
+//! A [`Link`] is one ordered, reliable duplex connection between the server
+//! and a single worker (star topology: the server holds K links, each
+//! worker holds one). Three implementations:
+//!
+//! * [`TcpLink`] — a framed `std::net::TcpStream`; the production path.
+//! * [`MemLink`] — an in-process byte-channel pair. Frames still go
+//!   through the full wire codec (encode → bytes → decode), so loopback
+//!   tests exercise the exact on-the-wire representation without sockets.
+//! * [`SimLink`] — wraps any link with a *deterministic* latency /
+//!   bandwidth / loss model ([`LinkProfile`]) for scenario diversity:
+//!   stragglers, slow uplinks, lossy last-mile connections. Loss is
+//!   modeled as retransmission delay (the transport stays reliable, like
+//!   TCP), so a simulated run's *results* are bit-identical to an
+//!   unshaped run — only wall-clock changes.
+//!
+//! A `recv` that hits its timeout returns an error and may leave a
+//! stream-oriented link mid-frame; the round engine treats a missed
+//! deadline as fatal for the run, so links are never reused after a
+//! timeout fires.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::wire::{self, Frame};
+
+/// One reliable, ordered duplex frame connection.
+pub trait Link: Send {
+    /// Encode and transmit one frame; returns the exact wire bytes sent.
+    fn send(&mut self, frame: &Frame) -> Result<usize> {
+        self.send_raw(&frame.to_bytes())
+    }
+
+    /// Transmit a pre-encoded frame buffer (produced by
+    /// [`Frame::to_bytes`]); returns the exact wire bytes sent. Lets a
+    /// broadcast encode the frame once and fan the same buffer out to
+    /// many links instead of re-serializing per recipient.
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<usize>;
+
+    /// Block until the next frame arrives (or the receive timeout fires).
+    fn recv(&mut self) -> Result<Frame>;
+
+    /// Bound subsequent [`Link::recv`] calls; `None` blocks indefinitely.
+    /// The timeout must be nonzero.
+    fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()>;
+
+    /// Cap the payload size subsequent [`Link::recv`] calls accept. The
+    /// frame header's length field is attacker-controlled until the
+    /// checksum verifies, so receivers tighten this to
+    /// [`wire::HANDSHAKE_MAX_PAYLOAD`] before a handshake and to the
+    /// session's expected frame size after it, preventing a hostile peer
+    /// from forcing large allocations.
+    ///
+    /// [`wire::HANDSHAKE_MAX_PAYLOAD`]: super::wire::HANDSHAKE_MAX_PAYLOAD
+    fn set_recv_limit(&mut self, max_payload: usize);
+}
+
+// ---------------------------------------------------------------------------
+// TCP.
+// ---------------------------------------------------------------------------
+
+/// A framed TCP connection (one per worker; `TCP_NODELAY` set, since frames
+/// are latency-sensitive round boundaries).
+pub struct TcpLink {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    recv_limit: usize,
+}
+
+impl TcpLink {
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().context("cloning TCP stream")?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+            recv_limit: wire::MAX_PAYLOAD,
+        })
+    }
+}
+
+impl Link for TcpLink {
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<usize> {
+        self.writer.write_all(bytes).context("TCP send")?;
+        Ok(bytes.len())
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        Frame::read_from_limit(&mut self.reader, self.recv_limit)
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(timeout)
+            .context("setting TCP read timeout")
+    }
+
+    fn set_recv_limit(&mut self, max_payload: usize) {
+        self.recv_limit = max_payload;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-process memory channel.
+// ---------------------------------------------------------------------------
+
+/// In-process link: frames are encoded to bytes and carried over `mpsc`
+/// channels, so the codec is exercised end to end without sockets.
+pub struct MemLink {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    timeout: Option<Duration>,
+    recv_limit: usize,
+}
+
+impl MemLink {
+    /// A connected pair (a, b): bytes sent on `a` arrive at `b` and vice
+    /// versa.
+    pub fn pair() -> (MemLink, MemLink) {
+        let (atx, brx) = mpsc::channel();
+        let (btx, arx) = mpsc::channel();
+        (
+            MemLink { tx: atx, rx: arx, timeout: None, recv_limit: wire::MAX_PAYLOAD },
+            MemLink { tx: btx, rx: brx, timeout: None, recv_limit: wire::MAX_PAYLOAD },
+        )
+    }
+}
+
+impl Link for MemLink {
+    /// Overridden to move the freshly encoded buffer into the channel
+    /// without the extra copy the `send_raw` default would incur.
+    fn send(&mut self, frame: &Frame) -> Result<usize> {
+        let bytes = frame.to_bytes();
+        let n = bytes.len();
+        self.tx
+            .send(bytes)
+            .map_err(|_| anyhow::anyhow!("peer hung up"))?;
+        Ok(n)
+    }
+
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<usize> {
+        self.tx
+            .send(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("peer hung up"))?;
+        Ok(bytes.len())
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        let bytes = match self.timeout {
+            Some(t) => self
+                .rx
+                .recv_timeout(t)
+                .map_err(|e| anyhow::anyhow!("mem recv: {e}"))?,
+            None => self
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("peer hung up"))?,
+        };
+        // The sender already allocated, but enforce the limit anyway so
+        // MemLink deployments exercise the exact TCP-side protocol rules.
+        anyhow::ensure!(
+            bytes.len() <= wire::HEADER_LEN + self.recv_limit + wire::CHECKSUM_LEN,
+            "frame of {} bytes exceeds receive limit {}",
+            bytes.len(),
+            self.recv_limit
+        );
+        Frame::from_bytes(&bytes)
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.timeout = timeout;
+        Ok(())
+    }
+
+    fn set_recv_limit(&mut self, max_payload: usize) {
+        self.recv_limit = max_payload;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic network shaping.
+// ---------------------------------------------------------------------------
+
+/// Deterministic latency / bandwidth / loss model for [`SimLink`].
+#[derive(Clone, Copy, Debug)]
+pub struct LinkProfile {
+    /// Fixed per-frame propagation delay.
+    pub latency: Duration,
+    /// Serialization rate; `0` means infinite bandwidth.
+    pub bytes_per_sec: u64,
+    /// Probability a frame transmission is lost and must be retransmitted
+    /// (delay-only: delivery is still reliable, like TCP). In `[0, 1)`.
+    pub loss: f64,
+    /// Seed of the link's private loss stream (vary per worker for
+    /// heterogeneous links).
+    pub seed: u64,
+}
+
+impl LinkProfile {
+    /// No shaping at all (zero added delay).
+    pub fn ideal() -> Self {
+        Self { latency: Duration::ZERO, bytes_per_sec: 0, loss: 0.0, seed: 0 }
+    }
+
+    /// Total deterministic delay for transmitting `wire_bytes` once
+    /// (latency + serialization, plus retransmissions drawn from `rng`).
+    pub fn delay_for(&self, wire_bytes: usize, rng: &mut Rng) -> Duration {
+        let transfer = if self.bytes_per_sec == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(wire_bytes as f64 / self.bytes_per_sec as f64)
+        };
+        let once = self.latency + transfer;
+        let mut total = once;
+        // Retransmission model, capped so a pathological loss rate cannot
+        // stall a run forever.
+        let mut retries = 0;
+        while retries < 16 && rng.next_f64() < self.loss {
+            total += once;
+            retries += 1;
+        }
+        total
+    }
+}
+
+/// Wraps any [`Link`] with a [`LinkProfile`]: each `send` sleeps the
+/// profile's deterministic delay before forwarding the frame. Results are
+/// unchanged; only timing is.
+pub struct SimLink {
+    inner: Box<dyn Link>,
+    profile: LinkProfile,
+    rng: Rng,
+}
+
+impl SimLink {
+    pub fn wrap(inner: Box<dyn Link>, profile: LinkProfile) -> Self {
+        let rng = Rng::new(profile.seed);
+        Self { inner, profile, rng }
+    }
+}
+
+impl Link for SimLink {
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<usize> {
+        let delay = self.profile.delay_for(bytes.len(), &mut self.rng);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        self.inner.send_raw(bytes)
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        self.inner.recv()
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.inner.set_recv_timeout(timeout)
+    }
+
+    fn set_recv_limit(&mut self, max_payload: usize) {
+        self.inner.set_recv_limit(max_payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn mem_link_round_trips_frames() {
+        let (mut a, mut b) = MemLink::pair();
+        let sent = a.send(&Frame::Hello { worker: 7, dim: 3 }).unwrap();
+        let got = b.recv().unwrap();
+        assert_eq!(sent, got.wire_bytes());
+        match got {
+            Frame::Hello { worker, dim } => {
+                assert_eq!(worker, 7);
+                assert_eq!(dim, 3);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // Duplex: the other direction works too.
+        b.send(&Frame::Shutdown).unwrap();
+        assert!(matches!(a.recv().unwrap(), Frame::Shutdown));
+        // Pre-encoded broadcast path delivers identical frames.
+        let encoded = Frame::Round { t: 2, theta: vec![1.0] }.to_bytes();
+        let sent = a.send_raw(&encoded).unwrap();
+        assert_eq!(sent, encoded.len());
+        assert!(matches!(b.recv().unwrap(), Frame::Round { t: 2, .. }));
+    }
+
+    #[test]
+    fn mem_link_recv_limit_enforced() {
+        let (mut a, mut b) = MemLink::pair();
+        b.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
+        // Round payload 16 + 4*64 = 272 bytes > handshake cap.
+        a.send(&Frame::Round { t: 0, theta: vec![0.0; 64] }).unwrap();
+        assert!(b.recv().is_err());
+        b.set_recv_limit(wire::MAX_PAYLOAD);
+        a.send(&Frame::Round { t: 1, theta: vec![0.0; 64] }).unwrap();
+        assert!(b.recv().is_ok());
+    }
+
+    #[test]
+    fn mem_link_timeout_fires() {
+        let (mut a, _b) = MemLink::pair();
+        a.set_recv_timeout(Some(Duration::from_millis(10))).unwrap();
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn mem_link_hangup_is_error() {
+        let (mut a, b) = MemLink::pair();
+        drop(b);
+        assert!(a.send(&Frame::Shutdown).is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_link_round_trips_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut link = TcpLink::new(TcpStream::connect(addr).unwrap()).unwrap();
+            link.send(&Frame::Round { t: 4, theta: vec![1.5, -2.5] }).unwrap();
+            match link.recv().unwrap() {
+                Frame::Shutdown => {}
+                other => panic!("wrong frame {other:?}"),
+            }
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut link = TcpLink::new(stream).unwrap();
+        link.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        match link.recv().unwrap() {
+            Frame::Round { t, theta } => {
+                assert_eq!(t, 4);
+                assert_eq!(theta, vec![1.5, -2.5]);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        link.send(&Frame::Shutdown).unwrap();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn profile_delay_is_deterministic_and_monotone_in_loss() {
+        let p = LinkProfile {
+            latency: Duration::from_micros(100),
+            bytes_per_sec: 1_000_000,
+            loss: 0.5,
+            seed: 3,
+        };
+        let a: Vec<Duration> =
+            (0..20).scan(Rng::new(p.seed), |r, _| Some(p.delay_for(1000, r))).collect();
+        let b: Vec<Duration> =
+            (0..20).scan(Rng::new(p.seed), |r, _| Some(p.delay_for(1000, r))).collect();
+        assert_eq!(a, b, "loss stream not deterministic");
+        // Every delay includes at least latency + transfer.
+        let base = Duration::from_micros(100) + Duration::from_millis(1);
+        assert!(a.iter().all(|d| *d >= base));
+        // Ideal profile adds nothing.
+        let mut r = Rng::new(0);
+        assert_eq!(LinkProfile::ideal().delay_for(1 << 20, &mut r), Duration::ZERO);
+    }
+
+    #[test]
+    fn sim_link_shapes_but_preserves_frames() {
+        let (a, mut b) = MemLink::pair();
+        let mut sim = SimLink::wrap(
+            Box::new(a),
+            LinkProfile {
+                latency: Duration::from_micros(10),
+                bytes_per_sec: 0,
+                loss: 0.9,
+                seed: 1,
+            },
+        );
+        sim.send(&Frame::Round { t: 1, theta: vec![0.25; 16] }).unwrap();
+        match b.recv().unwrap() {
+            Frame::Round { t, theta } => {
+                assert_eq!(t, 1);
+                assert_eq!(theta, vec![0.25; 16]);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+}

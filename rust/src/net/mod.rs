@@ -1,0 +1,176 @@
+//! Layer-4 networked deployment: the FL protocol over real links.
+//!
+//! Everything below this module moves updates through in-process function
+//! calls or channels; `net` turns the same protocol into a client/server
+//! deployment with an exact on-the-wire encoding:
+//!
+//! * [`wire`] — versioned, length-prefixed, checksummed binary codec
+//!   (frame layout documented there). `Frame::wire_bytes()` is exact, so
+//!   the [`CommLedger`] reports *measured* uplink and downlink bytes.
+//! * [`link`] — the pluggable [`Link`] transport: [`TcpLink`] (framed
+//!   `TcpStream`), [`MemLink`] (in-process bytes, same codec), and
+//!   [`SimLink`] + [`LinkProfile`] (deterministic latency/bandwidth/loss
+//!   shaping for straggler and slow-uplink scenarios).
+//! * [`server`] — accepts K workers, handshakes, drives rounds with a
+//!   per-round deadline, aggregates in deterministic participant order.
+//! * [`client`] — the worker loop: handshake, train on `Round`, uplink an
+//!   `Update`, exit on `Shutdown`.
+//!
+//! # Networked quickstart
+//!
+//! ```sh
+//! # Terminal 1 — the aggregation server (K=4 mock workers, dim 64):
+//! fedrecycle serve --listen 127.0.0.1:7878 --workers 4 --dim 64 \
+//!     --rounds 30 --delta 0.2 --seed 7
+//! # Terminals 2..5 — one worker process each (same shape + seed!):
+//! fedrecycle worker --connect 127.0.0.1:7878 --id 0 --workers 4 --dim 64 --seed 7
+//! ```
+//!
+//! A loopback deployment is bit-identical to the sequential engine for
+//! the same seed (`tests/net_loopback.rs`); [`run_tcp_fl`] runs that
+//! whole topology in one process for tests, examples, and
+//! `train --transport tcp`.
+//!
+//! [`CommLedger`]: crate::coordinator::CommLedger
+
+pub mod client;
+pub mod link;
+pub mod server;
+pub mod wire;
+
+pub use client::{connect_worker, run_worker};
+pub use link::{Link, LinkProfile, MemLink, SimLink, TcpLink};
+pub use server::{accept_workers, handshake_one, run_server_rounds};
+pub use wire::{Decode, Encode, Frame};
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::compress::Compressor;
+use crate::coordinator::accounting::CommLedger;
+use crate::coordinator::round::FlConfig;
+use crate::coordinator::trainer::LocalTrainer;
+use crate::metrics::RunSeries;
+
+/// How long the in-process deployments wait for each worker's `Hello`.
+pub const DEFAULT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Per-round uplink-collection deadline of the in-process deployments.
+pub const DEFAULT_ROUND_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Run a full federated deployment over TCP loopback in one process: a
+/// listener on an ephemeral 127.0.0.1 port, one OS thread per worker
+/// connecting through [`connect_worker`], and the round-driving server on
+/// the calling thread. Bit-identical to [`run_fl`] per seed.
+///
+/// `make_trainer(k)` builds worker k's local trainer (must be `Send` to
+/// cross onto its thread); `eval_trainer` evaluates server-side. On a
+/// server-side error the worker threads are abandoned (they hold no
+/// resources beyond the dying sockets).
+///
+/// [`run_fl`]: crate::coordinator::round::run_fl
+pub fn run_tcp_fl<T, F>(
+    make_trainer: F,
+    eval_trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    weights: Vec<f32>,
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+    name: &str,
+) -> Result<(RunSeries, CommLedger, Vec<f32>)>
+where
+    T: LocalTrainer + Send + 'static,
+    F: Fn(usize) -> T,
+{
+    let k = weights.len();
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let mut handles = Vec::with_capacity(k);
+    for id in 0..k {
+        let mut trainer = make_trainer(id);
+        let codec = codec();
+        handles.push(std::thread::spawn(move || -> Result<usize> {
+            connect_worker(addr, id, &mut trainer, codec)
+        }));
+    }
+    let dim = theta0.len();
+    let mut links =
+        accept_workers(&listener, k, dim, cfg, DEFAULT_HANDSHAKE_TIMEOUT)?;
+    let out = run_server_rounds(
+        &mut links,
+        eval_trainer,
+        theta0,
+        weights,
+        cfg,
+        DEFAULT_ROUND_DEADLINE,
+        name,
+    )?;
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    Ok(out)
+}
+
+/// Like [`run_tcp_fl`] but over in-process [`MemLink`]s (no sockets), with
+/// an optional [`LinkProfile`] shaping every worker's uplink (each worker
+/// gets an independent deterministic loss stream, `profile.seed ^ id`).
+/// Frames still pass through the full wire codec, so results remain
+/// bit-identical to the sequential engine — shaping changes wall-clock
+/// only.
+pub fn run_mem_fl<T, F>(
+    make_trainer: F,
+    eval_trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    weights: Vec<f32>,
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+    name: &str,
+    profile: Option<LinkProfile>,
+) -> Result<(RunSeries, CommLedger, Vec<f32>)>
+where
+    T: LocalTrainer + Send + 'static,
+    F: Fn(usize) -> T,
+{
+    let k = weights.len();
+    let mut server_links: Vec<Box<dyn Link>> = Vec::with_capacity(k);
+    let mut handles = Vec::with_capacity(k);
+    for id in 0..k {
+        let (srv_side, wrk_side) = MemLink::pair();
+        let mut wlink: Box<dyn Link> = match profile {
+            Some(p) => Box::new(SimLink::wrap(
+                Box::new(wrk_side),
+                LinkProfile { seed: p.seed ^ id as u64, ..p },
+            )),
+            None => Box::new(wrk_side),
+        };
+        let mut trainer = make_trainer(id);
+        let codec = codec();
+        handles.push(std::thread::spawn(move || -> Result<usize> {
+            run_worker(wlink.as_mut(), id, &mut trainer, codec)
+        }));
+        server_links.push(Box::new(srv_side));
+    }
+    let dim = theta0.len();
+    for (i, link) in server_links.iter_mut().enumerate() {
+        link.set_recv_timeout(Some(DEFAULT_HANDSHAKE_TIMEOUT))?;
+        let w = handshake_one(link.as_mut(), k, dim, cfg)?;
+        anyhow::ensure!(w == i, "link {i} handshook as worker {w}");
+        link.set_recv_timeout(None)?;
+    }
+    let out = run_server_rounds(
+        &mut server_links,
+        eval_trainer,
+        theta0,
+        weights,
+        cfg,
+        DEFAULT_ROUND_DEADLINE,
+        name,
+    )?;
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    Ok(out)
+}

@@ -1,0 +1,287 @@
+//! `net::server` — the round-driving aggregation server.
+//!
+//! Accepts K workers (one [`Link`] each, star topology), handshakes them
+//! (protocol version, worker id, model dimension — the server replies with
+//! the session hyperparameters), then drives global rounds: broadcast
+//! `Round{t, theta}` to the sampled participants, collect their uplinks
+//! under a per-round deadline, and aggregate with the *same* deterministic
+//! participant-ordered reduction as the in-memory engines — so a
+//! TCP-loopback run is bit-identical to [`run_fl`] per seed (asserted by
+//! `tests/net_loopback.rs`).
+//!
+//! The ledger records both the modeled counters (floats/bits, the paper's
+//! axes) and the *measured* wire bytes of every round-protocol frame that
+//! crossed a link (theta broadcasts and uplink updates; handshake and
+//! shutdown control frames are excluded, so the ledger totals match the
+//! final round record's CSV columns exactly).
+//!
+//! [`run_fl`]: crate::coordinator::round::run_fl
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::dense_cost;
+use crate::coordinator::accounting::CommLedger;
+use crate::coordinator::messages::WorkerMsg;
+use crate::coordinator::round::{eval_or_carry, FlConfig};
+use crate::coordinator::sampling::sample_clients;
+use crate::coordinator::server::Server;
+use crate::coordinator::trainer::LocalTrainer;
+use crate::lbgm::ThresholdPolicy;
+use crate::metrics::{RoundRecord, RunSeries};
+
+use super::link::{Link, TcpLink};
+use super::wire::{self, Frame};
+
+/// The fixed LBP threshold shipped to workers in the `Welcome` frame.
+/// The adaptive Theorem-1 policy needs server-side state the wire protocol
+/// does not carry yet, so the net transport supports fixed thresholds only.
+pub fn policy_delta(policy: ThresholdPolicy) -> Result<f64> {
+    match policy {
+        ThresholdPolicy::Fixed { delta } => Ok(delta),
+        other => bail!("net transport supports only the fixed threshold policy, got {other:?}"),
+    }
+}
+
+/// Server half of the handshake on one freshly connected link: expect
+/// `Hello`, validate it against the federation shape, reply `Welcome`.
+/// Returns the worker id the peer claimed.
+pub fn handshake_one(
+    link: &mut dyn Link,
+    k: usize,
+    dim: usize,
+    cfg: &FlConfig,
+) -> Result<usize> {
+    let delta = policy_delta(cfg.policy)?;
+    let frame = link.recv()?;
+    let tag = frame.tag();
+    let Frame::Hello { worker, dim: wdim } = frame else {
+        bail!("expected Hello, got tag {tag}");
+    };
+    let w = worker as usize;
+    ensure!(w < k, "worker id {w} out of range (K={k})");
+    ensure!(
+        wdim == dim as u64,
+        "worker {w} has dim {wdim}, server expects {dim}"
+    );
+    link.send(&Frame::Welcome {
+        dim: dim as u64,
+        tau: cfg.tau as u32,
+        eta: cfg.eta,
+        delta,
+    })?;
+    Ok(w)
+}
+
+/// Accept workers on `listener` until all `k` slots are filled, handshake
+/// each, and return their links indexed by worker id.
+///
+/// A connection that fails its handshake — bad magic/version, wrong
+/// dimension, out-of-range or duplicate worker id, or silence until
+/// `handshake_timeout` — is rejected (dropped, closing its socket) without
+/// killing the already-connected workers; the server keeps accepting.
+/// Handshakes are serial, so one silent connection can stall the accept
+/// loop for up to `handshake_timeout` before the next is served. A zero
+/// `handshake_timeout` means "no timeout". Until a connection handshakes,
+/// its receive payloads are capped at [`wire::HANDSHAKE_MAX_PAYLOAD`] so a
+/// hostile peer cannot force large allocations; afterwards the limit is
+/// the session's own frame size.
+pub fn accept_workers(
+    listener: &TcpListener,
+    k: usize,
+    dim: usize,
+    cfg: &FlConfig,
+    handshake_timeout: Duration,
+) -> Result<Vec<Box<dyn Link>>> {
+    ensure!(k > 0, "need at least one worker");
+    // An unservable policy would otherwise reject every connection forever.
+    policy_delta(cfg.policy)?;
+    let timeout = (!handshake_timeout.is_zero()).then_some(handshake_timeout);
+    // The largest legal post-handshake uplink: a full-gradient Update.
+    let session_cap = 64 + 4 * dim;
+    let mut slots: Vec<Option<Box<dyn Link>>> = (0..k).map(|_| None).collect();
+    let mut connected = 0;
+    while connected < k {
+        let (stream, peer) = listener.accept()?;
+        let mut link = match TcpLink::new(stream) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("net: dropping connection from {peer}: {e:#}");
+                continue;
+            }
+        };
+        link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
+        if let Err(e) = link.set_recv_timeout(timeout) {
+            eprintln!("net: dropping connection from {peer}: {e:#}");
+            continue;
+        }
+        match handshake_one(&mut link, k, dim, cfg) {
+            Ok(w) if slots[w].is_none() => {
+                link.set_recv_timeout(None)?;
+                link.set_recv_limit(session_cap);
+                slots[w] = Some(Box::new(link));
+                connected += 1;
+            }
+            Ok(w) => {
+                eprintln!("net: rejecting duplicate worker {w} (peer {peer})");
+            }
+            Err(e) => {
+                eprintln!("net: rejecting connection from {peer}: {e:#}");
+            }
+        }
+    }
+    Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+}
+
+/// Drive a full federated run over handshaken links (`links[w]` is worker
+/// w's connection). Each round: broadcast theta to the sampled
+/// participants, collect their updates under `round_deadline`, aggregate
+/// in participant order, evaluate on the cadence. Sends `Shutdown` on
+/// every link when training completes.
+///
+/// Bit-identical to the sequential engine per seed: same sampling, same
+/// aggregation order, same f32/f64 arithmetic — the wire codec preserves
+/// exact bit patterns.
+pub fn run_server_rounds(
+    links: &mut [Box<dyn Link>],
+    eval_trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    weights: Vec<f32>,
+    cfg: &FlConfig,
+    round_deadline: Duration,
+    name: &str,
+) -> Result<(RunSeries, CommLedger, Vec<f32>)> {
+    let k = links.len();
+    ensure!(k > 0, "no worker links");
+    ensure!(weights.len() == k, "weights/links length mismatch");
+    let mut server = Server::new(theta0, weights, cfg.eta);
+    let dim = server.theta.len();
+    let mut series = RunSeries::new(name);
+    let mut ledger = CommLedger::new(k);
+
+    for t in 0..cfg.rounds {
+        let start = Instant::now();
+        let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+
+        // Downlink: broadcast the global model to this round's participants
+        // — encoded once, the same byte buffer fanned out to every link.
+        let frame = Frame::Round { t: t as u64, theta: server.theta.clone() };
+        let encoded = frame.to_bytes();
+        for &w in &participants {
+            let sent = links[w].send_raw(&encoded)?;
+            ledger.record_down(w, dense_cost(dim));
+            ledger.record_wire_down(sent as u64);
+        }
+
+        // Uplink: collect one update per participant before the deadline.
+        // One connection per worker, so receiving in participant order is
+        // already the deterministic aggregation order.
+        let deadline = Instant::now() + round_deadline;
+        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(participants.len());
+        let mut train_loss_sum = 0f64;
+        for &w in &participants {
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            links[w].set_recv_timeout(Some(remaining))?;
+            let frame = links[w].recv().map_err(|e| {
+                anyhow::anyhow!("worker {w} missed the round-{t} deadline: {e}")
+            })?;
+            let bytes = frame.wire_bytes();
+            let tag = frame.tag();
+            let Frame::Update(msg) = frame else {
+                bail!("worker {w} sent tag {tag} mid-round");
+            };
+            ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
+            ensure!(msg.round == t, "worker {w} answered round {} in round {t}", msg.round);
+            ledger.record_wire_up(bytes as u64);
+            ledger.record(w, msg.cost, msg.is_scalar());
+            train_loss_sum += msg.train_loss;
+            msgs.push(msg);
+        }
+        server.apply(&msgs)?;
+
+        let mut rec = RoundRecord {
+            round: t,
+            train_loss: train_loss_sum / msgs.len() as f64,
+            floats_up: ledger.total_floats,
+            bits_up: ledger.total_bits,
+            floats_down: ledger.down_floats,
+            bits_down: ledger.down_bits,
+            wire_up_bytes: ledger.wire_up_bytes,
+            wire_down_bytes: ledger.wire_down_bytes,
+            full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
+            scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
+            wall_secs: start.elapsed().as_secs_f64(),
+            ..Default::default()
+        };
+        eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
+            eval_trainer.eval(&server.theta)
+        })?;
+        series.push(rec);
+    }
+
+    // Orderly teardown; a worker that already vanished is not fatal here.
+    // Control-plane frames (handshake, shutdown) are deliberately not
+    // ledger-recorded: the wire counters measure the round protocol only,
+    // so the ledger totals equal the final RoundRecord's columns exactly.
+    for link in links.iter_mut() {
+        let _ = link.send(&Frame::Shutdown);
+    }
+    Ok((series, ledger, server.theta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::MemLink;
+
+    fn cfg() -> FlConfig {
+        FlConfig { tau: 3, eta: 0.1, policy: ThresholdPolicy::fixed(0.25), ..Default::default() }
+    }
+
+    #[test]
+    fn handshake_accepts_valid_hello() {
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello { worker: 2, dim: 10 }).unwrap();
+        let w = handshake_one(&mut srv, 4, 10, &cfg()).unwrap();
+        assert_eq!(w, 2);
+        match wrk.recv().unwrap() {
+            Frame::Welcome { dim, tau, eta, delta } => {
+                assert_eq!(dim, 10);
+                assert_eq!(tau, 3);
+                assert_eq!(eta, 0.1);
+                assert_eq!(delta, 0.25);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_bad_dim_and_id() {
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello { worker: 1, dim: 99 }).unwrap();
+        assert!(handshake_one(&mut srv, 4, 10, &cfg()).is_err());
+
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello { worker: 9, dim: 10 }).unwrap();
+        assert!(handshake_one(&mut srv, 4, 10, &cfg()).is_err());
+
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Shutdown).unwrap();
+        assert!(handshake_one(&mut srv, 4, 10, &cfg()).is_err());
+    }
+
+    #[test]
+    fn adaptive_policy_rejected_on_the_wire() {
+        let cfg = FlConfig {
+            policy: ThresholdPolicy::AdaptiveDelta2 { delta2: 0.1, tau: 2 },
+            ..Default::default()
+        };
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello { worker: 0, dim: 4 }).unwrap();
+        assert!(handshake_one(&mut srv, 1, 4, &cfg).is_err());
+    }
+}

@@ -1,0 +1,683 @@
+//! `net::wire` — versioned, length-prefixed, checksummed binary codec.
+//!
+//! This is the exact on-the-wire encoding of the FL protocol, so the
+//! communication ledgers can report *measured* bytes instead of the modeled
+//! float/bit counters (paper Figs. 5-8 count floats; a deployment counts
+//! frames). Hand-rolled on purpose: no serde, no external deps, and a
+//! byte-stable layout the tests can assert against.
+//!
+//! # Frame layout (protocol version 1; all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "FRLB" (FedRecycle Look-Back)
+//! 4       2     protocol version (u16) — this build speaks version 1
+//! 6       1     frame tag (Hello=1 Welcome=2 Round=3 Shutdown=4 Update=5)
+//! 7       1     reserved, must be 0 (room for flags in a later version)
+//! 8       4     payload length n (u32, capped at 1 GiB)
+//! 12      n     payload (tag-specific, see below)
+//! 12+n    4     FNV-1a-32 checksum over bytes [0, 12+n)
+//! ```
+//!
+//! Payload encodings (`f32`/`f64` are IEEE-754 little-endian bit patterns,
+//! so a loopback round trip is *bit-identical* — the foundation of the
+//! TCP-vs-sequential parity tests):
+//!
+//! * `Hello`    — worker id `u32`, model dimension `u64` (client → server).
+//! * `Welcome`  — dimension `u64`, tau `u32`, eta `f32`, delta `f64`
+//!   (server → client; the session hyperparameters, so worker processes
+//!   need no config file).
+//! * `Round`    — round `u64`, count `u64`, then `count` f32 model params.
+//! * `Shutdown` — empty.
+//! * `Update`   — worker `u32`, round `u64`, train_loss `f64`, cost.floats
+//!   `u64`, cost.bits `u64`, then a [`Payload`]: tag `u8` (0 = scalar,
+//!   1 = full), then either rho `f32` or count `u64` + `count` f32s.
+//!
+//! Every decoder rejects wrong magic, unknown versions, nonzero reserved
+//! bytes, length mismatches, trailing bytes, and checksum failures — the
+//! property tests assert that *any* single-byte corruption or truncation
+//! of a valid frame fails to decode.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::Cost;
+use crate::coordinator::messages::{Payload, WorkerMsg};
+
+/// Frame magic: "FRLB".
+pub const MAGIC: [u8; 4] = *b"FRLB";
+/// The protocol version this build encodes and accepts.
+pub const PROTO_VERSION: u16 = 1;
+/// Fixed frame-header length (magic + version + tag + reserved + length).
+pub const HEADER_LEN: usize = 12;
+/// Trailing checksum length.
+pub const CHECKSUM_LEN: usize = 4;
+/// Payload size cap: a frame larger than this is rejected before allocation.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+/// Tight payload cap for the handshake phase: `Hello` (12 B) and `Welcome`
+/// (24 B) are the only legal frames then, so a pre-authentication peer
+/// cannot make the receiver allocate more than this (DoS guard; see
+/// [`Link::set_recv_limit`]).
+///
+/// [`Link::set_recv_limit`]: crate::net::Link::set_recv_limit
+pub const HANDSHAKE_MAX_PAYLOAD: usize = 64;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_ROUND: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+const TAG_UPDATE: u8 = 5;
+
+/// FNV-1a 32-bit hash. A single-byte change anywhere in the input is
+/// guaranteed to change the digest (xor then multiply by an odd prime is
+/// injective per step), which is what the corruption tests rely on.
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian primitives.
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(4 * vs.len());
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over a payload slice; every read errors on
+/// truncation instead of panicking.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "payload truncated: wanted {n} bytes, {} left",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.u32()?.to_le_bytes()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.u64()?.to_le_bytes()))
+    }
+
+    /// Read `n` little-endian f32s.
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("f32 vector length overflow: {n}"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Assert the payload was consumed exactly (trailing bytes = error).
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "{} trailing bytes after payload",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode/Decode for the protocol's value types.
+// ---------------------------------------------------------------------------
+
+/// Canonical binary encoding of a protocol value.
+pub trait Encode {
+    /// Append the value's encoding to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+    /// Exact number of bytes [`Encode::encode`] appends.
+    fn encoded_len(&self) -> usize;
+}
+
+/// Decoding counterpart of [`Encode`].
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self>;
+}
+
+impl Encode for Payload {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::Scalar { rho } => {
+                out.push(0);
+                put_f32(out, *rho);
+            }
+            Payload::Full { grad } => {
+                out.push(1);
+                put_u64(out, grad.len() as u64);
+                put_f32s(out, grad);
+            }
+        }
+    }
+
+    fn encoded_len(&self) -> usize {
+        match self {
+            Payload::Scalar { .. } => 1 + 4,
+            Payload::Full { grad } => 1 + 8 + 4 * grad.len(),
+        }
+    }
+}
+
+impl Decode for Payload {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(Payload::Scalar { rho: r.f32()? }),
+            1 => {
+                let n = r.u64()? as usize;
+                Ok(Payload::Full { grad: Arc::new(r.f32s(n)?) })
+            }
+            t => bail!("unknown payload tag {t}"),
+        }
+    }
+}
+
+impl Encode for WorkerMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.worker as u32);
+        put_u64(out, self.round as u64);
+        put_f64(out, self.train_loss);
+        put_u64(out, self.cost.floats);
+        put_u64(out, self.cost.bits);
+        self.payload.encode(out);
+    }
+
+    fn encoded_len(&self) -> usize {
+        4 + 8 + 8 + 8 + 8 + self.payload.encoded_len()
+    }
+}
+
+impl Decode for WorkerMsg {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let worker = r.u32()? as usize;
+        let round = r.u64()? as usize;
+        let train_loss = r.f64()?;
+        let floats = r.u64()?;
+        let bits = r.u64()?;
+        let payload = Payload::decode(r)?;
+        Ok(WorkerMsg { worker, round, payload, cost: Cost { floats, bits }, train_loss })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames.
+// ---------------------------------------------------------------------------
+
+/// One protocol frame. See the module docs for the byte layout.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Client → server handshake: worker id + expected model dimension.
+    Hello { worker: u32, dim: u64 },
+    /// Server → client handshake reply: the session hyperparameters.
+    Welcome { dim: u64, tau: u32, eta: f32, delta: f64 },
+    /// Server → client downlink: run round `t` from the broadcast model.
+    Round { t: u64, theta: Vec<f32> },
+    /// Server → client downlink: training is over, disconnect cleanly.
+    Shutdown,
+    /// Client → server uplink: one worker's round update.
+    Update(WorkerMsg),
+}
+
+impl Frame {
+    pub fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => TAG_HELLO,
+            Frame::Welcome { .. } => TAG_WELCOME,
+            Frame::Round { .. } => TAG_ROUND,
+            Frame::Shutdown => TAG_SHUTDOWN,
+            Frame::Update(_) => TAG_UPDATE,
+        }
+    }
+
+    fn payload_len(&self) -> usize {
+        match self {
+            Frame::Hello { .. } => 4 + 8,
+            Frame::Welcome { .. } => 8 + 4 + 4 + 8,
+            Frame::Round { theta, .. } => 8 + 8 + 4 * theta.len(),
+            Frame::Shutdown => 0,
+            Frame::Update(m) => m.encoded_len(),
+        }
+    }
+
+    /// Exact number of bytes this frame occupies on the wire — the number
+    /// [`CommLedger::record_wire_up`]/[`record_wire_down`] accumulate.
+    ///
+    /// [`CommLedger::record_wire_up`]: crate::coordinator::CommLedger::record_wire_up
+    /// [`record_wire_down`]: crate::coordinator::CommLedger::record_wire_down
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_LEN + self.payload_len() + CHECKSUM_LEN
+    }
+
+    /// Encode into a fresh framed byte buffer (header + payload + checksum).
+    ///
+    /// Panics if the payload exceeds [`MAX_PAYLOAD`] — enforced in release
+    /// builds too, because a wrapped u32 length field would silently
+    /// desync the byte stream; an oversized frame must be a loud error at
+    /// the sender.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let n = self.payload_len();
+        assert!(n <= MAX_PAYLOAD, "frame payload {n} bytes exceeds MAX_PAYLOAD");
+        let mut out = Vec::with_capacity(HEADER_LEN + n + CHECKSUM_LEN);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        out.push(self.tag());
+        out.push(0); // reserved
+        put_u32(&mut out, n as u32);
+        match self {
+            Frame::Hello { worker, dim } => {
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *dim);
+            }
+            Frame::Welcome { dim, tau, eta, delta } => {
+                put_u64(&mut out, *dim);
+                put_u32(&mut out, *tau);
+                put_f32(&mut out, *eta);
+                put_f64(&mut out, *delta);
+            }
+            Frame::Round { t, theta } => {
+                put_u64(&mut out, *t);
+                put_u64(&mut out, theta.len() as u64);
+                put_f32s(&mut out, theta);
+            }
+            Frame::Shutdown => {}
+            Frame::Update(m) => m.encode(&mut out),
+        }
+        debug_assert_eq!(out.len(), HEADER_LEN + n);
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Decode a complete frame from exactly `buf` (trailing bytes = error).
+    pub fn from_bytes(buf: &[u8]) -> Result<Frame> {
+        ensure!(
+            buf.len() >= HEADER_LEN + CHECKSUM_LEN,
+            "frame truncated: {} bytes",
+            buf.len()
+        );
+        ensure!(buf[0..4] == MAGIC, "bad frame magic {:02x?}", &buf[0..4]);
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        ensure!(
+            version == PROTO_VERSION,
+            "protocol version {version} (this build speaks {PROTO_VERSION})"
+        );
+        let tag = buf[6];
+        ensure!(buf[7] == 0, "nonzero reserved byte {:#x}", buf[7]);
+        let n = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+        ensure!(n <= MAX_PAYLOAD, "payload length {n} exceeds cap");
+        ensure!(
+            buf.len() == HEADER_LEN + n + CHECKSUM_LEN,
+            "frame length mismatch: header says {n} payload bytes, buffer is {}",
+            buf.len()
+        );
+        let body = &buf[..HEADER_LEN + n];
+        let stored = u32::from_le_bytes([
+            buf[HEADER_LEN + n],
+            buf[HEADER_LEN + n + 1],
+            buf[HEADER_LEN + n + 2],
+            buf[HEADER_LEN + n + 3],
+        ]);
+        let computed = fnv1a(body);
+        ensure!(
+            stored == computed,
+            "checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        );
+        let mut r = Reader::new(&buf[HEADER_LEN..HEADER_LEN + n]);
+        let frame = match tag {
+            TAG_HELLO => Frame::Hello { worker: r.u32()?, dim: r.u64()? },
+            TAG_WELCOME => Frame::Welcome {
+                dim: r.u64()?,
+                tau: r.u32()?,
+                eta: r.f32()?,
+                delta: r.f64()?,
+            },
+            TAG_ROUND => {
+                let t = r.u64()?;
+                let count = r.u64()? as usize;
+                Frame::Round { t, theta: r.f32s(count)? }
+            }
+            TAG_SHUTDOWN => Frame::Shutdown,
+            TAG_UPDATE => Frame::Update(WorkerMsg::decode(&mut r)?),
+            other => bail!("unknown frame tag {other}"),
+        };
+        r.done()?;
+        Ok(frame)
+    }
+
+    /// Write the framed bytes to `w`; returns the exact wire bytes written.
+    pub fn write_to(&self, w: &mut dyn Write) -> Result<usize> {
+        let bytes = self.to_bytes();
+        w.write_all(&bytes)?;
+        w.flush()?;
+        Ok(bytes.len())
+    }
+
+    /// Read one complete frame from `r` (blocking until the frame or an
+    /// error such as a read timeout arrives).
+    pub fn read_from(r: &mut dyn Read) -> Result<Frame> {
+        Frame::read_from_limit(r, MAX_PAYLOAD)
+    }
+
+    /// Like [`Frame::read_from`] but rejecting any payload longer than
+    /// `max_payload` *before* allocating for it — the header length field
+    /// is attacker-controlled until the checksum verifies, so
+    /// pre-handshake receivers pass [`HANDSHAKE_MAX_PAYLOAD`] here.
+    pub fn read_from_limit(r: &mut dyn Read, max_payload: usize) -> Result<Frame> {
+        let cap = max_payload.min(MAX_PAYLOAD);
+        let mut header = [0u8; HEADER_LEN];
+        r.read_exact(&mut header)?;
+        ensure!(header[0..4] == MAGIC, "bad frame magic {:02x?}", &header[0..4]);
+        let version = u16::from_le_bytes([header[4], header[5]]);
+        ensure!(
+            version == PROTO_VERSION,
+            "protocol version {version} (this build speaks {PROTO_VERSION})"
+        );
+        let n = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+        ensure!(n <= cap, "payload length {n} exceeds receive limit {cap}");
+        let mut rest = vec![0u8; n + CHECKSUM_LEN];
+        r.read_exact(&mut rest)?;
+        let mut buf = Vec::with_capacity(HEADER_LEN + n + CHECKSUM_LEN);
+        buf.extend_from_slice(&header);
+        buf.extend_from_slice(&rest);
+        Frame::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::SCALAR_COST;
+    use crate::testkit::prop::{forall, Gen, VecF32};
+    use crate::util::rng::Rng;
+
+    fn full_msg(grad: Vec<f32>) -> WorkerMsg {
+        let m = grad.len() as u64;
+        WorkerMsg {
+            worker: 3,
+            round: 17,
+            payload: Payload::Full { grad: Arc::new(grad) },
+            cost: Cost { floats: m, bits: 32 * m },
+            train_loss: 0.625,
+        }
+    }
+
+    fn scalar_msg(rho: f32) -> WorkerMsg {
+        WorkerMsg {
+            worker: 1,
+            round: 2,
+            payload: Payload::Scalar { rho },
+            cost: SCALAR_COST,
+            train_loss: -1.5,
+        }
+    }
+
+    fn assert_msg_eq(a: &WorkerMsg, b: &WorkerMsg) {
+        assert_eq!(a.worker, b.worker);
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        match (&a.payload, &b.payload) {
+            (Payload::Scalar { rho: x }, Payload::Scalar { rho: y }) => {
+                assert_eq!(x.to_bits(), y.to_bits())
+            }
+            (Payload::Full { grad: x }, Payload::Full { grad: y }) => {
+                assert_eq!(x.as_slice(), y.as_slice())
+            }
+            _ => panic!("payload kind changed in round trip"),
+        }
+    }
+
+    #[test]
+    fn wire_bytes_matches_encoding_exactly() {
+        let frames = [
+            Frame::Hello { worker: 4, dim: 1024 },
+            Frame::Welcome { dim: 1024, tau: 2, eta: 0.05, delta: 0.2 },
+            Frame::Round { t: 9, theta: vec![1.0, -2.5, 3.25] },
+            Frame::Shutdown,
+            Frame::Update(scalar_msg(0.75)),
+            Frame::Update(full_msg(vec![0.5; 7])),
+        ];
+        for f in &frames {
+            assert_eq!(f.to_bytes().len(), f.wire_bytes(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn handshake_round_trips() {
+        let hello = Frame::Hello { worker: 11, dim: 777 };
+        match Frame::from_bytes(&hello.to_bytes()).unwrap() {
+            Frame::Hello { worker, dim } => {
+                assert_eq!(worker, 11);
+                assert_eq!(dim, 777);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let welcome = Frame::Welcome { dim: 777, tau: 3, eta: 0.125, delta: -1.0 };
+        match Frame::from_bytes(&welcome.to_bytes()).unwrap() {
+            Frame::Welcome { dim, tau, eta, delta } => {
+                assert_eq!(dim, 777);
+                assert_eq!(tau, 3);
+                assert_eq!(eta.to_bits(), 0.125f32.to_bits());
+                assert_eq!(delta.to_bits(), (-1.0f64).to_bits());
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert!(matches!(
+            Frame::from_bytes(&Frame::Shutdown.to_bytes()).unwrap(),
+            Frame::Shutdown
+        ));
+    }
+
+    #[test]
+    fn prop_round_frame_round_trip_is_bit_identical() {
+        let gen = VecF32 { min_len: 0, max_len: 200, scale: 10.0 };
+        forall(41, 60, &gen, |theta| {
+            let f = Frame::Round { t: 123, theta: theta.clone() };
+            match Frame::from_bytes(&f.to_bytes()) {
+                Ok(Frame::Round { t, theta: got }) => {
+                    if t != 123 {
+                        return Err(format!("round changed: {t}"));
+                    }
+                    if got != *theta {
+                        return Err("theta changed in round trip".into());
+                    }
+                    Ok(())
+                }
+                other => Err(format!("decode failed: {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_update_frames_round_trip() {
+        let gen = VecF32 { min_len: 1, max_len: 150, scale: 3.0 };
+        forall(42, 60, &gen, |grad| {
+            let msg = full_msg(grad.clone());
+            let f = Frame::Update(msg);
+            let Frame::Update(m) = &f else { unreachable!() };
+            match Frame::from_bytes(&f.to_bytes()) {
+                Ok(Frame::Update(got)) => {
+                    assert_msg_eq(m, &got);
+                    Ok(())
+                }
+                other => Err(format!("decode failed: {other:?}")),
+            }
+        });
+        // Scalar path, including non-finite-ish extremes of rho.
+        for rho in [0.0f32, -0.0, 1.0, f32::MIN_POSITIVE, 1e30] {
+            let f = Frame::Update(scalar_msg(rho));
+            let Frame::Update(m) = &f else { unreachable!() };
+            match Frame::from_bytes(&f.to_bytes()).unwrap() {
+                Frame::Update(got) => assert_msg_eq(m, &got),
+                other => panic!("wrong frame {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = Frame::Update(full_msg(vec![1.0, 2.0, 3.0])).to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                Frame::from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes decoded"
+            );
+        }
+        // Trailing garbage is rejected too.
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(Frame::from_bytes(&extended).is_err());
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let frames = [
+            Frame::Round { t: 5, theta: vec![0.5, -1.5, 2.0, 7.75] },
+            Frame::Update(scalar_msg(0.5)),
+            Frame::Hello { worker: 0, dim: 4 },
+        ];
+        for f in &frames {
+            let bytes = f.to_bytes();
+            for i in 0..bytes.len() {
+                let mut corrupt = bytes.clone();
+                corrupt[i] ^= 0x5A;
+                assert!(
+                    Frame::from_bytes(&corrupt).is_err(),
+                    "byte {i} corruption decoded for {f:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_corrupted_random_byte_rejected() {
+        let gen = VecF32 { min_len: 1, max_len: 64, scale: 1.0 };
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let theta = gen.generate(&mut rng);
+            let mut bytes = Frame::Round { t: 1, theta }.to_bytes();
+            let i = rng.below(bytes.len());
+            bytes[i] = bytes[i].wrapping_add(1 + rng.below(255) as u8);
+            if let Ok(decoded) = Frame::from_bytes(&bytes) {
+                panic!("corrupted byte {i} decoded into {decoded:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_read_write_round_trip() {
+        // write_to/read_from over an in-memory byte stream, frames back to
+        // back — the exact path TcpLink uses.
+        let frames = vec![
+            Frame::Hello { worker: 2, dim: 8 },
+            Frame::Round { t: 0, theta: vec![1.0; 8] },
+            Frame::Update(scalar_msg(1.0)),
+            Frame::Shutdown,
+        ];
+        let mut buf: Vec<u8> = Vec::new();
+        let mut total = 0usize;
+        for f in &frames {
+            total += f.write_to(&mut buf).unwrap();
+        }
+        assert_eq!(total, buf.len());
+        let mut cursor = std::io::Cursor::new(buf);
+        for f in &frames {
+            let got = Frame::read_from(&mut cursor).unwrap();
+            assert_eq!(got.tag(), f.tag());
+            assert_eq!(got.wire_bytes(), f.wire_bytes());
+        }
+    }
+
+    #[test]
+    fn read_limit_rejects_oversized_header_before_alloc() {
+        // Valid magic/version but a huge claimed length: must error at the
+        // header, before any payload allocation.
+        let mut bytes = Frame::Hello { worker: 0, dim: 1 }.to_bytes();
+        bytes[8..12].copy_from_slice(&(1u32 << 29).to_le_bytes());
+        let err = Frame::read_from_limit(
+            &mut std::io::Cursor::new(bytes),
+            HANDSHAKE_MAX_PAYLOAD,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("receive limit"), "{err}");
+        // The unbounded reader still enforces the global cap.
+        let mut huge = Frame::Shutdown.to_bytes();
+        huge[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Frame::read_from(&mut std::io::Cursor::new(huge)).is_err());
+    }
+
+    #[test]
+    fn foreign_version_rejected() {
+        let mut bytes = Frame::Shutdown.to_bytes();
+        bytes[4] = 2; // future protocol version
+        let err = Frame::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        let err2 = Frame::read_from(&mut std::io::Cursor::new(bytes))
+            .unwrap_err()
+            .to_string();
+        assert!(err2.contains("version"), "{err2}");
+    }
+}

@@ -9,7 +9,7 @@
 //! results.
 
 use fedrecycle::compress::{Compressor, Identity, TopK};
-use fedrecycle::coordinator::round::{run_fl, FlConfig, FlOutcome, Parallelism};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, FlOutcome, Parallelism, Transport};
 use fedrecycle::coordinator::trainer::MockTrainer;
 use fedrecycle::lbgm::ThresholdPolicy;
 
@@ -44,6 +44,8 @@ fn assert_parity(base: FlConfig, codec: &dyn Fn() -> Box<dyn Compressor>) {
         assert_eq!(seq.ledger.total_bits, thr.ledger.total_bits);
         assert_eq!(seq.ledger.scalar_msgs, thr.ledger.scalar_msgs);
         assert_eq!(seq.ledger.full_msgs, thr.ledger.full_msgs);
+        assert_eq!(seq.ledger.total_down_floats(), thr.ledger.total_down_floats());
+        assert_eq!(seq.ledger.total_down_bits(), thr.ledger.total_down_bits());
         assert!(thr.ledger.consistent());
         for w in 0..WORKERS {
             assert_eq!(
@@ -82,6 +84,7 @@ fn base_cfg(delta: f64, seed: u64) -> FlConfig {
         seed,
         check_coherence: true,
         parallelism: Parallelism::Sequential,
+        transport: Transport::Memory,
     }
 }
 

@@ -1,0 +1,281 @@
+//! Networked-deployment parity: a TCP-loopback `serve` + K workers run
+//! (and its MemLink/SimLink variants) must be **bit-identical** to the
+//! sequential in-memory engine for the same seed — same final theta, same
+//! ledger counters (uplink and downlink, global and per worker), same
+//! per-round loss curves and send counts — across vanilla FL, standalone
+//! LBGM, and sampled/plug-and-play configurations. On top of the modeled
+//! counters, the networked runs must report *measured* wire bytes that
+//! match the frame codec exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fedrecycle::compress::{Compressor, Cost, Identity, TopK};
+use fedrecycle::coordinator::messages::{Payload, WorkerMsg};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, FlOutcome, Parallelism};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::coordinator::CommLedger;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::metrics::{write_csv, RunSeries};
+use fedrecycle::net::{
+    accept_workers, connect_worker, run_mem_fl, run_server_rounds, run_tcp_fl, Frame,
+    LinkProfile,
+};
+
+const DIM: usize = 24;
+const K: usize = 5;
+const SPREAD: f32 = 0.25;
+const SIGMA: f32 = 0.03;
+
+fn cfg(delta: f64, fraction: f64, seed: u64) -> FlConfig {
+    FlConfig {
+        rounds: 16,
+        tau: 2,
+        eta: 0.05,
+        policy: ThresholdPolicy::fixed(delta),
+        sample_fraction: fraction,
+        eval_every: 4,
+        seed,
+        check_coherence: false,
+        parallelism: Parallelism::Sequential,
+        ..Default::default()
+    }
+}
+
+fn sequential(cfg: &FlConfig, codec: &dyn Fn() -> Box<dyn Compressor>) -> FlOutcome {
+    let mut t = MockTrainer::new(DIM, K, SPREAD, SIGMA, cfg.seed);
+    run_fl(&mut t, vec![0.0; DIM], cfg, codec, "seq").unwrap()
+}
+
+fn deployed_tcp(
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+) -> (RunSeries, CommLedger, Vec<f32>) {
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, cfg.seed);
+    let weights = eval.weights();
+    run_tcp_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, cfg.seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        cfg,
+        codec,
+        "tcp",
+    )
+    .unwrap()
+}
+
+/// Everything observable except wall-clock and wire bytes must be equal
+/// bit-for-bit between the sequential engine and a networked deployment.
+fn assert_deployment_matches(seq: &FlOutcome, net: &(RunSeries, CommLedger, Vec<f32>)) {
+    let (series, ledger, theta) = net;
+    assert_eq!(&seq.final_theta, theta, "final theta diverged");
+    assert_eq!(seq.ledger.total_floats, ledger.total_floats);
+    assert_eq!(seq.ledger.total_bits, ledger.total_bits);
+    assert_eq!(seq.ledger.scalar_msgs, ledger.scalar_msgs);
+    assert_eq!(seq.ledger.full_msgs, ledger.full_msgs);
+    assert_eq!(seq.ledger.total_down_floats(), ledger.total_down_floats());
+    assert_eq!(seq.ledger.total_down_bits(), ledger.total_down_bits());
+    assert!(ledger.consistent());
+    for w in 0..K {
+        assert_eq!(
+            seq.ledger.worker_floats(w),
+            ledger.worker_floats(w),
+            "worker {w} uplink floats diverged"
+        );
+        assert_eq!(seq.ledger.worker_bits(w), ledger.worker_bits(w));
+        assert_eq!(
+            seq.ledger.worker_down_floats(w),
+            ledger.worker_down_floats(w),
+            "worker {w} downlink floats diverged"
+        );
+    }
+    assert_eq!(seq.series.rounds.len(), series.rounds.len());
+    for (a, b) in seq.series.rounds.iter().zip(&series.rounds) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "round {} train loss diverged",
+            a.round
+        );
+        assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.test_metric.to_bits(), b.test_metric.to_bits());
+        assert_eq!(a.floats_up, b.floats_up, "round {}", a.round);
+        assert_eq!(a.floats_down, b.floats_down, "round {}", a.round);
+        assert_eq!(a.full_sends, b.full_sends, "round {}", a.round);
+        assert_eq!(a.scalar_sends, b.scalar_sends, "round {}", a.round);
+    }
+}
+
+#[test]
+fn tcp_loopback_matches_sequential_vanilla() {
+    let c = cfg(-1.0, 1.0, 11);
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let net = deployed_tcp(&c, &|| Box::new(Identity));
+    assert_deployment_matches(&seq, &net);
+    let ledger = &net.1;
+    assert_eq!(ledger.scalar_msgs, 0, "vanilla FL never sends scalars");
+
+    // Vanilla + full participation makes the measured wire bytes exactly
+    // computable from the frame codec: every downlink is a Round frame of
+    // DIM params, every uplink a full-grad Update of DIM floats (control
+    // frames — handshake, shutdown — are not ledger-recorded).
+    let round_frame = Frame::Round { t: 0, theta: vec![0.0; DIM] }.wire_bytes() as u64;
+    let update_frame = Frame::Update(WorkerMsg {
+        worker: 0,
+        round: 0,
+        payload: Payload::Full { grad: Arc::new(vec![0.0; DIM]) },
+        cost: Cost { floats: DIM as u64, bits: 32 * DIM as u64 },
+        train_loss: 0.0,
+    })
+    .wire_bytes() as u64;
+    let rounds = c.rounds as u64;
+    assert_eq!(ledger.wire_down_bytes, rounds * K as u64 * round_frame);
+    assert_eq!(ledger.wire_up_bytes, rounds * K as u64 * update_frame);
+    // The final round record snapshots the same totals (ledger == CSV).
+    let last = net.0.rounds.last().unwrap();
+    assert_eq!(last.wire_up_bytes, ledger.wire_up_bytes);
+    assert_eq!(last.wire_down_bytes, ledger.wire_down_bytes);
+}
+
+#[test]
+fn tcp_loopback_matches_sequential_lbgm() {
+    let c = cfg(0.4, 1.0, 7);
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let net = deployed_tcp(&c, &|| Box::new(Identity));
+    assert_deployment_matches(&seq, &net);
+    let ledger = &net.1;
+    assert!(ledger.scalar_msgs > 0, "LBGM path never engaged");
+    assert!(ledger.full_msgs > 0);
+    assert!(ledger.wire_up_bytes > 0, "no measured uplink bytes");
+    assert!(ledger.wire_down_bytes > 0, "no measured downlink bytes");
+    // Scalars save real wire bytes: the uplink must be smaller than a
+    // hypothetical all-full-gradient run's.
+    let update_full = Frame::Update(WorkerMsg {
+        worker: 0,
+        round: 0,
+        payload: Payload::Full { grad: Arc::new(vec![0.0; DIM]) },
+        cost: Cost { floats: DIM as u64, bits: 32 * DIM as u64 },
+        train_loss: 0.0,
+    })
+    .wire_bytes() as u64;
+    assert!(ledger.wire_up_bytes < c.rounds as u64 * K as u64 * update_full);
+
+    // The CSV output carries the measured wire bytes.
+    let dir = std::env::temp_dir().join("fedrecycle_net_loopback_test");
+    let path = dir.join("tcp.csv");
+    write_csv(&path, std::slice::from_ref(&net.0)).unwrap();
+    let csv = std::fs::read_to_string(&path).unwrap();
+    assert!(csv.lines().next().unwrap().contains("wire_up_bytes"));
+    let last = csv.lines().last().unwrap();
+    let cols: Vec<&str> = last.split(',').collect();
+    // run,round,train_loss,test_loss,test_metric,floats_up,bits_up,
+    // floats_down,bits_down,wire_up_bytes,wire_down_bytes,...
+    assert_eq!(cols[9].parse::<u64>().unwrap(), ledger.wire_up_bytes);
+    assert!(cols[10].parse::<u64>().unwrap() > 0);
+}
+
+#[test]
+fn tcp_loopback_matches_sequential_sampled_topk() {
+    // Client sampling + plug-and-play top-K, the hardest determinism case.
+    let c = cfg(0.3, 0.6, 23);
+    let codec: &dyn Fn() -> Box<dyn Compressor> = &|| Box::new(TopK::new(0.5));
+    let seq = sequential(&c, codec);
+    let net = deployed_tcp(&c, codec);
+    assert_deployment_matches(&seq, &net);
+    // Sampling: 3 of 5 workers per round.
+    let r0 = &net.0.rounds[0];
+    assert_eq!(r0.full_sends + r0.scalar_sends, 3);
+}
+
+#[test]
+fn sim_link_straggler_run_is_bit_identical() {
+    // A lossy, slow, high-latency profile changes wall-clock only: the
+    // shaped MemLink deployment still reproduces the sequential run
+    // bit-for-bit (SimLink models loss as deterministic retransmission).
+    let c = cfg(0.4, 1.0, 31);
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, c.seed);
+    let weights = eval.weights();
+    let profile = LinkProfile {
+        latency: std::time::Duration::from_micros(200),
+        bytes_per_sec: 2_000_000,
+        loss: 0.4,
+        seed: 0xBEEF,
+    };
+    let net = run_mem_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, c.seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| Box::new(Identity),
+        "sim",
+        Some(profile),
+    )
+    .unwrap();
+    assert_deployment_matches(&seq, &net);
+    assert!(net.1.wire_up_bytes > 0);
+}
+
+#[test]
+fn rogue_connection_does_not_kill_the_server() {
+    // A port-scanner-ish peer connects and sends garbage; the server must
+    // reject it and still complete a bit-identical run with the real
+    // workers.
+    let c = cfg(0.5, 1.0, 13);
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let rogue = std::thread::spawn(move || {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let _ = s.write_all(b"GET / HTTP/1.1\r\n\r\n");
+    });
+    let mut handles = Vec::new();
+    for id in 0..K {
+        handles.push(std::thread::spawn(move || {
+            let mut t = MockTrainer::new(DIM, K, SPREAD, SIGMA, 13);
+            connect_worker(addr, id, &mut t, Box::new(Identity))
+        }));
+    }
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, c.seed);
+    let weights = eval.weights();
+    let mut links =
+        accept_workers(&listener, K, DIM, &c, Duration::from_secs(20)).unwrap();
+    let net = run_server_rounds(
+        &mut links,
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        Duration::from_secs(60),
+        "rogue",
+    )
+    .unwrap();
+    rogue.join().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert_deployment_matches(&seq, &net);
+}
+
+#[test]
+fn mem_link_deployment_matches_sequential() {
+    let c = cfg(0.5, 1.0, 3);
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, c.seed);
+    let weights = eval.weights();
+    let net = run_mem_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, c.seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| Box::new(Identity),
+        "mem",
+        None,
+    )
+    .unwrap();
+    assert_deployment_matches(&seq, &net);
+}

@@ -3,7 +3,7 @@
 //! on pure-Rust substrates and the analytic mock federation).
 
 use fedrecycle::compress::{Compressor, ErrorFeedback, Identity, SignSgd, TopK};
-use fedrecycle::coordinator::round::{run_fl, FlConfig, Parallelism};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, Parallelism, Transport};
 use fedrecycle::coordinator::trainer::{LocalTrainer, MockTrainer};
 use fedrecycle::coordinator::{CommLedger, Worker};
 use fedrecycle::lbgm::{project, ThresholdPolicy};
@@ -183,6 +183,7 @@ fn prop_fl_coherence_and_accounting_under_any_schedule() {
             check_coherence: true, // asserts worker/server LBG equality
             // Exercise the threaded engine under random schedules too.
             parallelism: Parallelism::Threads(2),
+            transport: Transport::Memory,
         };
         let out = run_fl(&mut trainer, vec![0.0; dim], &cfg, &|| Box::new(Identity), "p")
             .map_err(|e| format!("run failed: {e}"))?;
@@ -221,6 +222,7 @@ fn prop_vanilla_recovery_equals_fedavg() {
             seed: s.seed,
             check_coherence: false,
             parallelism: Parallelism::Sequential,
+            transport: Transport::Memory,
         };
         let mut t1 = MockTrainer::new(dim, s.workers, 0.2, 0.05, s.seed);
         let out = run_fl(&mut t1, vec![0.0; dim], &cfg, &|| Box::new(Identity), "l")
