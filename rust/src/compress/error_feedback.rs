@@ -95,6 +95,28 @@ mod tests {
         assert_eq!(total_sent[0], 3.0);
     }
 
+    /// Pinned: SignSGD under error feedback, fed a zero vector, is a
+    /// fixed point — the compressed output is zero, the residual stays
+    /// exactly zero round after round, and nothing ever "resurfaces".
+    #[test]
+    fn signsgd_ef_round_trip_on_zero_vector_is_a_fixed_point() {
+        let mut ef = ErrorFeedback::new(crate::compress::SignSgd);
+        for round in 0..3 {
+            let mut g = vec![0.0f32; 32];
+            let cost = ef.compress(&mut g);
+            assert!(g.iter().all(|x| *x == 0.0), "round {round}: nonzero output");
+            assert!(
+                ef.residual().iter().all(|r| *r == 0.0),
+                "round {round}: residual drifted"
+            );
+            assert_eq!(cost.bits, 32 + 32);
+        }
+        // A later nonzero gradient is unaffected by the zero history.
+        let mut g = vec![1.0f32, -1.0, 1.0, -1.0];
+        ef.compress(&mut g);
+        assert_eq!(g, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
     #[test]
     fn identity_inner_keeps_zero_residual() {
         let mut ef = ErrorFeedback::new(crate::compress::identity::Identity);

@@ -70,5 +70,19 @@ mod tests {
         let mut g: Vec<f32> = vec![];
         let cost = SignSgd.compress(&mut g);
         assert_eq!(cost.bits, 0);
+        assert_eq!(cost.floats, 0);
+    }
+
+    /// Pinned: an all-zero gradient has scale 0, so the "sign vector"
+    /// collapses to +0.0 everywhere (0.0 >= 0.0 picks the positive
+    /// branch) — the effective gradient is exactly zero and the cost is
+    /// still the full sign-bit payload.
+    #[test]
+    fn zero_gradient_collapses_to_positive_zero_scale() {
+        let mut g = vec![0.0f32; 64];
+        let cost = SignSgd.compress(&mut g);
+        assert!(g.iter().all(|x| *x == 0.0 && x.is_sign_positive()));
+        assert_eq!(cost.bits, 64 + 32);
+        assert_eq!(cost.floats, 64 / 32 + 1);
     }
 }

@@ -100,6 +100,67 @@ mod tests {
         assert_eq!(cost.floats, 3);
     }
 
+    // -- pinned edge-case behavior ------------------------------------------
+
+    /// k = 0 is unrepresentable: the constructor rejects a zero fraction,
+    /// so `k_of` always returns at least 1 on nonempty input.
+    #[test]
+    #[should_panic]
+    fn zero_fraction_is_rejected_at_construction() {
+        let _ = TopK::new(0.0);
+    }
+
+    /// Pinned: an arbitrarily small positive fraction still keeps exactly
+    /// one entry (`k_of` clamps to `[1, m]`).
+    #[test]
+    fn tiny_fraction_keeps_exactly_one() {
+        let mut g = vec![0.5f32, -3.0, 1.0, 2.0, -0.25];
+        let cost = TopK::new(1e-9).compress(&mut g);
+        assert_eq!(cost.floats, 2);
+        assert_eq!(cost.bits, 64);
+        assert_eq!(g.iter().filter(|x| **x != 0.0).count(), 1);
+        assert_eq!(g[1], -3.0);
+    }
+
+    /// Pinned: `k >= len` (fraction 1.0, or a one-element vector at any
+    /// fraction) degenerates to the identity with dense cost.
+    #[test]
+    fn k_at_or_above_len_is_dense_identity() {
+        let mut g = vec![7.0f32];
+        let cost = TopK::new(0.01).compress(&mut g);
+        assert_eq!(g, vec![7.0]);
+        assert_eq!(cost.floats, 1);
+        let mut g = vec![1.0f32, -2.0];
+        let cost = TopK::new(1.0).compress(&mut g);
+        assert_eq!(g, vec![1.0, -2.0]);
+        assert_eq!(cost.floats, 2);
+        assert_eq!(cost.bits, 64);
+    }
+
+    /// Pinned: an all-zero gradient stays all-zero but is still *charged*
+    /// as 2k floats — the codec keeps k (zero-valued) entries; cost models
+    /// the value+index pairs that would go on the wire, not their
+    /// numerical content.
+    #[test]
+    fn all_zero_gradient_keeps_k_zero_entries_at_full_cost() {
+        let mut g = vec![0.0f32; 8];
+        let cost = TopK::new(0.25).compress(&mut g);
+        assert_eq!(g, vec![0.0; 8]);
+        assert_eq!(cost.floats, 4); // k = 2 -> 2k floats
+        assert_eq!(cost.bits, 128);
+    }
+
+    /// Pinned: the empty gradient is outside the codec's domain — `k_of`
+    /// panics on `clamp(1, 0)`. No caller compresses an empty vector
+    /// (model dim >= 1); this test documents the boundary rather than
+    /// legitimizing it.
+    #[test]
+    #[should_panic]
+    fn empty_gradient_panics() {
+        let mut g: Vec<f32> = Vec::new();
+        let _ = TopK::new(0.5).compress(&mut g);
+    }
+
     #[test]
     fn preserves_energy_ordering() {
         let mut rng = Rng::new(1);

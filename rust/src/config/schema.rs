@@ -6,6 +6,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::round::{FlConfig, Parallelism, Transport};
 use crate::lbgm::ThresholdPolicy;
+use crate::sim::FaultPlan;
 use crate::util::json::Json;
 
 /// Which gradient codec a run stacks under LBGM.
@@ -90,6 +91,9 @@ pub struct ExperimentConfig {
     /// Deployment transport (`memory` | `threads` | `tcp`). Results are
     /// independent of this knob too; it selects which engine runs.
     pub transport: Transport,
+    /// Deterministic fault-injection schedule (`--faults plan.json` on the
+    /// CLI, or an inline `"faults": {...}` object in a JSON config).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ExperimentConfig {
@@ -113,6 +117,7 @@ impl Default for ExperimentConfig {
             codec: CodecKind::Identity,
             parallelism: Parallelism::default(),
             transport: Transport::default(),
+            faults: None,
         }
     }
 }
@@ -189,6 +194,9 @@ impl ExperimentConfig {
         if let Some(v) = gets("transport") {
             c.transport = Transport::parse(&v)?;
         }
+        if let Some(f) = j.get("faults") {
+            c.faults = Some(FaultPlan::from_json(f)?);
+        }
         Ok(c)
     }
 
@@ -207,6 +215,7 @@ impl ExperimentConfig {
             check_coherence: false,
             parallelism: self.parallelism,
             transport: self.transport,
+            faults: self.faults.clone(),
         }
     }
 }
@@ -241,6 +250,29 @@ mod tests {
         assert_eq!(c.transport, Transport::Tcp);
         assert!(ExperimentConfig::from_json(
             &Json::parse(r#"{"transport":"smoke-signals"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn inline_fault_plan_parses() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(
+                r#"{"faults":{"seed":3,"events":[{"kind":"drop_uplink","worker":1,"round":2}]}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let plan = c.faults.as_ref().unwrap();
+        assert_eq!(plan.seed, 3);
+        assert!(plan.absent(1, 2));
+        assert!(!plan.absent(1, 3));
+        // The plan survives the FlConfig lowering.
+        assert!(c.fl_config().faults.unwrap().absent(1, 2));
+        // A malformed plan is a config error.
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"faults":{"events":[{"kind":"nope","worker":0,"round":0}]}}"#)
+                .unwrap()
         )
         .is_err());
     }

@@ -40,6 +40,10 @@ pub struct CommLedger {
     pub wire_up_bytes: u64,
     /// Measured framed bytes sent over real links (0 in-memory).
     pub wire_down_bytes: u64,
+    /// Fault events observed: planned participants whose round update never
+    /// made it into an aggregation (dropped, late, disconnected, corrupt).
+    pub total_faults: u64,
+    per_worker_faults: Vec<u64>,
 }
 
 impl CommLedger {
@@ -49,6 +53,7 @@ impl CommLedger {
             per_worker_bits: vec![0; workers],
             per_worker_down_floats: vec![0; workers],
             per_worker_down_bits: vec![0; workers],
+            per_worker_faults: vec![0; workers],
             ..Default::default()
         }
     }
@@ -87,6 +92,17 @@ impl CommLedger {
         self.wire_down_bytes += bytes;
     }
 
+    /// Record one fault: a planned participant whose update did not arrive
+    /// in time for its round's aggregation.
+    pub fn record_fault(&mut self, worker: usize) {
+        self.total_faults += 1;
+        self.per_worker_faults[worker] += 1;
+    }
+
+    pub fn worker_faults(&self, worker: usize) -> u64 {
+        self.per_worker_faults[worker]
+    }
+
     pub fn worker_floats(&self, worker: usize) -> u64 {
         self.per_worker_floats[worker]
     }
@@ -120,12 +136,13 @@ impl CommLedger {
     }
 
     /// Internal-consistency check: totals equal the per-worker sums, in
-    /// both directions.
+    /// both directions, and for the fault counters.
     pub fn consistent(&self) -> bool {
         self.per_worker_floats.iter().sum::<u64>() == self.total_floats
             && self.per_worker_bits.iter().sum::<u64>() == self.total_bits
             && self.per_worker_down_floats.iter().sum::<u64>() == self.down_floats
             && self.per_worker_down_bits.iter().sum::<u64>() == self.down_bits
+            && self.per_worker_faults.iter().sum::<u64>() == self.total_faults
     }
 }
 
@@ -162,6 +179,22 @@ mod tests {
         assert_eq!(l.worker_down_floats(1), 10);
         // Uplink untouched.
         assert_eq!(l.total_floats, 0);
+        assert!(l.consistent());
+    }
+
+    #[test]
+    fn fault_counters_track_per_worker() {
+        let mut l = CommLedger::new(3);
+        l.record_fault(1);
+        l.record_fault(1);
+        l.record_fault(2);
+        assert_eq!(l.total_faults, 3);
+        assert_eq!(l.worker_faults(0), 0);
+        assert_eq!(l.worker_faults(1), 2);
+        assert_eq!(l.worker_faults(2), 1);
+        // Faults don't bleed into the transfer counters.
+        assert_eq!(l.total_floats, 0);
+        assert_eq!(l.down_floats, 0);
         assert!(l.consistent());
     }
 

@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::compress::{dense_cost, Compressor};
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
+use crate::sim::FaultPlan;
 use crate::util::timer::PhaseTimer;
 
 use super::accounting::CommLedger;
@@ -135,6 +136,12 @@ pub struct FlConfig {
     /// Deployment transport the launcher dispatches on; results are
     /// independent of it too (asserted by `tests/net_loopback.rs`).
     pub transport: Transport,
+    /// Deterministic fault-injection schedule (`None` = clean run). A
+    /// faulted worker misses its round entirely — it neither trains nor
+    /// uplinks, and the round commits with the workers that arrived,
+    /// FedAvg weights renormalized over that set. Every engine honors the
+    /// same plan identically (`tests/chaos_recovery.rs`).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for FlConfig {
@@ -150,6 +157,7 @@ impl Default for FlConfig {
             check_coherence: false,
             parallelism: Parallelism::default(),
             transport: Transport::default(),
+            faults: None,
         }
     }
 }
@@ -176,6 +184,44 @@ pub(crate) fn eval_or_carry(
         rec.test_metric = prev.test_metric;
     }
     Ok(())
+}
+
+/// Mean train loss of one round's arrived updates, carrying the previous
+/// round's value through an all-absent round (the eval columns'
+/// convention) instead of logging a spurious 0. Shared by every engine so
+/// the carry convention cannot drift apart.
+pub(crate) fn train_loss_or_carry(
+    train_loss_sum: f64,
+    arrived: usize,
+    series: &RunSeries,
+) -> f64 {
+    if arrived == 0 {
+        series.last().map(|r| r.train_loss).unwrap_or(0.0)
+    } else {
+        train_loss_sum / arrived as f64
+    }
+}
+
+/// Apply a fault plan to one round's sampled set: absent workers are
+/// fault-counted in the ledger, arrived workers are returned (input order
+/// preserved). Shared by the in-memory engines; the net server detects
+/// absence on the wire instead and counts faults as collections fail.
+pub(crate) fn apply_faults(
+    faults: Option<&crate::sim::FaultPlan>,
+    planned: Vec<usize>,
+    t: usize,
+    ledger: &mut CommLedger,
+) -> Vec<usize> {
+    match faults {
+        Some(plan) => {
+            let (arrived, absent) = plan.split_round(&planned, t);
+            for &w in &absent {
+                ledger.record_fault(w);
+            }
+            arrived
+        }
+        None => planned,
+    }
 }
 
 /// Outcome of a full federated run.
@@ -289,11 +335,18 @@ pub fn run_fl(
     let dim = server.theta.len();
     for t in 0..cfg.rounds {
         let start = std::time::Instant::now();
-        let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
-        // The theta broadcast is a real transmission: account the downlink.
-        for &w in &participants {
+        let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        let planned_n = planned.len();
+        // The theta broadcast is a real transmission to every *sampled*
+        // worker: the server cannot know who will fail, so the downlink is
+        // accounted for the full planned set even under faults.
+        for &w in &planned {
             ledger.record_down(w, dense_cost(dim));
         }
+        // Fault injection: absent workers miss the whole round — they
+        // neither train nor uplink, so none of their state advances (the
+        // invariant that keeps LBG copies coherent across absences).
+        let participants = apply_faults(cfg.faults.as_ref(), planned, t, &mut ledger);
         let mut msgs = Vec::with_capacity(participants.len());
         let mut train_loss_sum = 0f64;
         if let Some(shards) = shards.as_deref_mut() {
@@ -328,7 +381,11 @@ pub fn run_fl(
                 msgs.push(msg);
             }
         }
-        timers.time("aggregate", || server.apply(&msgs))?;
+        // A round with no arrivals commits without touching the model
+        // (the partial-participation degenerate case) instead of erroring.
+        if !msgs.is_empty() {
+            timers.time("aggregate", || server.apply(&msgs))?;
+        }
 
         if cfg.check_coherence {
             for &w in &participants {
@@ -343,7 +400,7 @@ pub fn run_fl(
 
         let mut rec = RoundRecord {
             round: t,
-            train_loss: train_loss_sum / participants.len() as f64,
+            train_loss: train_loss_or_carry(train_loss_sum, msgs.len(), &series),
             floats_up: ledger.total_floats,
             bits_up: ledger.total_bits,
             floats_down: ledger.down_floats,
@@ -351,6 +408,8 @@ pub fn run_fl(
             full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
             scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
             wall_secs: start.elapsed().as_secs_f64(),
+            participants: msgs.len(),
+            faults: planned_n - msgs.len(),
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
@@ -491,6 +550,66 @@ mod tests {
             *p += 1;
         }
         assert_eq!(xs, vec![0, 11, 21, 30, 41]);
+    }
+
+    #[test]
+    fn faulted_workers_are_absent_and_accounted() {
+        use crate::sim::{FaultEvent, FaultKind, FaultPlan};
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                worker: 1,
+                from: 0,
+                until: 2,
+                kind: FaultKind::DropUplink,
+            }],
+            profiles: Vec::new(),
+        };
+        let mut t = mock();
+        let cfg = FlConfig {
+            rounds: 6,
+            policy: ThresholdPolicy::fixed(0.4),
+            check_coherence: true,
+            parallelism: Parallelism::Sequential,
+            faults: Some(plan),
+            ..Default::default()
+        };
+        let out =
+            run_fl(&mut t, vec![0.0; 32], &cfg, &|| Box::new(Identity), "f").unwrap();
+        assert_eq!(out.ledger.total_faults, 2);
+        assert_eq!(out.ledger.worker_faults(1), 2);
+        assert!(out.ledger.consistent());
+        assert_eq!(out.series.rounds[0].participants, 7);
+        assert_eq!(out.series.rounds[0].faults, 1);
+        assert_eq!(out.series.rounds[2].participants, 8);
+        assert_eq!(out.series.rounds[2].faults, 0);
+        // Downlink still counts the full planned broadcast.
+        assert_eq!(out.ledger.total_down_floats(), 6 * 8 * 32);
+    }
+
+    #[test]
+    fn faulted_run_matches_across_engines() {
+        use crate::sim::{ChaosSpec, FaultPlan};
+        let plan = FaultPlan::random(21, 8, 20, &ChaosSpec::default());
+        let mk = |par: Parallelism| {
+            let mut t = mock();
+            let cfg = FlConfig {
+                rounds: 20,
+                policy: ThresholdPolicy::fixed(0.4),
+                sample_fraction: 0.75,
+                check_coherence: true,
+                parallelism: par,
+                faults: Some(plan.clone()),
+                ..Default::default()
+            };
+            run_fl(&mut t, vec![0.0; 32], &cfg, &|| Box::new(Identity), "fe")
+                .unwrap()
+        };
+        let a = mk(Parallelism::Sequential);
+        let b = mk(Parallelism::Threads(3));
+        assert_eq!(a.final_theta, b.final_theta);
+        assert_eq!(a.ledger.total_floats, b.ledger.total_floats);
+        assert_eq!(a.ledger.total_faults, b.ledger.total_faults);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::metrics::{RoundRecord, RunSeries};
 
 use super::accounting::CommLedger;
 use super::messages::WorkerMsg;
-use super::round::{eval_or_carry, FlConfig};
+use super::round::{apply_faults, eval_or_carry, train_loss_or_carry, FlConfig};
 use super::sampling::sample_clients;
 use super::server::Server;
 use super::trainer::LocalTrainer;
@@ -95,14 +95,23 @@ where
 
     let dim = server.theta.len();
     for t in 0..cfg.rounds {
-        let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        let planned_n = planned.len();
+        // The downlink is accounted for every sampled worker (the server
+        // broadcasts before it can know who will fail)...
+        for &w in &planned {
+            ledger.record_down(w, dense_cost(dim));
+        }
+        // ...but a faulted worker never receives its Round command, so its
+        // thread's state stays frozen for the round (same round-absence
+        // semantics as every other engine).
+        let participants = apply_faults(cfg.faults.as_ref(), planned, t, &mut ledger);
         // One clone of theta per round, refcount-bumped per participant.
         let theta = Arc::new(server.theta.clone());
         for &w in &participants {
             down_txs[w]
                 .send(Downlink::Round { t, theta: Arc::clone(&theta) })
                 .map_err(|_| anyhow::anyhow!("worker {w} hung up"))?;
-            ledger.record_down(w, dense_cost(dim));
         }
         let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(participants.len());
         for _ in 0..participants.len() {
@@ -112,9 +121,14 @@ where
         }
         // Deterministic aggregation order regardless of thread scheduling.
         msgs.sort_by_key(|m| m.worker);
-        let train_loss =
-            msgs.iter().map(|m| m.train_loss).sum::<f64>() / msgs.len() as f64;
-        server.apply(&msgs)?;
+        let train_loss = train_loss_or_carry(
+            msgs.iter().map(|m| m.train_loss).sum::<f64>(),
+            msgs.len(),
+            &series,
+        );
+        if !msgs.is_empty() {
+            server.apply(&msgs)?;
+        }
 
         let mut rec = RoundRecord {
             round: t,
@@ -125,6 +139,8 @@ where
             bits_down: ledger.down_bits,
             full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
             scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
+            participants: msgs.len(),
+            faults: planned_n - msgs.len(),
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
@@ -188,6 +204,47 @@ mod tests {
         let ln = series.last().unwrap().train_loss;
         assert!(ln < 0.5 * l0, "no convergence {l0} -> {ln}");
         assert_eq!(theta.len(), dim);
+    }
+
+    #[test]
+    fn threaded_honors_a_fault_plan() {
+        use crate::sim::{FaultEvent, FaultKind, FaultPlan};
+        let dim = 8;
+        let k = 4;
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                worker: 2,
+                from: 1,
+                until: 3,
+                kind: FaultKind::Disconnect,
+            }],
+            profiles: Vec::new(),
+        };
+        let cfg = FlConfig {
+            rounds: 5,
+            policy: ThresholdPolicy::fixed(0.5),
+            faults: Some(plan),
+            ..Default::default()
+        };
+        let mut eval = MockTrainer::new(dim, k, 0.1, 0.0, 3);
+        let weights = eval.weights();
+        let (series, ledger, _) = run_threaded_fl(
+            |_| MockTrainer::new(dim, k, 0.1, 0.01, 3),
+            &mut eval,
+            vec![0.0; dim],
+            weights,
+            &cfg,
+            &|| Box::new(Identity),
+            "faulted",
+        )
+        .unwrap();
+        assert_eq!(series.rounds[1].participants, 3);
+        assert_eq!(series.rounds[1].faults, 1);
+        assert_eq!(series.rounds[3].participants, 4);
+        assert_eq!(ledger.total_faults, 2);
+        assert_eq!(ledger.worker_faults(2), 2);
+        assert!(ledger.consistent());
     }
 
     #[test]

@@ -30,6 +30,20 @@
 //! sequential engine per seed, and its ledgers additionally report
 //! *measured* uplink/downlink wire bytes next to the paper's modeled
 //! float/bit counters.
+//!
+//! # Fault tolerance & chaos testing
+//!
+//! Rounds commit with **partial participation**: workers that miss the
+//! deadline (timeout, disconnect, corrupt frame) are fault-counted and
+//! skipped, FedAvg weights renormalize over the arrived set, and
+//! per-round `participants`/`faults` land in every metrics sink. The
+//! [`sim`] subsystem makes the misbehavior reproducible: a seeded
+//! [`sim::FaultPlan`] (JSON via `--faults plan.json`, the
+//! [`testkit::scenarios`] builders, or [`sim::FaultPlan::random`])
+//! replayed by [`sim::ChaosLink`] produces bit-identical runs across the
+//! sequential, threaded, `MemLink`, and TCP engines — a fault cuts the
+//! worker's round trip at the downlink, so absent workers never train and
+//! their LBGM look-back state stays coherent (`tests/chaos_recovery.rs`).
 
 pub mod analysis;
 pub mod bench;
@@ -43,5 +57,6 @@ pub mod linalg;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod sim;
 pub mod testkit;
 pub mod util;

@@ -17,6 +17,9 @@
 //!   --transport memory|threads|tcp  (deployment; results are bit-identical
 //!   across settings — threads/tcp run the analytic mock federation in one
 //!   process, since PJRT executables cannot cross threads)
+//!   --faults plan.json  (deterministic chaos: a seeded FaultPlan of
+//!   per-worker per-round drop/delay/disconnect/corrupt events; rounds
+//!   commit with whichever workers arrive — see the `sim` module docs)
 //!
 //! `serve`/`worker` run the mock federation over real sockets; the two
 //! sides must agree on --workers --dim --spread --sigma --seed, and every
@@ -37,6 +40,7 @@ use fedrecycle::figures::{self, common::Scale};
 use fedrecycle::metrics::{write_csv, RunSeries};
 use fedrecycle::net::{accept_workers, connect_worker, run_server_rounds, run_tcp_fl};
 use fedrecycle::runtime::{Manifest, Runtime};
+use fedrecycle::sim::FaultPlan;
 use fedrecycle::util::cli::Args;
 
 fn main() {
@@ -95,6 +99,9 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("transport") {
         cfg.transport = Transport::parse(v)?;
+    }
+    if let Some(p) = args.get("faults") {
+        cfg.faults = Some(FaultPlan::from_file(Path::new(p))?);
     }
     Ok(cfg)
 }
@@ -255,6 +262,13 @@ fn print_deployment_summary(
         ledger.wire_down_bytes,
         100.0 * series.scalar_fraction()
     );
+    if ledger.total_faults > 0 {
+        println!(
+            "chaos: {} round update(s) lost to faults; worst round had {} participant(s)",
+            ledger.total_faults,
+            series.min_participants()
+        );
+    }
 }
 
 /// `serve`: the networked aggregation server. Binds `--listen`, accepts
@@ -279,6 +293,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let handshake = Duration::from_secs(args.u64_or("handshake-timeout", 120));
     let deadline = Duration::from_secs(args.u64_or("round-deadline", 600));
     let mut links = accept_workers(&listener, k, spec.dim, &fl, handshake)?;
+    if let Some(plan) = &fl.faults {
+        println!(
+            "chaos: injecting {} fault event(s) from the plan (seed {})",
+            plan.events.len(),
+            plan.seed
+        );
+        links = fedrecycle::sim::chaos::wrap_links(links, plan);
+    }
     println!("all {k} workers connected; training");
     let (series, ledger, _theta) = run_server_rounds(
         &mut links,

@@ -25,6 +25,14 @@ pub struct RoundRecord {
     pub full_sends: usize,
     pub scalar_sends: usize,
     pub wall_secs: f64,
+    /// Workers whose updates made this round's aggregation (equals
+    /// `full_sends + scalar_sends`; less than the sampled set when faults
+    /// or deadline misses removed someone).
+    pub participants: usize,
+    /// Sampled participants that did *not* arrive this round (dropped,
+    /// late, disconnected, or corrupt — this round's count, not
+    /// cumulative).
+    pub faults: usize,
 }
 
 /// A named training run's full history.
@@ -70,6 +78,16 @@ impl RunSeries {
         self.last()
             .map(|r| (r.wire_up_bytes, r.wire_down_bytes))
             .unwrap_or((0, 0))
+    }
+
+    /// Total fault events over the run (absent planned participants).
+    pub fn total_faults(&self) -> u64 {
+        self.rounds.iter().map(|r| r.faults as u64).sum()
+    }
+
+    /// Smallest per-round participant count (0 for an empty series).
+    pub fn min_participants(&self) -> usize {
+        self.rounds.iter().map(|r| r.participants).min().unwrap_or(0)
     }
 
     /// Best (max) test metric over the run.
@@ -128,6 +146,18 @@ mod tests {
         assert_eq!(s.total_floats(), 120);
         assert!((s.scalar_fraction() - 19.0 / 30.0).abs() < 1e-12);
         assert!((s.savings_vs(240) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn participation_and_fault_summaries() {
+        let mut s = RunSeries::new("x");
+        s.push(RoundRecord { round: 0, participants: 4, faults: 0, ..Default::default() });
+        s.push(RoundRecord { round: 1, participants: 3, faults: 1, ..Default::default() });
+        s.push(RoundRecord { round: 2, participants: 2, faults: 2, ..Default::default() });
+        assert_eq!(s.total_faults(), 3);
+        assert_eq!(s.min_participants(), 2);
+        assert_eq!(RunSeries::new("e").min_participants(), 0);
+        assert_eq!(RunSeries::new("e").total_faults(), 0);
     }
 
     #[test]

@@ -12,12 +12,12 @@ pub fn write_csv(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
         fs::create_dir_all(dir)?;
     }
     let mut out = String::from(
-        "run,round,train_loss,test_loss,test_metric,floats_up,bits_up,floats_down,bits_down,wire_up_bytes,wire_down_bytes,full_sends,scalar_sends,wall_secs\n",
+        "run,round,train_loss,test_loss,test_metric,floats_up,bits_up,floats_down,bits_down,wire_up_bytes,wire_down_bytes,full_sends,scalar_sends,wall_secs,participants,faults\n",
     );
     for run in runs {
         for r in &run.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.4}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.4},{},{}\n",
                 run.name,
                 r.round,
                 r.train_loss,
@@ -31,7 +31,9 @@ pub fn write_csv(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
                 r.wire_down_bytes,
                 r.full_sends,
                 r.scalar_sends,
-                r.wall_secs
+                r.wall_secs,
+                r.participants,
+                r.faults
             ));
         }
     }
@@ -56,6 +58,8 @@ pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
             ("wire_up_bytes", num(r.total_wire_bytes().0 as f64)),
             ("wire_down_bytes", num(r.total_wire_bytes().1 as f64)),
             ("scalar_fraction", num(r.scalar_fraction())),
+            ("total_faults", num(r.total_faults() as f64)),
+            ("min_participants", num(r.min_participants() as f64)),
         ])
     });
     fs::write(path, Json::to_string(&arr(items)))?;
@@ -77,7 +81,9 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("a.csv")).unwrap();
         assert!(csv.lines().count() == 2);
         assert!(csv.contains("demo,0"));
+        assert!(csv.lines().next().unwrap().ends_with("participants,faults"));
         let j = Json::parse(&std::fs::read_to_string(dir.join("a.json")).unwrap()).unwrap();
         assert_eq!(j.as_arr().unwrap()[0].req_str("name").unwrap(), "demo");
+        assert_eq!(j.as_arr().unwrap()[0].req_f64("total_faults").unwrap(), 0.0);
     }
 }

@@ -16,9 +16,13 @@
 //!   unshaped run — only wall-clock changes.
 //!
 //! A `recv` that hits its timeout returns an error and may leave a
-//! stream-oriented link mid-frame; the round engine treats a missed
-//! deadline as fatal for the run, so links are never reused after a
-//! timeout fires.
+//! stream-oriented link mid-frame. The round engine treats a missed
+//! deadline as *absence for that round* (partial participation), not as a
+//! fatal error: a link desynchronized by a genuine mid-frame timeout just
+//! keeps failing its reads, and its worker stays absent while the run
+//! completes with the others. A fourth implementation,
+//! [`ChaosLink`](crate::sim::ChaosLink), decorates any link with a seeded
+//! fault-injection schedule for torture tests.
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;

@@ -12,9 +12,16 @@
 //!   [`SimLink`] + [`LinkProfile`] (deterministic latency/bandwidth/loss
 //!   shaping for straggler and slow-uplink scenarios).
 //! * [`server`] — accepts K workers, handshakes, drives rounds with a
-//!   per-round deadline, aggregates in deterministic participant order.
+//!   per-round deadline, aggregates the arrived subset in deterministic
+//!   participant order (partial participation: a worker that misses the
+//!   deadline is fault-counted and skipped, not fatal).
 //! * [`client`] — the worker loop: handshake, train on `Round`, uplink an
 //!   `Update`, exit on `Shutdown`.
+//!
+//! For reproducible torture tests, [`crate::sim`] wraps these links in a
+//! seeded fault-injection decorator ([`ChaosLink`](crate::sim::ChaosLink));
+//! `run_tcp_fl`/`run_mem_fl` wire it up automatically from
+//! `FlConfig::faults`.
 //!
 //! # Networked quickstart
 //!
@@ -62,7 +69,9 @@ pub const DEFAULT_ROUND_DEADLINE: Duration = Duration::from_secs(120);
 /// Run a full federated deployment over TCP loopback in one process: a
 /// listener on an ephemeral 127.0.0.1 port, one OS thread per worker
 /// connecting through [`connect_worker`], and the round-driving server on
-/// the calling thread. Bit-identical to [`run_fl`] per seed.
+/// the calling thread. Bit-identical to [`run_fl`] per seed — including
+/// under a `cfg.faults` plan, which is injected by wrapping each
+/// server-side link in a [`ChaosLink`](crate::sim::ChaosLink).
 ///
 /// `make_trainer(k)` builds worker k's local trainer (must be `Send` to
 /// cross onto its thread); `eval_trainer` evaluates server-side. On a
@@ -97,6 +106,9 @@ where
     let dim = theta0.len();
     let mut links =
         accept_workers(&listener, k, dim, cfg, DEFAULT_HANDSHAKE_TIMEOUT)?;
+    if let Some(plan) = &cfg.faults {
+        links = crate::sim::chaos::wrap_links(links, plan);
+    }
     let out = run_server_rounds(
         &mut links,
         eval_trainer,
@@ -116,9 +128,10 @@ where
 /// Like [`run_tcp_fl`] but over in-process [`MemLink`]s (no sockets), with
 /// an optional [`LinkProfile`] shaping every worker's uplink (each worker
 /// gets an independent deterministic loss stream, `profile.seed ^ id`).
-/// Frames still pass through the full wire codec, so results remain
-/// bit-identical to the sequential engine — shaping changes wall-clock
-/// only.
+/// When `profile` is `None`, per-worker profiles attached to `cfg.faults`
+/// apply instead. Frames still pass through the full wire codec, so
+/// results remain bit-identical to the sequential engine per seed and
+/// fault plan — shaping changes wall-clock only.
 pub fn run_mem_fl<T, F>(
     make_trainer: F,
     eval_trainer: &mut dyn LocalTrainer,
@@ -138,11 +151,12 @@ where
     let mut handles = Vec::with_capacity(k);
     for id in 0..k {
         let (srv_side, wrk_side) = MemLink::pair();
-        let mut wlink: Box<dyn Link> = match profile {
-            Some(p) => Box::new(SimLink::wrap(
-                Box::new(wrk_side),
-                LinkProfile { seed: p.seed ^ id as u64, ..p },
-            )),
+        let shaped = match profile {
+            Some(p) => Some(LinkProfile { seed: p.seed ^ id as u64, ..p }),
+            None => cfg.faults.as_ref().and_then(|plan| plan.profile_for(id)),
+        };
+        let mut wlink: Box<dyn Link> = match shaped {
+            Some(p) => Box::new(SimLink::wrap(Box::new(wrk_side), p)),
             None => Box::new(wrk_side),
         };
         let mut trainer = make_trainer(id);
@@ -158,6 +172,9 @@ where
         let w = handshake_one(link.as_mut(), k, dim, cfg)?;
         anyhow::ensure!(w == i, "link {i} handshook as worker {w}");
         link.set_recv_timeout(None)?;
+    }
+    if let Some(plan) = &cfg.faults {
+        server_links = crate::sim::chaos::wrap_links(server_links, plan);
     }
     let out = run_server_rounds(
         &mut server_links,

@@ -9,6 +9,15 @@
 //! TCP-loopback run is bit-identical to [`run_fl`] per seed (asserted by
 //! `tests/net_loopback.rs`).
 //!
+//! Rounds use **partial-participation aggregation**: a worker whose update
+//! doesn't arrive by the deadline — timeout, disconnect, corrupt frame, or
+//! any other per-link failure — is marked absent for the round (logged and
+//! counted in the ledger's fault counters) and the round commits with the
+//! workers that did arrive, FedAvg weights renormalized over that set. A
+//! round with no arrivals commits without touching the model. Stale
+//! `Update` frames for earlier rounds (a straggler's late answer
+//! surfacing after a rejoin) are discarded, not fatal.
+//!
 //! The ledger records both the modeled counters (floats/bits, the paper's
 //! axes) and the *measured* wire bytes of every round-protocol frame that
 //! crossed a link (theta broadcasts and uplink updates; handshake and
@@ -25,7 +34,7 @@ use anyhow::{bail, ensure, Result};
 use crate::compress::dense_cost;
 use crate::coordinator::accounting::CommLedger;
 use crate::coordinator::messages::WorkerMsg;
-use crate::coordinator::round::{eval_or_carry, FlConfig};
+use crate::coordinator::round::{eval_or_carry, train_loss_or_carry, FlConfig};
 use crate::coordinator::sampling::sample_clients;
 use crate::coordinator::server::Server;
 use crate::coordinator::trainer::LocalTrainer;
@@ -135,15 +144,65 @@ pub fn accept_workers(
     Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
 }
 
+/// Collect worker `w`'s round-`t` update from its link, tolerating stale
+/// frames: an `Update` for an earlier round is discarded (its measured
+/// wire bytes still ledger-recorded — the frame really crossed the link)
+/// and the read retried until `deadline`. Any other failure — timeout,
+/// decode error, protocol violation — is returned as the error that marks
+/// the worker absent for this round. Returns the update and its measured
+/// wire bytes.
+fn collect_update(
+    link: &mut dyn Link,
+    w: usize,
+    t: usize,
+    deadline: Instant,
+    ledger: &mut CommLedger,
+) -> Result<(WorkerMsg, u64)> {
+    loop {
+        let remaining = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(1));
+        link.set_recv_timeout(Some(remaining))?;
+        let frame = link.recv()?;
+        let bytes = frame.wire_bytes() as u64;
+        let tag = frame.tag();
+        let Frame::Update(msg) = frame else {
+            bail!("worker {w} sent tag {tag} mid-round");
+        };
+        ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
+        if msg.round < t {
+            eprintln!(
+                "net: discarding worker {w}'s stale round-{} update in round {t}",
+                msg.round
+            );
+            ledger.record_wire_up(bytes);
+            // Bound the discard loop: a peer streaming stale frames must
+            // not stall the round past its deadline.
+            ensure!(
+                Instant::now() < deadline,
+                "worker {w} flooded round {t} with stale updates until the deadline"
+            );
+            continue;
+        }
+        ensure!(msg.round == t, "worker {w} answered round {} in round {t}", msg.round);
+        return Ok((msg, bytes));
+    }
+}
+
 /// Drive a full federated run over handshaken links (`links[w]` is worker
 /// w's connection). Each round: broadcast theta to the sampled
 /// participants, collect their updates under `round_deadline`, aggregate
-/// in participant order, evaluate on the cadence. Sends `Shutdown` on
-/// every link when training completes.
+/// the arrived subset in participant order (absent workers are logged,
+/// fault-counted, and skipped — see the module docs), evaluate on the
+/// cadence. Sends `Shutdown` on every link when training completes.
 ///
-/// Bit-identical to the sequential engine per seed: same sampling, same
-/// aggregation order, same f32/f64 arithmetic — the wire codec preserves
-/// exact bit patterns.
+/// Bit-identical to the sequential engine per seed and fault plan: same
+/// sampling, same aggregation order, same f32/f64 arithmetic — the wire
+/// codec preserves exact bit patterns.
+///
+/// A worker that times out mid-frame on a stream link leaves that link
+/// desynchronized; its subsequent reads keep failing and it simply stays
+/// absent for the rest of the run while the others proceed.
 pub fn run_server_rounds(
     links: &mut [Box<dyn Link>],
     eval_trainer: &mut dyn LocalTrainer,
@@ -163,49 +222,60 @@ pub fn run_server_rounds(
 
     for t in 0..cfg.rounds {
         let start = Instant::now();
-        let participants = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
 
-        // Downlink: broadcast the global model to this round's participants
-        // — encoded once, the same byte buffer fanned out to every link.
+        // Downlink: broadcast the global model to this round's sampled
+        // workers — encoded once, the same byte buffer fanned out to every
+        // link. Bytes leaving the server are accounted even if the network
+        // (or an injected fault) eats them downstream. A link whose send
+        // fails outright (peer's socket is gone) marks its worker absent
+        // for the round instead of killing the run — the crashed worker
+        // stays absent while the others proceed.
         let frame = Frame::Round { t: t as u64, theta: server.theta.clone() };
         let encoded = frame.to_bytes();
-        for &w in &participants {
-            let sent = links[w].send_raw(&encoded)?;
-            ledger.record_down(w, dense_cost(dim));
-            ledger.record_wire_down(sent as u64);
+        let mut reachable = Vec::with_capacity(planned.len());
+        for &w in &planned {
+            match links[w].send_raw(&encoded) {
+                Ok(sent) => {
+                    ledger.record_down(w, dense_cost(dim));
+                    ledger.record_wire_down(sent as u64);
+                    reachable.push(w);
+                }
+                Err(e) => {
+                    eprintln!("net: worker {w} unreachable for round {t}: {e:#}");
+                    ledger.record_fault(w);
+                }
+            }
         }
 
-        // Uplink: collect one update per participant before the deadline.
-        // One connection per worker, so receiving in participant order is
-        // already the deterministic aggregation order.
+        // Uplink: collect one update per reachable worker before the
+        // deadline; whoever fails is absent for this round. One connection
+        // per worker, so receiving in participant order is already the
+        // deterministic aggregation order.
         let deadline = Instant::now() + round_deadline;
-        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(participants.len());
+        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(reachable.len());
         let mut train_loss_sum = 0f64;
-        for &w in &participants {
-            let remaining = deadline
-                .saturating_duration_since(Instant::now())
-                .max(Duration::from_millis(1));
-            links[w].set_recv_timeout(Some(remaining))?;
-            let frame = links[w].recv().map_err(|e| {
-                anyhow::anyhow!("worker {w} missed the round-{t} deadline: {e}")
-            })?;
-            let bytes = frame.wire_bytes();
-            let tag = frame.tag();
-            let Frame::Update(msg) = frame else {
-                bail!("worker {w} sent tag {tag} mid-round");
-            };
-            ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
-            ensure!(msg.round == t, "worker {w} answered round {} in round {t}", msg.round);
-            ledger.record_wire_up(bytes as u64);
-            ledger.record(w, msg.cost, msg.is_scalar());
-            train_loss_sum += msg.train_loss;
-            msgs.push(msg);
+        for &w in &reachable {
+            match collect_update(links[w].as_mut(), w, t, deadline, &mut ledger) {
+                Ok((msg, bytes)) => {
+                    ledger.record_wire_up(bytes);
+                    ledger.record(w, msg.cost, msg.is_scalar());
+                    train_loss_sum += msg.train_loss;
+                    msgs.push(msg);
+                }
+                Err(e) => {
+                    eprintln!("net: worker {w} absent from round {t}: {e:#}");
+                    ledger.record_fault(w);
+                }
+            }
         }
-        server.apply(&msgs)?;
+        if !msgs.is_empty() {
+            server.apply(&msgs)?;
+        }
 
         let mut rec = RoundRecord {
             round: t,
-            train_loss: train_loss_sum / msgs.len() as f64,
+            train_loss: train_loss_or_carry(train_loss_sum, msgs.len(), &series),
             floats_up: ledger.total_floats,
             bits_up: ledger.total_bits,
             floats_down: ledger.down_floats,
@@ -215,6 +285,8 @@ pub fn run_server_rounds(
             full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
             scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
             wall_secs: start.elapsed().as_secs_f64(),
+            participants: msgs.len(),
+            faults: planned.len() - msgs.len(),
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
@@ -236,42 +308,219 @@ pub fn run_server_rounds(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::messages::{Payload, SCALAR_COST};
     use crate::net::link::MemLink;
 
     fn cfg() -> FlConfig {
         FlConfig { tau: 3, eta: 0.1, policy: ThresholdPolicy::fixed(0.25), ..Default::default() }
     }
 
+    fn scalar_update(worker: usize, round: usize) -> WorkerMsg {
+        WorkerMsg {
+            worker,
+            round,
+            payload: Payload::Scalar { rho: 0.5 },
+            cost: SCALAR_COST,
+            train_loss: 0.25,
+        }
+    }
+
+    /// Table-driven handshake coverage: the happy path plus every way a
+    /// peer can get the handshake wrong — bad dimension, out-of-range id,
+    /// a control frame instead of `Hello`, an `Update` sent before any
+    /// `Welcome` was issued, and silence until the timeout expires.
     #[test]
-    fn handshake_accepts_valid_hello() {
-        let (mut srv, mut wrk) = MemLink::pair();
-        wrk.send(&Frame::Hello { worker: 2, dim: 10 }).unwrap();
-        let w = handshake_one(&mut srv, 4, 10, &cfg()).unwrap();
-        assert_eq!(w, 2);
-        match wrk.recv().unwrap() {
-            Frame::Welcome { dim, tau, eta, delta } => {
-                assert_eq!(dim, 10);
-                assert_eq!(tau, 3);
-                assert_eq!(eta, 0.1);
-                assert_eq!(delta, 0.25);
+    fn handshake_table() {
+        struct Case {
+            name: &'static str,
+            send: Vec<Frame>,
+            timeout: Option<Duration>,
+            /// `Ok(worker)` or `Err(substring of the error)`.
+            want: std::result::Result<usize, &'static str>,
+        }
+        let cases = vec![
+            Case {
+                name: "valid hello",
+                send: vec![Frame::Hello { worker: 2, dim: 10 }],
+                timeout: None,
+                want: Ok(2),
+            },
+            Case {
+                name: "dim mismatch",
+                send: vec![Frame::Hello { worker: 1, dim: 99 }],
+                timeout: None,
+                want: Err("dim"),
+            },
+            Case {
+                name: "worker id out of range",
+                send: vec![Frame::Hello { worker: 9, dim: 10 }],
+                timeout: None,
+                want: Err("out of range"),
+            },
+            Case {
+                name: "shutdown instead of hello",
+                send: vec![Frame::Shutdown],
+                timeout: None,
+                want: Err("expected Hello"),
+            },
+            Case {
+                name: "update before welcome",
+                send: vec![Frame::Update(scalar_update(0, 0))],
+                timeout: None,
+                want: Err("expected Hello"),
+            },
+            Case {
+                name: "round frame from a confused client",
+                send: vec![Frame::Round { t: 0, theta: vec![0.0; 10] }],
+                timeout: None,
+                want: Err("expected Hello"),
+            },
+            Case {
+                name: "silence until the timeout expires",
+                send: vec![],
+                timeout: Some(Duration::from_millis(25)),
+                want: Err(""),
+            },
+        ];
+        for c in cases {
+            let (mut srv, mut wrk) = MemLink::pair();
+            if let Some(to) = c.timeout {
+                srv.set_recv_timeout(Some(to)).unwrap();
             }
-            other => panic!("wrong frame {other:?}"),
+            for f in &c.send {
+                wrk.send(f).unwrap();
+            }
+            let got = handshake_one(&mut srv, 4, 10, &cfg());
+            match c.want {
+                Ok(worker) => {
+                    assert_eq!(got.unwrap(), worker, "case `{}`", c.name);
+                    match wrk.recv().unwrap() {
+                        Frame::Welcome { dim, tau, eta, delta } => {
+                            assert_eq!(dim, 10, "case `{}`", c.name);
+                            assert_eq!(tau, 3);
+                            assert_eq!(eta, 0.1);
+                            assert_eq!(delta, 0.25);
+                        }
+                        other => panic!("case `{}`: wrong reply {other:?}", c.name),
+                    }
+                }
+                Err(fragment) => {
+                    let err = format!("{:#}", got.expect_err(c.name));
+                    assert!(
+                        err.contains(fragment),
+                        "case `{}`: error `{err}` missing `{fragment}`",
+                        c.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// A worker whose socket is already dead at broadcast time is marked
+    /// absent for the round (fault-counted) while the run completes with
+    /// the survivors — a crashed worker must never abort the federation.
+    #[test]
+    fn dead_link_marks_worker_absent_not_fatal() {
+        use crate::compress::Identity;
+        use crate::coordinator::trainer::MockTrainer;
+        use crate::coordinator::worker::Worker;
+
+        let dim = 4;
+        let (srv0, mut wrk0) = MemLink::pair();
+        let (srv1, wrk1) = MemLink::pair();
+        drop(wrk1); // worker 1 crashed before the run started
+        let mut links: Vec<Box<dyn Link>> = vec![Box::new(srv0), Box::new(srv1)];
+
+        let run_cfg = FlConfig { rounds: 2, tau: 1, ..cfg() };
+        let handle = std::thread::spawn(move || -> Result<usize> {
+            let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 1);
+            let mut worker = Worker::new(0, Box::new(Identity));
+            let policy = ThresholdPolicy::fixed(0.25);
+            let mut served = 0usize;
+            loop {
+                match wrk0.recv()? {
+                    Frame::Shutdown => break,
+                    Frame::Round { t, theta } => {
+                        let (loss, grad) = trainer.local_round(0, &theta, 1, 0.1)?;
+                        let msg = worker.process_round(t as usize, grad, loss, &policy);
+                        wrk0.send(&Frame::Update(msg))?;
+                        served += 1;
+                    }
+                    other => anyhow::bail!("unexpected frame {other:?}"),
+                }
+            }
+            Ok(served)
+        });
+
+        let mut eval = MockTrainer::new(dim, 2, 0.2, 0.0, 1);
+        let (series, ledger, _theta) = run_server_rounds(
+            &mut links,
+            &mut eval,
+            vec![0.0; dim],
+            vec![0.5, 0.5],
+            &run_cfg,
+            Duration::from_secs(10),
+            "dead-link",
+        )
+        .expect("a dead link must not abort the run");
+        assert_eq!(handle.join().unwrap().unwrap(), 2);
+        assert_eq!(ledger.worker_faults(1), 2);
+        assert_eq!(ledger.worker_faults(0), 0);
+        for r in &series.rounds {
+            assert_eq!(r.participants, 1);
+            assert_eq!(r.faults, 1);
+        }
+        // No downlink was accounted for the unreachable worker.
+        assert_eq!(ledger.worker_down_floats(1), 0);
+        assert_eq!(ledger.worker_down_floats(0), 2 * dim as u64);
+        assert!(ledger.consistent());
+    }
+
+    /// A worker racing ahead — `Hello` immediately followed by an `Update`
+    /// before the server's `Welcome` — still handshakes; the early frame
+    /// stays queued for the round loop (pinned behavior: the transport is
+    /// ordered, so nothing is lost, and the round collector's stale-frame
+    /// handling deals with it).
+    #[test]
+    fn early_update_after_hello_stays_queued() {
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello { worker: 1, dim: 10 }).unwrap();
+        wrk.send(&Frame::Update(scalar_update(1, 0))).unwrap();
+        let w = handshake_one(&mut srv, 4, 10, &cfg()).unwrap();
+        assert_eq!(w, 1);
+        match srv.recv().unwrap() {
+            Frame::Update(m) => assert_eq!(m.round, 0),
+            other => panic!("queued frame lost, got {other:?}"),
         }
     }
 
     #[test]
-    fn handshake_rejects_bad_dim_and_id() {
+    fn stale_updates_are_discarded_mid_round() {
         let (mut srv, mut wrk) = MemLink::pair();
-        wrk.send(&Frame::Hello { worker: 1, dim: 99 }).unwrap();
-        assert!(handshake_one(&mut srv, 4, 10, &cfg()).is_err());
-
+        let mut ledger = CommLedger::new(4);
+        wrk.send(&Frame::Update(scalar_update(1, 0))).unwrap();
+        wrk.send(&Frame::Update(scalar_update(1, 2))).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let (msg, bytes) = collect_update(&mut srv, 1, 2, deadline, &mut ledger).unwrap();
+        assert_eq!(msg.round, 2);
+        assert_eq!(bytes, Frame::Update(scalar_update(1, 2)).wire_bytes() as u64);
+        // The discarded stale frame still crossed the link: its measured
+        // bytes are in the ledger (the caller records the kept frame's).
+        assert_eq!(
+            ledger.wire_up_bytes,
+            Frame::Update(scalar_update(1, 0)).wire_bytes() as u64
+        );
+        // A frame from the future is a protocol violation, not discardable.
         let (mut srv, mut wrk) = MemLink::pair();
-        wrk.send(&Frame::Hello { worker: 9, dim: 10 }).unwrap();
-        assert!(handshake_one(&mut srv, 4, 10, &cfg()).is_err());
-
+        wrk.send(&Frame::Update(scalar_update(1, 7))).unwrap();
+        let err = collect_update(&mut srv, 1, 2, deadline, &mut ledger)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("answered round 7"), "{err}");
+        // A wrong-worker update is rejected outright.
         let (mut srv, mut wrk) = MemLink::pair();
-        wrk.send(&Frame::Shutdown).unwrap();
-        assert!(handshake_one(&mut srv, 4, 10, &cfg()).is_err());
+        wrk.send(&Frame::Update(scalar_update(3, 2))).unwrap();
+        assert!(collect_update(&mut srv, 1, 2, deadline, &mut ledger).is_err());
     }
 
     #[test]

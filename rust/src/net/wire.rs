@@ -82,6 +82,29 @@ pub fn fnv1a(bytes: &[u8]) -> u32 {
     h
 }
 
+/// Cheap structural peek at an encoded frame: its tag byte, or `None` when
+/// the buffer is shorter than a header or the magic doesn't match. No
+/// payload validation — callers that need the frame still decode it.
+pub fn peek_tag(bytes: &[u8]) -> Option<u8> {
+    if bytes.len() >= HEADER_LEN && bytes[0..4] == MAGIC {
+        Some(bytes[6])
+    } else {
+        None
+    }
+}
+
+/// For an encoded `Round` frame, the round number `t`; `None` for any
+/// other tag or a malformed buffer. Used by the chaos layer to match
+/// in-flight broadcasts against a fault plan without a full decode.
+pub fn peek_round(bytes: &[u8]) -> Option<u64> {
+    if peek_tag(bytes) != Some(TAG_ROUND) || bytes.len() < HEADER_LEN + 8 {
+        return None;
+    }
+    let mut t = [0u8; 8];
+    t.copy_from_slice(&bytes[HEADER_LEN..HEADER_LEN + 8]);
+    Some(u64::from_le_bytes(t))
+}
+
 // ---------------------------------------------------------------------------
 // Little-endian primitives.
 // ---------------------------------------------------------------------------
@@ -667,6 +690,18 @@ mod tests {
         let mut huge = Frame::Shutdown.to_bytes();
         huge[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(Frame::read_from(&mut std::io::Cursor::new(huge)).is_err());
+    }
+
+    #[test]
+    fn peek_helpers_match_the_codec() {
+        let round = Frame::Round { t: 42, theta: vec![1.0, 2.0] }.to_bytes();
+        assert_eq!(peek_tag(&round), Some(TAG_ROUND));
+        assert_eq!(peek_round(&round), Some(42));
+        let shutdown = Frame::Shutdown.to_bytes();
+        assert_eq!(peek_tag(&shutdown), Some(TAG_SHUTDOWN));
+        assert_eq!(peek_round(&shutdown), None);
+        assert_eq!(peek_tag(b"FRL"), None);
+        assert_eq!(peek_round(b"not a frame at all"), None);
     }
 
     #[test]

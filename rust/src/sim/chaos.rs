@@ -1,0 +1,217 @@
+//! `sim::chaos` — the [`ChaosLink`] decorator that replays a [`FaultPlan`]
+//! against a live [`Link`].
+//!
+//! The server wraps each worker's link in a `ChaosLink` (see
+//! [`wrap_links`]); the decorator watches the downlink for `Round` frames
+//! and, when the plan faults `(worker, t)`, swallows the broadcast (the
+//! bytes are reported as sent — they "die in the network") and arms a
+//! pending failure that the next `recv` on the link raises in the
+//! fault-kind-specific way: an instant miss, a bounded straggler delay, a
+//! connection-reset error, or a genuinely corrupted frame pushed through
+//! the real wire decoder. Control-plane frames (handshake, shutdown) are
+//! never intercepted, so a chaos deployment always tears down cleanly.
+//!
+//! Cutting the round trip at the downlink is what keeps a faulted worker's
+//! state frozen for the round (trainer stream, codec residuals, LBG) —
+//! the invariant behind the bit-exact parity with a fault-restricted
+//! sequential run; see the [`sim::fault`] module docs.
+//!
+//! [`sim::fault`]: super::fault
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::messages::{Payload, WorkerMsg, SCALAR_COST};
+use crate::net::link::Link;
+use crate::net::wire::{self, Frame};
+use crate::util::rng::Rng;
+
+use super::fault::{FaultKind, FaultPlan};
+
+/// Upper bound on an injected [`FaultKind::Delay`] sleep, so a hostile or
+/// typo'd plan cannot stall a run for minutes per fault.
+///
+/// Like a real straggler, an injected delay burns the *shared* per-round
+/// deadline while the server waits: with a deadline close to the plan's
+/// total injected delay, healthy workers collected afterwards can miss it
+/// too — realistic cascade behavior, but it breaks bit-parity with the
+/// fault-restricted sequential reference. Keep `round_deadline` comfortably
+/// above the largest per-round sum of injected delays when parity matters
+/// (the in-process deployments' 120 s default vs. this 2 s cap gives a
+/// wide margin).
+pub const MAX_INJECTED_DELAY: Duration = Duration::from_millis(2_000);
+
+/// A [`Link`] decorator that injects the scheduled faults of one worker.
+pub struct ChaosLink {
+    inner: Box<dyn Link>,
+    worker: usize,
+    plan: Arc<FaultPlan>,
+    /// Armed by a swallowed downlink; consumed by the next `recv`.
+    pending: Option<(u64, FaultKind)>,
+}
+
+impl ChaosLink {
+    pub fn wrap(inner: Box<dyn Link>, worker: usize, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, worker, plan, pending: None }
+    }
+
+    /// The fault-kind-specific receive failure for round `t`.
+    fn raise(&self, t: u64, kind: FaultKind) -> anyhow::Error {
+        let w = self.worker;
+        match kind {
+            FaultKind::DropUplink => {
+                anyhow::anyhow!("chaos: worker {w}'s round-{t} uplink was dropped")
+            }
+            FaultKind::Delay { ms } => {
+                std::thread::sleep(Duration::from_millis(ms).min(MAX_INJECTED_DELAY));
+                anyhow::anyhow!("chaos: worker {w} answered round {t} after the deadline")
+            }
+            FaultKind::Disconnect => {
+                anyhow::anyhow!("chaos: connection to worker {w} reset (round {t})")
+            }
+            FaultKind::CorruptFrame => {
+                // Fabricate the frame the worker would plausibly have sent,
+                // corrupt one deterministic payload byte, and push it
+                // through the real decoder so the server handles an honest
+                // checksum rejection.
+                let msg = WorkerMsg {
+                    worker: w,
+                    round: t as usize,
+                    payload: Payload::Scalar { rho: 0.0 },
+                    cost: SCALAR_COST,
+                    train_loss: 0.0,
+                };
+                let mut bytes = Frame::Update(msg).to_bytes();
+                let mut rng =
+                    Rng::new(self.plan.seed ^ ((w as u64) << 32) ^ t.wrapping_mul(0x9E37));
+                let payload = bytes.len() - wire::HEADER_LEN - wire::CHECKSUM_LEN;
+                let i = wire::HEADER_LEN + rng.below(payload.max(1));
+                bytes[i] ^= 0x5A;
+                let err = match Frame::from_bytes(&bytes) {
+                    Err(e) => e,
+                    Ok(_) => anyhow::anyhow!("corrupted frame unexpectedly decoded"),
+                };
+                err.context(format!(
+                    "chaos: worker {w}'s round-{t} uplink frame arrived corrupted"
+                ))
+            }
+        }
+    }
+}
+
+impl Link for ChaosLink {
+    fn send_raw(&mut self, bytes: &[u8]) -> Result<usize> {
+        if let Some(t) = wire::peek_round(bytes) {
+            if let Some(kind) = self.plan.fault(self.worker, t as usize) {
+                // Swallow the broadcast: the caller's accounting sees the
+                // bytes as sent, the peer never does.
+                self.pending = Some((t, kind));
+                return Ok(bytes.len());
+            }
+        }
+        self.inner.send_raw(bytes)
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        if let Some((t, kind)) = self.pending.take() {
+            return Err(self.raise(t, kind));
+        }
+        self.inner.recv()
+    }
+
+    fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.inner.set_recv_timeout(timeout)
+    }
+
+    fn set_recv_limit(&mut self, max_payload: usize) {
+        self.inner.set_recv_limit(max_payload);
+    }
+}
+
+/// Wrap a full set of server-side worker links (`links[w]` is worker w's
+/// connection) in [`ChaosLink`]s replaying `plan`.
+pub fn wrap_links(links: Vec<Box<dyn Link>>, plan: &FaultPlan) -> Vec<Box<dyn Link>> {
+    let plan = Arc::new(plan.clone());
+    links
+        .into_iter()
+        .enumerate()
+        .map(|(w, inner)| {
+            Box::new(ChaosLink::wrap(inner, w, Arc::clone(&plan))) as Box<dyn Link>
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::MemLink;
+    use crate::sim::fault::FaultEvent;
+
+    fn plan(events: Vec<FaultEvent>) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan { seed: 3, events, profiles: Vec::new() })
+    }
+
+    #[test]
+    fn clean_rounds_pass_through_untouched() {
+        let (srv, mut wrk) = MemLink::pair();
+        let mut chaos = ChaosLink::wrap(Box::new(srv), 0, plan(Vec::new()));
+        let sent = chaos.send(&Frame::Round { t: 0, theta: vec![1.0, 2.0] }).unwrap();
+        match wrk.recv().unwrap() {
+            Frame::Round { t, theta } => {
+                assert_eq!(t, 0);
+                assert_eq!(theta, vec![1.0, 2.0]);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert_eq!(sent, Frame::Round { t: 0, theta: vec![1.0, 2.0] }.wire_bytes());
+        // Uplink flows back normally.
+        wrk.send(&Frame::Shutdown).unwrap();
+        assert!(matches!(chaos.recv().unwrap(), Frame::Shutdown));
+    }
+
+    #[test]
+    fn faulted_round_swallows_downlink_and_fails_uplink() {
+        let (srv, mut wrk) = MemLink::pair();
+        let ev = FaultEvent { worker: 1, from: 2, until: 3, kind: FaultKind::DropUplink };
+        let mut chaos = ChaosLink::wrap(Box::new(srv), 1, plan(vec![ev]));
+        // Round 2 is faulted: the send reports success but nothing arrives.
+        let encoded = Frame::Round { t: 2, theta: vec![0.5] }.to_bytes();
+        assert_eq!(chaos.send_raw(&encoded).unwrap(), encoded.len());
+        wrk.set_recv_timeout(Some(Duration::from_millis(20))).unwrap();
+        assert!(wrk.recv().is_err(), "swallowed frame reached the worker");
+        // The armed fault fires on the next server-side recv...
+        let err = chaos.recv().unwrap_err().to_string();
+        assert!(err.contains("dropped"), "{err}");
+        // ...exactly once: the link is clean again afterwards.
+        wrk.send(&Frame::Hello { worker: 1, dim: 1 }).unwrap();
+        assert!(matches!(chaos.recv().unwrap(), Frame::Hello { .. }));
+    }
+
+    #[test]
+    fn non_round_frames_are_never_intercepted() {
+        let (srv, mut wrk) = MemLink::pair();
+        let ev = FaultEvent { worker: 0, from: 0, until: 100, kind: FaultKind::Disconnect };
+        let mut chaos = ChaosLink::wrap(Box::new(srv), 0, plan(vec![ev]));
+        // Shutdown passes even though every round is inside the span.
+        chaos.send(&Frame::Shutdown).unwrap();
+        assert!(matches!(wrk.recv().unwrap(), Frame::Shutdown));
+    }
+
+    #[test]
+    fn corrupt_fault_surfaces_a_real_decode_error() {
+        let (srv, _wrk) = MemLink::pair();
+        let ev = FaultEvent { worker: 2, from: 0, until: 1, kind: FaultKind::CorruptFrame };
+        let mut chaos = ChaosLink::wrap(Box::new(srv), 2, plan(vec![ev]));
+        let encoded = Frame::Round { t: 0, theta: vec![0.0; 4] }.to_bytes();
+        chaos.send_raw(&encoded).unwrap();
+        let err = format!("{:#}", chaos.recv().unwrap_err());
+        assert!(err.contains("corrupted"), "{err}");
+        // The cause chain carries the codec's genuine rejection.
+        assert!(
+            err.contains("checksum") || err.contains("truncated") || err.contains("payload"),
+            "no decode cause in: {err}"
+        );
+    }
+}

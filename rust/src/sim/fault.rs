@@ -1,0 +1,460 @@
+//! `sim::fault` — the seeded, fully deterministic fault-injection DSL.
+//!
+//! A [`FaultPlan`] is a concrete, replayable schedule of per-worker,
+//! per-round network misbehavior: which worker misses which rounds, and by
+//! what mechanism ([`FaultKind`]). Plans are plain data — loadable from
+//! JSON (`--faults plan.json`), buildable from the
+//! [`testkit::scenarios`] helpers, or generated pseudo-randomly from a
+//! seed ([`FaultPlan::random`]) — so the *same plan + same seed* always
+//! reproduces the *same run*, bit for bit, on every engine.
+//!
+//! # Round-absence semantics
+//!
+//! A fault for `(worker, round)` removes that worker from that round
+//! **entirely**: the chaos layer cuts the round trip at its earliest point
+//! (the downlink `Round` frame), so the worker never trains the faulted
+//! round and none of its state — trainer RNG streams, codec residuals, or
+//! the LBGM look-back gradient — advances. This is what keeps the
+//! worker-side and server-side LBG copies coherent across absences (a
+//! dropped *refresh* would otherwise desync them silently), and what makes
+//! a chaos run bit-identical to a sequential run restricted to the
+//! fault-free participants (asserted by `tests/chaos_recovery.rs`). The
+//! [`FaultKind`] variants differ in the *server-visible mechanism* of the
+//! miss: an instant silent drop, a deadline-style delay, a
+//! connection-reset error, or a genuinely corrupted frame that must be
+//! rejected by the wire codec.
+//!
+//! # JSON schema
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "events": [
+//!     {"kind": "drop_uplink",   "worker": 2, "from": 2, "until": 4},
+//!     {"kind": "delay",         "worker": 1, "round": 5, "ms": 50},
+//!     {"kind": "disconnect",    "worker": 0, "from": 3, "until": 6},
+//!     {"kind": "corrupt_frame", "worker": 3, "round": 1}
+//!   ],
+//!   "profiles": [
+//!     {"worker": 0, "latency_us": 200, "bytes_per_sec": 1000000, "loss": 0.2}
+//!   ]
+//! }
+//! ```
+//!
+//! `from`/`until` bound a half-open round span `[from, until)`; `"round": t`
+//! is shorthand for `from = t, until = t + 1`. `profiles` attach a
+//! deterministic [`LinkProfile`] (latency/bandwidth/loss shaping, wall-clock
+//! only) to a worker's uplink in the `MemLink` deployment.
+//!
+//! [`testkit::scenarios`]: crate::testkit::scenarios
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::net::link::LinkProfile;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+
+/// Mechanism by which a worker misses a round (see the module docs for the
+/// shared round-absence semantics).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The uplink update silently never arrives; the server sees an
+    /// instant "nothing came" failure.
+    DropUplink,
+    /// The update misses the deadline: the chaos layer waits `ms`
+    /// milliseconds (bounded by [`MAX_INJECTED_DELAY`]) before reporting
+    /// the miss, modeling a straggler that answers too late. The wait
+    /// burns the server's shared round deadline like a real straggler
+    /// would — keep the deadline well above the per-round sum of injected
+    /// delays when bit-parity with the sequential reference matters.
+    ///
+    /// [`MAX_INJECTED_DELAY`]: super::chaos::MAX_INJECTED_DELAY
+    Delay { ms: u64 },
+    /// The link behaves as reset for the span: sends are swallowed and
+    /// receives fail with a connection-reset-style error. Frames flow
+    /// again after the span ends ("rejoin").
+    Disconnect,
+    /// The uplink frame arrives with a corrupted payload byte; the server
+    /// must reject it through the wire codec's checksum and carry on.
+    CorruptFrame,
+}
+
+impl FaultKind {
+    /// The JSON spelling of this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::DropUplink => "drop_uplink",
+            FaultKind::Delay { .. } => "delay",
+            FaultKind::Disconnect => "disconnect",
+            FaultKind::CorruptFrame => "corrupt_frame",
+        }
+    }
+}
+
+/// One scheduled fault: `worker` misses rounds `[from, until)` via `kind`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub worker: usize,
+    /// First faulted round (inclusive).
+    pub from: usize,
+    /// End of the faulted span (exclusive).
+    pub until: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Does this event remove `worker` from `round`?
+    pub fn hits(&self, worker: usize, round: usize) -> bool {
+        self.worker == worker && (self.from..self.until).contains(&round)
+    }
+}
+
+/// Deterministic per-worker link shaping, attached to a plan (wall-clock
+/// only; results are unaffected — see [`SimLink`]).
+///
+/// [`SimLink`]: crate::net::link::SimLink
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerProfile {
+    pub worker: usize,
+    pub latency_us: u64,
+    pub bytes_per_sec: u64,
+    pub loss: f64,
+}
+
+/// A complete, replayable fault schedule (see the module docs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seeds the deterministic streams derived *from* the plan (corrupt
+    /// byte positions, per-worker loss streams). Also recorded so a plan
+    /// generated by [`FaultPlan::random`] documents its own provenance.
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+    pub profiles: Vec<WorkerProfile>,
+}
+
+/// Knobs for [`FaultPlan::random`]: per-round probabilities of each fault
+/// kind (cumulative sum should stay below 1).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosSpec {
+    pub p_drop: f64,
+    pub p_delay: f64,
+    pub p_disconnect: f64,
+    pub p_corrupt: f64,
+    /// Longest disconnect span, in rounds (min 1).
+    pub max_span: usize,
+    /// Injected delay duration for [`FaultKind::Delay`] events.
+    pub delay_ms: u64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        Self {
+            p_drop: 0.08,
+            p_delay: 0.05,
+            p_disconnect: 0.04,
+            p_corrupt: 0.03,
+            max_span: 3,
+            delay_ms: 1,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A plan with no events at all (chaos off).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// The first fault scheduled for `(worker, round)`, if any.
+    pub fn fault(&self, worker: usize, round: usize) -> Option<FaultKind> {
+        self.events
+            .iter()
+            .find(|e| e.hits(worker, round))
+            .map(|e| e.kind)
+    }
+
+    /// Is `worker` absent from `round` under this plan?
+    pub fn absent(&self, worker: usize, round: usize) -> bool {
+        self.fault(worker, round).is_some()
+    }
+
+    /// Split a sampled participant set into `(arrived, absent)` for one
+    /// round, both preserving the input order.
+    pub fn split_round(&self, participants: &[usize], round: usize) -> (Vec<usize>, Vec<usize>) {
+        let mut arrived = Vec::with_capacity(participants.len());
+        let mut absent = Vec::new();
+        for &w in participants {
+            if self.absent(w, round) {
+                absent.push(w);
+            } else {
+                arrived.push(w);
+            }
+        }
+        (arrived, absent)
+    }
+
+    /// The link-shaping profile attached to `worker`, if any, with a
+    /// per-worker loss stream derived from the plan seed.
+    pub fn profile_for(&self, worker: usize) -> Option<LinkProfile> {
+        self.profiles.iter().find(|p| p.worker == worker).map(|p| LinkProfile {
+            latency: Duration::from_micros(p.latency_us),
+            bytes_per_sec: p.bytes_per_sec,
+            loss: p.loss,
+            seed: self.seed ^ worker as u64,
+        })
+    }
+
+    /// Total number of faulted `(worker, round)` slots in `[0, rounds)`
+    /// for a `workers`-wide federation (diagnostics; the engines count the
+    /// subset that intersects the sampled participants).
+    pub fn scheduled_slots(&self, workers: usize, rounds: usize) -> usize {
+        (0..workers)
+            .map(|w| (0..rounds).filter(|&t| self.absent(w, t)).count())
+            .sum()
+    }
+
+    /// Generate a concrete plan pseudo-randomly from a seed: each worker
+    /// walks the round range, drawing at most one event per position, with
+    /// disconnects spanning up to `spec.max_span` rounds. Deterministic:
+    /// the same `(seed, workers, rounds, spec)` always yields the same
+    /// plan.
+    pub fn random(seed: u64, workers: usize, rounds: usize, spec: &ChaosSpec) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::new();
+        for w in 0..workers {
+            let mut t = 0usize;
+            while t < rounds {
+                let u = rng.next_f64();
+                let c1 = spec.p_drop;
+                let c2 = c1 + spec.p_delay;
+                let c3 = c2 + spec.p_disconnect;
+                let c4 = c3 + spec.p_corrupt;
+                let (kind, span) = if u < c1 {
+                    (Some(FaultKind::DropUplink), 1)
+                } else if u < c2 {
+                    (Some(FaultKind::Delay { ms: spec.delay_ms }), 1)
+                } else if u < c3 {
+                    (Some(FaultKind::Disconnect), 1 + rng.below(spec.max_span.max(1)))
+                } else if u < c4 {
+                    (Some(FaultKind::CorruptFrame), 1)
+                } else {
+                    (None, 1)
+                };
+                if let Some(kind) = kind {
+                    events.push(FaultEvent {
+                        worker: w,
+                        from: t,
+                        until: (t + span).min(rounds),
+                        kind,
+                    });
+                }
+                t += span;
+            }
+        }
+        Self { seed, events, profiles: Vec::new() }
+    }
+
+    // -- JSON ---------------------------------------------------------------
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing fault plan JSON")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let mut events = Vec::new();
+        if let Some(items) = j.get("events").and_then(Json::as_arr) {
+            for e in items {
+                events.push(event_from_json(e)?);
+            }
+        }
+        let mut profiles = Vec::new();
+        if let Some(items) = j.get("profiles").and_then(Json::as_arr) {
+            for p in items {
+                profiles.push(WorkerProfile {
+                    worker: p.req_usize("worker")?,
+                    latency_us: p.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                    bytes_per_sec: p
+                        .get("bytes_per_sec")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64,
+                    loss: p.get("loss").and_then(Json::as_f64).unwrap_or(0.0),
+                });
+            }
+        }
+        Ok(Self { seed, events, profiles })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events = self.events.iter().map(|e| {
+            let mut fields = vec![
+                ("kind", s(e.kind.name())),
+                ("worker", num(e.worker as f64)),
+                ("from", num(e.from as f64)),
+                ("until", num(e.until as f64)),
+            ];
+            if let FaultKind::Delay { ms } = e.kind {
+                fields.push(("ms", num(ms as f64)));
+            }
+            obj(fields)
+        });
+        let profiles = self.profiles.iter().map(|p| {
+            obj(vec![
+                ("worker", num(p.worker as f64)),
+                ("latency_us", num(p.latency_us as f64)),
+                ("bytes_per_sec", num(p.bytes_per_sec as f64)),
+                ("loss", num(p.loss)),
+            ])
+        });
+        obj(vec![
+            ("seed", num(self.seed as f64)),
+            ("events", arr(events)),
+            ("profiles", arr(profiles)),
+        ])
+    }
+}
+
+fn event_from_json(e: &Json) -> Result<FaultEvent> {
+    let worker = e.req_usize("worker")?;
+    let (from, until) = if let Some(r) = e.get("round").and_then(Json::as_usize) {
+        (r, r + 1)
+    } else {
+        let from = e.req_usize("from")?;
+        let until = e.req_usize("until")?;
+        anyhow::ensure!(from < until, "fault span [{from}, {until}) is empty");
+        (from, until)
+    };
+    let kind = match e.req_str("kind")? {
+        "drop_uplink" => FaultKind::DropUplink,
+        "delay" => FaultKind::Delay {
+            ms: e.get("ms").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        },
+        "disconnect" => FaultKind::Disconnect,
+        "corrupt_frame" => FaultKind::CorruptFrame,
+        other => anyhow::bail!("unknown fault kind `{other}`"),
+    };
+    Ok(FaultEvent { worker, from, until, kind })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_hit_their_span_only() {
+        let e = FaultEvent { worker: 2, from: 3, until: 5, kind: FaultKind::DropUplink };
+        assert!(!e.hits(2, 2));
+        assert!(e.hits(2, 3));
+        assert!(e.hits(2, 4));
+        assert!(!e.hits(2, 5));
+        assert!(!e.hits(1, 3));
+    }
+
+    #[test]
+    fn split_round_partitions_in_order() {
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                worker: 1,
+                from: 0,
+                until: 2,
+                kind: FaultKind::Disconnect,
+            }],
+            profiles: Vec::new(),
+        };
+        let (arrived, absent) = plan.split_round(&[0, 1, 2], 1);
+        assert_eq!(arrived, vec![0, 2]);
+        assert_eq!(absent, vec![1]);
+        let (arrived, absent) = plan.split_round(&[0, 1, 2], 2);
+        assert_eq!(arrived, vec![0, 1, 2]);
+        assert!(absent.is_empty());
+        assert_eq!(plan.scheduled_slots(3, 4), 2);
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_per_seed() {
+        let spec = ChaosSpec::default();
+        let a = FaultPlan::random(9, 5, 20, &spec);
+        let b = FaultPlan::random(9, 5, 20, &spec);
+        assert_eq!(a, b);
+        let c = FaultPlan::random(10, 5, 20, &spec);
+        assert_ne!(a, c, "different seeds produced identical plans");
+        // Every event stays inside the round range.
+        assert!(a.events.iter().all(|e| e.from < e.until && e.until <= 20));
+    }
+
+    #[test]
+    fn json_round_trip_preserves_the_plan() {
+        let plan = FaultPlan {
+            seed: 7,
+            events: vec![
+                FaultEvent { worker: 2, from: 2, until: 4, kind: FaultKind::DropUplink },
+                FaultEvent { worker: 1, from: 5, until: 6, kind: FaultKind::Delay { ms: 50 } },
+                FaultEvent { worker: 0, from: 3, until: 6, kind: FaultKind::Disconnect },
+                FaultEvent { worker: 3, from: 1, until: 2, kind: FaultKind::CorruptFrame },
+            ],
+            profiles: vec![WorkerProfile {
+                worker: 0,
+                latency_us: 200,
+                bytes_per_sec: 1_000_000,
+                loss: 0.2,
+            }],
+        };
+        let text = Json::to_string(&plan.to_json());
+        let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn json_round_shorthand_and_errors() {
+        let j = Json::parse(
+            r#"{"events":[{"kind":"corrupt_frame","worker":3,"round":1}]}"#,
+        )
+        .unwrap();
+        let plan = FaultPlan::from_json(&j).unwrap();
+        assert_eq!(plan.events, vec![FaultEvent {
+            worker: 3,
+            from: 1,
+            until: 2,
+            kind: FaultKind::CorruptFrame,
+        }]);
+        assert!(plan.absent(3, 1));
+        assert!(!plan.absent(3, 2));
+
+        let bad = Json::parse(
+            r#"{"events":[{"kind":"gremlins","worker":0,"round":0}]}"#,
+        )
+        .unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+        let empty_span = Json::parse(
+            r#"{"events":[{"kind":"delay","worker":0,"from":3,"until":3}]}"#,
+        )
+        .unwrap();
+        assert!(FaultPlan::from_json(&empty_span).is_err());
+    }
+
+    #[test]
+    fn profiles_resolve_with_plan_seed() {
+        let plan = FaultPlan {
+            seed: 11,
+            events: Vec::new(),
+            profiles: vec![WorkerProfile {
+                worker: 2,
+                latency_us: 100,
+                bytes_per_sec: 500,
+                loss: 0.1,
+            }],
+        };
+        let p = plan.profile_for(2).unwrap();
+        assert_eq!(p.latency, Duration::from_micros(100));
+        assert_eq!(p.bytes_per_sec, 500);
+        assert_eq!(p.seed, 11 ^ 2);
+        assert!(plan.profile_for(0).is_none());
+    }
+}

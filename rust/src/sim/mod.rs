@@ -1,0 +1,28 @@
+//! Deterministic chaos harness: seeded fault injection for the networked
+//! deployment.
+//!
+//! The `net` layer turns the simulation into a real client/server system;
+//! `sim` turns that system into one you can *torture reproducibly*:
+//!
+//! * [`fault`] — the [`FaultPlan`] DSL: per-worker, per-round events
+//!   (drop uplink, delay past the deadline, disconnect-and-rejoin,
+//!   corrupt frame) plus per-worker flaky-link profiles, loadable from
+//!   JSON (`--faults plan.json`), buildable from
+//!   [`testkit::scenarios`], or generated from a seed.
+//! * [`chaos`] — [`ChaosLink`], a [`Link`] decorator that replays a plan
+//!   against live links.
+//!
+//! Combined with the round engines' partial-participation aggregation
+//! (a round commits with whichever workers made the deadline, FedAvg
+//! weights renormalized over the arrived set), the same plan + seed
+//! produce bit-identical runs on every transport — sequential, threaded,
+//! `MemLink`, and TCP loopback (`tests/chaos_recovery.rs`).
+//!
+//! [`Link`]: crate::net::Link
+//! [`testkit::scenarios`]: crate::testkit::scenarios
+
+pub mod chaos;
+pub mod fault;
+
+pub use chaos::{wrap_links, ChaosLink};
+pub use fault::{ChaosSpec, FaultEvent, FaultKind, FaultPlan, WorkerProfile};

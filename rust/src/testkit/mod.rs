@@ -1,6 +1,8 @@
 //! In-tree test utilities (the build host lacks `proptest`): a small
-//! property-testing driver with shrinking.
+//! property-testing driver with shrinking, plus reusable chaos scenario
+//! builders for the fault-injection harness.
 
 pub mod prop;
+pub mod scenarios;
 
 pub use prop::{forall, Gen};

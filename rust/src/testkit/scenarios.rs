@@ -1,0 +1,162 @@
+//! Reusable chaos scenario builders: named, parameterized [`FaultPlan`]s
+//! for tests, examples, and ad-hoc torture runs (`--faults` consumes their
+//! JSON form). Every builder is pure data — the same arguments always
+//! produce the same plan, so scenarios compose into reproducible suites.
+
+use crate::sim::{ChaosSpec, FaultEvent, FaultKind, FaultPlan, WorkerProfile};
+
+/// One worker's uplink is dropped for the round span `[from, until)` —
+/// the acceptance scenario of the chaos harness.
+pub fn drop_worker(worker: usize, from: usize, until: usize) -> FaultPlan {
+    FaultPlan {
+        seed: 0,
+        events: vec![FaultEvent { worker, from, until, kind: FaultKind::DropUplink }],
+        profiles: Vec::new(),
+    }
+}
+
+/// One worker answers `ms` milliseconds too late for every round in
+/// `[from, until)` (a deadline-missing straggler).
+pub fn straggler(worker: usize, from: usize, until: usize, ms: u64) -> FaultPlan {
+    FaultPlan {
+        seed: 0,
+        events: vec![FaultEvent { worker, from, until, kind: FaultKind::Delay { ms } }],
+        profiles: Vec::new(),
+    }
+}
+
+/// A set of workers disconnect together for `[from, until)` and rejoin
+/// after (a rack power-cycle / network partition).
+pub fn blackout(workers: &[usize], from: usize, until: usize) -> FaultPlan {
+    FaultPlan {
+        seed: 0,
+        events: workers
+            .iter()
+            .map(|&worker| FaultEvent {
+                worker,
+                from,
+                until,
+                kind: FaultKind::Disconnect,
+            })
+            .collect(),
+        profiles: Vec::new(),
+    }
+}
+
+/// One worker's uplink frame arrives corrupted in a single round.
+pub fn corrupt_uplink(worker: usize, round: usize) -> FaultPlan {
+    FaultPlan {
+        seed: 0,
+        events: vec![FaultEvent {
+            worker,
+            from: round,
+            until: round + 1,
+            kind: FaultKind::CorruptFrame,
+        }],
+        profiles: Vec::new(),
+    }
+}
+
+/// Exactly one worker is disconnected each round, rotating through the
+/// fleet (`worker t % k` misses round `t`): every worker experiences
+/// churn, no round loses more than one update.
+pub fn rolling_outage(workers: usize, rounds: usize) -> FaultPlan {
+    FaultPlan {
+        seed: 0,
+        events: (0..rounds)
+            .map(|t| FaultEvent {
+                worker: t % workers.max(1),
+                from: t,
+                until: t + 1,
+                kind: FaultKind::Disconnect,
+            })
+            .collect(),
+        profiles: Vec::new(),
+    }
+}
+
+/// A seeded mixed-fault fleet: every fault kind appears with probability
+/// `p_fault / 4` per worker-round (bounded disconnect spans, 1 ms injected
+/// delays so suites stay fast).
+pub fn flaky_fleet(seed: u64, workers: usize, rounds: usize, p_fault: f64) -> FaultPlan {
+    let p = p_fault / 4.0;
+    let spec = ChaosSpec {
+        p_drop: p,
+        p_delay: p,
+        p_disconnect: p,
+        p_corrupt: p,
+        max_span: 2,
+        delay_ms: 1,
+    };
+    FaultPlan::random(seed, workers, rounds, &spec)
+}
+
+/// No round-level faults, but every worker's uplink is shaped by a
+/// deterministic lossy profile whose latency and loss grow with the worker
+/// id (wall-clock-only heterogeneity: results stay bit-identical).
+pub fn lossy_fleet(seed: u64, workers: usize) -> FaultPlan {
+    FaultPlan {
+        seed,
+        events: Vec::new(),
+        profiles: (0..workers)
+            .map(|w| WorkerProfile {
+                worker: w,
+                latency_us: 50 * (w as u64 + 1),
+                bytes_per_sec: 4_000_000,
+                loss: 0.05 * w as f64 / workers.max(1) as f64,
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_worker_covers_its_span() {
+        let plan = drop_worker(2, 2, 4);
+        assert!(!plan.absent(2, 1));
+        assert!(plan.absent(2, 2));
+        assert!(plan.absent(2, 3));
+        assert!(!plan.absent(2, 4));
+        assert!(!plan.absent(0, 2));
+    }
+
+    #[test]
+    fn rolling_outage_hits_one_worker_per_round() {
+        let plan = rolling_outage(3, 7);
+        for t in 0..7 {
+            let absent: Vec<usize> = (0..3).filter(|&w| plan.absent(w, t)).collect();
+            assert_eq!(absent, vec![t % 3], "round {t}");
+        }
+    }
+
+    #[test]
+    fn blackout_and_straggler_shapes() {
+        let plan = blackout(&[0, 2], 1, 3);
+        assert!(plan.absent(0, 1) && plan.absent(2, 2));
+        assert!(!plan.absent(1, 1));
+        let s = straggler(1, 0, 2, 5);
+        assert_eq!(s.events[0].kind, FaultKind::Delay { ms: 5 });
+    }
+
+    #[test]
+    fn flaky_fleet_is_seeded_and_bounded() {
+        let a = flaky_fleet(4, 5, 30, 0.4);
+        let b = flaky_fleet(4, 5, 30, 0.4);
+        assert_eq!(a, b);
+        assert!(a.events.iter().all(|e| e.worker < 5 && e.until <= 30));
+        assert!(!a.events.is_empty(), "p=0.4 over 150 slots produced no faults");
+    }
+
+    #[test]
+    fn lossy_fleet_profiles_every_worker() {
+        let plan = lossy_fleet(9, 4);
+        assert!(plan.events.is_empty());
+        for w in 0..4 {
+            let p = plan.profile_for(w).unwrap();
+            assert_eq!(p.latency.as_micros() as u64, 50 * (w as u64 + 1));
+        }
+    }
+}

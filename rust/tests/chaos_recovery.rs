@@ -1,0 +1,286 @@
+//! Chaos-recovery suite: for any seeded `FaultPlan`, every deployment
+//! engine must (a) complete the run, (b) aggregate the fault-free subset
+//! of updates bit-identically to a sequential run restricted to those
+//! participants (which is exactly `run_fl` driven by the same plan), and
+//! (c) keep `CommLedger::consistent()`. Same plan + same seed must also
+//! yield identical ledgers across repeated runs.
+//!
+//! The base seed honors `FL_SEED` so CI can sweep a seed matrix.
+
+use fedrecycle::compress::{Compressor, Identity, TopK};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, FlOutcome, Parallelism};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::coordinator::transport::run_threaded_fl;
+use fedrecycle::coordinator::CommLedger;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::metrics::RunSeries;
+use fedrecycle::net::{run_mem_fl, run_tcp_fl};
+use fedrecycle::sim::{ChaosSpec, FaultPlan};
+use fedrecycle::testkit::scenarios;
+
+const DIM: usize = 16;
+const K: usize = 4;
+const ROUNDS: usize = 8;
+const SPREAD: f32 = 0.25;
+const SIGMA: f32 = 0.03;
+
+fn base_seed() -> u64 {
+    std::env::var("FL_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+fn cfg(delta: f64, fraction: f64, seed: u64, faults: Option<FaultPlan>) -> FlConfig {
+    FlConfig {
+        rounds: ROUNDS,
+        tau: 2,
+        eta: 0.05,
+        policy: ThresholdPolicy::fixed(delta),
+        sample_fraction: fraction,
+        eval_every: 4,
+        seed,
+        check_coherence: true,
+        parallelism: Parallelism::Sequential,
+        faults,
+        ..Default::default()
+    }
+}
+
+/// The sequential partial-participation reference: `run_fl` driven by the
+/// same plan — workers absent under the plan never train their faulted
+/// rounds, exactly like a run restricted to the arrived participants.
+fn sequential(cfg: &FlConfig, codec: &dyn Fn() -> Box<dyn Compressor>) -> FlOutcome {
+    let mut t = MockTrainer::new(DIM, K, SPREAD, SIGMA, cfg.seed);
+    run_fl(&mut t, vec![0.0; DIM], cfg, codec, "seq").unwrap()
+}
+
+fn deployed_mem(
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+) -> (RunSeries, CommLedger, Vec<f32>) {
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, cfg.seed);
+    let weights = eval.weights();
+    run_mem_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, cfg.seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        cfg,
+        codec,
+        "mem",
+        None,
+    )
+    .unwrap()
+}
+
+fn deployed_tcp(
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+) -> (RunSeries, CommLedger, Vec<f32>) {
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, cfg.seed);
+    let weights = eval.weights();
+    run_tcp_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, cfg.seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        cfg,
+        codec,
+        "tcp",
+    )
+    .unwrap()
+}
+
+/// Everything observable except wall-clock and wire bytes must match
+/// bit-for-bit between the sequential reference and a chaos deployment —
+/// including the new participation and fault columns.
+fn assert_matches_reference(seq: &FlOutcome, net: &(RunSeries, CommLedger, Vec<f32>)) {
+    let (series, ledger, theta) = net;
+    assert_eq!(&seq.final_theta, theta, "final theta diverged");
+    assert_eq!(seq.ledger.total_floats, ledger.total_floats);
+    assert_eq!(seq.ledger.total_bits, ledger.total_bits);
+    assert_eq!(seq.ledger.scalar_msgs, ledger.scalar_msgs);
+    assert_eq!(seq.ledger.full_msgs, ledger.full_msgs);
+    assert_eq!(seq.ledger.total_down_floats(), ledger.total_down_floats());
+    assert_eq!(seq.ledger.total_faults, ledger.total_faults, "fault totals diverged");
+    assert!(ledger.consistent(), "deployment ledger inconsistent");
+    assert!(seq.ledger.consistent(), "sequential ledger inconsistent");
+    for w in 0..K {
+        assert_eq!(seq.ledger.worker_floats(w), ledger.worker_floats(w), "worker {w}");
+        assert_eq!(seq.ledger.worker_faults(w), ledger.worker_faults(w), "worker {w}");
+        assert_eq!(
+            seq.ledger.worker_down_floats(w),
+            ledger.worker_down_floats(w),
+            "worker {w}"
+        );
+    }
+    assert_eq!(seq.series.rounds.len(), series.rounds.len());
+    for (a, b) in seq.series.rounds.iter().zip(&series.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.test_metric.to_bits(), b.test_metric.to_bits());
+        assert_eq!(a.floats_up, b.floats_up, "round {}", a.round);
+        assert_eq!(a.participants, b.participants, "round {}", a.round);
+        assert_eq!(a.faults, b.faults, "round {}", a.round);
+        assert_eq!(a.full_sends, b.full_sends, "round {}", a.round);
+        assert_eq!(a.scalar_sends, b.scalar_sends, "round {}", a.round);
+    }
+}
+
+/// The acceptance scenario: a TCP-loopback run with a plan dropping 1 of 4
+/// workers in rounds 2–3 completes, reports `participants < total` in
+/// exactly those rounds, matches the sequential partial-participation
+/// reference bit-for-bit, and reproduces identical ledgers across two
+/// runs of the same plan + seed.
+#[test]
+fn acceptance_drop_one_of_four_over_tcp() {
+    let seed = 11 + base_seed();
+    let plan = scenarios::drop_worker(2, 2, 4);
+    let c = cfg(0.4, 1.0, seed, Some(plan));
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let a = deployed_tcp(&c, &|| Box::new(Identity));
+    let b = deployed_tcp(&c, &|| Box::new(Identity));
+
+    for (t, r) in a.0.rounds.iter().enumerate() {
+        if t == 2 || t == 3 {
+            assert_eq!(r.participants, K - 1, "round {t} should miss worker 2");
+            assert_eq!(r.faults, 1, "round {t}");
+        } else {
+            assert_eq!(r.participants, K, "round {t} should be full");
+            assert_eq!(r.faults, 0, "round {t}");
+        }
+    }
+    assert_eq!(a.1.total_faults, 2);
+    assert_eq!(a.1.worker_faults(2), 2);
+    assert_matches_reference(&seq, &a);
+
+    // Same plan + same seed => identical ledgers across runs, measured
+    // wire bytes included.
+    assert_eq!(a.1.total_floats, b.1.total_floats);
+    assert_eq!(a.1.total_bits, b.1.total_bits);
+    assert_eq!(a.1.wire_up_bytes, b.1.wire_up_bytes);
+    assert_eq!(a.1.wire_down_bytes, b.1.wire_down_bytes);
+    assert_eq!(a.1.total_faults, b.1.total_faults);
+    assert_eq!(a.2, b.2, "theta diverged between identical chaos runs");
+    // Faults save uplink wire bytes but the swallowed broadcast still
+    // counts as sent.
+    let clean = deployed_tcp(&cfg(0.4, 1.0, seed, None), &|| Box::new(Identity));
+    assert!(a.1.wire_up_bytes < clean.1.wire_up_bytes);
+    assert_eq!(a.1.wire_down_bytes, clean.1.wire_down_bytes);
+}
+
+/// Property (a)+(b)+(c) over a sweep of seeded random plans on the
+/// MemLink deployment, with every fault kind in play.
+#[test]
+fn prop_random_plans_match_the_sequential_reference() {
+    let spec = ChaosSpec {
+        p_drop: 0.12,
+        p_delay: 0.08,
+        p_disconnect: 0.08,
+        p_corrupt: 0.06,
+        max_span: 2,
+        delay_ms: 1,
+    };
+    for case in 0..5u64 {
+        let seed = base_seed().wrapping_mul(1000) + 31 + case;
+        let plan = FaultPlan::random(seed, K, ROUNDS, &spec);
+        let faults = plan.scheduled_slots(K, ROUNDS);
+        let c = cfg(0.4, 1.0, seed, Some(plan));
+        let seq = sequential(&c, &|| Box::new(Identity));
+        let net = deployed_mem(&c, &|| Box::new(Identity));
+        assert_matches_reference(&seq, &net);
+        assert_eq!(
+            net.1.total_faults as usize, faults,
+            "case {case}: full participation must observe every scheduled fault"
+        );
+    }
+}
+
+/// Sampling composes with faults: only faults hitting a *sampled* worker
+/// count, and the plug-and-play TopK codec stays bit-exact.
+#[test]
+fn sampled_topk_run_survives_chaos() {
+    let seed = 23 + base_seed();
+    let plan = scenarios::flaky_fleet(seed, K, ROUNDS, 0.5);
+    let c = cfg(0.3, 0.6, seed, Some(plan));
+    let codec: &dyn Fn() -> Box<dyn Compressor> = &|| Box::new(TopK::new(0.5));
+    let seq = sequential(&c, codec);
+    let net = deployed_mem(&c, codec);
+    assert_matches_reference(&seq, &net);
+    for r in &net.0.rounds {
+        assert_eq!(r.participants + r.faults, 3, "3 of 4 sampled per round");
+    }
+}
+
+/// A round that loses every sampled worker still commits: the model is
+/// untouched, the record shows zero participants, and training resumes.
+#[test]
+fn blackout_round_commits_empty() {
+    let seed = 5 + base_seed();
+    let plan = scenarios::blackout(&[0, 1, 2, 3], 1, 2);
+    let c = cfg(0.4, 1.0, seed, Some(plan));
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let net = deployed_mem(&c, &|| Box::new(Identity));
+    assert_matches_reference(&seq, &net);
+    let r1 = &net.0.rounds[1];
+    assert_eq!(r1.participants, 0);
+    assert_eq!(r1.faults, K);
+    // The loss column carries the previous round's value through the gap
+    // (the same convention the eval columns use).
+    assert_eq!(r1.train_loss.to_bits(), net.0.rounds[0].train_loss.to_bits());
+    // floats_up unchanged across the empty round (cumulative counter).
+    assert_eq!(net.0.rounds[0].floats_up, r1.floats_up);
+    // Training resumed afterwards.
+    assert_eq!(net.0.rounds[2].participants, K);
+    assert!(net.0.rounds[2].floats_up > r1.floats_up);
+}
+
+/// A corrupted uplink frame is rejected by the codec and treated as
+/// absence — never as a decoded update.
+#[test]
+fn corrupt_frame_is_rejected_not_decoded() {
+    let seed = 7 + base_seed();
+    let plan = scenarios::corrupt_uplink(1, 0);
+    let c = cfg(0.4, 1.0, seed, Some(plan));
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let net = deployed_mem(&c, &|| Box::new(Identity));
+    assert_matches_reference(&seq, &net);
+    assert_eq!(net.0.rounds[0].participants, K - 1);
+    assert_eq!(net.1.worker_faults(1), 1);
+}
+
+/// The rotating-outage scenario on the threaded channel transport: every
+/// engine honors the same plan identically.
+#[test]
+fn rolling_outage_matches_on_threaded_transport() {
+    let seed = 13 + base_seed();
+    let plan = scenarios::rolling_outage(K, ROUNDS);
+    let c = cfg(0.5, 1.0, seed, Some(plan));
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, c.seed);
+    let weights = eval.weights();
+    let net = run_threaded_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, c.seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| Box::new(Identity),
+        "threaded",
+    )
+    .unwrap();
+    assert_matches_reference(&seq, &net);
+    // Exactly one worker out per round.
+    assert!(net.0.rounds.iter().all(|r| r.participants == K - 1 && r.faults == 1));
+    assert_eq!(net.1.total_faults, ROUNDS as u64);
+}
+
+/// Flaky per-worker link profiles shape wall-clock only: a lossy fleet
+/// still reproduces the clean sequential run bit-for-bit.
+#[test]
+fn lossy_profiles_change_timing_not_results() {
+    let seed = 17 + base_seed();
+    let plan = scenarios::lossy_fleet(seed, K);
+    let clean = sequential(&cfg(0.4, 1.0, seed, None), &|| Box::new(Identity));
+    let shaped = deployed_mem(&cfg(0.4, 1.0, seed, Some(plan)), &|| Box::new(Identity));
+    assert_matches_reference(&clean, &shaped);
+    assert_eq!(shaped.1.total_faults, 0);
+}

@@ -85,6 +85,7 @@ fn base_cfg(delta: f64, seed: u64) -> FlConfig {
         check_coherence: true,
         parallelism: Parallelism::Sequential,
         transport: Transport::Memory,
+        faults: None,
     }
 }
 

@@ -1,0 +1,71 @@
+//! Golden-trace regression fixture: a small seeded LBGM run's CSV is
+//! committed under `tests/golden/`, and every test run regenerates the
+//! trace and diffs it byte-for-byte. Any change that affects convergence,
+//! accounting, sampling, or CSV schema fails loudly here — if the change
+//! is deliberate, regenerate the fixture (run this test, then copy
+//! `target/golden-diff/lbgm_small.fresh.csv` over the committed file) and
+//! say so in the commit.
+//!
+//! `wall_secs` is zeroed before the diff (the only nondeterministic
+//! column); everything else in the engine is bit-reproducible per seed.
+
+use fedrecycle::compress::Identity;
+use fedrecycle::coordinator::round::{run_fl, FlConfig, Parallelism};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::metrics::write_csv;
+
+const GOLDEN: &str = include_str!("golden/lbgm_small.csv");
+
+#[test]
+fn lbgm_small_run_matches_golden_trace() {
+    let cfg = FlConfig {
+        rounds: 12,
+        tau: 2,
+        eta: 0.05,
+        policy: ThresholdPolicy::fixed(0.05),
+        sample_fraction: 1.0,
+        eval_every: 3,
+        seed: 5,
+        check_coherence: true,
+        parallelism: Parallelism::Sequential,
+        ..Default::default()
+    };
+    let mut trainer = MockTrainer::new(16, 4, 0.25, 0.02, cfg.seed);
+    let mut out =
+        run_fl(&mut trainer, vec![0.0; 16], &cfg, &|| Box::new(Identity), "golden")
+            .expect("golden run failed");
+    for r in &mut out.series.rounds {
+        r.wall_secs = 0.0;
+    }
+    let dir = std::env::temp_dir().join("fedrecycle_golden_trace");
+    let path = dir.join("fresh.csv");
+    write_csv(&path, std::slice::from_ref(&out.series)).unwrap();
+    let fresh = std::fs::read_to_string(&path).unwrap();
+
+    if fresh != GOLDEN {
+        // Persist both sides where CI uploads them as a failure artifact.
+        let diff_dir = std::path::Path::new("target").join("golden-diff");
+        std::fs::create_dir_all(&diff_dir).ok();
+        std::fs::write(diff_dir.join("lbgm_small.fresh.csv"), &fresh).ok();
+        std::fs::write(diff_dir.join("lbgm_small.golden.csv"), GOLDEN).ok();
+        let first_diff = fresh
+            .lines()
+            .zip(GOLDEN.lines())
+            .enumerate()
+            .find(|(_, (a, b))| a != b)
+            .map(|(i, (a, b))| format!("line {}:\n  fresh:  {a}\n  golden: {b}", i + 1))
+            .unwrap_or_else(|| {
+                format!(
+                    "line counts differ: fresh {} vs golden {}",
+                    fresh.lines().count(),
+                    GOLDEN.lines().count()
+                )
+            });
+        panic!(
+            "golden LBGM trace diverged (convergence-affecting change?).\n{first_diff}\n\
+             Both traces written to target/golden-diff/ — regenerate the fixture \
+             only if the change is intentional."
+        );
+    }
+}

@@ -184,6 +184,7 @@ fn prop_fl_coherence_and_accounting_under_any_schedule() {
             // Exercise the threaded engine under random schedules too.
             parallelism: Parallelism::Threads(2),
             transport: Transport::Memory,
+            faults: None,
         };
         let out = run_fl(&mut trainer, vec![0.0; dim], &cfg, &|| Box::new(Identity), "p")
             .map_err(|e| format!("run failed: {e}"))?;
@@ -223,6 +224,7 @@ fn prop_vanilla_recovery_equals_fedavg() {
             check_coherence: false,
             parallelism: Parallelism::Sequential,
             transport: Transport::Memory,
+            faults: None,
         };
         let mut t1 = MockTrainer::new(dim, s.workers, 0.2, 0.05, s.seed);
         let out = run_fl(&mut t1, vec![0.0; dim], &cfg, &|| Box::new(Identity), "l")
