@@ -39,13 +39,13 @@ fn main() {
         b.bench(&format!("gram_push_40epochs_M{label}"), || {
             let mut pca = GramPca::new(dim);
             for g in &gs {
-                pca.push(g.clone());
+                pca.push(g);
             }
             pca.len()
         });
         let mut pca = GramPca::new(dim);
         for g in &gs {
-            pca.push(g.clone());
+            pca.push(g);
         }
         b.bench(&format!("n_pca_M{label}"), || pca.n_pca());
         b.bench(&format!("pgd_extract_M{label}"), || {

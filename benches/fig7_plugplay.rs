@@ -6,6 +6,7 @@ use fedrecycle::bench::Bencher;
 use fedrecycle::compress::{Atomo, Compressor, ErrorFeedback, TopK};
 use fedrecycle::coordinator::Worker;
 use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::linalg::Workspace;
 use fedrecycle::util::rng::Rng;
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
@@ -18,14 +19,15 @@ fn main() {
     const M: usize = 268_650; // cnn_cifar gradient dimension
 
     let g = randv(M, 1);
+    let mut ws = Workspace::new();
     b.throughput(M as u64).bench("topk_ef_encode", || {
         let mut ef = ErrorFeedback::new(TopK::new(0.1));
         let mut x = g.clone();
-        ef.compress(&mut x)
+        ef.compress(&mut x, &mut ws)
     });
     b.throughput(M as u64).bench("atomo_rank2_encode", || {
         let mut x = g.clone();
-        Atomo::new(2).compress(&mut x)
+        Atomo::new(2).compress(&mut x, &mut ws)
     });
 
     // Full worker-side uplink path: codec + projection + policy.
@@ -36,9 +38,9 @@ fn main() {
             let mut rng = Rng::new(3);
             let mut floats = 0u64;
             for r in 0..4 {
-                let grad: Vec<f32> =
+                let mut grad: Vec<f32> =
                     g.iter().map(|x| x + rng.normal_f32(0.0, 0.01)).collect();
-                floats += w.process_round(r, grad, 0.0, &policy).cost.floats;
+                floats += w.process_round(r, &mut grad, 0.0, &policy).cost.floats;
             }
             floats
         });

@@ -7,6 +7,7 @@ use fedrecycle::compress::{Compressor, SignSgd};
 use fedrecycle::coordinator::round::{run_fl, FlConfig};
 use fedrecycle::coordinator::trainer::MockTrainer;
 use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::linalg::Workspace;
 use fedrecycle::util::rng::Rng;
 
 fn main() {
@@ -16,9 +17,10 @@ fn main() {
         let mut r = Rng::new(1);
         (0..M).map(|_| r.normal_f32(0.0, 1.0)).collect()
     };
+    let mut ws = Workspace::new();
     b.throughput(M as u64).bench("signsgd_encode_1M", || {
         let mut x = g.clone();
-        SignSgd.compress(&mut x)
+        SignSgd.compress(&mut x, &mut ws)
     });
 
     println!("# bit-volume comparison (informational):");

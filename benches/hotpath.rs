@@ -9,6 +9,7 @@ use fedrecycle::bench::Bencher;
 use fedrecycle::compress::{Atomo, Compressor, SignSgd, TopK};
 use fedrecycle::lbgm::reconstruct::apply_scalar;
 use fedrecycle::linalg::vec_ops::{dot, norm2, projection_stats, projection_stats_cached};
+use fedrecycle::linalg::Workspace;
 use fedrecycle::runtime::client::Feed;
 use fedrecycle::runtime::{Manifest, Runtime};
 use fedrecycle::util::rng::Rng;
@@ -40,18 +41,19 @@ fn main() {
         .bench("lbgm_apply_scalar_1M", || apply_scalar(&mut theta, &l, 0.01, 0.1, 0.5));
 
     // Codec costs LBGM is claimed cheaper than.
+    let mut ws = Workspace::new();
     b.throughput(M as u64).bench("topk10pct_1M", || {
         let mut x = g.clone();
-        TopK::new(0.1).compress(&mut x)
+        TopK::new(0.1).compress(&mut x, &mut ws)
     });
     let g_small = randv(65_536, 4);
     b.throughput(65_536).bench("atomo_rank2_64k", || {
         let mut x = g_small.clone();
-        Atomo::new(2).compress(&mut x)
+        Atomo::new(2).compress(&mut x, &mut ws)
     });
     b.throughput(M as u64).bench("signsgd_encode_1M", || {
         let mut x = g.clone();
-        SignSgd.compress(&mut x)
+        SignSgd.compress(&mut x, &mut ws)
     });
 
     // PJRT grad/eval step (the dominant per-round term).

@@ -1,0 +1,211 @@
+//! Benchmark-regression harness for the LBGM hot path.
+//!
+//! Produces `BENCH_hotpath.json` (per-bench ns/op, bytes moved, allocator
+//! calls) and gates the run against the committed
+//! `benches/baseline/hotpath_baseline.json`. Every gated kernel bench is
+//! paired with its naive reference timed in the same process, so the
+//! gated ratio is machine-independent and the CI job is non-flaky; the
+//! steady-state round loop is gated on **zero allocations**, measured by
+//! the counting global allocator installed below.
+//!
+//! Knobs: `FEDRECYCLE_BENCH_SAMPLES` (default 15),
+//! `FEDRECYCLE_BENCH_TOLERANCE` (default 0.30 or the baseline's value),
+//! `FEDRECYCLE_BENCH_OUT` (default `BENCH_hotpath.json`),
+//! `FEDRECYCLE_BENCH_BASELINE` (default
+//! `benches/baseline/hotpath_baseline.json`),
+//! `FEDRECYCLE_BENCH_NO_GATE=1` to report without gating.
+
+use std::path::PathBuf;
+
+use fedrecycle::bench::{check_baseline, load_baseline, CountingAlloc, Regression};
+use fedrecycle::compress::{reference_topk, Compressor, Identity, TopK};
+use fedrecycle::coordinator::server::Server;
+use fedrecycle::coordinator::worker::Worker;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::linalg::vec_ops::{self, reference};
+use fedrecycle::linalg::{eigh, explained_components, GramPca, Workspace};
+use fedrecycle::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
+}
+
+/// Textbook Gram-PCA loop used as the naive timing reference: no
+/// incremental state, the full Gram recomputed from boxed rows with the
+/// serial-reference dot after every push. (Not the pre-PR4 code — that
+/// was already incremental but realloc-copied the square Gram each push;
+/// this is the no-cleverness baseline the ratio gate is anchored to.)
+fn naive_gram_push_pca(grads: &[Vec<f32>]) -> (usize, usize) {
+    let mut stored: Vec<&[f32]> = Vec::new();
+    let mut last = (0, 0);
+    for g in grads {
+        stored.push(g);
+        let n = stored.len();
+        let mut gram = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                gram[i * n + j] = reference::dot(stored[i], stored[j]);
+            }
+        }
+        let (vals, _) = eigh(&gram, n);
+        let sv: Vec<f64> = vals.into_iter().map(|v| v.max(0.0).sqrt()).collect();
+        last = (
+            explained_components(&sv, 0.95),
+            explained_components(&sv, 0.99),
+        );
+    }
+    last
+}
+
+fn main() {
+    let mut r = Regression::from_env("hotpath");
+
+    // --- micro kernels at d = 1M (>= 100k per the acceptance bar) ----------
+    const M: usize = 1_000_000;
+    let a = randv(M, 1);
+    let b = randv(M, 2);
+    r.bench_pair(
+        "dot_1M",
+        (2 * M * 4) as u64,
+        || vec_ops::dot(&a, &b),
+        || reference::dot(&a, &b),
+    );
+    let x = randv(M, 3);
+    let mut y_opt = randv(M, 4);
+    let mut y_ref = y_opt.clone();
+    r.bench_pair(
+        "axpy_1M",
+        (3 * M * 4) as u64,
+        || vec_ops::axpy(1e-9, &x, &mut y_opt),
+        || reference::axpy(1e-9, &x, &mut y_ref),
+    );
+    r.bench_pair(
+        "projection_1M",
+        (2 * M * 4) as u64,
+        || vec_ops::projection_stats(&a, &b),
+        || reference::projection_stats(&a, &b),
+    );
+
+    // --- top-K: partial quickselect vs full sort ----------------------------
+    let mut ws = Workspace::new();
+    let mut topk = TopK::new(0.1);
+    r.bench_pair(
+        "topk_select_1M",
+        (3 * M * 4) as u64,
+        || {
+            let mut g = a.clone();
+            topk.compress(&mut g, &mut ws)
+        },
+        || {
+            let mut g = a.clone();
+            reference_topk(&mut g, 0.1)
+        },
+    );
+
+    // --- GradFamily push + per-epoch N-PCA at d = 100k ---------------------
+    const D: usize = 100_000;
+    const EPOCHS: usize = 16;
+    let grads: Vec<Vec<f32>> = (0..EPOCHS)
+        .map(|i| randv(D, 100 + i as u64))
+        .collect();
+    r.bench_pair(
+        "gram_family_push_pca_100k",
+        (EPOCHS * D * 4) as u64,
+        || {
+            let mut pca = GramPca::new(D);
+            let mut last = (0, 0);
+            for g in &grads {
+                pca.push(g);
+                last = pca.n_pca();
+            }
+            last
+        },
+        || naive_gram_push_pca(&grads),
+    );
+
+    // --- steady-state round loop: worker + server, zero allocations --------
+    // One worker in its scalar regime (identical gradient every round ->
+    // rho = 1, sin^2 ~ 0) plus the server's fused apply sweep. The refresh
+    // round and one warmup scalar round run before measurement so every
+    // arena and buffer is at its high-water capacity.
+    const DIM: usize = 262_144;
+    let template = randv(DIM, 7);
+    let policy = ThresholdPolicy::fixed(0.5);
+    let mut worker = Worker::new(0, Box::new(Identity));
+    let mut server = Server::new(vec![0.0f32; DIM], vec![1.0], 0.01);
+    let mut grad = template.clone();
+    let mut msgs = Vec::with_capacity(1);
+    let mut t = 0usize;
+    let msg0 = worker.process_round(t, &mut grad, 0.0, &policy);
+    msgs.push(msg0);
+    server.apply(&msgs).expect("bootstrap round");
+    r.bench("worker_round_steady_state_256k", (3 * DIM * 4) as u64, || {
+        t += 1;
+        grad.clear();
+        grad.extend_from_slice(&template);
+        let msg = worker.process_round(t, &mut grad, 0.0, &policy);
+        assert!(msg.is_scalar(), "steady state must stay scalar");
+        msgs.clear();
+        msgs.push(msg);
+        server.apply(&msgs).expect("steady-state round");
+    });
+
+    // Same loop through the top-K plug-and-play stack (leased magnitude
+    // scratch), still allocation-free.
+    let mut worker_k = Worker::new(0, Box::new(TopK::new(0.1)));
+    let mut server_k = Server::new(vec![0.0f32; DIM], vec![1.0], 0.01);
+    let mut grad_k = template.clone();
+    let mut msgs_k = Vec::with_capacity(1);
+    let mut tk = 0usize;
+    let msg0 = worker_k.process_round(tk, &mut grad_k, 0.0, &policy);
+    msgs_k.push(msg0);
+    server_k.apply(&msgs_k).expect("bootstrap round");
+    r.bench("worker_round_topk_steady_state_256k", (4 * DIM * 4) as u64, || {
+        tk += 1;
+        grad_k.clear();
+        grad_k.extend_from_slice(&template);
+        let msg = worker_k.process_round(tk, &mut grad_k, 0.0, &policy);
+        assert!(msg.is_scalar(), "steady state must stay scalar");
+        msgs_k.clear();
+        msgs_k.push(msg);
+        server_k.apply(&msgs_k).expect("steady-state round");
+    });
+
+    // --- report + gate ------------------------------------------------------
+    let out = PathBuf::from(
+        std::env::var("FEDRECYCLE_BENCH_OUT")
+            .unwrap_or_else(|_| "BENCH_hotpath.json".into()),
+    );
+    r.write(&out).expect("write bench report");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FEDRECYCLE_BENCH_NO_GATE").map(|v| v == "1") == Ok(true) {
+        println!("gate skipped (FEDRECYCLE_BENCH_NO_GATE=1)");
+        return;
+    }
+    let baseline_path = PathBuf::from(
+        std::env::var("FEDRECYCLE_BENCH_BASELINE")
+            .unwrap_or_else(|_| "benches/baseline/hotpath_baseline.json".into()),
+    );
+    let baseline = match load_baseline(&baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("FAIL: {e:#} (set FEDRECYCLE_BENCH_NO_GATE=1 to skip)");
+            std::process::exit(1);
+        }
+    };
+    let violations = check_baseline(&r, &baseline);
+    if violations.is_empty() {
+        println!("baseline gate: PASS ({})", baseline_path.display());
+    } else {
+        eprintln!("baseline gate: FAIL");
+        for v in &violations {
+            eprintln!("  - {v}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -69,7 +69,9 @@ pub fn centralized_analysis(
         // accumulated-gradient step, which matches for tau-step SGD on the
         // recorded trajectory up to O(eta^2) and is exact for tau=1.
         crate::linalg::vec_ops::axpy(-eta, &acc, &mut theta);
-        pca.push(acc.clone());
+        // §Perf: the PCA accumulator copies `acc` into its flat matrix, so
+        // the recorder can take ownership without an extra clone.
+        pca.push(&acc);
         recorder.record(acc);
         let (test_loss, test_metric) = trainer.eval(&theta)?;
         let (n95, n99) = pca.n_pca();

@@ -54,7 +54,7 @@ pub fn pgd_overlap_heatmap(grads: &[Vec<f32>], fraction: f64, title: &str) -> He
     assert!(!grads.is_empty());
     let mut pca = GramPca::new(grads[0].len());
     for g in grads {
-        pca.push(g.clone());
+        pca.push(g);
     }
     let pgds = pca.principal_directions(fraction);
     let (n, k) = (grads.len(), pgds.len());

@@ -23,17 +23,24 @@ pub fn threads_from_env() -> usize {
 /// One benchmark's statistics (seconds).
 #[derive(Clone, Debug)]
 pub struct BenchReport {
+    /// `group/name` of the bench.
     pub name: String,
+    /// Timed samples taken (after warmup).
     pub samples: usize,
+    /// Mean seconds per iteration.
     pub mean: f64,
+    /// Median seconds per iteration.
     pub p50: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95: f64,
+    /// Fastest sample, seconds.
     pub min: f64,
     /// Optional throughput annotation (unit/sec), set via `throughput`.
     pub per_sec: Option<f64>,
 }
 
 impl BenchReport {
+    /// One formatted table row (what the bench binaries print).
     pub fn line(&self) -> String {
         let tp = self
             .per_sec
@@ -74,6 +81,7 @@ pub struct Bencher {
 }
 
 impl Bencher {
+    /// A runner printing its table header immediately.
     pub fn new(group: &str, samples: usize, warmup: usize) -> Self {
         println!("== bench group: {group} ==");
         println!(
@@ -142,10 +150,12 @@ impl Bencher {
         self.reports.push(report);
     }
 
+    /// Reports collected so far, in bench order.
     pub fn reports(&self) -> &[BenchReport] {
         &self.reports
     }
 
+    /// Close the group and hand back all reports.
     pub fn finish(self) -> Vec<BenchReport> {
         println!();
         self.reports

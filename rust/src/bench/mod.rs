@@ -1,6 +1,21 @@
 //! Criterion-style micro/throughput bench harness (the build host lacks
 //! `criterion`; `benches/*.rs` declare `harness = false` and drive this).
+//!
+//! Three pieces:
+//!
+//! * [`harness`] — interactive throughput benches (the `fig*`/`hotpath`
+//!   binaries): warmup + robust percentiles, human-readable table.
+//! * [`alloc`] — a counting [`CountingAlloc`] global allocator so bench
+//!   binaries can *measure* allocation claims instead of asserting them.
+//! * [`regress`] — the benchmark-regression harness behind
+//!   `benches/regress.rs`: paired optimized-vs-naive timings, a
+//!   `BENCH_hotpath.json` report, and a machine-independent ratio gate
+//!   against the committed `benches/baseline/hotpath_baseline.json`.
 
+pub mod alloc;
 pub mod harness;
+pub mod regress;
 
+pub use alloc::{alloc_snapshot, count_allocs, AllocSnapshot, CountingAlloc};
 pub use harness::{threads_from_env, BenchReport, Bencher};
+pub use regress::{check_baseline, load_baseline, RegressBench, Regression};

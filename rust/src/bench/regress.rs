@@ -1,0 +1,360 @@
+//! Benchmark-regression harness: named benches, JSON reports, and a
+//! tolerance gate against a committed baseline.
+//!
+//! The `benches/regress.rs` binary drives this module to produce
+//! `BENCH_hotpath.json` — per-bench ns/op, bytes moved, and allocator
+//! calls (via [`CountingAlloc`]) — and compares the run against the
+//! committed `benches/baseline/hotpath_baseline.json`.
+//!
+//! # Why the gate is ratio-based
+//!
+//! Absolute ns/op differs wildly across CI machines; gating on it is how
+//! bench jobs become flaky. Every gated bench here is a **pair**: the
+//! optimized kernel and a naive textbook reference ([`vec_ops::reference`],
+//! [`reference_topk`], a recompute-everything Gram loop — deliberately
+//! no-cleverness baselines, not snapshots of previous releases) timed in
+//! the same process on the same data. The gated quantity is the *ratio*
+//! `ns_optimized / ns_reference`, which cancels the machine out; the
+//! committed baseline stores the worst acceptable ratio and the gate
+//! fails when the measured ratio exceeds it by more than the tolerance
+//! (default 30%, `FEDRECYCLE_BENCH_TOLERANCE` to override). Zero-alloc
+//! gates are absolute: steady-state allocator calls must stay at zero.
+//!
+//! [`CountingAlloc`]: super::alloc::CountingAlloc
+//! [`vec_ops::reference`]: crate::linalg::vec_ops::reference
+//! [`reference_topk`]: crate::compress::reference_topk
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::alloc::count_allocs;
+
+/// One regression bench's measurements.
+#[derive(Clone, Debug)]
+pub struct RegressBench {
+    /// Stable bench name (the baseline gate keys on it).
+    pub name: String,
+    /// Trimmed-mean wall time per operation, nanoseconds.
+    pub ns_per_op: f64,
+    /// Analytic bytes moved per operation (reads + writes of the kernel's
+    /// working set — for bandwidth context, not gated).
+    pub bytes_per_op: u64,
+    /// Allocator calls per operation (0 unless the binary installed the
+    /// counting allocator and the op allocates).
+    pub allocs_per_op: u64,
+    /// Bytes requested from the allocator per operation.
+    pub alloc_bytes_per_op: u64,
+    /// Trimmed-mean ns/op of the paired naive reference, if this bench is
+    /// a gated pair.
+    pub ns_reference: Option<f64>,
+}
+
+impl RegressBench {
+    /// `reference / optimized` — how many times faster than naive
+    /// (`None` for unpaired benches).
+    pub fn speedup(&self) -> Option<f64> {
+        self.ns_reference.map(|r| r / self.ns_per_op)
+    }
+
+    /// `optimized / reference` — the machine-independent gated quantity.
+    pub fn ratio_vs_reference(&self) -> Option<f64> {
+        self.ns_reference.map(|r| self.ns_per_op / r)
+    }
+}
+
+/// Bench-group runner with warmup, trimmed-mean timing, and allocation
+/// counting.
+pub struct Regression {
+    group: String,
+    samples: usize,
+    warmup: usize,
+    benches: Vec<RegressBench>,
+}
+
+impl Regression {
+    /// A runner taking `samples` timed samples after `warmup` discarded
+    /// iterations per bench.
+    pub fn new(group: &str, samples: usize, warmup: usize) -> Self {
+        println!("== regression group: {group} (samples={samples}) ==");
+        Self {
+            group: group.to_string(),
+            samples: samples.max(1),
+            warmup,
+            benches: Vec::new(),
+        }
+    }
+
+    /// Sample count from `FEDRECYCLE_BENCH_SAMPLES` (default 15; CI dials
+    /// down, perf runs dial up), warmup 3.
+    pub fn from_env(group: &str) -> Self {
+        let samples = std::env::var("FEDRECYCLE_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(15);
+        Self::new(group, samples, 3)
+    }
+
+    /// Warmup + sample `f`, returning the trimmed-mean ns per call
+    /// (20% shaved off each end of the sorted samples).
+    fn time_ns<T>(&self, f: &mut impl FnMut() -> T) -> f64 {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64() * 1e9);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let trim = times.len() / 5;
+        let kept = &times[trim..times.len() - trim];
+        kept.iter().sum::<f64>() / kept.len() as f64
+    }
+
+    /// Time an unpaired bench.
+    pub fn bench<T>(&mut self, name: &str, bytes_per_op: u64, mut f: impl FnMut() -> T) {
+        let ns = self.time_ns(&mut f);
+        let (_, allocs, alloc_bytes) = count_allocs(&mut f);
+        self.record(RegressBench {
+            name: name.to_string(),
+            ns_per_op: ns,
+            bytes_per_op,
+            allocs_per_op: allocs,
+            alloc_bytes_per_op: alloc_bytes,
+            ns_reference: None,
+        });
+    }
+
+    /// Time a gated pair: the optimized kernel and its naive reference on
+    /// the same data in the same process (the ratio is what the baseline
+    /// gates on).
+    pub fn bench_pair<T, U>(
+        &mut self,
+        name: &str,
+        bytes_per_op: u64,
+        mut optimized: impl FnMut() -> T,
+        mut reference: impl FnMut() -> U,
+    ) {
+        let ns = self.time_ns(&mut optimized);
+        let ns_ref = self.time_ns(&mut reference);
+        let (_, allocs, alloc_bytes) = count_allocs(&mut optimized);
+        self.record(RegressBench {
+            name: name.to_string(),
+            ns_per_op: ns,
+            bytes_per_op,
+            allocs_per_op: allocs,
+            alloc_bytes_per_op: alloc_bytes,
+            ns_reference: Some(ns_ref),
+        });
+    }
+
+    fn record(&mut self, b: RegressBench) {
+        let speedup = b
+            .speedup()
+            .map(|x| format!("  {x:>6.2}x vs naive"))
+            .unwrap_or_default();
+        println!(
+            "{:<40} {:>12.1} ns/op  {:>3} allocs/op{}",
+            b.name, b.ns_per_op, b.allocs_per_op, speedup
+        );
+        self.benches.push(b);
+    }
+
+    /// All measurements so far.
+    pub fn reports(&self) -> &[RegressBench] {
+        &self.benches
+    }
+
+    /// The report as a JSON document (the `BENCH_hotpath.json` schema).
+    pub fn to_json(&self) -> Json {
+        let benches = self.benches.iter().map(|b| {
+            let mut fields = vec![
+                ("name", s(&b.name)),
+                ("ns_per_op", num(b.ns_per_op)),
+                ("bytes_per_op", num(b.bytes_per_op as f64)),
+                ("allocs_per_op", num(b.allocs_per_op as f64)),
+                ("alloc_bytes_per_op", num(b.alloc_bytes_per_op as f64)),
+            ];
+            if let Some(r) = b.ns_reference {
+                fields.push(("ns_reference", num(r)));
+                fields.push(("speedup_vs_reference", num(b.speedup().unwrap())));
+                fields.push((
+                    "ratio_vs_reference",
+                    num(b.ratio_vs_reference().unwrap()),
+                ));
+            }
+            obj(fields)
+        });
+        obj(vec![
+            ("version", num(1.0)),
+            ("group", s(&self.group)),
+            ("samples", num(self.samples as f64)),
+            ("benches", arr(benches)),
+        ])
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing bench report to {}", path.display()))
+    }
+}
+
+/// Load a committed baseline document.
+pub fn load_baseline(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench baseline {}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("bad baseline JSON: {e}"))
+}
+
+/// Gate a run against a committed baseline; returns the list of
+/// violations (empty = pass).
+///
+/// Baseline schema: `{"tolerance": 0.30, "gates": [{"name": ...,
+/// "max_ratio_vs_reference": 0.5}, {"name": ..., "max_allocs_per_op": 0}]}`.
+/// Ratio gates allow `max_ratio * (1 + tolerance)`; alloc gates are
+/// absolute. A gate naming a bench the run did not produce is itself a
+/// violation (renames can't silently disarm the gate).
+pub fn check_baseline(run: &Regression, baseline: &Json) -> Vec<String> {
+    let tolerance = std::env::var("FEDRECYCLE_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .or_else(|| baseline.get("tolerance").and_then(Json::as_f64))
+        .unwrap_or(0.30);
+    let mut violations = Vec::new();
+    let gates = match baseline.get("gates").and_then(Json::as_arr) {
+        Some(g) => g,
+        None => return vec!["baseline has no `gates` array".into()],
+    };
+    for gate in gates {
+        let name = match gate.get("name").and_then(Json::as_str) {
+            Some(n) => n,
+            None => {
+                violations.push("baseline gate without `name`".into());
+                continue;
+            }
+        };
+        let bench = match run.reports().iter().find(|b| b.name == name) {
+            Some(b) => b,
+            None => {
+                violations.push(format!("gated bench `{name}` was not run"));
+                continue;
+            }
+        };
+        if let Some(max_ratio) = gate.get("max_ratio_vs_reference").and_then(Json::as_f64)
+        {
+            match bench.ratio_vs_reference() {
+                Some(ratio) => {
+                    let limit = max_ratio * (1.0 + tolerance);
+                    if ratio > limit {
+                        violations.push(format!(
+                            "`{name}` regressed: ns_opt/ns_ref = {ratio:.3} > \
+                             allowed {limit:.3} (baseline {max_ratio:.3} + {:.0}% \
+                             tolerance)",
+                            tolerance * 100.0
+                        ));
+                    }
+                }
+                None => violations
+                    .push(format!("gated bench `{name}` has no paired reference")),
+            }
+        }
+        if let Some(max_allocs) = gate.get("max_allocs_per_op").and_then(Json::as_f64) {
+            if bench.allocs_per_op as f64 > max_allocs {
+                violations.push(format!(
+                    "`{name}` allocates: {} allocs/op > allowed {max_allocs}",
+                    bench.allocs_per_op
+                ));
+            }
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_run() -> Regression {
+        let mut r = Regression::new("test", 5, 1);
+        r.bench_pair("paired", 8, || std::hint::black_box(1 + 1), || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        r.bench("unpaired", 8, || std::hint::black_box(2 + 2));
+        r
+    }
+
+    #[test]
+    fn reports_and_json_shape() {
+        let r = fake_run();
+        assert_eq!(r.reports().len(), 2);
+        let j = r.to_json();
+        assert_eq!(j.req_usize("version").unwrap(), 1);
+        let benches = j.req_arr("benches").unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].req_str("name").unwrap(), "paired");
+        assert!(benches[0].get("speedup_vs_reference").is_some());
+        assert!(benches[1].get("speedup_vs_reference").is_none());
+        // Round-trips through the parser.
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.req_arr("benches").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_fails_beyond() {
+        let r = fake_run();
+        let ratio = r.reports()[0].ratio_vs_reference().unwrap();
+        let pass = Json::parse(&format!(
+            r#"{{"tolerance": 0.3, "gates": [{{"name": "paired",
+                "max_ratio_vs_reference": {}}}]}}"#,
+            ratio * 2.0
+        ))
+        .unwrap();
+        assert!(check_baseline(&r, &pass).is_empty());
+        let fail = Json::parse(&format!(
+            r#"{{"tolerance": 0.0, "gates": [{{"name": "paired",
+                "max_ratio_vs_reference": {}}}]}}"#,
+            ratio / 2.0
+        ))
+        .unwrap();
+        assert_eq!(check_baseline(&r, &fail).len(), 1);
+    }
+
+    #[test]
+    fn gate_on_missing_bench_is_a_violation() {
+        let r = fake_run();
+        let b = Json::parse(
+            r#"{"gates": [{"name": "renamed_away", "max_ratio_vs_reference": 1.0}]}"#,
+        )
+        .unwrap();
+        let v = check_baseline(&r, &b);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("not run"));
+    }
+
+    #[test]
+    fn alloc_gate_is_absolute() {
+        let r = fake_run();
+        // Without the counting allocator installed the measured allocs are
+        // 0, so a zero-alloc gate passes...
+        let b = Json::parse(r#"{"gates": [{"name": "unpaired", "max_allocs_per_op": 0}]}"#)
+            .unwrap();
+        assert!(check_baseline(&r, &b).is_empty());
+        // ...and an unpaired bench under a ratio gate is a violation.
+        let b2 = Json::parse(
+            r#"{"gates": [{"name": "unpaired", "max_ratio_vs_reference": 1.0}]}"#,
+        )
+        .unwrap();
+        assert_eq!(check_baseline(&r, &b2).len(), 1);
+    }
+}

@@ -8,9 +8,12 @@
 
 use super::{Compressor, Cost};
 use crate::linalg::svd::{reconstruct, truncated_svd};
+use crate::linalg::Workspace;
 
+/// Rank-r atomic (SVD) codec.
 #[derive(Clone, Debug)]
 pub struct Atomo {
+    /// Number of atoms (singular triples) transmitted per matrix.
     pub rank: usize,
     /// Subspace-iteration sweeps (accuracy/cost of the encoder itself).
     pub iters: usize,
@@ -22,6 +25,7 @@ pub struct Atomo {
 }
 
 impl Atomo {
+    /// Rank-`rank` codec over one near-square reshape of the flat gradient.
     pub fn new(rank: usize) -> Self {
         assert!(rank >= 1);
         Self { rank, iters: 8, seed: 0xA70, segments: None }
@@ -66,7 +70,10 @@ impl Atomo {
 }
 
 impl Compressor for Atomo {
-    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+    // The subspace-iteration encoder allocates internally; ATOMO refresh
+    // rounds are not on the scalar steady-state path, so the workspace is
+    // unused here.
+    fn compress(&mut self, grad: &mut Vec<f32>, _ws: &mut Workspace) -> Cost {
         match self.segments.clone() {
             None => self.compress_slice(grad.as_mut_slice()),
             Some(segs) => {
@@ -115,7 +122,7 @@ mod tests {
             }
         }
         let orig = g.clone();
-        let cost = Atomo::new(1).compress(&mut g);
+        let cost = Atomo::new(1).compress(&mut g, &mut Workspace::new());
         let err: f64 = orig
             .iter()
             .zip(&g)
@@ -131,7 +138,7 @@ mod tests {
         let orig: Vec<f32> = (0..900).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let err_of = |rank: usize| {
             let mut g = orig.clone();
-            Atomo::new(rank).compress(&mut g);
+            Atomo::new(rank).compress(&mut g, &mut Workspace::new());
             orig.iter()
                 .zip(&g)
                 .map(|(a, b)| ((a - b) as f64).powi(2))
@@ -145,7 +152,7 @@ mod tests {
     #[test]
     fn cost_much_smaller_than_dense() {
         let mut g = vec![1.0f32; 10_000];
-        let cost = Atomo::new(2).compress(&mut g);
+        let cost = Atomo::new(2).compress(&mut g, &mut Workspace::new());
         assert!(cost.floats < 1_000, "cost={}", cost.floats);
     }
 
@@ -167,7 +174,7 @@ mod tests {
         g[m * n + 2] = 0.5;
         let orig = g.clone();
         let mut c = Atomo::with_segments(1, vec![(0, m * n), (m * n, 3)]);
-        let cost = c.compress(&mut g);
+        let cost = c.compress(&mut g, &mut Workspace::new());
         // Rank-1 segment reconstructed near-exactly; bias passes through.
         let err: f64 = orig[..m * n]
             .iter()

@@ -3,6 +3,7 @@
 //! uses EF "as standard" whenever top-K sparsification is in the stack.
 
 use super::{Compressor, Cost};
+use crate::linalg::Workspace;
 
 /// Wraps any codec with a per-worker residual memory.
 pub struct ErrorFeedback<C: Compressor> {
@@ -11,30 +12,39 @@ pub struct ErrorFeedback<C: Compressor> {
 }
 
 impl<C: Compressor> ErrorFeedback<C> {
+    /// Wrap `inner` with an (initially empty) residual memory.
     pub fn new(inner: C) -> Self {
         Self { inner, residual: Vec::new() }
     }
 
+    /// The accumulated not-yet-transmitted residual.
     pub fn residual(&self) -> &[f32] {
         &self.residual
     }
 }
 
 impl<C: Compressor> Compressor for ErrorFeedback<C> {
-    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+    fn compress(&mut self, grad: &mut Vec<f32>, ws: &mut Workspace) -> Cost {
         if self.residual.len() != grad.len() {
-            self.residual = vec![0.0; grad.len()];
+            self.residual.clear();
+            self.residual.resize(grad.len(), 0.0);
         }
         // corrected = grad + residual
         for (g, r) in grad.iter_mut().zip(&self.residual) {
             *g += *r;
         }
-        let corrected = grad.clone();
-        let cost = self.inner.compress(grad);
+        // The pre-compression snapshot lives in leased scratch: the inner
+        // codec may itself lease (the arena pops distinct buffers), and the
+        // snapshot goes back to the pool before returning — zero
+        // steady-state allocation (§Perf).
+        let mut corrected = ws.take_f32(grad.len());
+        corrected.extend_from_slice(grad);
+        let cost = self.inner.compress(grad, ws);
         // residual = corrected - compressed
         for ((r, c), g) in self.residual.iter_mut().zip(&corrected).zip(grad.iter()) {
             *r = c - g;
         }
+        ws.put_f32(corrected);
         cost
     }
 
@@ -51,11 +61,12 @@ mod tests {
 
     #[test]
     fn residual_plus_sent_equals_input() {
+        let mut ws = Workspace::new();
         let mut ef = ErrorFeedback::new(TopK::new(0.25));
         let mut rng = Rng::new(1);
         let orig: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let mut g = orig.clone();
-        ef.compress(&mut g);
+        ef.compress(&mut g, &mut ws);
         for i in 0..64 {
             // first round: corrected == orig
             assert!((g[i] + ef.residual()[i] - orig[i]).abs() < 1e-6);
@@ -68,7 +79,7 @@ mod tests {
         // via residual accumulation.
         struct Half;
         impl Compressor for Half {
-            fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+            fn compress(&mut self, grad: &mut Vec<f32>, _ws: &mut Workspace) -> Cost {
                 // crude codec: zero the second half
                 let m = grad.len();
                 for x in grad[m / 2..].iter_mut() {
@@ -80,11 +91,12 @@ mod tests {
                 "half"
             }
         }
+        let mut ws = Workspace::new();
         let mut ef = ErrorFeedback::new(Half);
         let mut total_sent = vec![0f32; 4];
         for _ in 0..3 {
             let mut g = vec![1.0f32, 1.0, 1.0, 1.0];
-            ef.compress(&mut g);
+            ef.compress(&mut g, &mut ws);
             for (t, s) in total_sent.iter_mut().zip(&g) {
                 *t += s;
             }
@@ -100,10 +112,11 @@ mod tests {
     /// exactly zero round after round, and nothing ever "resurfaces".
     #[test]
     fn signsgd_ef_round_trip_on_zero_vector_is_a_fixed_point() {
+        let mut ws = Workspace::new();
         let mut ef = ErrorFeedback::new(crate::compress::SignSgd);
         for round in 0..3 {
             let mut g = vec![0.0f32; 32];
-            let cost = ef.compress(&mut g);
+            let cost = ef.compress(&mut g, &mut ws);
             assert!(g.iter().all(|x| *x == 0.0), "round {round}: nonzero output");
             assert!(
                 ef.residual().iter().all(|r| *r == 0.0),
@@ -113,16 +126,32 @@ mod tests {
         }
         // A later nonzero gradient is unaffected by the zero history.
         let mut g = vec![1.0f32, -1.0, 1.0, -1.0];
-        ef.compress(&mut g);
+        ef.compress(&mut g, &mut ws);
         assert_eq!(g, vec![1.0, -1.0, 1.0, -1.0]);
     }
 
     #[test]
     fn identity_inner_keeps_zero_residual() {
+        let mut ws = Workspace::new();
         let mut ef = ErrorFeedback::new(crate::compress::identity::Identity);
         let mut g = vec![1.0f32, -2.0];
-        ef.compress(&mut g);
+        ef.compress(&mut g, &mut ws);
         assert_eq!(ef.residual(), &[0.0, 0.0]);
         assert_eq!(g, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn nested_leases_round_trip_through_one_arena() {
+        // EF's snapshot and TopK's magnitudes lease concurrently from the
+        // same workspace; both come back, so a second round reuses them.
+        let mut ws = Workspace::new();
+        let mut ef = ErrorFeedback::new(TopK::new(0.5));
+        let mut g: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        ef.compress(&mut g, &mut ws);
+        let resident = ws.resident_elems();
+        assert!(resident >= 64, "expected both buffers parked, got {resident}");
+        let mut g2: Vec<f32> = (0..32).map(|i| (31 - i) as f32).collect();
+        ef.compress(&mut g2, &mut ws);
+        assert_eq!(ws.resident_elems(), resident);
     }
 }

@@ -1,12 +1,14 @@
 //! Identity codec = vanilla FL transmission (the Fig. 5 baseline).
 
 use super::{dense_cost, Compressor, Cost};
+use crate::linalg::Workspace;
 
+/// Pass-through codec: the gradient travels dense and uncompressed.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Identity;
 
 impl Compressor for Identity {
-    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+    fn compress(&mut self, grad: &mut Vec<f32>, _ws: &mut Workspace) -> Cost {
         dense_cost(grad.len())
     }
 
@@ -23,7 +25,7 @@ mod tests {
     fn passthrough() {
         let mut g = vec![1.0, -2.0, 3.0];
         let orig = g.clone();
-        let c = Identity.compress(&mut g);
+        let c = Identity.compress(&mut g, &mut Workspace::new());
         assert_eq!(g, orig);
         assert_eq!(c.floats, 3);
         assert_eq!(c.bits, 96);

@@ -19,7 +19,9 @@ pub use atomo::Atomo;
 pub use error_feedback::ErrorFeedback;
 pub use identity::Identity;
 pub use signsgd::SignSgd;
-pub use topk::TopK;
+pub use topk::{reference_topk, TopK};
+
+use crate::linalg::Workspace;
 
 /// Exact uplink cost of one compressed gradient transmission.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,7 +37,12 @@ pub struct Cost {
 pub trait Compressor: Send {
     /// Compress `grad` in place to its dense effective form; returns the
     /// uplink cost of transmitting that form.
-    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost;
+    ///
+    /// All transient scratch (top-K magnitude buffers, error-feedback
+    /// correction copies) is leased from `ws`, so steady-state compression
+    /// allocates nothing once the arena is warm (§Perf; verified by the
+    /// counting allocator in `benches/regress.rs`).
+    fn compress(&mut self, grad: &mut Vec<f32>, ws: &mut Workspace) -> Cost;
 
     /// Codec name for logging.
     fn name(&self) -> &'static str;

@@ -7,12 +7,14 @@
 //! the float-equivalent cost is `M/32 + 1`.
 
 use super::{Compressor, Cost};
+use crate::linalg::Workspace;
 
+/// 1-bit sign codec with a single mean-magnitude scale.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SignSgd;
 
 impl Compressor for SignSgd {
-    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+    fn compress(&mut self, grad: &mut Vec<f32>, _ws: &mut Workspace) -> Cost {
         let m = grad.len();
         if m == 0 {
             return Cost { floats: 0, bits: 0 };
@@ -40,7 +42,7 @@ mod tests {
     #[test]
     fn output_is_signed_scale() {
         let mut g = vec![3.0f32, -1.0, 0.5, -0.5];
-        let cost = SignSgd.compress(&mut g);
+        let cost = SignSgd.compress(&mut g, &mut Workspace::new());
         let scale = (3.0 + 1.0 + 0.5 + 0.5) / 4.0;
         assert_eq!(g, vec![scale, -scale, scale, -scale]);
         assert_eq!(cost.bits, 4 + 32);
@@ -51,7 +53,7 @@ mod tests {
     fn preserves_sign_agreement() {
         let mut g = vec![0.1f32, -0.2, 5.0, -7.0];
         let orig = g.clone();
-        SignSgd.compress(&mut g);
+        SignSgd.compress(&mut g, &mut Workspace::new());
         for (o, c) in orig.iter().zip(&g) {
             assert_eq!(o.signum(), c.signum());
         }
@@ -60,7 +62,7 @@ mod tests {
     #[test]
     fn bits_are_32x_smaller_than_dense() {
         let mut g = vec![1.0f32; 3200];
-        let cost = SignSgd.compress(&mut g);
+        let cost = SignSgd.compress(&mut g, &mut Workspace::new());
         assert_eq!(cost.bits, 3200 + 32);
         assert!(cost.bits * 30 < 32 * 3200);
     }
@@ -68,7 +70,7 @@ mod tests {
     #[test]
     fn empty_gradient() {
         let mut g: Vec<f32> = vec![];
-        let cost = SignSgd.compress(&mut g);
+        let cost = SignSgd.compress(&mut g, &mut Workspace::new());
         assert_eq!(cost.bits, 0);
         assert_eq!(cost.floats, 0);
     }
@@ -80,7 +82,7 @@ mod tests {
     #[test]
     fn zero_gradient_collapses_to_positive_zero_scale() {
         let mut g = vec![0.0f32; 64];
-        let cost = SignSgd.compress(&mut g);
+        let cost = SignSgd.compress(&mut g, &mut Workspace::new());
         assert!(g.iter().all(|x| *x == 0.0 && x.is_sign_positive()));
         assert_eq!(cost.bits, 64 + 32);
         assert_eq!(cost.floats, 64 / 32 + 1);

@@ -4,9 +4,33 @@
 //! follows the paper's accounting of "floating point parameters": one value
 //! plus one index per kept entry = 2K floats (indices counted as one
 //! 32-bit word each).
+//!
+//! The cut magnitude is found with `select_nth_unstable` — an O(M) average
+//! partial quickselect instead of an O(M log M) full sort — over a
+//! magnitude buffer leased from the round's [`Workspace`], so steady-state
+//! compression is allocation-free (§Perf; `benches/regress.rs` times the
+//! select against the full-sort [`reference_topk`] and counts allocations).
 
 use super::{Compressor, Cost};
+use crate::linalg::Workspace;
 
+/// Top-K magnitude sparsifier.
+///
+/// # Examples
+///
+/// Keeping half of a 6-vector leaves exactly the 3 largest-magnitude
+/// entries and charges `2K` floats (value + index per kept entry):
+///
+/// ```
+/// use fedrecycle::compress::{Compressor, TopK};
+/// use fedrecycle::linalg::Workspace;
+///
+/// let mut grad = vec![0.1f32, -5.0, 3.0, 0.2, -0.05, 4.0];
+/// let mut ws = Workspace::new();
+/// let cost = TopK::new(0.5).compress(&mut grad, &mut ws);
+/// assert_eq!(grad, vec![0.0, -5.0, 3.0, 0.0, 0.0, 4.0]);
+/// assert_eq!(cost.floats, 6); // 2K with K = 3
+/// ```
 #[derive(Clone, Debug)]
 pub struct TopK {
     /// Fraction of entries kept (the paper tunes K ~ 10%).
@@ -14,49 +38,84 @@ pub struct TopK {
 }
 
 impl TopK {
+    /// Sparsifier keeping `ceil(fraction * M)` entries (clamped to
+    /// `[1, M]`); `fraction` must be in `(0, 1]`.
     pub fn new(fraction: f64) -> Self {
         assert!(fraction > 0.0 && fraction <= 1.0);
         Self { fraction }
     }
 
     fn k_of(&self, m: usize) -> usize {
-        ((m as f64 * self.fraction).ceil() as usize).clamp(1, m)
+        k_of(m, self.fraction)
+    }
+}
+
+/// `K = ceil(fraction * m)` clamped to `[1, m]` — shared by the production
+/// codec and [`reference_topk`] so the bit-identity contract cannot drift
+/// on the k computation.
+fn k_of(m: usize, fraction: f64) -> usize {
+    ((m as f64 * fraction).ceil() as usize).clamp(1, m)
+}
+
+/// Full-sort reference implementation of [`TopK`] (same fraction, tie, and
+/// cost semantics), used as ground truth by `tests/kernel_exactness.rs`
+/// and as the timing baseline in `benches/regress.rs`. The quickselect
+/// path must stay **bit-identical** to this for every input.
+pub fn reference_topk(grad: &mut [f32], fraction: f64) -> Cost {
+    assert!(fraction > 0.0 && fraction <= 1.0);
+    let m = grad.len();
+    let k = k_of(m, fraction);
+    if k == m {
+        return super::dense_cost(m);
+    }
+    let mut mags: Vec<f32> = grad.iter().map(|x| x.abs()).collect();
+    mags.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut = mags[m - k];
+    zero_below_cut(grad, cut, k);
+    Cost { floats: 2 * k as u64, bits: 64 * k as u64 }
+}
+
+/// Shared tail of both implementations: zero everything strictly below the
+/// cut magnitude, keeping ties at the cut in scan order until exactly `k`
+/// entries survive.
+fn zero_below_cut(grad: &mut [f32], cut: f32, k: usize) {
+    let mut kept = 0usize;
+    for x in grad.iter() {
+        if x.abs() > cut {
+            kept += 1;
+        }
+    }
+    let mut ties_allowed = k - kept;
+    for x in grad.iter_mut() {
+        let a = x.abs();
+        if a > cut {
+            continue;
+        }
+        if a == cut && ties_allowed > 0 {
+            ties_allowed -= 1;
+        } else {
+            *x = 0.0;
+        }
     }
 }
 
 impl Compressor for TopK {
-    fn compress(&mut self, grad: &mut Vec<f32>) -> Cost {
+    fn compress(&mut self, grad: &mut Vec<f32>, ws: &mut Workspace) -> Cost {
         let m = grad.len();
         let k = self.k_of(m);
         if k == m {
             return super::dense_cost(m);
         }
         // Select the k-th largest magnitude with an O(M) average
-        // select_nth, then zero everything strictly below the cut and trim
-        // ties so exactly k survive.
-        let mut mags: Vec<f32> = grad.iter().map(|x| x.abs()).collect();
+        // select_nth over leased scratch, then zero everything strictly
+        // below the cut and trim ties so exactly k survive.
+        let mut mags = ws.take_f32(m);
+        mags.extend(grad.iter().map(|x| x.abs()));
         let idx = m - k;
         mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
         let cut = mags[idx];
-        let mut kept = 0usize;
-        for x in grad.iter_mut() {
-            if x.abs() > cut {
-                kept += 1;
-            }
-        }
-        // Keep ties at the cut until k entries survive.
-        let mut ties_allowed = k - kept;
-        for x in grad.iter_mut() {
-            let a = x.abs();
-            if a > cut {
-                continue;
-            }
-            if a == cut && ties_allowed > 0 {
-                ties_allowed -= 1;
-            } else {
-                *x = 0.0;
-            }
-        }
+        ws.put_f32(mags);
+        zero_below_cut(grad, cut, k);
         Cost { floats: 2 * k as u64, bits: 64 * k as u64 }
     }
 
@@ -70,11 +129,16 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    fn compress(codec: &mut TopK, g: &mut Vec<f32>) -> Cost {
+        let mut ws = Workspace::new();
+        codec.compress(g, &mut ws)
+    }
+
     #[test]
     fn keeps_exactly_k_largest() {
         let mut g = vec![0.1f32, -5.0, 3.0, 0.2, -0.05, 4.0];
         let mut c = TopK::new(0.5); // k = 3
-        let cost = c.compress(&mut g);
+        let cost = compress(&mut c, &mut g);
         assert_eq!(cost.floats, 6);
         assert_eq!(g.iter().filter(|x| **x != 0.0).count(), 3);
         assert_eq!(g[1], -5.0);
@@ -87,7 +151,7 @@ mod tests {
     fn handles_ties() {
         let mut g = vec![1.0f32; 10];
         let mut c = TopK::new(0.3); // k = 3
-        c.compress(&mut g);
+        compress(&mut c, &mut g);
         assert_eq!(g.iter().filter(|x| **x != 0.0).count(), 3);
     }
 
@@ -95,9 +159,39 @@ mod tests {
     fn full_fraction_is_identity() {
         let mut g = vec![1.0f32, 2.0, 3.0];
         let orig = g.clone();
-        let cost = TopK::new(1.0).compress(&mut g);
+        let cost = compress(&mut TopK::new(1.0), &mut g);
         assert_eq!(g, orig);
         assert_eq!(cost.floats, 3);
+    }
+
+    #[test]
+    fn reference_matches_quickselect_on_random_input() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 7, 10, 100, 1000] {
+            let orig: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for fraction in [0.1, 0.3, 1.0] {
+                let mut a = orig.clone();
+                let mut b = orig.clone();
+                let ca = compress(&mut TopK::new(fraction), &mut a);
+                let cb = reference_topk(&mut b, fraction);
+                assert_eq!(a, b, "n={n} fraction={fraction}");
+                assert_eq!(ca, cb);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_is_recycled_between_rounds() {
+        let mut ws = Workspace::new();
+        let mut c = TopK::new(0.25);
+        let mut g: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        c.compress(&mut g, &mut ws);
+        let resident = ws.resident_elems();
+        assert!(resident >= 64, "magnitude scratch not returned");
+        let mut g2: Vec<f32> = (0..64).map(|i| -(i as f32)).collect();
+        c.compress(&mut g2, &mut ws);
+        assert_eq!(ws.resident_elems(), resident, "scratch grew on reuse");
     }
 
     // -- pinned edge-case behavior ------------------------------------------
@@ -115,7 +209,7 @@ mod tests {
     #[test]
     fn tiny_fraction_keeps_exactly_one() {
         let mut g = vec![0.5f32, -3.0, 1.0, 2.0, -0.25];
-        let cost = TopK::new(1e-9).compress(&mut g);
+        let cost = compress(&mut TopK::new(1e-9), &mut g);
         assert_eq!(cost.floats, 2);
         assert_eq!(cost.bits, 64);
         assert_eq!(g.iter().filter(|x| **x != 0.0).count(), 1);
@@ -127,11 +221,11 @@ mod tests {
     #[test]
     fn k_at_or_above_len_is_dense_identity() {
         let mut g = vec![7.0f32];
-        let cost = TopK::new(0.01).compress(&mut g);
+        let cost = compress(&mut TopK::new(0.01), &mut g);
         assert_eq!(g, vec![7.0]);
         assert_eq!(cost.floats, 1);
         let mut g = vec![1.0f32, -2.0];
-        let cost = TopK::new(1.0).compress(&mut g);
+        let cost = compress(&mut TopK::new(1.0), &mut g);
         assert_eq!(g, vec![1.0, -2.0]);
         assert_eq!(cost.floats, 2);
         assert_eq!(cost.bits, 64);
@@ -144,7 +238,7 @@ mod tests {
     #[test]
     fn all_zero_gradient_keeps_k_zero_entries_at_full_cost() {
         let mut g = vec![0.0f32; 8];
-        let cost = TopK::new(0.25).compress(&mut g);
+        let cost = compress(&mut TopK::new(0.25), &mut g);
         assert_eq!(g, vec![0.0; 8]);
         assert_eq!(cost.floats, 4); // k = 2 -> 2k floats
         assert_eq!(cost.bits, 128);
@@ -158,7 +252,7 @@ mod tests {
     #[should_panic]
     fn empty_gradient_panics() {
         let mut g: Vec<f32> = Vec::new();
-        let _ = TopK::new(0.5).compress(&mut g);
+        let _ = compress(&mut TopK::new(0.5), &mut g);
     }
 
     #[test]
@@ -166,7 +260,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let orig: Vec<f32> = (0..1000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let mut g = orig.clone();
-        TopK::new(0.1).compress(&mut g);
+        compress(&mut TopK::new(0.1), &mut g);
         let kept_min = g
             .iter()
             .filter(|x| **x != 0.0)

@@ -288,8 +288,10 @@ fn parallel_round(
                     task_chunk.iter_mut().zip(out_chunk.iter_mut())
                 {
                     *out = Some(shard.local_round(theta, tau, eta).map(
-                        |(loss, grad)| {
-                            (loss, worker.process_round(round, grad, loss, &policy))
+                        |(loss, mut grad)| {
+                            let msg =
+                                worker.process_round(round, &mut grad, loss, &policy);
+                            (loss, msg)
                         },
                     ));
                 }
@@ -370,12 +372,12 @@ pub fn run_fl(
             }
         } else {
             for &w in &participants {
-                let (loss, grad) = timers.time("local_sgd", || {
+                let (loss, mut grad) = timers.time("local_sgd", || {
                     trainer.local_round(w, &server.theta, cfg.tau, cfg.eta)
                 })?;
                 train_loss_sum += loss;
                 let msg = timers.time("lbgm_uplink", || {
-                    workers[w].process_round(t, grad, loss, &cfg.policy)
+                    workers[w].process_round(t, &mut grad, loss, &cfg.policy)
                 });
                 ledger.record(w, msg.cost, msg.is_scalar());
                 msgs.push(msg);

@@ -14,21 +14,36 @@ use anyhow::Result;
 
 use crate::lbgm::reconstruct::{apply_full, apply_scalar};
 use crate::lbgm::store::LbgStore;
+use crate::linalg::Workspace;
 
 use super::messages::{Payload, WorkerMsg};
 
 /// The aggregation server's persistent state.
 pub struct Server {
+    /// The global model.
     pub theta: Vec<f32>,
+    /// Server-side LBG copies, one slot per worker.
     pub lbgs: LbgStore,
+    /// FedAvg weights omega_k (sum to 1 over the full federation).
     pub weights: Vec<f32>,
+    /// Global learning rate.
     pub eta: f32,
+    /// Scratch arena for the per-round renormalized weights (§Perf: the
+    /// fused apply sweep allocates nothing once warm).
+    ws: Workspace,
 }
 
 impl Server {
+    /// A server over `theta0` with per-worker FedAvg weights.
     pub fn new(theta0: Vec<f32>, weights: Vec<f32>, eta: f32) -> Self {
         let k = weights.len();
-        Self { theta: theta0, lbgs: LbgStore::new(k), weights, eta }
+        Self {
+            theta: theta0,
+            lbgs: LbgStore::new(k),
+            weights,
+            eta,
+            ws: Workspace::new(),
+        }
     }
 
     /// Apply one aggregation round in a single fused pass. `msgs` must
@@ -46,12 +61,14 @@ impl Server {
         // Renormalize omega over the participating set.
         let wsum: f32 = msgs.iter().map(|m| self.weights[m.worker]).sum();
         anyhow::ensure!(wsum > 0.0, "no participating workers");
-        let Server { theta, lbgs, weights, eta } = self;
+        let Server { theta, lbgs, weights, eta, ws } = self;
         let eta = *eta;
 
         // Pass 1: validate everything and precompute the renormalized
-        // FedAvg weights, so errors leave the server untouched.
-        let mut omegas = Vec::with_capacity(msgs.len());
+        // FedAvg weights (in leased scratch — a validation error drops the
+        // lease, which is fine: the arena re-allocates lazily), so errors
+        // leave the server untouched.
+        let mut omegas = ws.take_f32(msgs.len());
         for m in msgs {
             match &m.payload {
                 Payload::Scalar { .. } => anyhow::ensure!(
@@ -86,6 +103,7 @@ impl Server {
                 lbgs.refresh(m.worker, grad.as_slice());
             }
         }
+        ws.put_f32(omegas);
         Ok(())
     }
 }

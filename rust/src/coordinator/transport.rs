@@ -75,9 +75,9 @@ where
                 match cmd {
                     Downlink::Shutdown => break,
                     Downlink::Round { t, theta } => {
-                        let (loss, grad) =
+                        let (loss, mut grad) =
                             trainer.local_round(id, theta.as_slice(), tau, eta)?;
-                        let msg = worker.process_round(t, grad, loss, &policy);
+                        let msg = worker.process_round(t, &mut grad, loss, &policy);
                         if up.send(msg).is_err() {
                             break;
                         }

@@ -6,6 +6,14 @@
 //! and the LBG, per Sec. 4), (2) projects onto its LBG copy, (3) consults
 //! the threshold policy, and (4) uplinks either the scalar LBC or the full
 //! gradient (refreshing its LBG copy).
+//!
+//! The round is processed **in place**: the caller lends its gradient
+//! buffer, codec scratch comes from the worker's [`Workspace`] arena, and
+//! a scalar round therefore performs zero heap allocations — the
+//! steady-state property the paper's complexity argument rests on,
+//! verified by the counting allocator in `benches/regress.rs`. Only a
+//! refresh round allocates (the `Arc` that the message and the LBG copy
+//! share).
 
 use std::sync::Arc;
 
@@ -13,11 +21,13 @@ use crate::compress::Compressor;
 use crate::lbgm::policy::{Decision, ThresholdPolicy};
 use crate::lbgm::projection::project_cached;
 use crate::linalg::vec_ops::norm2;
+use crate::linalg::Workspace;
 
 use super::messages::{Payload, WorkerMsg, SCALAR_COST};
 
 /// One federated worker's persistent uplink state.
 pub struct Worker {
+    /// Worker index in the federation.
     pub id: usize,
     /// Worker-side LBG copy (None until the first full transmission);
     /// shared refcount-only with the outgoing `Payload::Full` message, so
@@ -27,33 +37,51 @@ pub struct Worker {
     /// per-round projection from 3 fused reductions to 2).
     lbg_norm2: f64,
     codec: Box<dyn Compressor>,
+    /// Scratch arena leased to the codec each round (§Perf: zero
+    /// steady-state allocation once warm).
+    ws: Workspace,
     /// Diagnostics: consecutive scalar rounds since the last refresh.
     pub scalar_streak: usize,
 }
 
 impl Worker {
+    /// A fresh worker with no LBG and the given uplink codec.
     pub fn new(id: usize, codec: Box<dyn Compressor>) -> Self {
-        Self { id, lbg: None, lbg_norm2: 0.0, codec, scalar_streak: 0 }
+        Self {
+            id,
+            lbg: None,
+            lbg_norm2: 0.0,
+            codec,
+            ws: Workspace::new(),
+            scalar_streak: 0,
+        }
     }
 
+    /// The worker-side LBG copy, if any full gradient was ever sent.
     pub fn lbg(&self) -> Option<&[f32]> {
         self.lbg.as_ref().map(|l| l.as_slice())
     }
 
     /// Process one round's accumulated gradient into an uplink message.
+    ///
+    /// `grad` is compressed in place. On a scalar round the buffer is left
+    /// with the codec output and nothing is allocated; on a refresh round
+    /// the buffer is **taken** (left empty) and moves into the message's
+    /// shared `Arc` — callers produce a fresh gradient every round anyway.
     pub fn process_round(
         &mut self,
         round: usize,
-        mut grad: Vec<f32>,
+        grad: &mut Vec<f32>,
         train_loss: f64,
         policy: &ThresholdPolicy,
     ) -> WorkerMsg {
         // Plug-and-play: compress first; LBGM then operates on the codec
         // output (paper Sec. 4 "slight modification").
-        let full_cost = self.codec.compress(&mut grad);
+        let Worker { lbg, lbg_norm2, codec, ws, .. } = self;
+        let full_cost = codec.compress(grad, ws);
         let proj = project_cached(
-            &grad,
-            self.lbg.as_ref().map(|l| (l.as_slice(), self.lbg_norm2)),
+            grad,
+            lbg.as_ref().map(|l| (l.as_slice(), *lbg_norm2)),
         );
         // Bootstrap: without an LBG no scalar can be decoded server-side
         // (Alg. 1 initializes LBGs with the first actual gradients).
@@ -75,10 +103,10 @@ impl Worker {
             }
             Decision::Full => {
                 self.scalar_streak = 0;
-                self.lbg_norm2 = norm2(&grad);
+                self.lbg_norm2 = norm2(grad);
                 // Alg. 1 line 11: the LBG and the uplinked gradient are the
                 // same buffer; the Arc clone is a refcount bump, not a copy.
-                let grad = Arc::new(grad);
+                let grad = Arc::new(std::mem::take(grad));
                 self.lbg = Some(Arc::clone(&grad));
                 WorkerMsg {
                     worker: self.id,
@@ -107,9 +135,11 @@ mod tests {
     fn first_round_is_always_full() {
         let mut w = Worker::new(0, Box::new(Identity));
         let policy = ThresholdPolicy::fixed(1.0); // maximally permissive
-        let msg = w.process_round(0, randv(64, 1), 0.0, &policy);
+        let mut g = randv(64, 1);
+        let msg = w.process_round(0, &mut g, 0.0, &policy);
         assert!(!msg.is_scalar());
         assert!(w.lbg().is_some());
+        assert!(g.is_empty(), "refresh must take the caller's buffer");
     }
 
     #[test]
@@ -117,14 +147,17 @@ mod tests {
         let mut w = Worker::new(0, Box::new(Identity));
         let policy = ThresholdPolicy::fixed(0.1);
         let g = randv(128, 2);
-        w.process_round(0, g.clone(), 0.0, &policy);
-        let msg = w.process_round(1, g.clone(), 0.0, &policy);
+        w.process_round(0, &mut g.clone(), 0.0, &policy);
+        let mut g1 = g.clone();
+        let msg = w.process_round(1, &mut g1, 0.0, &policy);
         match msg.payload {
             Payload::Scalar { rho } => assert!((rho - 1.0).abs() < 1e-5),
             _ => panic!("expected scalar"),
         }
         assert_eq!(msg.cost.floats, 1);
         assert_eq!(w.scalar_streak, 1);
+        // Scalar rounds leave the lent buffer intact (codec output).
+        assert_eq!(g1, g);
     }
 
     #[test]
@@ -133,12 +166,13 @@ mod tests {
         let policy = ThresholdPolicy::fixed(0.05);
         let mut g = vec![0f32; 64];
         g[0] = 1.0;
-        w.process_round(0, g.clone(), 0.0, &policy);
+        w.process_round(0, &mut g.clone(), 0.0, &policy);
         let mut orth = vec![0f32; 64];
         orth[1] = 1.0; // sin^2 = 1 > 0.05
-        let msg = w.process_round(1, orth.clone(), 0.0, &policy);
+        let expected = orth.clone();
+        let msg = w.process_round(1, &mut orth, 0.0, &policy);
         assert!(!msg.is_scalar());
-        assert_eq!(w.lbg().unwrap(), &orth[..]);
+        assert_eq!(w.lbg().unwrap(), &expected[..]);
     }
 
     #[test]
@@ -147,7 +181,8 @@ mod tests {
         let policy = ThresholdPolicy::fixed(-1.0);
         let g = randv(32, 3);
         for r in 0..5 {
-            assert!(!w.process_round(r, g.clone(), 0.0, &policy).is_scalar());
+            let mut grad = g.clone();
+            assert!(!w.process_round(r, &mut grad, 0.0, &policy).is_scalar());
         }
         assert_eq!(w.scalar_streak, 0);
     }
@@ -156,8 +191,8 @@ mod tests {
     fn plug_and_play_lbg_is_compressed_output() {
         let mut w = Worker::new(0, Box::new(TopK::new(0.25)));
         let policy = ThresholdPolicy::fixed(-1.0);
-        let g = randv(100, 4);
-        let msg = w.process_round(0, g, 0.0, &policy);
+        let mut g = randv(100, 4);
+        let msg = w.process_round(0, &mut g, 0.0, &policy);
         // The LBG and the uplinked gradient are the sparsified vector.
         match &msg.payload {
             Payload::Full { grad } => {
@@ -173,7 +208,7 @@ mod tests {
     fn signsgd_costs_bits_not_floats() {
         let mut w = Worker::new(0, Box::new(SignSgd));
         let policy = ThresholdPolicy::fixed(-1.0);
-        let msg = w.process_round(0, randv(320, 5), 0.0, &policy);
+        let msg = w.process_round(0, &mut randv(320, 5), 0.0, &policy);
         assert_eq!(msg.cost.bits, 320 + 32);
     }
 }

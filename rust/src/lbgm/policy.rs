@@ -7,7 +7,10 @@ use super::projection::Projection;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Decision {
     /// Send only the look-back coefficient.
-    Scalar { rho: f32 },
+    Scalar {
+        /// The look-back coefficient to uplink.
+        rho: f32,
+    },
     /// Send the full accumulated gradient and refresh the LBG.
     Full,
 }
@@ -22,11 +25,22 @@ pub enum Decision {
 ///   exposed for the theory-validation harness (`figures/theory`).
 #[derive(Clone, Copy, Debug)]
 pub enum ThresholdPolicy {
-    Fixed { delta: f64 },
-    AdaptiveDelta2 { delta2: f64, tau: usize },
+    /// Fixed LBP-error threshold: scalar iff `sin^2(alpha) <= delta`.
+    Fixed {
+        /// The threshold; `delta < 0` recovers vanilla FL exactly.
+        delta: f64,
+    },
+    /// Theorem-1 adaptive threshold `sin^2 <= Delta^2 / ||d||^2`.
+    AdaptiveDelta2 {
+        /// The Theorem-1 `Delta^2` constant.
+        delta2: f64,
+        /// Local steps per round (scales `||d|| = ||g||/tau`).
+        tau: usize,
+    },
 }
 
 impl ThresholdPolicy {
+    /// The paper's experimental policy: a fixed threshold on the LBP error.
     pub fn fixed(delta: f64) -> Self {
         ThresholdPolicy::Fixed { delta }
     }

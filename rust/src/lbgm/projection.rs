@@ -16,6 +16,28 @@ pub struct Projection {
 
 /// Project `g` on the LBG `l`; `None` LBG forces a full transmission
 /// (sin2 = 1 makes every policy refresh).
+///
+/// # Examples
+///
+/// A gradient collinear with its look-back gradient reconstructs exactly:
+/// `rho` recovers the scale factor and the look-back phase error vanishes,
+/// so any threshold policy sends one scalar instead of the full vector.
+/// With no LBG yet, the projection forces a full transmission:
+///
+/// ```
+/// use fedrecycle::lbgm::projection::project;
+///
+/// let lbg = vec![1.0f32, -2.0, 4.0, 0.5];
+/// let grad: Vec<f32> = lbg.iter().map(|x| 3.0 * x).collect();
+///
+/// let p = project(&grad, Some(&lbg));
+/// assert!((p.rho - 3.0).abs() < 1e-6);
+/// assert!(p.sin2 < 1e-12);
+///
+/// let bootstrap = project(&grad, None);
+/// assert_eq!(bootstrap.sin2, 1.0); // no LBG: every policy refreshes
+/// assert_eq!(bootstrap.rho, 0.0);
+/// ```
 pub fn project(g: &[f32], lbg: Option<&[f32]>) -> Projection {
     match lbg {
         None => Projection {

@@ -4,6 +4,10 @@
 //! Scalar path: `theta -= eta * omega_k * rho * lbg_k` (reconstruction of
 //! `rho * g_k^l` folded into the aggregation — the paper's complexity note
 //! that reconstruction "can be combined with the global aggregation step").
+//! Both applies are a single in-place [`axpy`] sweep over `theta`: no
+//! temporary reconstruction buffer ever exists, which is what keeps
+//! `Server::apply`'s fused pass allocation-free in steady state (§Perf;
+//! measured by the counting allocator in `benches/regress.rs`).
 
 use crate::linalg::vec_ops::axpy;
 

@@ -15,10 +15,12 @@ pub struct LbgStore {
 }
 
 impl LbgStore {
+    /// A store with one empty LBG slot per worker.
     pub fn new(workers: usize) -> Self {
         Self { slots: vec![None; workers], refreshes: vec![0; workers] }
     }
 
+    /// Number of worker slots.
     pub fn workers(&self) -> usize {
         self.slots.len()
     }
@@ -41,6 +43,7 @@ impl LbgStore {
         self.refreshes[worker] += 1;
     }
 
+    /// How many full-gradient refreshes this worker has performed.
     pub fn refresh_count(&self, worker: usize) -> u64 {
         self.refreshes[worker]
     }

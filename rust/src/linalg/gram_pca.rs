@@ -11,16 +11,84 @@
 //! Matching the paper's pseudocode (which runs SVD on the raw stacked
 //! gradients), we do **not** mean-center: the singular values of G are the
 //! quantities whose cumulative share defines N-PCA.
+//!
+//! # Storage layout (§Perf)
+//!
+//! The gradient family is one flat row-major `Vec<f32>` ([`GradFamily`]) —
+//! one allocation for the whole T x M matrix instead of T boxed rows, so
+//! the O(n*M) dot products of a push stream sequentially through cache.
+//! The Gram matrix is kept **lower-triangular packed** (row `i` holds
+//! `K[i][0..=i]`): a push appends `n+1` entries computed with the 4-lane
+//! [`dot`] kernel — O(n*M) work, zero copying or re-deriving of the
+//! existing O(n^2) entries — where the historical layout reallocated and
+//! copied the full square matrix every push.
 
 use super::jacobi::eigh;
-use super::vec_ops::dot;
+use super::vec_ops::{axpy, dot};
+
+/// A growing family of same-dimension gradients stored as one flat
+/// row-major matrix (rows = gradients).
+///
+/// This is the backing store of [`GramPca`] and the shape the paper's
+/// Alg. 2 stacks its epoch gradients into.
+#[derive(Clone, Debug, Default)]
+pub struct GradFamily {
+    dim: usize,
+    rows: usize,
+    data: Vec<f32>,
+}
+
+impl GradFamily {
+    /// An empty family of `dim`-dimensional gradients.
+    pub fn new(dim: usize) -> Self {
+        Self { dim, rows: 0, data: Vec::new() }
+    }
+
+    /// Gradient dimension M.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of stored gradients (rows).
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    /// Whether no gradient has been stored yet.
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Append one gradient (copied onto the end of the flat matrix).
+    pub fn push(&mut self, g: &[f32]) {
+        assert_eq!(g.len(), self.dim);
+        self.data.extend_from_slice(g);
+        self.rows += 1;
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(i < self.rows);
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Iterate over the rows in insertion order.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> + '_ {
+        (0..self.rows).map(move |i| self.row(i))
+    }
+
+    /// The whole family as one flat row-major slice (`len * dim` floats).
+    pub fn as_flat(&self) -> &[f32] {
+        &self.data
+    }
+}
 
 /// PCA state over a growing set of gradients (rows).
 pub struct GramPca {
-    dim: usize,
-    grads: Vec<Vec<f32>>,
-    /// Cached Gram matrix, grown incrementally (row-major, len = n*n).
-    gram: Vec<f64>,
+    family: GradFamily,
+    /// Lower-triangular packed Gram matrix: row `i` holds `K[i][0..=i]`,
+    /// appended incrementally on push (never reallocated wholesale).
+    gram_tri: Vec<f64>,
 }
 
 /// Number of leading components whose singular values account for
@@ -42,50 +110,69 @@ pub fn explained_components(singular_values: &[f64], fraction: f64) -> usize {
 }
 
 impl GramPca {
+    /// An empty PCA accumulator over `dim`-dimensional gradients.
     pub fn new(dim: usize) -> Self {
-        Self { dim, grads: Vec::new(), gram: Vec::new() }
+        Self { family: GradFamily::new(dim), gram_tri: Vec::new() }
     }
 
+    /// Number of gradients pushed so far.
     pub fn len(&self) -> usize {
-        self.grads.len()
+        self.family.len()
     }
 
+    /// Whether no gradient has been pushed yet.
     pub fn is_empty(&self) -> bool {
-        self.grads.is_empty()
+        self.family.is_empty()
     }
 
+    /// Gradient `i` (push order).
     pub fn grad(&self, i: usize) -> &[f32] {
-        &self.grads[i]
+        self.family.row(i)
     }
 
-    /// Append a gradient, extending the Gram matrix by one row/column
-    /// (O(n * M) — the incremental path that makes per-epoch N-PCA cheap).
-    pub fn push(&mut self, g: Vec<f32>) {
-        assert_eq!(g.len(), self.dim);
-        let n = self.grads.len();
-        let mut new_gram = vec![0f64; (n + 1) * (n + 1)];
+    /// The flat row-major gradient family backing this accumulator.
+    pub fn family(&self) -> &GradFamily {
+        &self.family
+    }
+
+    /// Append a gradient, extending the packed Gram matrix by one
+    /// triangular row (O(n * M) dot products and nothing else — the
+    /// incremental path that makes per-epoch N-PCA cheap).
+    pub fn push(&mut self, g: &[f32]) {
+        assert_eq!(g.len(), self.family.dim());
+        let n = self.family.len();
+        self.gram_tri.reserve(n + 1);
         for i in 0..n {
-            for j in 0..n {
-                new_gram[i * (n + 1) + j] = self.gram[i * n + j];
+            self.gram_tri.push(dot(self.family.row(i), g));
+        }
+        self.gram_tri.push(dot(g, g));
+        self.family.push(g);
+    }
+
+    /// Materialize the full symmetric n x n Gram matrix from the packed
+    /// triangle (only needed at analysis time, O(n^2) copies).
+    fn gram_full(&self) -> Vec<f64> {
+        let n = self.family.len();
+        let mut full = vec![0f64; n * n];
+        let mut idx = 0;
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.gram_tri[idx];
+                idx += 1;
+                full[i * n + j] = v;
+                full[j * n + i] = v;
             }
         }
-        for i in 0..n {
-            let d = dot(&self.grads[i], &g);
-            new_gram[i * (n + 1) + n] = d;
-            new_gram[n * (n + 1) + i] = d;
-        }
-        new_gram[n * (n + 1) + n] = dot(&g, &g);
-        self.gram = new_gram;
-        self.grads.push(g);
+        full
     }
 
     /// Singular values of the stacked gradient matrix (descending).
     pub fn singular_values(&self) -> Vec<f64> {
-        let n = self.grads.len();
+        let n = self.family.len();
         if n == 0 {
             return Vec::new();
         }
-        let (vals, _) = eigh(&self.gram, n);
+        let (vals, _) = eigh(&self.gram_full(), n);
         vals.into_iter().map(|v| v.max(0.0).sqrt()).collect()
     }
 
@@ -101,11 +188,11 @@ impl GramPca {
     /// Principal gradient directions spanning `fraction` of the variance:
     /// unit vectors in R^M, as rows. `u_k = sum_i w_k[i] g_i / sigma_k`.
     pub fn principal_directions(&self, fraction: f64) -> Vec<Vec<f32>> {
-        let n = self.grads.len();
+        let n = self.family.len();
         if n == 0 {
             return Vec::new();
         }
-        let (vals, vecs) = eigh(&self.gram, n);
+        let (vals, vecs) = eigh(&self.gram_full(), n);
         let sv: Vec<f64> = vals.iter().map(|v| v.max(0.0).sqrt()).collect();
         let k = explained_components(&sv, fraction);
         let mut out = Vec::with_capacity(k);
@@ -113,13 +200,11 @@ impl GramPca {
             if sv[c] <= 1e-12 {
                 break;
             }
-            let mut u = vec![0f32; self.dim];
-            for (i, g) in self.grads.iter().enumerate() {
+            let mut u = vec![0f32; self.family.dim()];
+            for (i, g) in self.family.iter_rows().enumerate() {
                 let w = (vecs[c][i] / sv[c]) as f32;
                 if w != 0.0 {
-                    for (uj, gj) in u.iter_mut().zip(g) {
-                        *uj += w * gj;
-                    }
+                    axpy(w, g, &mut u);
                 }
             }
             out.push(u);
@@ -143,12 +228,52 @@ mod tests {
     }
 
     #[test]
+    fn family_layout_is_flat_row_major() {
+        let mut fam = GradFamily::new(3);
+        assert!(fam.is_empty());
+        fam.push(&[1.0, 2.0, 3.0]);
+        fam.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(fam.len(), 2);
+        assert_eq!(fam.dim(), 3);
+        assert_eq!(fam.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(fam.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(fam.as_flat(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let rows: Vec<&[f32]> = fam.iter_rows().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn incremental_gram_matches_direct_recompute() {
+        let mut r = Rng::new(9);
+        let mut pca = GramPca::new(33);
+        let grads: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..33).map(|_| r.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        for g in &grads {
+            pca.push(g);
+        }
+        let full = pca.gram_full();
+        for i in 0..7 {
+            for j in 0..7 {
+                let direct = dot(&grads[i], &grads[j]);
+                assert_eq!(
+                    full[i * 7 + j].to_bits(),
+                    direct.to_bits(),
+                    "gram[{i}][{j}] drifted"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn rank_one_family_has_one_component() {
         let mut pca = GramPca::new(200);
         let mut r = Rng::new(1);
         let base: Vec<f32> = (0..200).map(|_| r.normal_f32(0.0, 1.0)).collect();
         for i in 1..=10 {
-            pca.push(base.iter().map(|x| x * i as f32).collect());
+            let g: Vec<f32> = base.iter().map(|x| x * i as f32).collect();
+            pca.push(&g);
         }
         let (n95, n99) = pca.n_pca();
         assert_eq!(n95, 1);
@@ -161,7 +286,7 @@ mod tests {
         for i in 0..8 {
             let mut v = vec![0f32; 64];
             v[i] = 1.0;
-            pca.push(v);
+            pca.push(&v);
         }
         let sv = pca.singular_values();
         assert_eq!(sv.len(), 8);
@@ -176,9 +301,9 @@ mod tests {
     fn singular_values_match_direct_svd_small() {
         // 3 vectors in R^4 with known structure.
         let mut pca = GramPca::new(4);
-        pca.push(vec![1.0, 0.0, 0.0, 0.0]);
-        pca.push(vec![1.0, 1.0, 0.0, 0.0]);
-        pca.push(vec![0.0, 0.0, 2.0, 0.0]);
+        pca.push(&[1.0, 0.0, 0.0, 0.0]);
+        pca.push(&[1.0, 1.0, 0.0, 0.0]);
+        pca.push(&[0.0, 0.0, 2.0, 0.0]);
         let sv = pca.singular_values();
         // Frobenius^2 = sum sigma^2 = 1 + 2 + 4 = 7
         let f2: f64 = sv.iter().map(|s| s * s).sum();
@@ -200,7 +325,7 @@ mod tests {
                 .zip(&b)
                 .map(|(x, y)| ca * x + cb * y + r.normal_f32(0.0, 0.001))
                 .collect();
-            pca.push(v);
+            pca.push(&v);
         }
         let dirs = pca.principal_directions(0.99);
         assert!(dirs.len() <= 4, "should be ~2 dirs, got {}", dirs.len());

@@ -2,17 +2,22 @@
 //!
 //! Everything the reproduction needs that would normally come from
 //! LAPACK/sklearn: unrolled f32 vector kernels for the LBGM hot path
-//! ([`vec_ops`]), a cyclic-Jacobi symmetric eigensolver ([`jacobi`]),
-//! Gram-matrix PCA over gradient sets ([`gram_pca`]) for the Sec. 2
-//! analysis, and a truncated SVD via subspace iteration ([`svd`]) for the
-//! ATOMO baseline.
+//! ([`vec_ops`]), a grow-only scratch-buffer arena that keeps that hot
+//! path allocation-free ([`workspace`]), a cyclic-Jacobi symmetric
+//! eigensolver ([`jacobi`]), Gram-matrix PCA over flat row-major gradient
+//! families ([`gram_pca`]) for the Sec. 2 analysis, and a truncated SVD
+//! via subspace iteration ([`svd`]) for the ATOMO baseline.
 
 pub mod gram_pca;
 pub mod jacobi;
 pub mod svd;
 pub mod vec_ops;
+pub mod workspace;
 
-pub use gram_pca::{explained_components, GramPca};
+pub use gram_pca::{explained_components, GradFamily, GramPca};
 pub use jacobi::eigh;
 pub use svd::truncated_svd;
-pub use vec_ops::{axpy, cosine, dot, norm2, projection_stats, scale_add, ProjectionStats};
+pub use vec_ops::{
+    axpy, cosine, dot, norm2, projection_stats, scale, scale_add, ProjectionStats,
+};
+pub use workspace::Workspace;

@@ -3,14 +3,101 @@
 //! These mirror the L1 Pallas kernels (`python/compile/kernels/`): the
 //! fused [`projection_stats`] is the native twin of `projection.py` and is
 //! what the coordinator uses per worker per round (O(M), paper Sec. 4
-//! "Complexity"). Four 64-bit accumulator lanes give both instruction-level
-//! parallelism and better summation error than a single serial f32 chain.
+//! "Complexity").
+//!
+//! # Kernel shape
+//!
+//! Every kernel walks its inputs in **8-element chunks** so the compiler
+//! sees a branch-free, bounds-check-free inner body it can auto-vectorize,
+//! with the loop-control overhead amortized over 8 lanes of work per
+//! iteration. The reductions accumulate into **4 independent 64-bit
+//! lanes** (lane `j` sums elements `j mod 4`, exactly two per chunk):
+//! four chains give instruction-level parallelism and better summation
+//! error than one serial f32 chain, while `f32 * f32 -> f64` products stay
+//! exact (48 significand bits fit in 53).
+//!
+//! # Bit-exactness contract
+//!
+//! The per-lane accumulation order and the final `lane0 + lane1 + lane2 +
+//! lane3` combine are **identical to the historical 4-lane kernels**, so
+//! every reduction here returns bit-for-bit the same f64 as previous
+//! releases — the golden-trace fixture (`tests/golden_trace.rs`) and the
+//! engine-parity suite hold across the rewrite without regenerating
+//! fixtures. The elementwise kernels ([`axpy`], [`scale`], [`scale_add`])
+//! have no reduction, so unrolling cannot change their results at all.
+//! `tests/kernel_exactness.rs` pins both properties against naive
+//! references over adversarial lengths.
+
+/// Naive reference implementations of every kernel in this module.
+///
+/// Single serial accumulator, no unrolling, no lanes — the semantics the
+/// optimized kernels are verified against (`tests/kernel_exactness.rs`)
+/// and timed against (`benches/regress.rs`, the committed
+/// `BENCH_hotpath.json` baseline). Not for production use: the serial
+/// f64 chain is the bottleneck the 4-lane kernels exist to break.
+pub mod reference {
+    use super::ProjectionStats;
+
+    /// Serial-reference `<a, b>`.
+    pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        let mut acc = 0f64;
+        for (x, y) in a.iter().zip(b) {
+            acc += *x as f64 * *y as f64;
+        }
+        acc
+    }
+
+    /// Serial-reference squared 2-norm.
+    pub fn norm2(a: &[f32]) -> f64 {
+        dot(a, a)
+    }
+
+    /// Serial-reference `y += alpha * x`.
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// Serial-reference `x *= alpha`.
+    pub fn scale(alpha: f32, x: &mut [f32]) {
+        for xi in x.iter_mut() {
+            *xi *= alpha;
+        }
+    }
+
+    /// Serial-reference `y = y * beta + alpha * x`.
+    pub fn scale_add(beta: f32, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi = *yi * beta + alpha * xi;
+        }
+    }
+
+    /// Serial-reference fused projection statistics.
+    pub fn projection_stats(g: &[f32], l: &[f32]) -> ProjectionStats {
+        assert_eq!(g.len(), l.len());
+        let (mut d, mut ng, mut nl) = (0f64, 0f64, 0f64);
+        for (gv, lv) in g.iter().zip(l) {
+            let (gv, lv) = (*gv as f64, *lv as f64);
+            d += gv * lv;
+            ng += gv * gv;
+            nl += lv * lv;
+        }
+        ProjectionStats { dot_gl: d, norm2_g: ng, norm2_l: nl }
+    }
+}
 
 /// Fused single-pass statistics `(<g,l>, ||g||^2, ||l||^2)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ProjectionStats {
+    /// `<g, l>` — the projection numerator.
     pub dot_gl: f64,
+    /// `||g||^2` — the accumulated gradient's squared norm.
     pub norm2_g: f64,
+    /// `||l||^2` — the look-back gradient's squared norm.
     pub norm2_l: f64,
 }
 
@@ -41,20 +128,30 @@ pub fn projection_stats(g: &[f32], l: &[f32]) -> ProjectionStats {
     let mut d = [0f64; 4];
     let mut ng = [0f64; 4];
     let mut nl = [0f64; 4];
-    let chunks = g.len() / 4;
-    for i in 0..chunks {
-        let b = i * 4;
-        for lane in 0..4 {
-            let gv = g[b + lane] as f64;
-            let lv = l[b + lane] as f64;
-            d[lane] += gv * lv;
-            ng[lane] += gv * gv;
-            nl[lane] += lv * lv;
+    let mut cg = g.chunks_exact(8);
+    let mut cl = l.chunks_exact(8);
+    for (xg, xl) in (&mut cg).zip(&mut cl) {
+        for half in 0..2 {
+            for lane in 0..4 {
+                let gv = xg[half * 4 + lane] as f64;
+                let lv = xl[half * 4 + lane] as f64;
+                d[lane] += gv * lv;
+                ng[lane] += gv * gv;
+                nl[lane] += lv * lv;
+            }
         }
     }
-    for i in chunks * 4..g.len() {
-        let gv = g[i] as f64;
-        let lv = l[i] as f64;
+    let (rg, rl) = (cg.remainder(), cl.remainder());
+    let quad = rg.len() / 4 * 4;
+    for lane in 0..quad {
+        let gv = rg[lane] as f64;
+        let lv = rl[lane] as f64;
+        d[lane] += gv * lv;
+        ng[lane] += gv * gv;
+        nl[lane] += lv * lv;
+    }
+    for (gv, lv) in rg[quad..].iter().zip(&rl[quad..]) {
+        let (gv, lv) = (*gv as f64, *lv as f64);
         d[0] += gv * lv;
         ng[0] += gv * gv;
         nl[0] += lv * lv;
@@ -74,18 +171,27 @@ pub fn projection_stats_cached(g: &[f32], l: &[f32], norm2_l: f64) -> Projection
     assert_eq!(g.len(), l.len());
     let mut d = [0f64; 4];
     let mut ng = [0f64; 4];
-    let chunks = g.len() / 4;
-    for i in 0..chunks {
-        let b = i * 4;
-        for lane in 0..4 {
-            let gv = g[b + lane] as f64;
-            d[lane] += gv * l[b + lane] as f64;
-            ng[lane] += gv * gv;
+    let mut cg = g.chunks_exact(8);
+    let mut cl = l.chunks_exact(8);
+    for (xg, xl) in (&mut cg).zip(&mut cl) {
+        for half in 0..2 {
+            for lane in 0..4 {
+                let gv = xg[half * 4 + lane] as f64;
+                d[lane] += gv * xl[half * 4 + lane] as f64;
+                ng[lane] += gv * gv;
+            }
         }
     }
-    for i in chunks * 4..g.len() {
-        let gv = g[i] as f64;
-        d[0] += gv * l[i] as f64;
+    let (rg, rl) = (cg.remainder(), cl.remainder());
+    let quad = rg.len() / 4 * 4;
+    for lane in 0..quad {
+        let gv = rg[lane] as f64;
+        d[lane] += gv * rl[lane] as f64;
+        ng[lane] += gv * gv;
+    }
+    for (gv, lv) in rg[quad..].iter().zip(&rl[quad..]) {
+        let gv = *gv as f64;
+        d[0] += gv * *lv as f64;
         ng[0] += gv * gv;
     }
     ProjectionStats {
@@ -95,19 +201,26 @@ pub fn projection_stats_cached(g: &[f32], l: &[f32], norm2_l: f64) -> Projection
     }
 }
 
-/// `<a, b>` with 4 accumulator lanes.
+/// `<a, b>` with 4 accumulator lanes over 8-element chunks.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
     let mut acc = [0f64; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let base = i * 4;
-        for lane in 0..4 {
-            acc[lane] += a[base + lane] as f64 * b[base + lane] as f64;
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for half in 0..2 {
+            for lane in 0..4 {
+                acc[lane] += xa[half * 4 + lane] as f64 * xb[half * 4 + lane] as f64;
+            }
         }
     }
-    for i in chunks * 4..a.len() {
-        acc[0] += a[i] as f64 * b[i] as f64;
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let quad = ra.len() / 4 * 4;
+    for lane in 0..quad {
+        acc[lane] += ra[lane] as f64 * rb[lane] as f64;
+    }
+    for (x, y) in ra[quad..].iter().zip(&rb[quad..]) {
+        acc[0] += *x as f64 * *y as f64;
     }
     acc.iter().sum()
 }
@@ -126,18 +239,49 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     dot(a, b) / (na.sqrt() * nb.sqrt())
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`, unrolled over 8-element chunks.
+///
+/// Elementwise — no reduction, so the result is bit-identical to the naive
+/// loop for every length.
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut cy = y.chunks_exact_mut(8);
+    let mut cx = x.chunks_exact(8);
+    for (wy, wx) in (&mut cy).zip(&mut cx) {
+        for lane in 0..8 {
+            wy[lane] += alpha * wx[lane];
+        }
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
         *yi += alpha * xi;
     }
 }
 
-/// `y = y * beta + alpha * x` (fused scale-add for the server update).
+/// `x *= alpha`, unrolled over 8-element chunks (elementwise, bit-exact).
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    let mut cx = x.chunks_exact_mut(8);
+    for wx in &mut cx {
+        for lane in 0..8 {
+            wx[lane] *= alpha;
+        }
+    }
+    for xi in cx.into_remainder() {
+        *xi *= alpha;
+    }
+}
+
+/// `y = y * beta + alpha * x` (fused scale-add for the server update),
+/// unrolled over 8-element chunks (elementwise, bit-exact).
 pub fn scale_add(beta: f32, alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut cy = y.chunks_exact_mut(8);
+    let mut cx = x.chunks_exact(8);
+    for (wy, wx) in (&mut cy).zip(&mut cx) {
+        for lane in 0..8 {
+            wy[lane] = wy[lane] * beta + alpha * wx[lane];
+        }
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
         *yi = *yi * beta + alpha * xi;
     }
 }
@@ -152,12 +296,43 @@ mod tests {
         (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect()
     }
 
+    /// The historical 4-element-chunk kernel, kept verbatim as the
+    /// bit-exactness oracle: the 8-wide rewrite must preserve each lane's
+    /// addition sequence and the final combine exactly.
+    fn dot_4chunk(a: &[f32], b: &[f32]) -> f64 {
+        let mut acc = [0f64; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let base = i * 4;
+            for lane in 0..4 {
+                acc[lane] += a[base + lane] as f64 * b[base + lane] as f64;
+            }
+        }
+        for i in chunks * 4..a.len() {
+            acc[0] += a[i] as f64 * b[i] as f64;
+        }
+        acc.iter().sum()
+    }
+
     #[test]
     fn dot_matches_naive() {
         let a = randv(1001, 1);
         let b = randv(1001, 2);
         let naive: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-9 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_bit_identical_to_historical_4lane_kernel() {
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 1023, 1024, 1025] {
+            let a = randv(n, 10 + n as u64);
+            let b = randv(n, 20 + n as u64);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_4chunk(&a, &b).to_bits(),
+                "reduction order drifted at n={n}"
+            );
+        }
     }
 
     #[test]
@@ -169,6 +344,20 @@ mod tests {
         assert!((st.norm2_g - norm2(&g)).abs() < 1e-8);
         assert!((st.norm2_l - norm2(&l)).abs() < 1e-8);
         assert!(st.sin2() >= 0.0 && st.sin2() <= 1.0);
+    }
+
+    #[test]
+    fn projection_stats_reductions_share_dot_order() {
+        // The fused pass and the standalone dot must agree bit-for-bit:
+        // they drive the same lane schedule.
+        for n in [0usize, 1, 7, 8, 9, 31, 1023] {
+            let g = randv(n, 100 + n as u64);
+            let l = randv(n, 200 + n as u64);
+            let st = projection_stats(&g, &l);
+            assert_eq!(st.dot_gl.to_bits(), dot(&g, &l).to_bits());
+            assert_eq!(st.norm2_g.to_bits(), norm2(&g).to_bits());
+            assert_eq!(st.norm2_l.to_bits(), norm2(&l).to_bits());
+        }
     }
 
     #[test]
@@ -226,5 +415,25 @@ mod tests {
         assert_eq!(y, vec![12.0, 24.0, 36.0]);
         scale_add(0.5, 1.0, &x, &mut y);
         assert_eq!(y, vec![7.0, 14.0, 21.0]);
+        scale(2.0, &mut y);
+        assert_eq!(y, vec![14.0, 28.0, 42.0]);
+    }
+
+    #[test]
+    fn elementwise_kernels_bit_match_reference() {
+        for n in [0usize, 1, 7, 8, 9, 17, 1023] {
+            let x = randv(n, 40 + n as u64);
+            let mut a = randv(n, 50 + n as u64);
+            let mut b = a.clone();
+            axpy(0.37, &x, &mut a);
+            reference::axpy(0.37, &x, &mut b);
+            assert_eq!(a, b, "axpy drifted at n={n}");
+            scale_add(0.9, -1.3, &x, &mut a);
+            reference::scale_add(0.9, -1.3, &x, &mut b);
+            assert_eq!(a, b, "scale_add drifted at n={n}");
+            scale(-0.25, &mut a);
+            reference::scale(-0.25, &mut b);
+            assert_eq!(a, b, "scale drifted at n={n}");
+        }
     }
 }

@@ -1,0 +1,108 @@
+//! Grow-only scratch-buffer arena for the per-round hot path.
+//!
+//! Every allocation on the steady-state LBGM round loop — top-K magnitude
+//! scratch, error-feedback correction copies, the server's renormalized
+//! FedAvg weights — is leased from a [`Workspace`] instead of the global
+//! allocator. Buffers are returned after use and retained at their
+//! high-water capacity, so after a one-round warmup the worker and server
+//! loops run with **zero heap allocations** (verified by the counting
+//! allocator in `benches/regress.rs`).
+//!
+//! The arena is deliberately dumb: a free list of `Vec<f32>` buffers,
+//! leased with [`Workspace::take_f32`] / returned with
+//! [`Workspace::put_f32`].
+//! Take/put nests — error feedback can hold its correction buffer while
+//! the inner top-K codec leases a second one — because each `take` pops a
+//! distinct buffer. Leaked buffers (a `take` without a `put`) are not an
+//! error; the arena just allocates a fresh one next time.
+
+/// Reusable scratch buffers for allocation-free round processing.
+///
+/// One `Workspace` per execution lane (per worker thread, per server):
+/// buffers carry no semantic state between uses, so any lane can reuse any
+/// workspace, but a workspace must not be shared across threads.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f32_pool: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    /// An empty arena; buffers are created on first lease and recycled
+    /// afterwards.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lease an empty `Vec<f32>` with at least `capacity` reserved.
+    ///
+    /// Return it with [`Workspace::put_f32`] when done so the allocation is
+    /// recycled. The buffer comes back cleared (`len == 0`) but keeps its
+    /// high-water capacity.
+    pub fn take_f32(&mut self, capacity: usize) -> Vec<f32> {
+        let mut buf = self.f32_pool.pop().unwrap_or_default();
+        buf.clear();
+        if buf.capacity() < capacity {
+            buf.reserve(capacity - buf.len());
+        }
+        buf
+    }
+
+    /// Return a leased `Vec<f32>` to the pool.
+    pub fn put_f32(&mut self, buf: Vec<f32>) {
+        self.f32_pool.push(buf);
+    }
+
+    /// Total f32 elements parked in the arena (diagnostics).
+    pub fn resident_elems(&self) -> usize {
+        self.f32_pool.iter().map(|b| b.capacity()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_capacity() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_f32(100);
+        assert!(a.capacity() >= 100);
+        assert!(a.is_empty());
+        a.extend_from_slice(&[1.0; 100]);
+        let ptr = a.as_ptr();
+        ws.put_f32(a);
+        // Same allocation comes back, cleared.
+        let b = ws.take_f32(50);
+        assert_eq!(b.as_ptr(), ptr);
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 100);
+    }
+
+    #[test]
+    fn nested_leases_are_distinct() {
+        let mut ws = Workspace::new();
+        let outer = ws.take_f32(8);
+        let inner = ws.take_f32(8);
+        assert_ne!(outer.as_ptr(), inner.as_ptr());
+        ws.put_f32(inner);
+        ws.put_f32(outer);
+        assert_eq!(ws.f32_pool.len(), 2);
+    }
+
+    #[test]
+    fn diagnostics_track_parked_capacity() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.resident_elems(), 0);
+        let b = ws.take_f32(24);
+        ws.put_f32(b);
+        assert!(ws.resident_elems() >= 24);
+    }
+
+    #[test]
+    fn leaked_buffer_is_not_fatal() {
+        let mut ws = Workspace::new();
+        let _leaked = ws.take_f32(8); // dropped, never put back
+        let fresh = ws.take_f32(8);
+        assert!(fresh.capacity() >= 8);
+    }
+}

@@ -55,9 +55,9 @@ pub fn run_worker(
         match frame {
             Frame::Shutdown => break,
             Frame::Round { t, theta } => {
-                let (loss, grad) =
+                let (loss, mut grad) =
                     trainer.local_round(id, &theta, tau as usize, eta)?;
-                let msg = worker.process_round(t as usize, grad, loss, &policy);
+                let msg = worker.process_round(t as usize, &mut grad, loss, &policy);
                 link.send(&Frame::Update(msg))?;
                 served += 1;
             }

@@ -441,8 +441,8 @@ mod tests {
                 match wrk0.recv()? {
                     Frame::Shutdown => break,
                     Frame::Round { t, theta } => {
-                        let (loss, grad) = trainer.local_round(0, &theta, 1, 0.1)?;
-                        let msg = worker.process_round(t as usize, grad, loss, &policy);
+                        let (loss, mut grad) = trainer.local_round(0, &theta, 1, 0.1)?;
+                        let msg = worker.process_round(t as usize, &mut grad, loss, &policy);
                         wrk0.send(&Frame::Update(msg))?;
                         served += 1;
                     }

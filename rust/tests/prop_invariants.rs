@@ -8,6 +8,7 @@ use fedrecycle::coordinator::trainer::{LocalTrainer, MockTrainer};
 use fedrecycle::coordinator::{CommLedger, Worker};
 use fedrecycle::lbgm::{project, ThresholdPolicy};
 use fedrecycle::linalg::vec_ops::{axpy, dot, norm2};
+use fedrecycle::linalg::Workspace;
 use fedrecycle::testkit::prop::{forall, Gen, PairF32, VecF32};
 use fedrecycle::util::rng::Rng;
 
@@ -68,7 +69,7 @@ fn prop_topk_keeps_exactly_k() {
         for fraction in [0.05, 0.25, 0.75] {
             let mut g = v.clone();
             let mut c = TopK::new(fraction);
-            c.compress(&mut g);
+            c.compress(&mut g, &mut Workspace::new());
             let k = ((v.len() as f64 * fraction).ceil() as usize).clamp(1, v.len());
             let nz = g.iter().filter(|x| **x != 0.0).count();
             // Zeros in the input may be "kept" as zeros: nz <= k always,
@@ -94,7 +95,7 @@ fn prop_error_feedback_conserves_mass() {
             let grad: Vec<f32> =
                 v.iter().map(|x| x + rng.normal_f32(0.0, 0.1)).collect();
             let mut sent = grad.clone();
-            ef.compress(&mut sent);
+            ef.compress(&mut sent, &mut Workspace::new());
             for i in 0..v.len() {
                 let corrected = grad[i] + residual_prev[i];
                 let got = sent[i] + ef.residual()[i];
@@ -115,7 +116,7 @@ fn prop_signsgd_decode_is_scaled_sign() {
     let gen = vec_gen(1000);
     forall(105, 50, &gen, |v| {
         let mut g = v.clone();
-        SignSgd.compress(&mut g);
+        SignSgd.compress(&mut g, &mut Workspace::new());
         let scale = g.iter().map(|x| x.abs()).fold(0f32, f32::max);
         for (o, c) in v.iter().zip(&g) {
             if c.abs() != scale && scale != 0.0 {
@@ -264,12 +265,12 @@ fn prop_scalar_rounds_preserve_lbg() {
         let mut w = Worker::new(0, Box::new(Identity));
         let policy = ThresholdPolicy::fixed(0.5);
         let mut rng = Rng::new(11);
-        w.process_round(0, v.clone(), 0.0, &policy);
+        w.process_round(0, &mut v.clone(), 0.0, &policy);
         let lbg0 = w.lbg().unwrap().to_vec();
         for r in 1..5 {
-            let jitter: Vec<f32> =
+            let mut jitter: Vec<f32> =
                 v.iter().map(|x| x + rng.normal_f32(0.0, 0.01)).collect();
-            let msg = w.process_round(r, jitter, 0.0, &policy);
+            let msg = w.process_round(r, &mut jitter, 0.0, &policy);
             if msg.is_scalar() && w.lbg().unwrap() != &lbg0[..] {
                 return Err("LBG mutated on a scalar round".into());
             }
