@@ -3,5 +3,5 @@
 pub mod schema;
 pub mod validate;
 
-pub use schema::{CodecKind, ExperimentConfig};
+pub use schema::{CodecKind, ExperimentConfig, PolicyKind};
 pub use validate::validate;

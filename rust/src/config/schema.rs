@@ -20,6 +20,35 @@ pub enum CodecKind {
     SignSgd,
 }
 
+/// Which transmission-threshold policy a run drives LBGM with.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum PolicyKind {
+    /// The paper's experimental setting: the config's `delta` is a fixed
+    /// LBP-error threshold (`delta < 0` = vanilla FL).
+    #[default]
+    Fixed,
+    /// The Theorem-1 adaptive condition `sin^2 <= Delta^2 / ||d||^2`.
+    /// In-process transports only: the wire protocol does not carry the
+    /// server-side state this policy needs, so `config::validate` rejects
+    /// it with the TCP transport at load time.
+    AdaptiveDelta2 {
+        /// The Theorem-1 `Delta^2` constant.
+        delta2: f64,
+    },
+}
+
+impl PolicyKind {
+    /// Parse a CLI/JSON spelling: `fixed`, or `adaptive` with its
+    /// `Delta^2` constant.
+    pub fn parse(name: &str, delta2: f64) -> Result<PolicyKind> {
+        Ok(match name {
+            "fixed" => PolicyKind::Fixed,
+            "adaptive" | "adaptive_delta2" => PolicyKind::AdaptiveDelta2 { delta2 },
+            other => anyhow::bail!("unknown policy `{other}` (want fixed|adaptive)"),
+        })
+    }
+}
+
 impl CodecKind {
     pub fn parse(name: &str, fraction: f64, rank: usize) -> Result<CodecKind> {
         Ok(match name {
@@ -75,8 +104,12 @@ pub struct ExperimentConfig {
     pub rounds: usize,
     pub tau: usize,
     pub eta: f64,
-    /// LBP threshold; < 0 = vanilla FL.
+    /// LBP threshold; < 0 = vanilla FL. Interpreted by `policy`.
     pub delta: f64,
+    /// Threshold policy (`fixed` drives the paper's delta threshold;
+    /// `adaptive` the Theorem-1 condition). Adaptive is unservable over
+    /// the TCP transport and rejected at load time.
+    pub policy: PolicyKind,
     pub noniid: bool,
     pub labels_per_worker: usize,
     pub sample_fraction: f64,
@@ -107,6 +140,7 @@ impl Default for ExperimentConfig {
             tau: 2,
             eta: 0.05,
             delta: 0.2,
+            policy: PolicyKind::Fixed,
             noniid: true,
             labels_per_worker: 3,
             sample_fraction: 1.0,
@@ -185,6 +219,11 @@ impl ExperimentConfig {
         let fraction = getn("codec_fraction").unwrap_or(0.1);
         let rank = getn("codec_rank").unwrap_or(2.0) as usize;
         c.codec = CodecKind::parse(&codec_name, fraction, rank)?;
+        // `"policy": "fixed" | "adaptive"`, with `"policy_delta2"` for the
+        // adaptive Theorem-1 constant.
+        if let Some(v) = gets("policy") {
+            c.policy = PolicyKind::parse(&v, getn("policy_delta2").unwrap_or(0.01))?;
+        }
         // `"parallelism": "seq" | "auto" | "<n>"` or a plain number.
         if let Some(v) = gets("parallelism") {
             c.parallelism = Parallelism::parse(&v)?;
@@ -204,11 +243,17 @@ impl ExperimentConfig {
     /// one place the mapping lives; used by the figure harnesses and every
     /// launcher subcommand).
     pub fn fl_config(&self) -> FlConfig {
+        let policy = match self.policy {
+            PolicyKind::Fixed => ThresholdPolicy::fixed(self.delta),
+            PolicyKind::AdaptiveDelta2 { delta2 } => {
+                ThresholdPolicy::AdaptiveDelta2 { delta2, tau: self.tau }
+            }
+        };
         FlConfig {
             rounds: self.rounds,
             tau: self.tau,
             eta: self.eta as f32,
-            policy: ThresholdPolicy::fixed(self.delta),
+            policy,
             sample_fraction: self.sample_fraction,
             eval_every: self.eval_every,
             seed: self.seed,
@@ -306,6 +351,33 @@ mod tests {
         assert_eq!(c.parallelism, Parallelism::Threads(8));
         assert!(ExperimentConfig::from_json(
             &Json::parse(r#"{"parallelism":"many"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn policy_parsing_and_lowering() {
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"policy":"adaptive","policy_delta2":0.04,"tau":3}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.policy, PolicyKind::AdaptiveDelta2 { delta2: 0.04 });
+        match c.fl_config().policy {
+            ThresholdPolicy::AdaptiveDelta2 { delta2, tau } => {
+                assert_eq!(delta2, 0.04);
+                assert_eq!(tau, 3);
+            }
+            other => panic!("wrong policy lowering: {other:?}"),
+        }
+        // Default stays the paper's fixed threshold on `delta`.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.policy, PolicyKind::Fixed);
+        assert!(matches!(
+            d.fl_config().policy,
+            ThresholdPolicy::Fixed { delta } if delta == d.delta
+        ));
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"policy":"psychic"}"#).unwrap()
         )
         .is_err());
     }

@@ -3,7 +3,11 @@
 
 use anyhow::Result;
 
-use super::schema::{CodecKind, ExperimentConfig};
+use crate::coordinator::round::Transport;
+use crate::coordinator::sampling::sample_clients;
+use crate::sim::FaultKind;
+
+use super::schema::{CodecKind, ExperimentConfig, PolicyKind};
 
 /// Validate an experiment configuration.
 pub fn validate(c: &ExperimentConfig) -> Result<()> {
@@ -16,10 +20,69 @@ pub fn validate(c: &ExperimentConfig) -> Result<()> {
         "delta is a bound on sin^2 in [0,1] (or <0 for vanilla): {}",
         c.delta
     );
+    // Must be finite: a NaN fails every range test below *and* would
+    // silently degrade `sample_clients` to a 1-client federation (NaN
+    // fails `>= 1.0`, ceil → cast → 0 → clamp to 1). Values above 1 mean
+    // full participation and are honored as such.
     anyhow::ensure!(
-        c.sample_fraction > 0.0 && c.sample_fraction <= 1.0,
-        "sample_fraction in (0, 1]"
+        c.sample_fraction.is_finite() && c.sample_fraction > 0.0,
+        "sample_fraction must be finite and in (0, 1] (>= 1 means full \
+         participation), got {}",
+        c.sample_fraction
     );
+    // The wire protocol cannot carry the server-side state the adaptive
+    // Theorem-1 policy needs; fail at load time instead of at the first
+    // worker's connection (`net::server::policy_delta`).
+    if c.transport == Transport::Tcp {
+        anyhow::ensure!(
+            c.policy == PolicyKind::Fixed,
+            "the adaptive threshold policy is unservable over the TCP \
+             transport; use --transport memory|threads or --policy fixed"
+        );
+    }
+    // A NaN/negative Delta^2 silently degrades the adaptive policy to
+    // vanilla FL (`sin^2 <= delta2/||d||^2` never holds) — the same silent
+    // degradation class as a NaN sample_fraction; reject it at load.
+    if let PolicyKind::AdaptiveDelta2 { delta2 } = c.policy {
+        anyhow::ensure!(
+            delta2.is_finite() && delta2 > 0.0,
+            "adaptive policy Delta^2 must be finite and positive, got {delta2}"
+        );
+    }
+    // Sever events exercise the real reconnect path; their preconditions
+    // are cheap to check exactly here (sampling is deterministic), and a
+    // violated one silently breaks the cross-engine parity contract: the
+    // teardown triggers on the downlink, so the worker must be sampled at
+    // the span start, and the rejoin must land inside the run for the
+    // deployments' rejoin ledgers to agree with the in-memory engines'.
+    if let Some(plan) = &c.faults {
+        for e in plan.events.iter().filter(|e| e.kind == FaultKind::Sever) {
+            anyhow::ensure!(
+                e.worker < c.workers,
+                "sever event for worker {} out of range (K={})",
+                e.worker,
+                c.workers
+            );
+            anyhow::ensure!(
+                e.until < c.rounds,
+                "sever span [{}, {}) of worker {} must rejoin inside the run \
+                 (rounds={})",
+                e.from,
+                e.until,
+                e.worker,
+                c.rounds
+            );
+            let sampled = sample_clients(e.from, c.workers, c.sample_fraction, c.seed);
+            anyhow::ensure!(
+                sampled.contains(&e.worker),
+                "sever of worker {} starts at round {}, where that worker is not \
+                 sampled (the teardown triggers on the downlink); move the span \
+                 or raise sample_fraction",
+                e.worker,
+                e.from
+            );
+        }
+    }
     anyhow::ensure!(c.train_n >= c.workers, "need >= 1 sample per worker");
     anyhow::ensure!(c.eval_every >= 1, "eval_every must be >= 1");
     anyhow::ensure!(c.labels_per_worker >= 1, "labels_per_worker >= 1");
@@ -78,6 +141,103 @@ mod tests {
     fn vanilla_delta_is_valid() {
         let mut c = ExperimentConfig::default();
         c.delta = -1.0;
+        validate(&c).unwrap();
+    }
+
+    #[test]
+    fn non_finite_sample_fractions_rejected() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.3] {
+            let mut c = ExperimentConfig::default();
+            c.sample_fraction = bad;
+            assert!(validate(&c).is_err(), "accepted sample_fraction {bad}");
+        }
+        // >= 1 is full participation, not an error.
+        let mut c = ExperimentConfig::default();
+        c.sample_fraction = 2.0;
+        validate(&c).unwrap();
+    }
+
+    #[test]
+    fn adaptive_delta2_must_be_finite_and_positive() {
+        for bad in [f64::NAN, f64::INFINITY, -0.01, 0.0] {
+            let mut c = ExperimentConfig::default();
+            c.policy = PolicyKind::AdaptiveDelta2 { delta2: bad };
+            assert!(validate(&c).is_err(), "accepted delta2 {bad}");
+        }
+        let mut c = ExperimentConfig::default();
+        c.policy = PolicyKind::AdaptiveDelta2 { delta2: 0.01 };
+        validate(&c).unwrap();
+    }
+
+    #[test]
+    fn sever_plans_validated_against_run_shape() {
+        use crate::sim::{FaultEvent, FaultPlan};
+        let plan = |from: usize, until: usize, worker: usize| FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent { worker, from, until, kind: FaultKind::Sever }],
+            profiles: Vec::new(),
+        };
+        // In range, full participation: fine.
+        let mut c = ExperimentConfig::default();
+        c.faults = Some(plan(2, 4, 1));
+        validate(&c).unwrap();
+        // Rejoin scheduled past the end of the run: rejected.
+        let mut c = ExperimentConfig::default();
+        c.faults = Some(plan(2, c.rounds, 1));
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("inside the run"), "{err}");
+        // Out-of-range worker: rejected.
+        let mut c = ExperimentConfig::default();
+        c.faults = Some(plan(2, 4, c.workers));
+        assert!(validate(&c).is_err());
+        // Worker not sampled at the span start: rejected.
+        let mut c = ExperimentConfig::default();
+        c.sample_fraction = 0.2;
+        let sampled = crate::coordinator::sampling::sample_clients(
+            2,
+            c.workers,
+            c.sample_fraction,
+            c.seed,
+        );
+        let unsampled = (0..c.workers).find(|w| !sampled.contains(w)).unwrap();
+        c.faults = Some(plan(2, 4, unsampled));
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("not sampled"), "{err}");
+        // The same span on a sampled worker passes.
+        let mut c2 = ExperimentConfig::default();
+        c2.sample_fraction = 0.2;
+        c2.faults = Some(plan(2, 4, sampled[0]));
+        validate(&c2).unwrap();
+        // Non-sever kinds are unconstrained (they run on every engine).
+        let mut c = ExperimentConfig::default();
+        c.faults = Some(FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                worker: c.workers + 5,
+                from: 0,
+                until: c.rounds + 10,
+                kind: FaultKind::DropUplink,
+            }],
+            profiles: Vec::new(),
+        });
+        validate(&c).unwrap();
+    }
+
+    #[test]
+    fn adaptive_policy_over_tcp_rejected_at_load() {
+        let mut c = ExperimentConfig::default();
+        c.policy = PolicyKind::AdaptiveDelta2 { delta2: 0.01 };
+        c.transport = Transport::Tcp;
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("unservable"), "{err}");
+        // The same policy is servable in-process.
+        c.transport = Transport::Memory;
+        validate(&c).unwrap();
+        c.transport = Transport::Threads;
+        validate(&c).unwrap();
+        // And the fixed policy is servable everywhere.
+        let mut c = ExperimentConfig::default();
+        c.transport = Transport::Tcp;
         validate(&c).unwrap();
     }
 }

@@ -44,6 +44,12 @@ pub struct CommLedger {
     /// made it into an aggregation (dropped, late, disconnected, corrupt).
     pub total_faults: u64,
     per_worker_faults: Vec<u64>,
+    /// Mid-run rejoins: a worker whose connection was severed re-handshook
+    /// and was re-seated (a `Rejoin` frame server-side; the in-memory
+    /// engines count the fault plan's scheduled rejoins so the ledgers
+    /// stay comparable across deployments).
+    pub total_rejoins: u64,
+    per_worker_rejoins: Vec<u64>,
 }
 
 impl CommLedger {
@@ -54,6 +60,7 @@ impl CommLedger {
             per_worker_down_floats: vec![0; workers],
             per_worker_down_bits: vec![0; workers],
             per_worker_faults: vec![0; workers],
+            per_worker_rejoins: vec![0; workers],
             ..Default::default()
         }
     }
@@ -103,6 +110,17 @@ impl CommLedger {
         self.per_worker_faults[worker]
     }
 
+    /// Record one mid-run rejoin: `worker` re-handshook after losing its
+    /// connection and was re-seated for the following rounds.
+    pub fn record_rejoin(&mut self, worker: usize) {
+        self.total_rejoins += 1;
+        self.per_worker_rejoins[worker] += 1;
+    }
+
+    pub fn worker_rejoins(&self, worker: usize) -> u64 {
+        self.per_worker_rejoins[worker]
+    }
+
     pub fn worker_floats(&self, worker: usize) -> u64 {
         self.per_worker_floats[worker]
     }
@@ -143,6 +161,7 @@ impl CommLedger {
             && self.per_worker_down_floats.iter().sum::<u64>() == self.down_floats
             && self.per_worker_down_bits.iter().sum::<u64>() == self.down_bits
             && self.per_worker_faults.iter().sum::<u64>() == self.total_faults
+            && self.per_worker_rejoins.iter().sum::<u64>() == self.total_rejoins
     }
 }
 
@@ -195,6 +214,22 @@ mod tests {
         // Faults don't bleed into the transfer counters.
         assert_eq!(l.total_floats, 0);
         assert_eq!(l.down_floats, 0);
+        assert!(l.consistent());
+    }
+
+    #[test]
+    fn rejoin_counters_track_per_worker() {
+        let mut l = CommLedger::new(3);
+        l.record_rejoin(1);
+        l.record_rejoin(1);
+        l.record_rejoin(0);
+        assert_eq!(l.total_rejoins, 3);
+        assert_eq!(l.worker_rejoins(0), 1);
+        assert_eq!(l.worker_rejoins(1), 2);
+        assert_eq!(l.worker_rejoins(2), 0);
+        // Rejoins are not faults and move no data.
+        assert_eq!(l.total_faults, 0);
+        assert_eq!(l.total_floats, 0);
         assert!(l.consistent());
     }
 

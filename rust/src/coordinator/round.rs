@@ -337,6 +337,19 @@ pub fn run_fl(
     let dim = server.theta.len();
     for t in 0..cfg.rounds {
         let start = std::time::Instant::now();
+        // Scheduled rejoins: a severed connection restored at round t
+        // forces the worker's next uplink to be a full refresh — the
+        // in-memory mirror of the client-side reconnect reconciliation
+        // (the worker cannot know whether its last refresh was applied),
+        // which keeps this engine bit-identical to an elastic TCP run.
+        if let Some(plan) = cfg.faults.as_ref() {
+            // Events for workers outside this federation are ignored, like
+            // everywhere else in the fault machinery.
+            for w in plan.rejoins_at(t).filter(|&w| w < k) {
+                workers[w].force_full_next();
+                ledger.record_rejoin(w);
+            }
+        }
         let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
         let planned_n = planned.len();
         // The theta broadcast is a real transmission to every *sampled*

@@ -5,8 +5,18 @@ use crate::util::rng::Rng;
 
 /// Deterministically sample `ceil(fraction * k)` distinct client ids for a
 /// given round. `fraction >= 1` means full participation.
+///
+/// `fraction` must be finite and positive: a NaN would fail the `>= 1.0`
+/// test, ceil to NaN, cast to 0, and be clamped to a silent 1-client
+/// federation — a degradation no caller ever wants. Configs are validated
+/// at load time (`config::validate`); this assert catches programmatic
+/// callers.
 pub fn sample_clients(round: usize, k: usize, fraction: f64, seed: u64) -> Vec<usize> {
     assert!(k > 0);
+    assert!(
+        fraction.is_finite() && fraction > 0.0,
+        "sample fraction must be finite and positive, got {fraction}"
+    );
     if fraction >= 1.0 {
         return (0..k).collect();
     }
@@ -61,5 +71,23 @@ mod tests {
     #[test]
     fn at_least_one_client() {
         assert_eq!(sample_clients(0, 10, 0.001, 0).len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn nan_fraction_panics_instead_of_degrading() {
+        sample_clients(0, 10, f64::NAN, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn negative_fraction_panics_instead_of_degrading() {
+        sample_clients(0, 10, -0.5, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn infinite_fraction_panics() {
+        sample_clients(0, 10, f64::INFINITY, 0);
     }
 }

@@ -36,6 +36,9 @@ enum Downlink {
     /// one per participant (§Perf; mirrors the Arc-shared LBG in
     /// [`super::messages::Payload::Full`]).
     Round { t: usize, theta: Arc<Vec<f32>> },
+    /// Rejoin reconciliation (a scheduled sever span ended): the worker's
+    /// next uplink must be a full refresh, like a reconnecting TCP client.
+    ForceFull,
     Shutdown,
 }
 
@@ -74,6 +77,7 @@ where
             while let Ok(cmd) = rx.recv() {
                 match cmd {
                     Downlink::Shutdown => break,
+                    Downlink::ForceFull => worker.force_full_next(),
                     Downlink::Round { t, theta } => {
                         let (loss, mut grad) =
                             trainer.local_round(id, theta.as_slice(), tau, eta)?;
@@ -95,6 +99,17 @@ where
 
     let dim = server.theta.len();
     for t in 0..cfg.rounds {
+        // Scheduled rejoins: mirror of the sequential engine's sever
+        // reconciliation (see `run_fl`) so every engine honors the plan
+        // identically.
+        if let Some(plan) = cfg.faults.as_ref() {
+            for w in plan.rejoins_at(t).filter(|&w| w < k) {
+                ledger.record_rejoin(w);
+                down_txs[w]
+                    .send(Downlink::ForceFull)
+                    .map_err(|_| anyhow::anyhow!("worker {w} hung up"))?;
+            }
+        }
         let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
         let planned_n = planned.len();
         // The downlink is accounted for every sampled worker (the server

@@ -40,6 +40,10 @@ pub struct Worker {
     /// Scratch arena leased to the codec each round (§Perf: zero
     /// steady-state allocation once warm).
     ws: Workspace,
+    /// Rejoin reconciliation: when set, the next uplink is a full-gradient
+    /// refresh regardless of the policy decision (see
+    /// [`Worker::force_full_next`]). Cleared by the refresh.
+    force_full: bool,
     /// Diagnostics: consecutive scalar rounds since the last refresh.
     pub scalar_streak: usize,
 }
@@ -53,6 +57,7 @@ impl Worker {
             lbg_norm2: 0.0,
             codec,
             ws: Workspace::new(),
+            force_full: false,
             scalar_streak: 0,
         }
     }
@@ -60,6 +65,18 @@ impl Worker {
     /// The worker-side LBG copy, if any full gradient was ever sent.
     pub fn lbg(&self) -> Option<&[f32]> {
         self.lbg.as_ref().map(|l| l.as_slice())
+    }
+
+    /// Force the next uplink to be a full-gradient refresh regardless of
+    /// the policy decision. Rejoin reconciliation: after a lost connection
+    /// the worker cannot know whether its latest refresh was applied
+    /// server-side (the update may have died in flight, or arrived after
+    /// the round deadline), so the first post-rejoin uplink re-synchronizes
+    /// both LBG copies. The flag persists until a full gradient actually
+    /// goes out (the worker may not be sampled immediately) and is cleared
+    /// by that refresh.
+    pub fn force_full_next(&mut self) {
+        self.force_full = true;
     }
 
     /// Process one round's accumulated gradient into an uplink message.
@@ -84,8 +101,9 @@ impl Worker {
             lbg.as_ref().map(|l| (l.as_slice(), *lbg_norm2)),
         );
         // Bootstrap: without an LBG no scalar can be decoded server-side
-        // (Alg. 1 initializes LBGs with the first actual gradients).
-        let decision = if self.lbg.is_none() {
+        // (Alg. 1 initializes LBGs with the first actual gradients). A
+        // rejoin reconciliation flag forces a refresh the same way.
+        let decision = if self.lbg.is_none() || self.force_full {
             Decision::Full
         } else {
             policy.decide(&proj)
@@ -103,6 +121,7 @@ impl Worker {
             }
             Decision::Full => {
                 self.scalar_streak = 0;
+                self.force_full = false;
                 self.lbg_norm2 = norm2(grad);
                 // Alg. 1 line 11: the LBG and the uplinked gradient are the
                 // same buffer; the Arc clone is a refcount bump, not a copy.
@@ -173,6 +192,35 @@ mod tests {
         let msg = w.process_round(1, &mut orth, 0.0, &policy);
         assert!(!msg.is_scalar());
         assert_eq!(w.lbg().unwrap(), &expected[..]);
+    }
+
+    #[test]
+    fn forced_full_overrides_a_scalar_decision_once() {
+        let mut w = Worker::new(0, Box::new(Identity));
+        let policy = ThresholdPolicy::fixed(0.9); // permissive: repeats go scalar
+        let g = randv(64, 7);
+        assert!(!w.process_round(0, &mut g.clone(), 0.0, &policy).is_scalar());
+        assert!(w.process_round(1, &mut g.clone(), 0.0, &policy).is_scalar());
+        // Rejoin reconciliation: the same gradient must now refresh.
+        w.force_full_next();
+        let msg = w.process_round(2, &mut g.clone(), 0.0, &policy);
+        assert!(!msg.is_scalar(), "forced refresh was skipped");
+        assert_eq!(w.lbg().unwrap(), &g[..]);
+        // One-shot: the flag cleared with the refresh.
+        assert!(w.process_round(3, &mut g.clone(), 0.0, &policy).is_scalar());
+    }
+
+    #[test]
+    fn forced_full_flag_survives_until_an_uplink_happens() {
+        // The worker may not be sampled in the round right after its
+        // rejoin; the flag must persist until it actually uplinks.
+        let mut w = Worker::new(0, Box::new(Identity));
+        let policy = ThresholdPolicy::fixed(0.9);
+        let g = randv(32, 8);
+        w.process_round(0, &mut g.clone(), 0.0, &policy);
+        w.force_full_next();
+        // Rounds 1-2 skipped (not sampled); round 3 is its next uplink.
+        assert!(!w.process_round(3, &mut g.clone(), 0.0, &policy).is_scalar());
     }
 
     #[test]

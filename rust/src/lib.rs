@@ -21,15 +21,20 @@
 //! # Networked deployment
 //!
 //! The [`net`] layer turns the simulation into a real client/server
-//! system: a versioned, checksummed binary wire codec ([`net::wire`]),
-//! framed TCP links plus a deterministic latency/bandwidth/loss shaper
-//! ([`net::link`]), and a round-driving server / worker-client pair
-//! ([`net::server`], [`net::client`]) exposed as the `fedrecycle serve`
-//! and `fedrecycle worker` subcommands (and `train --transport tcp` for a
-//! one-process loopback). A networked run is bit-identical to the
-//! sequential engine per seed, and its ledgers additionally report
-//! *measured* uplink/downlink wire bytes next to the paper's modeled
-//! float/bit counters.
+//! system: a versioned, checksummed binary wire codec ([`net::wire`],
+//! protocol v2 with a `Rejoin` re-handshake; v1 still accepted), framed
+//! TCP links plus a deterministic latency/bandwidth/loss shaper
+//! ([`net::link`]), and a **concurrent, elastic** server / reconnecting
+//! worker-client pair ([`net::server`], [`net::client`]) exposed as the
+//! `fedrecycle serve` and `fedrecycle worker` subcommands (and
+//! `train --transport tcp` for a one-process loopback): handshakes run in
+//! parallel off a dedicated accept thread, uplinks are collected
+//! concurrently per worker under the shared round deadline, and a worker
+//! that drops out can rejoin mid-run with its LBGM state reconciled by a
+//! forced full refresh. A networked run is bit-identical to the
+//! sequential engine per seed — churn included — and its ledgers
+//! additionally report *measured* uplink/downlink wire bytes next to the
+//! paper's modeled float/bit counters.
 //!
 //! # Fault tolerance & chaos testing
 //!

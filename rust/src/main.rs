@@ -12,6 +12,9 @@
 //! Common flags for `train`: --variant --dataset --workers --rounds --tau
 //!   --eta --delta --noniid true|false --codec identity|topk|topk_ef|atomo|
 //!   signsgd --codec-fraction --codec-rank --sample-fraction --seed
+//!   --policy fixed|adaptive --delta2 X  (threshold policy; adaptive is
+//!   rejected with --transport tcp at load time — the wire protocol cannot
+//!   carry its server-side state)
 //!   --parallelism seq|auto|<threads>  (round-engine concurrency; results
 //!   are bit-identical across settings)
 //!   --transport memory|threads|tcp  (deployment; results are bit-identical
@@ -25,6 +28,11 @@
 //! sides must agree on --workers --dim --spread --sigma --seed, and every
 //! worker must use the same --codec (the handshake checks id/dim/protocol;
 //! federation shape and codec are the operator's contract, like the seed).
+//! The server is elastic: its accept thread keeps listening for the whole
+//! run, so a worker that crashes or loses its network can come back — the
+//! `worker` subcommand reconnects with capped backoff (--retries,
+//! --backoff-ms) and re-handshakes with a protocol-v2 `Rejoin`, resuming
+//! with the next round's broadcast.
 
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
@@ -33,12 +41,15 @@ use std::time::Duration;
 use anyhow::Result;
 
 use fedrecycle::analysis::gradient_space::centralized_analysis;
-use fedrecycle::config::{CodecKind, ExperimentConfig};
+use fedrecycle::config::{CodecKind, ExperimentConfig, PolicyKind};
 use fedrecycle::coordinator::transport::run_threaded_fl;
 use fedrecycle::coordinator::{LocalTrainer, MockTrainer, Parallelism, Transport};
 use fedrecycle::figures::{self, common::Scale};
 use fedrecycle::metrics::{write_csv, RunSeries};
-use fedrecycle::net::{accept_workers, connect_worker, run_server_rounds, run_tcp_fl};
+use fedrecycle::net::{
+    connect_worker_with_retry, run_server_rounds_elastic, run_tcp_fl, Acceptor,
+    ElasticOpts, ReconnectCfg,
+};
 use fedrecycle::runtime::{Manifest, Runtime};
 use fedrecycle::sim::FaultPlan;
 use fedrecycle::util::cli::Args;
@@ -93,6 +104,9 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
             args.f64_or("codec-fraction", 0.1),
             args.usize_or("codec-rank", 2),
         )?;
+    }
+    if let Some(name) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(name, args.f64_or("delta2", 0.01))?;
     }
     if let Some(v) = args.get("parallelism") {
         cfg.parallelism = Parallelism::parse(v)?;
@@ -272,7 +286,9 @@ fn print_deployment_summary(
 }
 
 /// `serve`: the networked aggregation server. Binds `--listen`, accepts
-/// `--workers` connections, handshakes, and drives the full run.
+/// `--workers` connections (handshaking in parallel), and drives the full
+/// run with the accept thread kept alive throughout — a worker that drops
+/// out can rejoin mid-run and resumes with the next round's broadcast.
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
     fedrecycle::config::validate(&cfg)?;
@@ -292,17 +308,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let weights = eval.weights();
     let handshake = Duration::from_secs(args.u64_or("handshake-timeout", 120));
     let deadline = Duration::from_secs(args.u64_or("round-deadline", 600));
-    let mut links = accept_workers(&listener, k, spec.dim, &fl, handshake)?;
-    if let Some(plan) = &fl.faults {
+    let acceptor = Acceptor::spawn(listener, k, spec.dim, &fl, handshake)?;
+    let mut links = acceptor.wait_for_fleet(k)?;
+    let plan = fl.faults.as_ref().map(|p| std::sync::Arc::new(p.clone()));
+    if let Some(p) = &plan {
         println!(
             "chaos: injecting {} fault event(s) from the plan (seed {})",
-            plan.events.len(),
-            plan.seed
+            p.events.len(),
+            p.seed
         );
-        links = fedrecycle::sim::chaos::wrap_links(links, plan);
+        links = fedrecycle::sim::chaos::wrap_links(links, p);
     }
-    println!("all {k} workers connected; training");
-    let (series, ledger, _theta) = run_server_rounds(
+    println!("all {k} workers connected; training (rejoins stay open)");
+    let elastic = ElasticOpts {
+        acceptor: &acceptor,
+        plan,
+        rejoin_wait: fedrecycle::net::server::DEFAULT_REJOIN_WAIT,
+    };
+    let (series, ledger, _theta) = run_server_rounds_elastic(
         &mut links,
         &mut eval,
         vec![0.0; spec.dim],
@@ -310,6 +333,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &fl,
         deadline,
         &cfg.name,
+        Some(&elastic),
     )?;
     print_deployment_summary(&series, &ledger);
     if let Some(out) = args.get("out") {
@@ -319,17 +343,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `worker`: one networked worker process. Connects to `--connect`, serves
-/// rounds until the server shuts the session down.
+/// rounds until the server shuts the session down. A lost connection is
+/// retried with capped exponential backoff (`--retries`, `--backoff-ms`),
+/// rejoining the run mid-flight with LBGM state intact.
 fn cmd_worker(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
     let spec = mock_spec(args);
     let id = args.usize_or("id", 0);
     let addr = args.get_or("connect", "127.0.0.1:7878");
     anyhow::ensure!(id < cfg.workers, "--id {id} out of range (K={})", cfg.workers);
+    let retry = ReconnectCfg {
+        max_attempts: args.usize_or("retries", ReconnectCfg::default().max_attempts),
+        initial_backoff: Duration::from_millis(args.u64_or("backoff-ms", 25)),
+        ..ReconnectCfg::default()
+    };
     let mut trainer =
         MockTrainer::new(spec.dim, cfg.workers, spec.spread, spec.sigma, cfg.seed);
     println!("worker {id}: connecting to {addr}");
-    let served = connect_worker(addr.as_str(), id, &mut trainer, cfg.codec.build())?;
+    let served =
+        connect_worker_with_retry(addr.as_str(), id, &mut trainer, cfg.codec.build(), &retry)?;
     println!("worker {id}: served {served} rounds, shut down cleanly");
     Ok(())
 }

@@ -1,4 +1,4 @@
-//! `net::client` — the worker-side protocol loop.
+//! `net::client` — the worker-side protocol loop, with elastic reconnect.
 //!
 //! A worker process owns one [`Link`] to the server, its local trainer
 //! (any [`LocalTrainer`] — PJRT works here because the client runs on its
@@ -6,10 +6,29 @@
 //! The session hyperparameters (tau, eta, delta) arrive in the `Welcome`
 //! frame, so worker processes need no config file beyond the federation
 //! shape used to build their trainer.
+//!
+//! The protocol state that must survive a connection — the LBGM look-back
+//! state and the last served round — lives in a [`WorkerSession`], so a
+//! dropped link is not the end of the worker: [`connect_worker_with_retry`]
+//! reconnects with capped exponential backoff, re-handshakes with
+//! `Frame::Rejoin { worker, last_round }` (wire protocol v2), and resumes
+//! serving. Two reconciliation rules keep the rejoin sound:
+//!
+//! * **Round monotonicity** — the session tracks the last round it served
+//!   and rejects a `Round { t }` that does not move forward (a duplicate
+//!   or replayed broadcast would advance the trainer and LBGM state twice
+//!   and silently desync the run). Gaps forward are legal: a worker that
+//!   was not sampled, or was absent, simply misses those rounds.
+//! * **Forced refresh** — after every rejoin the next uplink is a full
+//!   gradient regardless of the threshold policy
+//!   ([`Worker::force_full_next`]): the worker cannot know whether its
+//!   last refresh was applied server-side, and one dense uplink restores
+//!   LBG coherence unconditionally.
 
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::compress::Compressor;
 use crate::coordinator::trainer::LocalTrainer;
@@ -19,8 +38,162 @@ use crate::lbgm::ThresholdPolicy;
 use super::link::{Link, TcpLink};
 use super::wire::{self, Frame};
 
+/// Reconnect/backoff knobs for [`connect_worker_with_retry`].
+#[derive(Clone, Copy, Debug)]
+pub struct ReconnectCfg {
+    /// Consecutive failed attempts (connect, handshake, or lost link)
+    /// before the worker gives up. A successfully served round resets the
+    /// count.
+    pub max_attempts: usize,
+    /// First backoff sleep; doubles per consecutive failure.
+    pub initial_backoff: Duration,
+    /// Cap on the doubled backoff.
+    pub max_backoff: Duration,
+    /// How long a (re)handshake waits for the server's `Welcome` before
+    /// counting the attempt as failed (zero = wait forever).
+    pub handshake_timeout: Duration,
+}
+
+impl Default for ReconnectCfg {
+    fn default() -> Self {
+        Self {
+            max_attempts: 10,
+            initial_backoff: Duration::from_millis(25),
+            max_backoff: Duration::from_secs(2),
+            handshake_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Session hyperparameters delivered by the server's `Welcome`.
+struct SessionParams {
+    tau: usize,
+    eta: f32,
+    policy: ThresholdPolicy,
+}
+
+/// Why a serve loop ended.
+enum ServeEnd {
+    /// The server completed the run; disconnect cleanly.
+    Shutdown,
+    /// The transport failed (timeout, reset, EOF); the session state is
+    /// intact and the worker may rejoin over a fresh link.
+    LinkLost(anyhow::Error),
+}
+
+/// The connection-survivable worker state: LBGM look-back machine, served
+/// round counter, and round-monotonicity cursor.
+struct WorkerSession {
+    id: usize,
+    worker: Worker,
+    served: usize,
+    /// Last round this worker served (`None` before the first).
+    last_round: Option<u64>,
+    /// Completed handshakes; 0 means the next handshake is a fresh `Hello`,
+    /// anything later re-handshakes with `Rejoin`.
+    connections: usize,
+}
+
+impl WorkerSession {
+    fn new(id: usize, codec: Box<dyn Compressor>) -> Self {
+        Self { id, worker: Worker::new(id, codec), served: 0, last_round: None, connections: 0 }
+    }
+
+    /// Handshake on a fresh link: `Hello` on the first connection, `Rejoin`
+    /// afterwards. Validates the server's `Welcome` (dimension), applies
+    /// the session receive caps, and — on a rejoin — arms the forced full
+    /// refresh that reconciles the LBGM look-back state.
+    fn handshake(&mut self, link: &mut dyn Link, dim: usize) -> Result<SessionParams> {
+        // Until the server proves itself with a valid Welcome, cap what we
+        // are willing to allocate for a frame (mirror of the server-side
+        // guard).
+        link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
+        let frame = if self.connections == 0 {
+            Frame::Hello { worker: self.id as u32, dim: dim as u64 }
+        } else {
+            Frame::Rejoin {
+                worker: self.id as u32,
+                last_round: self.last_round.unwrap_or(wire::REJOIN_NEVER_SERVED),
+            }
+        };
+        link.send(&frame)?;
+        let reply = link.recv()?;
+        let tag = reply.tag();
+        let Frame::Welcome { dim: sdim, tau, eta, delta } = reply else {
+            bail!("expected Welcome, got tag {tag}");
+        };
+        ensure!(
+            sdim == dim as u64,
+            "server runs dim {sdim}, this worker has {dim}"
+        );
+        // Largest legal downlink: a Round frame carrying dim params (the
+        // same cap the server applies to its uplink side).
+        link.set_recv_limit(wire::session_max_payload(dim));
+        if self.connections > 0 {
+            // Rejoin reconciliation: the last refresh may or may not have
+            // been applied server-side; one forced dense uplink restores
+            // coherence either way.
+            self.worker.force_full_next();
+        }
+        self.connections += 1;
+        Ok(SessionParams { tau: tau as usize, eta, policy: ThresholdPolicy::fixed(delta) })
+    }
+
+    /// Serve rounds over `link` until the server shuts the session down
+    /// (`Ok(Shutdown)`), the transport dies (`Ok(LinkLost)` — the session
+    /// survives for a rejoin), or the server violates the protocol (`Err`,
+    /// fatal: retrying cannot fix a misbehaving server).
+    fn serve(
+        &mut self,
+        link: &mut dyn Link,
+        trainer: &mut dyn LocalTrainer,
+        params: &SessionParams,
+    ) -> Result<ServeEnd> {
+        loop {
+            let frame = match link.recv() {
+                Ok(f) => f,
+                Err(e) => return Ok(ServeEnd::LinkLost(e)),
+            };
+            match frame {
+                Frame::Shutdown => return Ok(ServeEnd::Shutdown),
+                Frame::Round { t, theta } => {
+                    // Round monotonicity: a duplicate or replayed broadcast
+                    // would advance the trainer and LBGM state twice and
+                    // silently desync `served`/round counters. Forward gaps
+                    // are legal (sampling, absences); going backwards or
+                    // standing still is a protocol violation.
+                    if let Some(last) = self.last_round {
+                        ensure!(
+                            t > last,
+                            "server replayed round {t} (last served round {last})"
+                        );
+                    }
+                    let (loss, mut grad) =
+                        trainer.local_round(self.id, &theta, params.tau, params.eta)?;
+                    let msg = self.worker.process_round(
+                        t as usize,
+                        &mut grad,
+                        loss,
+                        &params.policy,
+                    );
+                    // State advanced: record the round before the uplink so
+                    // a send failure still rejoins with the truthful cursor.
+                    self.last_round = Some(t);
+                    self.served += 1;
+                    if let Err(e) = link.send(&Frame::Update(msg)) {
+                        return Ok(ServeEnd::LinkLost(e));
+                    }
+                }
+                other => bail!("unexpected frame tag {} from server", other.tag()),
+            }
+        }
+    }
+}
+
 /// Handshake and serve rounds over an established link until the server
-/// sends `Shutdown`. Returns the number of rounds served.
+/// sends `Shutdown`. Returns the number of rounds served. A transport
+/// failure is an error here — for a worker that survives its link, use
+/// [`connect_worker_with_retry`].
 ///
 /// `trainer.local_round(id, ..)` is driven with this worker's shard only;
 /// the trainer's other worker streams are never touched, which is what
@@ -31,44 +204,18 @@ pub fn run_worker(
     trainer: &mut dyn LocalTrainer,
     codec: Box<dyn Compressor>,
 ) -> Result<usize> {
-    let dim = trainer.dim();
-    // Until the server proves itself with a valid Welcome, cap what we are
-    // willing to allocate for a frame (mirror of the server-side guard).
-    link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
-    link.send(&Frame::Hello { worker: id as u32, dim: dim as u64 })?;
-    let reply = link.recv()?;
-    let tag = reply.tag();
-    let Frame::Welcome { dim: sdim, tau, eta, delta } = reply else {
-        bail!("expected Welcome, got tag {tag}");
-    };
-    ensure!(
-        sdim == dim as u64,
-        "server runs dim {sdim}, this worker has {dim}"
-    );
-    // Largest legal downlink: a Round frame carrying dim params.
-    link.set_recv_limit(64 + 4 * dim);
-    let policy = ThresholdPolicy::fixed(delta);
-    let mut worker = Worker::new(id, codec);
-    let mut served = 0usize;
-    loop {
-        let frame = link.recv()?;
-        match frame {
-            Frame::Shutdown => break,
-            Frame::Round { t, theta } => {
-                let (loss, mut grad) =
-                    trainer.local_round(id, &theta, tau as usize, eta)?;
-                let msg = worker.process_round(t as usize, &mut grad, loss, &policy);
-                link.send(&Frame::Update(msg))?;
-                served += 1;
-            }
-            other => bail!("unexpected frame tag {} from server", other.tag()),
+    let mut session = WorkerSession::new(id, codec);
+    let params = session.handshake(link, trainer.dim())?;
+    match session.serve(link, trainer, &params)? {
+        ServeEnd::Shutdown => Ok(session.served),
+        ServeEnd::LinkLost(e) => {
+            Err(e.context(format!("worker {id} lost its link mid-run")))
         }
     }
-    Ok(served)
 }
 
 /// Connect to a serving `fedrecycle` instance over TCP and run the worker
-/// loop to completion.
+/// loop to completion (no reconnection; see [`connect_worker_with_retry`]).
 pub fn connect_worker<A: ToSocketAddrs>(
     addr: A,
     id: usize,
@@ -78,6 +225,80 @@ pub fn connect_worker<A: ToSocketAddrs>(
     let stream = TcpStream::connect(addr)?;
     let mut link = TcpLink::new(stream)?;
     run_worker(&mut link, id, trainer, codec)
+}
+
+/// Like [`connect_worker`], but elastic: a lost connection (or failed
+/// connect/handshake) is retried with capped exponential backoff, the
+/// re-handshake uses `Frame::Rejoin` so the server re-seats this worker's
+/// slot, and the LBGM state carries over (with a forced full refresh as
+/// the first post-rejoin uplink). Returns the total rounds served across
+/// all connections. Protocol violations — wrong dimension on `Welcome`
+/// comes back as a handshake failure, a replayed round as a fatal error —
+/// are not retried past `retry.max_attempts`.
+pub fn connect_worker_with_retry<A: ToSocketAddrs + Clone>(
+    addr: A,
+    id: usize,
+    trainer: &mut dyn LocalTrainer,
+    codec: Box<dyn Compressor>,
+    retry: &ReconnectCfg,
+) -> Result<usize> {
+    let dim = trainer.dim();
+    let mut session = WorkerSession::new(id, codec);
+    let mut failures = 0usize;
+    let mut backoff = retry.initial_backoff;
+    let fail = |failures: &mut usize, backoff: &mut Duration, why: String| -> Result<()> {
+        *failures += 1;
+        // `max_attempts` counts attempts made, so the bound is strict: the
+        // max_attempts-th consecutive failure gives up instead of earning
+        // one more try.
+        ensure!(
+            *failures < retry.max_attempts,
+            "worker {id} gave up after {failures} attempts: {why}"
+        );
+        eprintln!("net: worker {id}: {why}; retrying in {backoff:?}");
+        std::thread::sleep(*backoff);
+        *backoff = (*backoff * 2).min(retry.max_backoff);
+        Ok(())
+    };
+    loop {
+        let connected = TcpStream::connect(addr.clone())
+            .context("connect")
+            .and_then(TcpLink::new);
+        let mut link = match connected {
+            Ok(l) => l,
+            Err(e) => {
+                fail(&mut failures, &mut backoff, format!("connect failed: {e:#}"))?;
+                continue;
+            }
+        };
+        if !retry.handshake_timeout.is_zero() {
+            link.set_recv_timeout(Some(retry.handshake_timeout))?;
+        }
+        let params = match session.handshake(&mut link, dim) {
+            Ok(p) => p,
+            Err(e) => {
+                fail(&mut failures, &mut backoff, format!("handshake failed: {e:#}"))?;
+                continue;
+            }
+        };
+        link.set_recv_timeout(None)?;
+        let served_before = session.served;
+        match session.serve(&mut link, trainer, &params)? {
+            ServeEnd::Shutdown => return Ok(session.served),
+            ServeEnd::LinkLost(e) => {
+                // Rounds served on *this* connection prove the federation
+                // is healthy; don't let old failures starve a long run's
+                // reconnect budget. (A connection that dies without
+                // serving anything keeps counting, so a crash-looping
+                // server still exhausts the budget.)
+                if session.served > served_before {
+                    failures = 0;
+                    backoff = retry.initial_backoff;
+                }
+                fail(&mut failures, &mut backoff, format!("link lost: {e:#}"))?;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -134,5 +355,157 @@ mod tests {
         let _ = srv.recv().unwrap();
         srv.send(&Frame::Welcome { dim: 99, tau: 1, eta: 0.05, delta: 0.5 }).unwrap();
         assert!(client.join().unwrap().is_err());
+    }
+
+    /// Satellite bugfix pin: a duplicate (or backwards) `Round { t }` is a
+    /// protocol error — the trainer and LBGM state must never advance
+    /// twice for one round. Forward gaps stay legal (sampling skips
+    /// rounds).
+    #[test]
+    fn replayed_round_is_a_protocol_error() {
+        let dim = 4;
+        let (mut srv, mut wrk) = MemLink::pair();
+        let client = std::thread::spawn(move || {
+            let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 5);
+            run_worker(&mut wrk, 0, &mut trainer, Box::new(Identity))
+        });
+        let _ = srv.recv().unwrap();
+        srv.send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 0.5 })
+            .unwrap();
+        // A forward gap (round 2 right away) is legal...
+        srv.send(&Frame::Round { t: 2, theta: vec![0.0; dim] }).unwrap();
+        assert!(matches!(srv.recv().unwrap(), Frame::Update(_)));
+        // ...but replaying round 2 must kill the session loudly.
+        srv.send(&Frame::Round { t: 2, theta: vec![0.0; dim] }).unwrap();
+        let err = format!("{:#}", client.join().unwrap().unwrap_err());
+        assert!(err.contains("replayed round 2"), "{err}");
+    }
+
+    #[test]
+    fn backwards_round_is_a_protocol_error() {
+        let dim = 4;
+        let (mut srv, mut wrk) = MemLink::pair();
+        let client = std::thread::spawn(move || {
+            let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 5);
+            run_worker(&mut wrk, 0, &mut trainer, Box::new(Identity))
+        });
+        let _ = srv.recv().unwrap();
+        srv.send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 0.5 })
+            .unwrap();
+        srv.send(&Frame::Round { t: 3, theta: vec![0.0; dim] }).unwrap();
+        assert!(matches!(srv.recv().unwrap(), Frame::Update(_)));
+        srv.send(&Frame::Round { t: 1, theta: vec![0.0; dim] }).unwrap();
+        assert!(client.join().unwrap().is_err());
+    }
+
+    /// The session survives its link: after serving a round and losing the
+    /// connection, the session re-handshakes with `Rejoin { last_round }`
+    /// and its first post-rejoin uplink is a forced full refresh.
+    #[test]
+    fn rejoin_handshake_reports_last_round_and_forces_full() {
+        let dim = 8;
+        let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 5);
+        let mut session = WorkerSession::new(1, Box::new(Identity));
+
+        // Connection 1: handshake + serve rounds 0 and 1, then the link
+        // "dies" (a receive timeout, the same error class as a dead TCP
+        // read — deterministic in-process).
+        let (mut srv, mut wrk) = MemLink::pair();
+        srv.send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 2.0 })
+            .unwrap();
+        let params = session.handshake(&mut wrk, dim).unwrap();
+        assert!(matches!(srv.recv().unwrap(), Frame::Hello { worker: 1, .. }));
+        srv.send(&Frame::Round { t: 0, theta: vec![0.0; dim] }).unwrap();
+        srv.send(&Frame::Round { t: 1, theta: vec![0.01; dim] }).unwrap();
+        wrk.set_recv_timeout(Some(Duration::from_millis(30))).unwrap();
+        match session.serve(&mut wrk, &mut trainer, &params).unwrap() {
+            ServeEnd::LinkLost(_) => {}
+            ServeEnd::Shutdown => panic!("dead link reported as clean shutdown"),
+        }
+        assert_eq!(session.served, 2);
+        // Both updates crossed before the loss; delta = 2.0 means the
+        // second one already went scalar (LBGM steady state).
+        assert!(matches!(srv.recv().unwrap(), Frame::Update(_)));
+        match srv.recv().unwrap() {
+            Frame::Update(m) => assert!(m.is_scalar(), "round 1 should be scalar"),
+            other => panic!("expected Update, got {other:?}"),
+        }
+
+        // Connection 2: the re-handshake is a Rejoin carrying round 1.
+        let (mut srv2, mut wrk2) = MemLink::pair();
+        srv2.send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 2.0 })
+            .unwrap();
+        let params2 = session.handshake(&mut wrk2, dim).unwrap();
+        match srv2.recv().unwrap() {
+            Frame::Rejoin { worker, last_round } => {
+                assert_eq!(worker, 1);
+                assert_eq!(last_round, 1);
+            }
+            other => panic!("expected Rejoin, got {other:?}"),
+        }
+        // delta = 2.0 accepts any LBP error, so without the reconciliation
+        // this round would go scalar; the forced refresh must win.
+        srv2.send(&Frame::Round { t: 2, theta: vec![0.02; dim] }).unwrap();
+        srv2.send(&Frame::Shutdown).unwrap();
+        match session.serve(&mut wrk2, &mut trainer, &params2).unwrap() {
+            ServeEnd::Shutdown => {}
+            ServeEnd::LinkLost(e) => panic!("lost scripted link: {e:#}"),
+        }
+        match srv2.recv().unwrap() {
+            Frame::Update(m) => {
+                assert_eq!(m.round, 2);
+                assert!(
+                    matches!(m.payload, Payload::Full { .. }),
+                    "first post-rejoin uplink must be a full refresh"
+                );
+            }
+            other => panic!("expected Update, got {other:?}"),
+        }
+        assert_eq!(session.served, 3);
+    }
+
+    /// A session that never served a round rejoins with the sentinel.
+    #[test]
+    fn rejoin_before_any_round_uses_the_sentinel() {
+        let dim = 4;
+        let mut session = WorkerSession::new(0, Box::new(Identity));
+        let (mut srv, mut wrk) = MemLink::pair();
+        srv.send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 0.5 })
+            .unwrap();
+        session.handshake(&mut wrk, dim).unwrap();
+        let _ = srv.recv().unwrap(); // the Hello
+        // The link dies before any round; the next handshake is a Rejoin
+        // that reports "never served".
+        let (mut srv2, mut wrk2) = MemLink::pair();
+        srv2.send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 0.5 })
+            .unwrap();
+        session.handshake(&mut wrk2, dim).unwrap();
+        match srv2.recv().unwrap() {
+            Frame::Rejoin { last_round, .. } => {
+                assert_eq!(last_round, wire::REJOIN_NEVER_SERVED)
+            }
+            other => panic!("expected Rejoin, got {other:?}"),
+        }
+    }
+
+    /// The retry loop gives up after `max_attempts` when nothing listens.
+    #[test]
+    fn retry_exhausts_against_a_dead_address() {
+        let mut trainer = MockTrainer::new(4, 1, 0.2, 0.0, 5);
+        // Bind-then-drop: the port is (almost certainly) unbound now.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let retry = ReconnectCfg {
+            max_attempts: 2,
+            initial_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(2),
+            handshake_timeout: Duration::from_secs(1),
+        };
+        let err = connect_worker_with_retry(addr, 0, &mut trainer, Box::new(Identity), &retry)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("gave up"), "{err}");
     }
 }

@@ -11,12 +11,17 @@
 //!   `TcpStream`), [`MemLink`] (in-process bytes, same codec), and
 //!   [`SimLink`] + [`LinkProfile`] (deterministic latency/bandwidth/loss
 //!   shaping for straggler and slow-uplink scenarios).
-//! * [`server`] — accepts K workers, handshakes, drives rounds with a
-//!   per-round deadline, aggregates the arrived subset in deterministic
-//!   participant order (partial participation: a worker that misses the
-//!   deadline is fault-counted and skipped, not fatal).
+//! * [`server`] — the concurrent, elastic round driver: a dedicated
+//!   accept thread handshakes connections in parallel and keeps listening
+//!   for mid-run rejoins, per-worker collector threads gather uplinks
+//!   concurrently under the shared round deadline, and aggregation still
+//!   reduces in deterministic participant order (partial participation: a
+//!   worker that misses the deadline is fault-counted and skipped, not
+//!   fatal — and free to rejoin).
 //! * [`client`] — the worker loop: handshake, train on `Round`, uplink an
-//!   `Update`, exit on `Shutdown`.
+//!   `Update`, exit on `Shutdown`; [`connect_worker_with_retry`] adds a
+//!   capped-backoff reconnect loop that re-handshakes with `Rejoin`
+//!   (wire protocol v2) and carries the LBGM state across connections.
 //!
 //! For reproducible torture tests, [`crate::sim`] wraps these links in a
 //! seeded fault-injection decorator ([`ChaosLink`](crate::sim::ChaosLink));
@@ -45,9 +50,12 @@ pub mod link;
 pub mod server;
 pub mod wire;
 
-pub use client::{connect_worker, run_worker};
+pub use client::{connect_worker, connect_worker_with_retry, run_worker, ReconnectCfg};
 pub use link::{Link, LinkProfile, MemLink, SimLink, TcpLink};
-pub use server::{accept_workers, handshake_one, run_server_rounds};
+pub use server::{
+    accept_workers, handshake_accept, handshake_one, run_server_rounds,
+    run_server_rounds_elastic, Acceptor, ElasticOpts, HandshakeOutcome, Session,
+};
 pub use wire::{Decode, Encode, Frame};
 
 use std::net::TcpListener;
@@ -68,10 +76,13 @@ pub const DEFAULT_ROUND_DEADLINE: Duration = Duration::from_secs(120);
 
 /// Run a full federated deployment over TCP loopback in one process: a
 /// listener on an ephemeral 127.0.0.1 port, one OS thread per worker
-/// connecting through [`connect_worker`], and the round-driving server on
-/// the calling thread. Bit-identical to [`run_fl`] per seed — including
-/// under a `cfg.faults` plan, which is injected by wrapping each
-/// server-side link in a [`ChaosLink`](crate::sim::ChaosLink).
+/// connecting through [`connect_worker_with_retry`] (so a severed worker
+/// reconnects and rejoins mid-run), the elastic accept thread listening
+/// for the whole run, and the round-driving server on the calling thread.
+/// Bit-identical to [`run_fl`] per seed — including under a `cfg.faults`
+/// plan, which is injected by wrapping each server-side link in a
+/// [`ChaosLink`](crate::sim::ChaosLink) (re-seated rejoin links get the
+/// same wrap).
 ///
 /// `make_trainer(k)` builds worker k's local trainer (must be `Send` to
 /// cross onto its thread); `eval_trainer` evaluates server-side. On a
@@ -100,16 +111,23 @@ where
         let mut trainer = make_trainer(id);
         let codec = codec();
         handles.push(std::thread::spawn(move || -> Result<usize> {
-            connect_worker(addr, id, &mut trainer, codec)
+            connect_worker_with_retry(addr, id, &mut trainer, codec, &ReconnectCfg::default())
         }));
     }
     let dim = theta0.len();
-    let mut links =
-        accept_workers(&listener, k, dim, cfg, DEFAULT_HANDSHAKE_TIMEOUT)?;
-    if let Some(plan) = &cfg.faults {
-        links = crate::sim::chaos::wrap_links(links, plan);
+    let acceptor =
+        server::Acceptor::spawn(listener, k, dim, cfg, DEFAULT_HANDSHAKE_TIMEOUT)?;
+    let mut links = acceptor.wait_for_fleet(k)?;
+    let plan = cfg.faults.as_ref().map(|p| std::sync::Arc::new(p.clone()));
+    if let Some(p) = &plan {
+        links = crate::sim::chaos::wrap_links(links, p);
     }
-    let out = run_server_rounds(
+    let elastic = server::ElasticOpts {
+        acceptor: &acceptor,
+        plan,
+        rejoin_wait: server::DEFAULT_REJOIN_WAIT,
+    };
+    let out = run_server_rounds_elastic(
         &mut links,
         eval_trainer,
         theta0,
@@ -117,7 +135,10 @@ where
         cfg,
         DEFAULT_ROUND_DEADLINE,
         name,
+        Some(&elastic),
     )?;
+    drop(elastic);
+    drop(acceptor);
     for h in handles {
         h.join()
             .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
@@ -132,6 +153,7 @@ where
 /// apply instead. Frames still pass through the full wire codec, so
 /// results remain bit-identical to the sequential engine per seed and
 /// fault plan — shaping changes wall-clock only.
+#[allow(clippy::too_many_arguments)]
 pub fn run_mem_fl<T, F>(
     make_trainer: F,
     eval_trainer: &mut dyn LocalTrainer,

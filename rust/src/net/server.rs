@@ -1,13 +1,32 @@
-//! `net::server` — the round-driving aggregation server.
+//! `net::server` — the concurrent, elastic round-driving aggregation
+//! server.
 //!
-//! Accepts K workers (one [`Link`] each, star topology), handshakes them
-//! (protocol version, worker id, model dimension — the server replies with
-//! the session hyperparameters), then drives global rounds: broadcast
-//! `Round{t, theta}` to the sampled participants, collect their uplinks
-//! under a per-round deadline, and aggregate with the *same* deterministic
-//! participant-ordered reduction as the in-memory engines — so a
-//! TCP-loopback run is bit-identical to [`run_fl`] per seed (asserted by
-//! `tests/net_loopback.rs`).
+//! Three cooperating pieces:
+//!
+//! * **A dedicated accept thread** ([`Acceptor`]) that listens for the
+//!   whole run and handshakes every connection on its own short-lived
+//!   thread — one silent or slow socket can no longer stall the accept
+//!   loop for `handshake_timeout` while honest workers wait. Handshaken
+//!   connections flow to the round loop through an mpsc registry of
+//!   [`Session`]s (fresh `Hello`s and mid-run `Rejoin`s alike).
+//! * **Concurrent uplink collection**: each round, every reachable
+//!   worker's update is collected on its own scoped thread against the
+//!   *shared absolute deadline* — a straggler burns only its own budget,
+//!   instead of starving every worker later in participant order down to
+//!   a clamped 1 ms receive window. The main thread still reduces the
+//!   arrived updates in **participant order**, so aggregation stays
+//!   bit-identical to the sequential engine per seed (asserted by
+//!   `tests/net_loopback.rs` and `tests/engine_parity.rs`).
+//! * **Mid-run rejoin**: the accept thread keeps listening after round 0.
+//!   A returning worker re-handshakes with `Frame::Rejoin { worker,
+//!   last_round }` (wire protocol v2; v1 `Hello` is still accepted), the
+//!   round loop re-seats its link at the next round boundary, and the
+//!   worker resumes with the next `Round` broadcast — which replays the
+//!   full current theta, so no extra state transfer is needed (LBGM's
+//!   downlink is always dense). The client side reconciles its LBGM
+//!   look-back state by forcing its first post-rejoin uplink to be `Full`
+//!   (see [`connect_worker_with_retry`]), which restores LBG coherence no
+//!   matter what was in flight when the connection died.
 //!
 //! Rounds use **partial-participation aggregation**: a worker whose update
 //! doesn't arrive by the deadline — timeout, disconnect, corrupt frame, or
@@ -16,7 +35,9 @@
 //! workers that did arrive, FedAvg weights renormalized over that set. A
 //! round with no arrivals commits without touching the model. Stale
 //! `Update` frames for earlier rounds (a straggler's late answer
-//! surfacing after a rejoin) are discarded, not fatal.
+//! surfacing after a rejoin) are discarded, not fatal; frames already
+//! queued on a link when the deadline expires are drained (they crossed
+//! the wire in time), but the server never *waits* past the deadline.
 //!
 //! The ledger records both the modeled counters (floats/bits, the paper's
 //! axes) and the *measured* wire bytes of every round-protocol frame that
@@ -25,11 +46,15 @@
 //! final round record's CSV columns exactly).
 //!
 //! [`run_fl`]: crate::coordinator::round::run_fl
+//! [`connect_worker_with_retry`]: crate::net::client::connect_worker_with_retry
 
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::compress::dense_cost;
 use crate::coordinator::accounting::CommLedger;
@@ -40,13 +65,35 @@ use crate::coordinator::server::Server;
 use crate::coordinator::trainer::LocalTrainer;
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
+use crate::sim::chaos::ChaosLink;
+use crate::sim::FaultPlan;
 
 use super::link::{Link, TcpLink};
 use super::wire::{self, Frame};
 
+/// Poll cadence of the nonblocking accept loop (how quickly a stop request
+/// is honored; accepted connections are handed off immediately).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Bound on post-deadline queue-drain attempts in [`collect_update`]: once
+/// the round deadline has expired, at most this many already-queued frames
+/// (stale or current) are read before the worker is declared absent — a
+/// peer streaming stale frames cannot stall the round open-endedly.
+const MAX_DEADLINE_DRAINS: u32 = 4;
+/// Near-zero receive window used for those post-deadline drains: long
+/// enough to pull a frame that is already buffered locally, never long
+/// enough to wait for one still crossing the network.
+const QUEUE_DRAIN_TIMEOUT: Duration = Duration::from_millis(1);
+/// How long the elastic teardown keeps draining late (re)connections so a
+/// worker that rejoined as the run ended still receives its `Shutdown`.
+const SHUTDOWN_GRACE: Duration = Duration::from_millis(200);
+/// Default bound on how long a round start may block waiting for a
+/// fault-plan-scheduled rejoin before proceeding without the worker.
+pub const DEFAULT_REJOIN_WAIT: Duration = Duration::from_secs(10);
+
 /// The fixed LBP threshold shipped to workers in the `Welcome` frame.
 /// The adaptive Theorem-1 policy needs server-side state the wire protocol
-/// does not carry yet, so the net transport supports fixed thresholds only.
+/// does not carry yet, so the net transport supports fixed thresholds only
+/// (also rejected earlier, at config load, by `config::validate`).
 pub fn policy_delta(policy: ThresholdPolicy) -> Result<f64> {
     match policy {
         ThresholdPolicy::Fixed { delta } => Ok(delta),
@@ -54,49 +101,302 @@ pub fn policy_delta(policy: ThresholdPolicy) -> Result<f64> {
     }
 }
 
+/// How a freshly handshaken connection introduced itself.
+pub enum HandshakeOutcome {
+    /// A first-time `Hello`.
+    Fresh {
+        /// The worker id the peer claimed (validated against `K`).
+        worker: usize,
+    },
+    /// A mid-run `Rejoin` re-handshake (wire protocol v2).
+    Rejoin {
+        /// The worker id the peer claimed (validated against `K`).
+        worker: usize,
+        /// The last round the worker served before losing its connection,
+        /// if it ever completed one.
+        last_round: Option<u64>,
+    },
+}
+
+/// One handshaken connection, as delivered by the [`Acceptor`] to the
+/// round loop's session registry.
+pub enum Session {
+    /// A fresh `Hello` handshake.
+    Fresh {
+        /// Validated worker id.
+        worker: usize,
+        /// The post-handshake link (session receive caps already applied).
+        link: Box<dyn Link>,
+    },
+    /// A mid-run `Rejoin` re-handshake.
+    Rejoin {
+        /// Validated worker id.
+        worker: usize,
+        /// Last round the worker served before the connection died.
+        last_round: Option<u64>,
+        /// The post-handshake link (session receive caps already applied).
+        link: Box<dyn Link>,
+    },
+}
+
 /// Server half of the handshake on one freshly connected link: expect
-/// `Hello`, validate it against the federation shape, reply `Welcome`.
-/// Returns the worker id the peer claimed.
-pub fn handshake_one(
+/// `Hello` (fresh session) or `Rejoin` (returning worker, protocol v2),
+/// validate it against the federation shape, reply `Welcome`.
+pub fn handshake_accept(
     link: &mut dyn Link,
     k: usize,
     dim: usize,
     cfg: &FlConfig,
-) -> Result<usize> {
+) -> Result<HandshakeOutcome> {
     let delta = policy_delta(cfg.policy)?;
     let frame = link.recv()?;
     let tag = frame.tag();
-    let Frame::Hello { worker, dim: wdim } = frame else {
-        bail!("expected Hello, got tag {tag}");
+    let outcome = match frame {
+        Frame::Hello { worker, dim: wdim } => {
+            let w = worker as usize;
+            ensure!(w < k, "worker id {w} out of range (K={k})");
+            ensure!(
+                wdim == dim as u64,
+                "worker {w} has dim {wdim}, server expects {dim}"
+            );
+            HandshakeOutcome::Fresh { worker: w }
+        }
+        Frame::Rejoin { worker, last_round } => {
+            let w = worker as usize;
+            ensure!(w < k, "rejoining worker id {w} out of range (K={k})");
+            let last = (last_round != wire::REJOIN_NEVER_SERVED).then_some(last_round);
+            HandshakeOutcome::Rejoin { worker: w, last_round: last }
+        }
+        _ => bail!("expected Hello or Rejoin, got tag {tag}"),
     };
-    let w = worker as usize;
-    ensure!(w < k, "worker id {w} out of range (K={k})");
-    ensure!(
-        wdim == dim as u64,
-        "worker {w} has dim {wdim}, server expects {dim}"
-    );
     link.send(&Frame::Welcome {
         dim: dim as u64,
         tau: cfg.tau as u32,
         eta: cfg.eta,
         delta,
     })?;
-    Ok(w)
+    Ok(outcome)
+}
+
+/// [`handshake_accept`] restricted to fresh sessions — the `MemLink`
+/// deployment's handshake, kept for callers that pre-wire their links and
+/// cannot re-seat one.
+pub fn handshake_one(
+    link: &mut dyn Link,
+    k: usize,
+    dim: usize,
+    cfg: &FlConfig,
+) -> Result<usize> {
+    match handshake_accept(link, k, dim, cfg)? {
+        HandshakeOutcome::Fresh { worker } => Ok(worker),
+        HandshakeOutcome::Rejoin { worker, .. } => {
+            bail!("worker {worker} sent Rejoin where a fresh Hello was required")
+        }
+    }
+}
+
+/// Handshake one accepted TCP stream into a [`Session`]. Runs on its own
+/// thread so a silent peer ties up nothing but itself. Until the peer
+/// handshakes, receive payloads are capped at
+/// [`wire::HANDSHAKE_MAX_PAYLOAD`] so a hostile connection cannot force
+/// large allocations; afterwards the limit is the session's frame size.
+fn handshake_stream(
+    stream: TcpStream,
+    k: usize,
+    dim: usize,
+    cfg: &FlConfig,
+    timeout: Option<Duration>,
+) -> Result<Session> {
+    // Some platforms hand accepted sockets the listener's O_NONBLOCK.
+    stream
+        .set_nonblocking(false)
+        .context("clearing nonblocking mode on the accepted stream")?;
+    let mut link = TcpLink::new(stream)?;
+    link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
+    link.set_recv_timeout(timeout)?;
+    let outcome = handshake_accept(&mut link, k, dim, cfg)?;
+    link.set_recv_timeout(None)?;
+    link.set_recv_limit(wire::session_max_payload(dim));
+    Ok(match outcome {
+        HandshakeOutcome::Fresh { worker } => {
+            Session::Fresh { worker, link: Box::new(link) }
+        }
+        HandshakeOutcome::Rejoin { worker, last_round } => {
+            Session::Rejoin { worker, last_round, link: Box::new(link) }
+        }
+    })
+}
+
+/// The accept loop body: accept without blocking (so a stop request is
+/// honored promptly) and hand every connection to its own handshake
+/// thread. Handshake threads are deliberately detached — with a zero
+/// (= unbounded) handshake timeout a silent socket may sit in `recv`
+/// forever, and joining it would hang teardown; an orphaned thread dies
+/// with its socket instead.
+/// Consecutive hard `accept` failures tolerated before the accept loop
+/// gives up (closing the session registry, which surfaces as "accept
+/// thread exited" to anyone still waiting on it) instead of spinning and
+/// spamming stderr forever on a persistent error like fd exhaustion.
+const MAX_ACCEPT_ERRORS: u32 = 16;
+
+fn accept_loop(
+    listener: TcpListener,
+    k: usize,
+    dim: usize,
+    cfg: FlConfig,
+    timeout: Option<Duration>,
+    tx: mpsc::Sender<Session>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut hard_errors = 0u32;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                hard_errors = 0;
+                let tx = tx.clone();
+                let cfg = cfg.clone();
+                let spawned = thread::Builder::new()
+                    .name("fl-handshake".into())
+                    .spawn(move || match handshake_stream(stream, k, dim, &cfg, timeout) {
+                        Ok(session) => {
+                            // The round loop may already be gone (run over);
+                            // a dropped registry just closes the socket.
+                            let _ = tx.send(session);
+                        }
+                        Err(e) => {
+                            eprintln!("net: rejecting connection from {peer}: {e:#}")
+                        }
+                    });
+                if let Err(e) = spawned {
+                    eprintln!("net: cannot spawn handshake thread for {peer}: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                hard_errors = 0;
+                thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                hard_errors += 1;
+                if hard_errors >= MAX_ACCEPT_ERRORS {
+                    eprintln!(
+                        "net: accept failing persistently ({e}); giving up on new \
+                         connections — workers can no longer rejoin this run"
+                    );
+                    return;
+                }
+                eprintln!("net: accept failed: {e}");
+                thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// The dedicated accept thread plus the mpsc registry of handshaken
+/// [`Session`]s it feeds. Spawned once per run; keeps accepting (and
+/// re-accepting returning workers) until stopped or dropped.
+pub struct Acceptor {
+    rx: mpsc::Receiver<Session>,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Acceptor {
+    /// Spawn the accept thread on `listener`. Connections handshake in
+    /// parallel, each bounded by `handshake_timeout` (zero = no timeout).
+    pub fn spawn(
+        listener: TcpListener,
+        k: usize,
+        dim: usize,
+        cfg: &FlConfig,
+        handshake_timeout: Duration,
+    ) -> Result<Acceptor> {
+        ensure!(k > 0, "need at least one worker");
+        // An unservable policy would otherwise reject every connection
+        // forever.
+        policy_delta(cfg.policy)?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener nonblocking for the accept loop")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel();
+        let flag = Arc::clone(&stop);
+        let cfg = cfg.clone();
+        let timeout = (!handshake_timeout.is_zero()).then_some(handshake_timeout);
+        let handle = thread::Builder::new()
+            .name("fl-accept".into())
+            .spawn(move || accept_loop(listener, k, dim, cfg, timeout, tx, flag))
+            .context("spawning the accept thread")?;
+        Ok(Acceptor { rx, stop, handle: Some(handle) })
+    }
+
+    /// Test/embedding hook: an acceptor fed by an external channel instead
+    /// of a live TCP accept thread.
+    pub fn from_channel(rx: mpsc::Receiver<Session>) -> Acceptor {
+        Acceptor { rx, stop: Arc::new(AtomicBool::new(false)), handle: None }
+    }
+
+    /// A queued session, if any (never blocks).
+    pub fn try_session(&self) -> Option<Session> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Block for a queued session until `until`; `None` on timeout or if
+    /// the accept thread is gone.
+    pub fn recv_deadline(&self, until: Instant) -> Option<Session> {
+        let now = Instant::now();
+        if until <= now {
+            return self.try_session();
+        }
+        self.rx.recv_timeout(until - now).ok()
+    }
+
+    /// Block until all `k` worker slots have handshaken, and return their
+    /// links indexed by worker id. A connection that fails its handshake
+    /// is rejected (dropped, closing its socket) by its handshake thread
+    /// without touching the others; a duplicate worker id is rejected
+    /// here, first connection wins.
+    pub fn wait_for_fleet(&self, k: usize) -> Result<Vec<Box<dyn Link>>> {
+        let mut slots: Vec<Option<Box<dyn Link>>> = (0..k).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < k {
+            let session = self.rx.recv().map_err(|_| {
+                anyhow::anyhow!("accept thread exited before the fleet connected")
+            })?;
+            let (w, link) = match session {
+                Session::Fresh { worker, link } => (worker, link),
+                Session::Rejoin { worker, link, .. } => (worker, link),
+            };
+            if slots[w].is_none() {
+                slots[w] = Some(link);
+                connected += 1;
+            } else {
+                eprintln!("net: rejecting duplicate worker {w}");
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+    }
+
+    /// Ask the accept thread to exit (honored within its poll interval).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Acceptor {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Accept workers on `listener` until all `k` slots are filled, handshake
-/// each, and return their links indexed by worker id.
-///
-/// A connection that fails its handshake — bad magic/version, wrong
-/// dimension, out-of-range or duplicate worker id, or silence until
-/// `handshake_timeout` — is rejected (dropped, closing its socket) without
-/// killing the already-connected workers; the server keeps accepting.
-/// Handshakes are serial, so one silent connection can stall the accept
-/// loop for up to `handshake_timeout` before the next is served. A zero
-/// `handshake_timeout` means "no timeout". Until a connection handshakes,
-/// its receive payloads are capped at [`wire::HANDSHAKE_MAX_PAYLOAD`] so a
-/// hostile peer cannot force large allocations; afterwards the limit is
-/// the session's own frame size.
+/// each (in parallel — a silent connection stalls only itself), and return
+/// their links indexed by worker id. The accept thread is torn down on
+/// return; for a server that keeps listening for mid-run rejoins, spawn an
+/// [`Acceptor`] directly and keep it alive alongside
+/// [`run_server_rounds_elastic`].
 pub fn accept_workers(
     listener: &TcpListener,
     k: usize,
@@ -104,106 +404,166 @@ pub fn accept_workers(
     cfg: &FlConfig,
     handshake_timeout: Duration,
 ) -> Result<Vec<Box<dyn Link>>> {
-    ensure!(k > 0, "need at least one worker");
-    // An unservable policy would otherwise reject every connection forever.
-    policy_delta(cfg.policy)?;
-    let timeout = (!handshake_timeout.is_zero()).then_some(handshake_timeout);
-    // The largest legal post-handshake uplink: a full-gradient Update.
-    let session_cap = 64 + 4 * dim;
-    let mut slots: Vec<Option<Box<dyn Link>>> = (0..k).map(|_| None).collect();
-    let mut connected = 0;
-    while connected < k {
-        let (stream, peer) = listener.accept()?;
-        let mut link = match TcpLink::new(stream) {
-            Ok(l) => l,
-            Err(e) => {
-                eprintln!("net: dropping connection from {peer}: {e:#}");
-                continue;
-            }
-        };
-        link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
-        if let Err(e) = link.set_recv_timeout(timeout) {
-            eprintln!("net: dropping connection from {peer}: {e:#}");
-            continue;
-        }
-        match handshake_one(&mut link, k, dim, cfg) {
-            Ok(w) if slots[w].is_none() => {
-                link.set_recv_timeout(None)?;
-                link.set_recv_limit(session_cap);
-                slots[w] = Some(Box::new(link));
-                connected += 1;
-            }
-            Ok(w) => {
-                eprintln!("net: rejecting duplicate worker {w} (peer {peer})");
-            }
-            Err(e) => {
-                eprintln!("net: rejecting connection from {peer}: {e:#}");
-            }
-        }
-    }
-    Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+    let acceptor = Acceptor::spawn(
+        listener.try_clone().context("cloning the listener for the accept thread")?,
+        k,
+        dim,
+        cfg,
+        handshake_timeout,
+    )?;
+    let fleet = acceptor.wait_for_fleet(k);
+    // O_NONBLOCK is a file-*description* flag shared with the caller's
+    // handle through the dup; restore blocking mode so this borrowed
+    // listener comes back the way it was lent — but only after the accept
+    // thread is gone (a blocking clone would wedge its accept loop).
+    drop(acceptor);
+    let _ = listener.set_nonblocking(false);
+    fleet
 }
 
-/// Collect worker `w`'s round-`t` update from its link, tolerating stale
-/// frames: an `Update` for an earlier round is discarded (its measured
-/// wire bytes still ledger-recorded — the frame really crossed the link)
-/// and the read retried until `deadline`. Any other failure — timeout,
-/// decode error, protocol violation — is returned as the error that marks
-/// the worker absent for this round. Returns the update and its measured
-/// wire bytes.
+/// One worker's round collection outcome (see [`collect_update`]).
+struct CollectOutcome {
+    /// The round update and its measured wire bytes, or the failure that
+    /// marks the worker absent for the round.
+    result: Result<(WorkerMsg, u64)>,
+    /// Measured bytes of stale frames discarded along the way — they
+    /// really crossed the link, so the ledger records them even when the
+    /// collection ultimately fails.
+    stale_bytes: u64,
+}
+
+/// Collect worker `w`'s round-`t` update from its link under the shared
+/// absolute `deadline`, tolerating stale frames: an `Update` for an
+/// earlier round is discarded and the read retried. The deadline is
+/// enforced uniformly — before *every* read, not only on the stale path —
+/// with one bounded exception: frames already queued on the link when the
+/// deadline expires are drained (they arrived in time; the server was
+/// merely slow to read them), at most [`MAX_DEADLINE_DRAINS`] reads of
+/// [`QUEUE_DRAIN_TIMEOUT`] each, so a late-but-queued update is accepted
+/// while an update still in flight is not waited for.
 fn collect_update(
     link: &mut dyn Link,
     w: usize,
     t: usize,
     deadline: Instant,
-    ledger: &mut CommLedger,
-) -> Result<(WorkerMsg, u64)> {
-    loop {
-        let remaining = deadline
-            .saturating_duration_since(Instant::now())
-            .max(Duration::from_millis(1));
-        link.set_recv_timeout(Some(remaining))?;
-        let frame = link.recv()?;
-        let bytes = frame.wire_bytes() as u64;
-        let tag = frame.tag();
-        let Frame::Update(msg) = frame else {
-            bail!("worker {w} sent tag {tag} mid-round");
-        };
-        ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
-        if msg.round < t {
-            eprintln!(
-                "net: discarding worker {w}'s stale round-{} update in round {t}",
-                msg.round
-            );
-            ledger.record_wire_up(bytes);
-            // Bound the discard loop: a peer streaming stale frames must
-            // not stall the round past its deadline.
-            ensure!(
-                Instant::now() < deadline,
-                "worker {w} flooded round {t} with stale updates until the deadline"
-            );
-            continue;
+) -> CollectOutcome {
+    let mut stale_bytes = 0u64;
+    let mut drains = 0u32;
+    let result = (|| -> Result<(WorkerMsg, u64)> {
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let timeout = if remaining.is_zero() {
+                drains += 1;
+                ensure!(
+                    drains <= MAX_DEADLINE_DRAINS,
+                    "worker {w} missed the round-{t} deadline"
+                );
+                QUEUE_DRAIN_TIMEOUT
+            } else {
+                remaining
+            };
+            link.set_recv_timeout(Some(timeout))?;
+            let frame = link.recv()?;
+            let bytes = frame.wire_bytes() as u64;
+            let tag = frame.tag();
+            let Frame::Update(msg) = frame else {
+                bail!("worker {w} sent tag {tag} mid-round");
+            };
+            ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
+            if msg.round < t {
+                eprintln!(
+                    "net: discarding worker {w}'s stale round-{} update in round {t}",
+                    msg.round
+                );
+                stale_bytes += bytes;
+                continue;
+            }
+            ensure!(msg.round == t, "worker {w} answered round {} in round {t}", msg.round);
+            return Ok((msg, bytes));
         }
-        ensure!(msg.round == t, "worker {w} answered round {} in round {t}", msg.round);
-        return Ok((msg, bytes));
+    })();
+    CollectOutcome { result, stale_bytes }
+}
+
+/// Elasticity knobs for [`run_server_rounds_elastic`]: where mid-run
+/// (re)connections come from and how re-seated links are chaos-wrapped.
+pub struct ElasticOpts<'a> {
+    /// The live accept thread feeding mid-run sessions.
+    pub acceptor: &'a Acceptor,
+    /// Chaos plan re-seated links are wrapped with (the same plan the
+    /// initial links were wrapped with via
+    /// [`wrap_links`](crate::sim::chaos::wrap_links)), and the source of
+    /// the scheduled-rejoin waits that keep sever scenarios
+    /// deterministic.
+    pub plan: Option<Arc<FaultPlan>>,
+    /// Bound on how long a round start may block for a plan-scheduled
+    /// rejoin before proceeding without the worker.
+    pub rejoin_wait: Duration,
+}
+
+/// Re-seat one handshaken session into the link table. Mid-run, only a
+/// `Rejoin` may replace a worker's link: every slot was filled at fleet
+/// assembly, so a mid-run `Hello` is a duplicate — an operator mistake or
+/// a hostile peer — and accepting it would silently unseat a (possibly
+/// healthy) worker. It is rejected and dropped, exactly like a duplicate
+/// during the accept phase.
+///
+/// Known limitation: the protocol is unauthenticated, so this guard is a
+/// speed bump, not a wall — a duplicate running the stock reconnect loop
+/// escalates its retry to `Rejoin` after the drop and can still displace
+/// the seated worker (which then rejoins and displaces it back). The
+/// federation stays *correct* under such flapping — every re-seat forces
+/// a dense refresh, so LBG copies remain coherent — it just burns uplink
+/// bytes and round faults. Authenticating rejoins (a per-session token
+/// issued in `Welcome`) needs a v3 frame layout; see ROADMAP.
+fn seat(
+    links: &mut [Box<dyn Link>],
+    session: Session,
+    plan: Option<&Arc<FaultPlan>>,
+    ledger: &mut CommLedger,
+    rejoins_seen: &mut [usize],
+    t: usize,
+) {
+    let (w, link, last) = match session {
+        Session::Fresh { worker, .. } => {
+            eprintln!(
+                "net: rejecting mid-run Hello for already-seated worker {worker} \
+                 (round {t}); returning workers must send Rejoin"
+            );
+            return;
+        }
+        Session::Rejoin { worker, last_round, link } => (worker, link, last_round),
+    };
+    if w >= links.len() {
+        eprintln!("net: dropping session for out-of-range worker {w}");
+        return;
+    }
+    links[w] = match plan {
+        Some(p) => Box::new(ChaosLink::wrap(link, w, Arc::clone(p))),
+        None => link,
+    };
+    ledger.record_rejoin(w);
+    rejoins_seen[w] += 1;
+    match last {
+        Some(r) => {
+            eprintln!("net: worker {w} rejoined before round {t} (last served round {r})")
+        }
+        None => eprintln!("net: worker {w} rejoined before round {t} (never served)"),
     }
 }
 
 /// Drive a full federated run over handshaken links (`links[w]` is worker
-/// w's connection). Each round: broadcast theta to the sampled
-/// participants, collect their updates under `round_deadline`, aggregate
-/// the arrived subset in participant order (absent workers are logged,
-/// fault-counted, and skipped — see the module docs), evaluate on the
-/// cadence. Sends `Shutdown` on every link when training completes.
-///
-/// Bit-identical to the sequential engine per seed and fault plan: same
-/// sampling, same aggregation order, same f32/f64 arithmetic — the wire
-/// codec preserves exact bit patterns.
-///
-/// A worker that times out mid-frame on a stream link leaves that link
-/// desynchronized; its subsequent reads keep failing and it simply stays
-/// absent for the rest of the run while the others proceed.
-pub fn run_server_rounds(
+/// w's connection), as [`run_server_rounds`], plus mid-run elasticity:
+/// sessions queued by the acceptor are re-seated at every round boundary
+/// (`Rejoin` only — a mid-run duplicate `Hello` is rejected rather than
+/// allowed to unseat a live worker), a `Rejoin` is counted in the
+/// ledger, and — when a fault plan schedules
+/// a sever's recovery — the round start waits (bounded by
+/// `ElasticOpts::rejoin_wait`) for the returning worker, so a chaos run's
+/// participation schedule is deterministic even though reconnect timing
+/// is not. The rejoined worker resumes with the next theta broadcast.
+#[allow(clippy::too_many_arguments)]
+pub fn run_server_rounds_elastic(
     links: &mut [Box<dyn Link>],
     eval_trainer: &mut dyn LocalTrainer,
     theta0: Vec<f32>,
@@ -211,6 +571,7 @@ pub fn run_server_rounds(
     cfg: &FlConfig,
     round_deadline: Duration,
     name: &str,
+    elastic: Option<&ElasticOpts>,
 ) -> Result<(RunSeries, CommLedger, Vec<f32>)> {
     let k = links.len();
     ensure!(k > 0, "no worker links");
@@ -219,9 +580,56 @@ pub fn run_server_rounds(
     let dim = server.theta.len();
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
+    let mut rejoins_seen = vec![0usize; k];
 
     for t in 0..cfg.rounds {
         let start = Instant::now();
+
+        // Elasticity: re-seat whatever the accept thread has queued, then
+        // wait (bounded) for rejoins the fault plan schedules by this
+        // round — a planned recovery must not race the round clock.
+        if let Some(el) = elastic {
+            while let Some(s) = el.acceptor.try_session() {
+                seat(links, s, el.plan.as_ref(), &mut ledger, &mut rejoins_seen, t);
+            }
+            if let Some(plan) = el.plan.as_deref() {
+                let wait_until = Instant::now() + el.rejoin_wait;
+                loop {
+                    let missing: Vec<usize> = (0..k)
+                        .filter(|&w| rejoins_seen[w] < plan.rejoins_due(w, t))
+                        .collect();
+                    if missing.is_empty() {
+                        break;
+                    }
+                    match el.acceptor.recv_deadline(wait_until) {
+                        Some(s) => seat(
+                            links,
+                            s,
+                            el.plan.as_ref(),
+                            &mut ledger,
+                            &mut rejoins_seen,
+                            t,
+                        ),
+                        None => {
+                            eprintln!(
+                                "net: proceeding without scheduled rejoin(s) of \
+                                 workers {missing:?} (round {t})"
+                            );
+                            // Stop waiting for these spans for good: mark
+                            // them satisfied so a permanently-dead worker
+                            // costs one rejoin_wait, not one per remaining
+                            // round. (A genuine late rejoin still re-seats
+                            // through the opportunistic drain above.)
+                            for w in missing {
+                                rejoins_seen[w] = plan.rejoins_due(w, t);
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
         let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
 
         // Downlink: broadcast the global model to this round's sampled
@@ -230,7 +638,7 @@ pub fn run_server_rounds(
         // (or an injected fault) eats them downstream. A link whose send
         // fails outright (peer's socket is gone) marks its worker absent
         // for the round instead of killing the run — the crashed worker
-        // stays absent while the others proceed.
+        // stays absent (free to rejoin later) while the others proceed.
         let frame = Frame::Round { t: t as u64, theta: server.theta.clone() };
         let encoded = frame.to_bytes();
         let mut reachable = Vec::with_capacity(planned.len());
@@ -248,15 +656,46 @@ pub fn run_server_rounds(
             }
         }
 
-        // Uplink: collect one update per reachable worker before the
-        // deadline; whoever fails is absent for this round. One connection
-        // per worker, so receiving in participant order is already the
-        // deterministic aggregation order.
+        // Uplink: collect every reachable worker's update concurrently —
+        // one scoped thread per worker against the shared absolute
+        // deadline, so a straggler early in participant order cannot
+        // starve the workers after it. The reduction below still runs in
+        // participant order (reachable is sorted), which keeps
+        // aggregation bit-identical to the sequential engine.
         let deadline = Instant::now() + round_deadline;
-        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(reachable.len());
+        let mut order = Vec::with_capacity(reachable.len());
+        let mut tasks: Vec<(usize, &mut Box<dyn Link>)> =
+            Vec::with_capacity(reachable.len());
+        {
+            let mut wanted = vec![false; k];
+            for &w in &reachable {
+                wanted[w] = true;
+            }
+            for (w, link) in links.iter_mut().enumerate() {
+                if wanted[w] {
+                    order.push(w);
+                    tasks.push((w, link));
+                }
+            }
+        }
+        let mut collected: Vec<Option<CollectOutcome>> = Vec::new();
+        collected.resize_with(tasks.len(), || None);
+        thread::scope(|scope| {
+            for ((w, link), out) in tasks.into_iter().zip(collected.iter_mut()) {
+                scope.spawn(move || {
+                    *out = Some(collect_update(link.as_mut(), w, t, deadline));
+                });
+            }
+        });
+
+        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(order.len());
         let mut train_loss_sum = 0f64;
-        for &w in &reachable {
-            match collect_update(links[w].as_mut(), w, t, deadline, &mut ledger) {
+        for (w, out) in order.into_iter().zip(collected) {
+            let out = out.expect("collector thread fills every slot");
+            if out.stale_bytes > 0 {
+                ledger.record_wire_up(out.stale_bytes);
+            }
+            match out.result {
                 Ok((msg, bytes)) => {
                     ledger.record_wire_up(bytes);
                     ledger.record(w, msg.cost, msg.is_scalar());
@@ -302,7 +741,56 @@ pub fn run_server_rounds(
     for link in links.iter_mut() {
         let _ = link.send(&Frame::Shutdown);
     }
+    if let Some(el) = elastic {
+        el.acceptor.stop();
+        // Grace drain: a worker that rejoined as the run ended still gets
+        // its Shutdown instead of hanging on a silent link.
+        let grace = Instant::now() + SHUTDOWN_GRACE;
+        while let Some(session) = el.acceptor.recv_deadline(grace) {
+            let mut link = match session {
+                Session::Fresh { link, .. } | Session::Rejoin { link, .. } => link,
+            };
+            let _ = link.send(&Frame::Shutdown);
+        }
+    }
     Ok((series, ledger, server.theta))
+}
+
+/// Drive a full federated run over handshaken links (`links[w]` is worker
+/// w's connection). Each round: broadcast theta to the sampled
+/// participants, collect their updates concurrently under `round_deadline`
+/// (each worker gets the full deadline on its own collector thread),
+/// aggregate the arrived subset in participant order (absent workers are
+/// logged, fault-counted, and skipped — see the module docs), evaluate on
+/// the cadence. Sends `Shutdown` on every link when training completes.
+///
+/// Bit-identical to the sequential engine per seed and fault plan: same
+/// sampling, same aggregation order, same f32/f64 arithmetic — the wire
+/// codec preserves exact bit patterns.
+///
+/// A worker that times out mid-frame on a stream link leaves that link
+/// desynchronized; its subsequent reads keep failing and it stays absent —
+/// for the rest of the run with this fixed-links entry point, or until it
+/// rejoins through [`run_server_rounds_elastic`]'s session registry.
+pub fn run_server_rounds(
+    links: &mut [Box<dyn Link>],
+    eval_trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    weights: Vec<f32>,
+    cfg: &FlConfig,
+    round_deadline: Duration,
+    name: &str,
+) -> Result<(RunSeries, CommLedger, Vec<f32>)> {
+    run_server_rounds_elastic(
+        links,
+        eval_trainer,
+        theta0,
+        weights,
+        cfg,
+        round_deadline,
+        name,
+        None,
+    )
 }
 
 #[cfg(test)]
@@ -328,7 +816,8 @@ mod tests {
     /// Table-driven handshake coverage: the happy path plus every way a
     /// peer can get the handshake wrong — bad dimension, out-of-range id,
     /// a control frame instead of `Hello`, an `Update` sent before any
-    /// `Welcome` was issued, and silence until the timeout expires.
+    /// `Welcome` was issued, silence until the timeout expires, and a
+    /// `Rejoin` on an entry point that requires a fresh session.
     #[test]
     fn handshake_table() {
         struct Case {
@@ -376,6 +865,12 @@ mod tests {
                 want: Err("expected Hello"),
             },
             Case {
+                name: "rejoin where a fresh session is required",
+                send: vec![Frame::Rejoin { worker: 1, last_round: 0 }],
+                timeout: None,
+                want: Err("Rejoin"),
+            },
+            Case {
                 name: "silence until the timeout expires",
                 send: vec![],
                 timeout: Some(Duration::from_millis(25)),
@@ -414,6 +909,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The elastic handshake accepts a v2 `Rejoin`, replies `Welcome`, and
+    /// reports the worker's last served round; out-of-range rejoins are
+    /// rejected like out-of-range hellos.
+    #[test]
+    fn handshake_accept_seats_rejoins() {
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Rejoin { worker: 2, last_round: 5 }).unwrap();
+        match handshake_accept(&mut srv, 4, 10, &cfg()).unwrap() {
+            HandshakeOutcome::Rejoin { worker, last_round } => {
+                assert_eq!(worker, 2);
+                assert_eq!(last_round, Some(5));
+            }
+            HandshakeOutcome::Fresh { .. } => panic!("rejoin handshook as fresh"),
+        }
+        assert!(matches!(wrk.recv().unwrap(), Frame::Welcome { .. }));
+
+        // A worker that never served a round rejoins with the sentinel.
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Rejoin { worker: 0, last_round: wire::REJOIN_NEVER_SERVED })
+            .unwrap();
+        match handshake_accept(&mut srv, 4, 10, &cfg()).unwrap() {
+            HandshakeOutcome::Rejoin { last_round, .. } => assert_eq!(last_round, None),
+            HandshakeOutcome::Fresh { .. } => panic!("rejoin handshook as fresh"),
+        }
+
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Rejoin { worker: 9, last_round: 1 }).unwrap();
+        let err = handshake_accept(&mut srv, 4, 10, &cfg())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
     }
 
     /// A worker whose socket is already dead at broadcast time is marked
@@ -497,30 +1025,81 @@ mod tests {
     #[test]
     fn stale_updates_are_discarded_mid_round() {
         let (mut srv, mut wrk) = MemLink::pair();
-        let mut ledger = CommLedger::new(4);
         wrk.send(&Frame::Update(scalar_update(1, 0))).unwrap();
         wrk.send(&Frame::Update(scalar_update(1, 2))).unwrap();
         let deadline = Instant::now() + Duration::from_secs(5);
-        let (msg, bytes) = collect_update(&mut srv, 1, 2, deadline, &mut ledger).unwrap();
+        let out = collect_update(&mut srv, 1, 2, deadline);
+        let (msg, bytes) = out.result.unwrap();
         assert_eq!(msg.round, 2);
         assert_eq!(bytes, Frame::Update(scalar_update(1, 2)).wire_bytes() as u64);
         // The discarded stale frame still crossed the link: its measured
-        // bytes are in the ledger (the caller records the kept frame's).
+        // bytes are reported so the caller can ledger them.
         assert_eq!(
-            ledger.wire_up_bytes,
+            out.stale_bytes,
             Frame::Update(scalar_update(1, 0)).wire_bytes() as u64
         );
         // A frame from the future is a protocol violation, not discardable.
         let (mut srv, mut wrk) = MemLink::pair();
         wrk.send(&Frame::Update(scalar_update(1, 7))).unwrap();
-        let err = collect_update(&mut srv, 1, 2, deadline, &mut ledger)
+        let err = collect_update(&mut srv, 1, 2, deadline)
+            .result
             .unwrap_err()
             .to_string();
         assert!(err.contains("answered round 7"), "{err}");
         // A wrong-worker update is rejected outright.
         let (mut srv, mut wrk) = MemLink::pair();
         wrk.send(&Frame::Update(scalar_update(3, 2))).unwrap();
-        assert!(collect_update(&mut srv, 1, 2, deadline, &mut ledger).is_err());
+        assert!(collect_update(&mut srv, 1, 2, deadline).result.is_err());
+    }
+
+    /// The deadline semantics pinned (satellite bugfix): an update already
+    /// queued when the deadline expires is accepted — it crossed the link
+    /// in time — while an absent update is declared missing promptly (the
+    /// drain never blocks open-endedly), and a stale-frame flood past the
+    /// deadline is cut off after a bounded number of drains.
+    #[test]
+    fn deadline_is_enforced_uniformly_with_a_bounded_queue_drain() {
+        // (a) Queued before expiry, read after: accepted.
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Update(scalar_update(1, 4))).unwrap();
+        let expired = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let out = collect_update(&mut srv, 1, 4, expired);
+        assert_eq!(out.result.unwrap().0.round, 4, "queued update must be drained");
+
+        // (b) Nothing queued at expiry: absent, quickly and with the
+        // deadline named — not a 1 ms-per-retry crawl.
+        let (mut srv, _wrk) = MemLink::pair();
+        let begin = Instant::now();
+        let err = collect_update(&mut srv, 1, 4, begin)
+            .result
+            .unwrap_err()
+            .to_string();
+        assert!(
+            begin.elapsed() < Duration::from_secs(1),
+            "post-deadline drain blocked: {:?}",
+            begin.elapsed()
+        );
+        // The first drain read times out on the empty queue.
+        assert!(err.contains("recv"), "{err}");
+
+        // (c) A peer flooding stale frames past the deadline is bounded:
+        // more queued stale frames than the drain budget, then the valid
+        // update — the collector must give up instead of reading on.
+        let (mut srv, mut wrk) = MemLink::pair();
+        for _ in 0..=MAX_DEADLINE_DRAINS {
+            wrk.send(&Frame::Update(scalar_update(1, 0))).unwrap();
+        }
+        wrk.send(&Frame::Update(scalar_update(1, 4))).unwrap();
+        let out = collect_update(&mut srv, 1, 4, Instant::now());
+        let err = out.result.unwrap_err().to_string();
+        assert!(err.contains("deadline"), "{err}");
+        // The drained stale bytes are still reported for the ledger.
+        assert_eq!(
+            out.stale_bytes,
+            u64::from(MAX_DEADLINE_DRAINS)
+                * Frame::Update(scalar_update(1, 0)).wire_bytes() as u64
+        );
     }
 
     #[test]
@@ -532,5 +1111,123 @@ mod tests {
         let (mut srv, mut wrk) = MemLink::pair();
         wrk.send(&Frame::Hello { worker: 0, dim: 4 }).unwrap();
         assert!(handshake_one(&mut srv, 1, 4, &cfg).is_err());
+    }
+
+    /// The tentpole accept-loop property: a connection that handshakes
+    /// slowly (here: never) ties up only its own handshake thread, so an
+    /// honest worker arriving after it still handshakes promptly instead
+    /// of waiting out the silent peer's timeout.
+    #[test]
+    fn silent_connection_does_not_stall_parallel_handshakes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let acceptor =
+            Acceptor::spawn(listener, 1, 4, &cfg(), Duration::from_secs(30)).unwrap();
+        // A silent socket connects first and says nothing.
+        let silent = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let worker = std::thread::spawn(move || {
+            let mut link = TcpLink::new(TcpStream::connect(addr).unwrap()).unwrap();
+            link.send(&Frame::Hello { worker: 0, dim: 4 }).unwrap();
+            match link.recv().unwrap() {
+                Frame::Welcome { dim, .. } => assert_eq!(dim, 4),
+                other => panic!("wrong reply {other:?}"),
+            }
+        });
+        let begin = Instant::now();
+        let links = acceptor.wait_for_fleet(1).unwrap();
+        assert_eq!(links.len(), 1);
+        assert!(
+            begin.elapsed() < Duration::from_secs(10),
+            "silent socket stalled the fleet for {:?}",
+            begin.elapsed()
+        );
+        worker.join().unwrap();
+        drop(silent);
+    }
+
+    /// Elastic re-seating over the session registry: a worker whose link
+    /// is dead at run start is re-seated from a queued `Rejoin` session at
+    /// the first round boundary, its rejoin is counted, and it serves
+    /// every round.
+    #[test]
+    fn queued_rejoin_session_is_reseated_and_counted() {
+        use crate::compress::Identity;
+        use crate::coordinator::trainer::MockTrainer;
+        use crate::coordinator::worker::Worker;
+
+        let dim = 4;
+        let run_cfg = FlConfig { rounds: 3, tau: 1, ..cfg() };
+
+        // A scripted client thread serving rounds over a MemLink.
+        fn spawn_client(
+            mut wrk: MemLink,
+            id: usize,
+            dim: usize,
+        ) -> std::thread::JoinHandle<Result<usize>> {
+            std::thread::spawn(move || -> Result<usize> {
+                let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 1);
+                let mut worker = Worker::new(id, Box::new(Identity));
+                let policy = ThresholdPolicy::fixed(0.25);
+                let mut served = 0usize;
+                loop {
+                    match wrk.recv()? {
+                        Frame::Shutdown => break,
+                        Frame::Round { t, theta } => {
+                            let (loss, mut grad) =
+                                trainer.local_round(id, &theta, 1, 0.1)?;
+                            let msg =
+                                worker.process_round(t as usize, &mut grad, loss, &policy);
+                            wrk.send(&Frame::Update(msg))?;
+                            served += 1;
+                        }
+                        other => anyhow::bail!("unexpected frame {other:?}"),
+                    }
+                }
+                Ok(served)
+            })
+        }
+
+        let (srv0, wrk0) = MemLink::pair();
+        let h0 = spawn_client(wrk0, 0, dim);
+        // Worker 1's original link is dead; its replacement arrives through
+        // the session registry before round 0.
+        let (srv1_dead, wrk1_dead) = MemLink::pair();
+        drop(wrk1_dead);
+        let (srv1, wrk1) = MemLink::pair();
+        let h1 = spawn_client(wrk1, 1, dim);
+        let (tx, rx) = mpsc::channel();
+        tx.send(Session::Rejoin {
+            worker: 1,
+            last_round: Some(7),
+            link: Box::new(srv1),
+        })
+        .unwrap();
+        let acceptor = Acceptor::from_channel(rx);
+        let elastic =
+            ElasticOpts { acceptor: &acceptor, plan: None, rejoin_wait: DEFAULT_REJOIN_WAIT };
+
+        let mut links: Vec<Box<dyn Link>> = vec![Box::new(srv0), Box::new(srv1_dead)];
+        let mut eval = MockTrainer::new(dim, 2, 0.2, 0.0, 1);
+        let (series, ledger, _theta) = run_server_rounds_elastic(
+            &mut links,
+            &mut eval,
+            vec![0.0; dim],
+            vec![0.5, 0.5],
+            &run_cfg,
+            Duration::from_secs(10),
+            "reseat",
+            Some(&elastic),
+        )
+        .unwrap();
+        assert_eq!(h0.join().unwrap().unwrap(), 3);
+        assert_eq!(h1.join().unwrap().unwrap(), 3);
+        assert_eq!(ledger.total_rejoins, 1);
+        assert_eq!(ledger.worker_rejoins(1), 1);
+        assert_eq!(ledger.total_faults, 0, "re-seated worker must not fault");
+        for r in &series.rounds {
+            assert_eq!(r.participants, 2);
+        }
+        assert!(ledger.consistent());
     }
 }

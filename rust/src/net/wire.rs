@@ -6,18 +6,39 @@
 //! frames). Hand-rolled on purpose: no serde, no external deps, and a
 //! byte-stable layout the tests can assert against.
 //!
-//! # Frame layout (protocol version 1; all integers little-endian)
+//! # Frame layout (protocol version 2; all integers little-endian)
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "FRLB" (FedRecycle Look-Back)
-//! 4       2     protocol version (u16) — this build speaks version 1
-//! 6       1     frame tag (Hello=1 Welcome=2 Round=3 Shutdown=4 Update=5)
+//! 4       2     protocol version (u16) — the lowest version that defines
+//!               the frame's tag (1 for the PR-2 frames, 2 for Rejoin);
+//!               this build accepts 1..=2 (see the version table below)
+//! 6       1     frame tag (Hello=1 Welcome=2 Round=3 Shutdown=4 Update=5
+//!               Rejoin=6)
 //! 7       1     reserved, must be 0 (room for flags in a later version)
 //! 8       4     payload length n (u32, capped at 1 GiB)
 //! 12      n     payload (tag-specific, see below)
 //! 12+n    4     FNV-1a-32 checksum over bytes [0, 12+n)
 //! ```
+//!
+//! # Version negotiation
+//!
+//! | peer version | accepted | notes |
+//! |--------------|----------|-------|
+//! | 1            | yes      | the PR-2 protocol: `Hello`..`Update` only; a v1 `Rejoin` tag is a decode error |
+//! | 2            | yes      | adds `Rejoin` (mid-run worker re-handshake) |
+//! | >= 3         | no       | rejected at the header, before any payload read |
+//!
+//! Negotiation is per *frame*, not per session, and compatibility is
+//! two-way by construction: the encoder stamps each frame with the
+//! **lowest** version that defines its tag ([`Frame::min_version`] — the
+//! PR-2 frames stay v1 on the wire), and the decoder accepts any version
+//! in [`MIN_PROTO_VERSION`]`..=`[`PROTO_VERSION`]. A v1 worker therefore
+//! handshakes (`Hello`) and serves rounds against a v2 server unchanged —
+//! every frame it receives is v1-stamped — it simply cannot rejoin after
+//! a dropped connection (`Rejoin` is v2-stamped, which a v1 decoder
+//! rejects).
 //!
 //! Payload encodings (`f32`/`f64` are IEEE-754 little-endian bit patterns,
 //! so a loopback round trip is *bit-identical* — the foundation of the
@@ -32,6 +53,10 @@
 //! * `Update`   — worker `u32`, round `u64`, train_loss `f64`, cost.floats
 //!   `u64`, cost.bits `u64`, then a [`Payload`]: tag `u8` (0 = scalar,
 //!   1 = full), then either rho `f32` or count `u64` + `count` f32s.
+//! * `Rejoin`   — worker id `u32`, last served round `u64`
+//!   ([`REJOIN_NEVER_SERVED`] if none) (client → server, protocol v2): a
+//!   returning worker asks to be re-seated mid-run instead of starting a
+//!   fresh session.
 //!
 //! Every decoder rejects wrong magic, unknown versions, nonzero reserved
 //! bytes, length mismatches, trailing bytes, and checksum failures — the
@@ -48,27 +73,46 @@ use crate::coordinator::messages::{Payload, WorkerMsg};
 
 /// Frame magic: "FRLB".
 pub const MAGIC: [u8; 4] = *b"FRLB";
-/// The protocol version this build encodes and accepts.
-pub const PROTO_VERSION: u16 = 1;
+/// The newest protocol version this build understands. Outbound frames
+/// carry [`Frame::min_version`], not this, so v1 peers stay served.
+pub const PROTO_VERSION: u16 = 2;
+/// The oldest protocol version this build still accepts. v1 peers speak
+/// the same frames minus [`Frame::Rejoin`]; see the module-level version
+/// table.
+pub const MIN_PROTO_VERSION: u16 = 1;
+/// `last_round` sentinel in [`Frame::Rejoin`]: the worker reconnected
+/// before it ever completed a round.
+pub const REJOIN_NEVER_SERVED: u64 = u64::MAX;
 /// Fixed frame-header length (magic + version + tag + reserved + length).
 pub const HEADER_LEN: usize = 12;
 /// Trailing checksum length.
 pub const CHECKSUM_LEN: usize = 4;
 /// Payload size cap: a frame larger than this is rejected before allocation.
 pub const MAX_PAYLOAD: usize = 1 << 30;
-/// Tight payload cap for the handshake phase: `Hello` (12 B) and `Welcome`
-/// (24 B) are the only legal frames then, so a pre-authentication peer
-/// cannot make the receiver allocate more than this (DoS guard; see
-/// [`Link::set_recv_limit`]).
+/// Tight payload cap for the handshake phase: `Hello` (12 B), `Rejoin`
+/// (12 B), and `Welcome` (24 B) are the only legal frames then, so a
+/// pre-authentication peer cannot make the receiver allocate more than
+/// this (DoS guard; see [`Link::set_recv_limit`]).
 ///
 /// [`Link::set_recv_limit`]: crate::net::Link::set_recv_limit
 pub const HANDSHAKE_MAX_PAYLOAD: usize = 64;
+
+/// The largest legal post-handshake frame payload for a `dim`-sized model:
+/// a full-gradient `Update` uplink or a theta `Round` downlink, with
+/// headroom for the fixed-size fields. Both protocol sides cap their
+/// session receives with this (see [`Link::set_recv_limit`]).
+///
+/// [`Link::set_recv_limit`]: crate::net::Link::set_recv_limit
+pub fn session_max_payload(dim: usize) -> usize {
+    64 + 4 * dim
+}
 
 const TAG_HELLO: u8 = 1;
 const TAG_WELCOME: u8 = 2;
 const TAG_ROUND: u8 = 3;
 const TAG_SHUTDOWN: u8 = 4;
 const TAG_UPDATE: u8 = 5;
+const TAG_REJOIN: u8 = 6;
 
 /// FNV-1a 32-bit hash. A single-byte change anywhere in the input is
 /// guaranteed to change the digest (xor then multiply by an odd prime is
@@ -301,6 +345,11 @@ pub enum Frame {
     Shutdown,
     /// Client → server uplink: one worker's round update.
     Update(WorkerMsg),
+    /// Client → server re-handshake (protocol v2): a returning worker asks
+    /// to be re-seated mid-run. `last_round` is the last round it served
+    /// ([`REJOIN_NEVER_SERVED`] if it never completed one); the server
+    /// replies `Welcome` and resumes the worker at the next broadcast.
+    Rejoin { worker: u32, last_round: u64 },
 }
 
 impl Frame {
@@ -311,6 +360,7 @@ impl Frame {
             Frame::Round { .. } => TAG_ROUND,
             Frame::Shutdown => TAG_SHUTDOWN,
             Frame::Update(_) => TAG_UPDATE,
+            Frame::Rejoin { .. } => TAG_REJOIN,
         }
     }
 
@@ -321,6 +371,18 @@ impl Frame {
             Frame::Round { theta, .. } => 8 + 8 + 4 * theta.len(),
             Frame::Shutdown => 0,
             Frame::Update(m) => m.encoded_len(),
+            Frame::Rejoin { .. } => 4 + 8,
+        }
+    }
+
+    /// The lowest protocol version that defines this frame's tag — what
+    /// the encoder stamps it with, so a frame is never rejected by a peer
+    /// old enough to otherwise understand it (two-way v1 compatibility;
+    /// see the module-level version table).
+    pub fn min_version(&self) -> u16 {
+        match self {
+            Frame::Rejoin { .. } => 2,
+            _ => 1,
         }
     }
 
@@ -344,7 +406,7 @@ impl Frame {
         assert!(n <= MAX_PAYLOAD, "frame payload {n} bytes exceeds MAX_PAYLOAD");
         let mut out = Vec::with_capacity(HEADER_LEN + n + CHECKSUM_LEN);
         out.extend_from_slice(&MAGIC);
-        out.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.min_version().to_le_bytes());
         out.push(self.tag());
         out.push(0); // reserved
         put_u32(&mut out, n as u32);
@@ -366,6 +428,10 @@ impl Frame {
             }
             Frame::Shutdown => {}
             Frame::Update(m) => m.encode(&mut out),
+            Frame::Rejoin { worker, last_round } => {
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *last_round);
+            }
         }
         debug_assert_eq!(out.len(), HEADER_LEN + n);
         let sum = fnv1a(&out);
@@ -383,8 +449,8 @@ impl Frame {
         ensure!(buf[0..4] == MAGIC, "bad frame magic {:02x?}", &buf[0..4]);
         let version = u16::from_le_bytes([buf[4], buf[5]]);
         ensure!(
-            version == PROTO_VERSION,
-            "protocol version {version} (this build speaks {PROTO_VERSION})"
+            (MIN_PROTO_VERSION..=PROTO_VERSION).contains(&version),
+            "protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})"
         );
         let tag = buf[6];
         ensure!(buf[7] == 0, "nonzero reserved byte {:#x}", buf[7]);
@@ -423,6 +489,12 @@ impl Frame {
             }
             TAG_SHUTDOWN => Frame::Shutdown,
             TAG_UPDATE => Frame::Update(WorkerMsg::decode(&mut r)?),
+            TAG_REJOIN => {
+                // Tag 6 did not exist in v1; a v1 peer claiming it is
+                // either corrupt or lying about its version.
+                ensure!(version >= 2, "Rejoin frame requires protocol v2, got v{version}");
+                Frame::Rejoin { worker: r.u32()?, last_round: r.u64()? }
+            }
             other => bail!("unknown frame tag {other}"),
         };
         r.done()?;
@@ -454,8 +526,8 @@ impl Frame {
         ensure!(header[0..4] == MAGIC, "bad frame magic {:02x?}", &header[0..4]);
         let version = u16::from_le_bytes([header[4], header[5]]);
         ensure!(
-            version == PROTO_VERSION,
-            "protocol version {version} (this build speaks {PROTO_VERSION})"
+            (MIN_PROTO_VERSION..=PROTO_VERSION).contains(&version),
+            "protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})"
         );
         let n = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
         ensure!(n <= cap, "payload length {n} exceeds receive limit {cap}");
@@ -512,6 +584,16 @@ mod tests {
         }
     }
 
+    /// Re-stamp a frame's version field and fix the checksum up, emulating
+    /// a peer that genuinely speaks `version`.
+    fn reversion(mut bytes: Vec<u8>, version: u16) -> Vec<u8> {
+        bytes[4..6].copy_from_slice(&version.to_le_bytes());
+        let body = bytes.len() - CHECKSUM_LEN;
+        let sum = fnv1a(&bytes[..body]);
+        bytes[body..].copy_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
     #[test]
     fn wire_bytes_matches_encoding_exactly() {
         let frames = [
@@ -521,6 +603,7 @@ mod tests {
             Frame::Shutdown,
             Frame::Update(scalar_msg(0.75)),
             Frame::Update(full_msg(vec![0.5; 7])),
+            Frame::Rejoin { worker: 3, last_round: 17 },
         ];
         for f in &frames {
             assert_eq!(f.to_bytes().len(), f.wire_bytes(), "{f:?}");
@@ -550,6 +633,73 @@ mod tests {
         assert!(matches!(
             Frame::from_bytes(&Frame::Shutdown.to_bytes()).unwrap(),
             Frame::Shutdown
+        ));
+        let rejoin = Frame::Rejoin { worker: 9, last_round: REJOIN_NEVER_SERVED };
+        match Frame::from_bytes(&rejoin.to_bytes()).unwrap() {
+            Frame::Rejoin { worker, last_round } => {
+                assert_eq!(worker, 9);
+                assert_eq!(last_round, REJOIN_NEVER_SERVED);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // Rejoin fits the pre-handshake receive cap: a reconnecting worker
+        // re-handshakes under the same DoS guard as a fresh one.
+        assert!(rejoin.to_bytes().len() <= HEADER_LEN + HANDSHAKE_MAX_PAYLOAD + CHECKSUM_LEN);
+    }
+
+    /// The version-negotiation table: PR-2 frames are *stamped* v1 on the
+    /// wire (so genuine v1 peers keep decoding everything a v2 server
+    /// sends them), `Rejoin` is stamped v2, a v1-stamped Rejoin is a
+    /// protocol violation, and future versions are rejected at the header
+    /// by both decode paths.
+    #[test]
+    fn version_negotiation_rules() {
+        // Outbound stamping: lowest version defining the tag.
+        for f in [
+            Frame::Hello { worker: 2, dim: 8 },
+            Frame::Welcome { dim: 8, tau: 1, eta: 0.1, delta: 0.2 },
+            Frame::Round { t: 0, theta: vec![0.0; 2] },
+            Frame::Shutdown,
+            Frame::Update(scalar_msg(0.5)),
+        ] {
+            assert_eq!(f.min_version(), 1, "{f:?}");
+            let bytes = f.to_bytes();
+            assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 1, "{f:?}");
+        }
+        let rejoin = Frame::Rejoin { worker: 2, last_round: 4 };
+        assert_eq!(rejoin.min_version(), 2);
+        let bytes = rejoin.to_bytes();
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 2);
+
+        // A v1-stamped Hello (identical to what a PR-2-era worker sends)
+        // is accepted by both decode paths — and so is a v2-stamped one
+        // from a hypothetical always-v2 encoder.
+        let v1_hello = Frame::Hello { worker: 2, dim: 8 }.to_bytes();
+        match Frame::from_bytes(&v1_hello).unwrap() {
+            Frame::Hello { worker, dim } => {
+                assert_eq!(worker, 2);
+                assert_eq!(dim, 8);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert!(matches!(
+            Frame::read_from(&mut std::io::Cursor::new(v1_hello.clone())).unwrap(),
+            Frame::Hello { .. }
+        ));
+        assert!(matches!(
+            Frame::from_bytes(&reversion(v1_hello, 2)),
+            Ok(Frame::Hello { .. })
+        ));
+        // A Rejoin stamped v1 is a protocol violation: the tag did not
+        // exist in v1.
+        let v1_rejoin =
+            reversion(Frame::Rejoin { worker: 2, last_round: 4 }.to_bytes(), 1);
+        let err = Frame::from_bytes(&v1_rejoin).unwrap_err().to_string();
+        assert!(err.contains("protocol v2"), "{err}");
+        // v2 Rejoin (this build's encoding) round-trips.
+        assert!(matches!(
+            Frame::from_bytes(&Frame::Rejoin { worker: 2, last_round: 4 }.to_bytes()),
+            Ok(Frame::Rejoin { worker: 2, last_round: 4 })
         ));
     }
 
@@ -707,12 +857,16 @@ mod tests {
     #[test]
     fn foreign_version_rejected() {
         let mut bytes = Frame::Shutdown.to_bytes();
-        bytes[4] = 2; // future protocol version
+        bytes[4] = 3; // future protocol version (this build speaks 1..=2)
         let err = Frame::from_bytes(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
         let err2 = Frame::read_from(&mut std::io::Cursor::new(bytes))
             .unwrap_err()
             .to_string();
         assert!(err2.contains("version"), "{err2}");
+        // Version 0 predates the protocol entirely.
+        let mut zero = Frame::Shutdown.to_bytes();
+        zero[4..6].copy_from_slice(&0u16.to_le_bytes());
+        assert!(Frame::from_bytes(&zero).is_err());
     }
 }

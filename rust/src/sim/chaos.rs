@@ -11,6 +11,13 @@
 //! the real wire decoder. Control-plane frames (handshake, shutdown) are
 //! never intercepted, so a chaos deployment always tears down cleanly.
 //!
+//! [`FaultKind::Sever`] goes further than the other kinds: at its span
+//! start the decorator *drops the real transport* (closing a TCP socket,
+//! so the peer sees EOF and reconnects through the elastic server's
+//! accept thread), and for the rest of the span it swallows broadcasts on
+//! whatever link the rejoin re-seats — which is what keeps the absence
+//! schedule deterministic even though reconnect timing is not.
+//!
 //! Cutting the round trip at the downlink is what keeps a faulted worker's
 //! state frozen for the round (trainer stream, codec residuals, LBG) —
 //! the invariant behind the bit-exact parity with a fault-restricted
@@ -52,6 +59,28 @@ pub struct ChaosLink {
     pending: Option<(u64, FaultKind)>,
 }
 
+/// Replacement transport for a severed connection: every operation fails.
+/// Swapping a link's innards for this drops the real transport, which for
+/// a `TcpLink` closes the socket — the peer sees EOF and its reconnect
+/// loop takes over.
+struct DeadLink;
+
+impl Link for DeadLink {
+    fn send_raw(&mut self, _bytes: &[u8]) -> Result<usize> {
+        anyhow::bail!("chaos: connection severed")
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        anyhow::bail!("chaos: connection severed")
+    }
+
+    fn set_recv_timeout(&mut self, _timeout: Option<Duration>) -> Result<()> {
+        Ok(())
+    }
+
+    fn set_recv_limit(&mut self, _max_payload: usize) {}
+}
+
 impl ChaosLink {
     pub fn wrap(inner: Box<dyn Link>, worker: usize, plan: Arc<FaultPlan>) -> Self {
         Self { inner, worker, plan, pending: None }
@@ -70,6 +99,9 @@ impl ChaosLink {
             }
             FaultKind::Disconnect => {
                 anyhow::anyhow!("chaos: connection to worker {w} reset (round {t})")
+            }
+            FaultKind::Sever => {
+                anyhow::anyhow!("chaos: connection to worker {w} severed (round {t})")
             }
             FaultKind::CorruptFrame => {
                 // Fabricate the frame the worker would plausibly have sent,
@@ -104,7 +136,16 @@ impl ChaosLink {
 impl Link for ChaosLink {
     fn send_raw(&mut self, bytes: &[u8]) -> Result<usize> {
         if let Some(t) = wire::peek_round(bytes) {
-            if let Some(kind) = self.plan.fault(self.worker, t as usize) {
+            if let Some(ev) = self.plan.fault_event(self.worker, t as usize) {
+                let kind = ev.kind;
+                // A sever tears the transport down for real — but only at
+                // its span start: a link re-seated by a mid-span rejoin
+                // must not be killed again (the worker reconnected early;
+                // the plan's absence schedule is enforced by swallowing
+                // below until the span ends).
+                if kind == FaultKind::Sever && t as usize == ev.from {
+                    self.inner = Box::new(DeadLink);
+                }
                 // Swallow the broadcast: the caller's accounting sees the
                 // bytes as sent, the peer never does.
                 self.pending = Some((t, kind));
@@ -197,6 +238,39 @@ mod tests {
         // Shutdown passes even though every round is inside the span.
         chaos.send(&Frame::Shutdown).unwrap();
         assert!(matches!(wrk.recv().unwrap(), Frame::Shutdown));
+    }
+
+    #[test]
+    fn sever_tears_down_the_transport_at_span_start_only() {
+        let (srv, mut wrk) = MemLink::pair();
+        let ev = FaultEvent { worker: 0, from: 1, until: 3, kind: FaultKind::Sever };
+        let mut chaos = ChaosLink::wrap(Box::new(srv), 0, plan(vec![ev]));
+        // Round 0 is clean.
+        chaos.send(&Frame::Round { t: 0, theta: vec![1.0] }).unwrap();
+        assert!(matches!(wrk.recv().unwrap(), Frame::Round { t: 0, .. }));
+        // Round 1 starts the span: the broadcast is swallowed AND the real
+        // transport dies — the peer sees a hangup, not silence.
+        chaos.send(&Frame::Round { t: 1, theta: vec![1.0] }).unwrap();
+        assert!(wrk.recv().is_err(), "severed peer still receiving");
+        let err = chaos.recv().unwrap_err().to_string();
+        assert!(err.contains("severed"), "{err}");
+        // The decorator's transport stays dead afterwards (the worker must
+        // come back through a fresh link, not this one).
+        assert!(chaos.recv().is_err());
+
+        // A link re-seated mid-span (fresh ChaosLink, same plan) swallows
+        // without killing: round 2 is still inside [1, 3).
+        let (srv2, mut wrk2) = MemLink::pair();
+        let ev = FaultEvent { worker: 0, from: 1, until: 3, kind: FaultKind::Sever };
+        let mut reseated = ChaosLink::wrap(Box::new(srv2), 0, plan(vec![ev]));
+        let encoded = Frame::Round { t: 2, theta: vec![1.0] }.to_bytes();
+        assert_eq!(reseated.send_raw(&encoded).unwrap(), encoded.len());
+        assert!(reseated.recv().is_err(), "swallowed round must be an absence");
+        // After the span the re-seated link flows normally.
+        reseated.send(&Frame::Round { t: 3, theta: vec![2.0] }).unwrap();
+        assert!(matches!(wrk2.recv().unwrap(), Frame::Round { t: 3, .. }));
+        wrk2.send(&Frame::Hello { worker: 0, dim: 1 }).unwrap();
+        assert!(matches!(reseated.recv().unwrap(), Frame::Hello { .. }));
     }
 
     #[test]

@@ -33,7 +33,8 @@
 //!     {"kind": "drop_uplink",   "worker": 2, "from": 2, "until": 4},
 //!     {"kind": "delay",         "worker": 1, "round": 5, "ms": 50},
 //!     {"kind": "disconnect",    "worker": 0, "from": 3, "until": 6},
-//!     {"kind": "corrupt_frame", "worker": 3, "round": 1}
+//!     {"kind": "corrupt_frame", "worker": 3, "round": 1},
+//!     {"kind": "sever",         "worker": 1, "from": 4, "until": 6}
 //!   ],
 //!   "profiles": [
 //!     {"worker": 0, "latency_us": 200, "bytes_per_sec": 1000000, "loss": 0.2}
@@ -80,6 +81,24 @@ pub enum FaultKind {
     /// The uplink frame arrives with a corrupted payload byte; the server
     /// must reject it through the wire codec's checksum and carry on.
     CorruptFrame,
+    /// The worker's *transport* is genuinely torn down at round `from`
+    /// (the server-side socket closes, so a TCP peer sees EOF) and the
+    /// worker is absent for `[from, until)`. Unlike [`Disconnect`], which
+    /// models reset-style errors on a link that silently heals, `Sever`
+    /// exercises the elastic recovery path end to end: the client's
+    /// reconnect loop re-handshakes with `Frame::Rejoin`, the server
+    /// re-seats the link, and the worker's first post-rejoin uplink is a
+    /// forced full refresh (the reconciliation that keeps both LBG copies
+    /// coherent). TCP deployments only — `MemLink` workers cannot
+    /// reconnect — and the worker must be *sampled* at round `from` for
+    /// the teardown to trigger (the chaos layer cuts on the downlink).
+    /// The in-memory engines model the same schedule by forcing the
+    /// worker's refresh at round `until` (see `FaultPlan::rejoins_at`),
+    /// which is what keeps a severed TCP run bit-identical to the
+    /// sequential reference.
+    ///
+    /// [`Disconnect`]: FaultKind::Disconnect
+    Sever,
 }
 
 impl FaultKind {
@@ -90,6 +109,7 @@ impl FaultKind {
             FaultKind::Delay { .. } => "delay",
             FaultKind::Disconnect => "disconnect",
             FaultKind::CorruptFrame => "corrupt_frame",
+            FaultKind::Sever => "sever",
         }
     }
 }
@@ -168,12 +188,37 @@ impl FaultPlan {
         Self::default()
     }
 
+    /// The first fault event scheduled for `(worker, round)`, if any.
+    pub fn fault_event(&self, worker: usize, round: usize) -> Option<&FaultEvent> {
+        self.events.iter().find(|e| e.hits(worker, round))
+    }
+
     /// The first fault scheduled for `(worker, round)`, if any.
     pub fn fault(&self, worker: usize, round: usize) -> Option<FaultKind> {
+        self.fault_event(worker, round).map(|e| e.kind)
+    }
+
+    /// Workers whose severed connection is scheduled to be restored at
+    /// round `t` (a [`FaultKind::Sever`] span `[from, until)` with
+    /// `until == t`). The round engines force these workers' next uplink
+    /// to be a full refresh and count a rejoin — the in-memory mirror of
+    /// the client-side reconnect reconciliation.
+    pub fn rejoins_at(&self, t: usize) -> impl Iterator<Item = usize> + '_ {
         self.events
             .iter()
-            .find(|e| e.hits(worker, round))
-            .map(|e| e.kind)
+            .filter(move |e| e.kind == FaultKind::Sever && e.until == t)
+            .map(|e| e.worker)
+    }
+
+    /// Number of sever spans for `worker` whose rejoin is due at or before
+    /// round `t` — what the elastic server compares against its observed
+    /// rejoin count when deciding whether a round start should wait for a
+    /// returning worker.
+    pub fn rejoins_due(&self, worker: usize, t: usize) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.worker == worker && e.kind == FaultKind::Sever && e.until <= t)
+            .count()
     }
 
     /// Is `worker` absent from `round` under this plan?
@@ -337,6 +382,7 @@ fn event_from_json(e: &Json) -> Result<FaultEvent> {
         },
         "disconnect" => FaultKind::Disconnect,
         "corrupt_frame" => FaultKind::CorruptFrame,
+        "sever" => FaultKind::Sever,
         other => anyhow::bail!("unknown fault kind `{other}`"),
     };
     Ok(FaultEvent { worker, from, until, kind })
@@ -398,6 +444,7 @@ mod tests {
                 FaultEvent { worker: 1, from: 5, until: 6, kind: FaultKind::Delay { ms: 50 } },
                 FaultEvent { worker: 0, from: 3, until: 6, kind: FaultKind::Disconnect },
                 FaultEvent { worker: 3, from: 1, until: 2, kind: FaultKind::CorruptFrame },
+                FaultEvent { worker: 2, from: 7, until: 9, kind: FaultKind::Sever },
             ],
             profiles: vec![WorkerProfile {
                 worker: 0,
@@ -437,6 +484,26 @@ mod tests {
         )
         .unwrap();
         assert!(FaultPlan::from_json(&empty_span).is_err());
+    }
+
+    #[test]
+    fn rejoins_at_reports_sever_span_ends_only() {
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![
+                FaultEvent { worker: 1, from: 2, until: 4, kind: FaultKind::Sever },
+                FaultEvent { worker: 3, from: 3, until: 4, kind: FaultKind::Sever },
+                // A plain disconnect heals silently: no rejoin scheduled.
+                FaultEvent { worker: 0, from: 2, until: 4, kind: FaultKind::Disconnect },
+            ],
+            profiles: Vec::new(),
+        };
+        assert_eq!(plan.rejoins_at(4).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(plan.rejoins_at(2).count(), 0);
+        assert_eq!(plan.rejoins_at(3).count(), 0);
+        // Severed rounds are ordinary absences for the round engines.
+        assert!(plan.absent(1, 2) && plan.absent(1, 3) && !plan.absent(1, 4));
+        assert_eq!(plan.fault_event(1, 2).unwrap().kind, FaultKind::Sever);
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! `sim` turns that system into one you can *torture reproducibly*:
 //!
 //! * [`fault`] — the [`FaultPlan`] DSL: per-worker, per-round events
-//!   (drop uplink, delay past the deadline, disconnect-and-rejoin,
-//!   corrupt frame) plus per-worker flaky-link profiles, loadable from
-//!   JSON (`--faults plan.json`), buildable from
-//!   [`testkit::scenarios`], or generated from a seed.
+//!   (drop uplink, delay past the deadline, silently-healing disconnect,
+//!   corrupt frame, and `sever` — a real transport teardown whose
+//!   recovery exercises the elastic server's `Rejoin` path end to end)
+//!   plus per-worker flaky-link profiles, loadable from JSON
+//!   (`--faults plan.json`), buildable from [`testkit::scenarios`], or
+//!   generated from a seed.
 //! * [`chaos`] — [`ChaosLink`], a [`Link`] decorator that replays a plan
 //!   against live links.
 //!

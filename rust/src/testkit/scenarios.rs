@@ -43,6 +43,22 @@ pub fn blackout(workers: &[usize], from: usize, until: usize) -> FaultPlan {
     }
 }
 
+/// One worker's connection is genuinely torn down at round `from` and the
+/// worker rejoins in time for round `until`: absent for `[from, until)`,
+/// reconnected through the elastic server's accept thread (`Rejoin`
+/// handshake), first post-rejoin uplink forced `Full`. The acceptance
+/// scenario of the elastic-recovery harness. TCP deployments only —
+/// `MemLink` workers cannot reconnect — and the worker must be sampled at
+/// round `from` (the teardown triggers on the downlink). Keep
+/// `until < rounds` so the rejoin happens inside the run.
+pub fn disconnect_then_rejoin(worker: usize, from: usize, until: usize) -> FaultPlan {
+    FaultPlan {
+        seed: 0,
+        events: vec![FaultEvent { worker, from, until, kind: FaultKind::Sever }],
+        profiles: Vec::new(),
+    }
+}
+
 /// One worker's uplink frame arrives corrupted in a single round.
 pub fn corrupt_uplink(worker: usize, round: usize) -> FaultPlan {
     FaultPlan {
@@ -130,6 +146,16 @@ mod tests {
             let absent: Vec<usize> = (0..3).filter(|&w| plan.absent(w, t)).collect();
             assert_eq!(absent, vec![t % 3], "round {t}");
         }
+    }
+
+    #[test]
+    fn disconnect_then_rejoin_severs_and_schedules_the_rejoin() {
+        let plan = disconnect_then_rejoin(1, 2, 4);
+        assert!(!plan.absent(1, 1));
+        assert!(plan.absent(1, 2) && plan.absent(1, 3));
+        assert!(!plan.absent(1, 4));
+        assert_eq!(plan.events[0].kind, FaultKind::Sever);
+        assert_eq!(plan.rejoins_at(4).collect::<Vec<_>>(), vec![1]);
     }
 
     #[test]

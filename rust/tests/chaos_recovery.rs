@@ -101,11 +101,16 @@ fn assert_matches_reference(seq: &FlOutcome, net: &(RunSeries, CommLedger, Vec<f
     assert_eq!(seq.ledger.full_msgs, ledger.full_msgs);
     assert_eq!(seq.ledger.total_down_floats(), ledger.total_down_floats());
     assert_eq!(seq.ledger.total_faults, ledger.total_faults, "fault totals diverged");
+    assert_eq!(
+        seq.ledger.total_rejoins, ledger.total_rejoins,
+        "rejoin totals diverged"
+    );
     assert!(ledger.consistent(), "deployment ledger inconsistent");
     assert!(seq.ledger.consistent(), "sequential ledger inconsistent");
     for w in 0..K {
         assert_eq!(seq.ledger.worker_floats(w), ledger.worker_floats(w), "worker {w}");
         assert_eq!(seq.ledger.worker_faults(w), ledger.worker_faults(w), "worker {w}");
+        assert_eq!(seq.ledger.worker_rejoins(w), ledger.worker_rejoins(w), "worker {w}");
         assert_eq!(
             seq.ledger.worker_down_floats(w),
             ledger.worker_down_floats(w),
@@ -165,6 +170,59 @@ fn acceptance_drop_one_of_four_over_tcp() {
     let clean = deployed_tcp(&cfg(0.4, 1.0, seed, None), &|| Box::new(Identity));
     assert!(a.1.wire_up_bytes < clean.1.wire_up_bytes);
     assert_eq!(a.1.wire_down_bytes, clean.1.wire_down_bytes);
+}
+
+/// The elastic-recovery acceptance scenario (tentpole + satellite test):
+/// worker 2's connection is *genuinely severed* in round 2 — the server
+/// side tears the socket down, the client's reconnect loop re-handshakes
+/// with a protocol-v2 `Rejoin` — and the worker is re-seated in time for
+/// round 4. The run must (a) complete with worker 2 absent exactly in
+/// rounds 2–3, (b) count exactly one rejoin for it, (c) match the
+/// fault-restricted sequential reference bit-for-bit (which models the
+/// same schedule via `FaultPlan::rejoins_at`), and (d) send a forced
+/// `Full` as the worker's first post-rejoin uplink — LBG coherence is
+/// re-established by a dense refresh, visible in round 4's uplink float
+/// volume (and pinned exactly at the client level in `net::client`'s
+/// unit tests).
+#[test]
+fn severed_worker_rejoins_and_matches_the_sequential_reference() {
+    let seed = 3 + base_seed();
+    let plan = scenarios::disconnect_then_rejoin(2, 2, 4);
+    // delta = 0.9: permissive enough that steady-state rounds go scalar,
+    // so a spurious (or missing) forced refresh is visible in full_sends.
+    let c = cfg(0.9, 1.0, seed, Some(plan));
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let net = deployed_tcp(&c, &|| Box::new(Identity));
+    assert_matches_reference(&seq, &net);
+
+    let (series, ledger, _theta) = &net;
+    assert_eq!(ledger.total_rejoins, 1, "exactly one rejoin expected");
+    assert_eq!(ledger.worker_rejoins(2), 1);
+    assert_eq!(ledger.worker_faults(2), 2, "absent in rounds 2 and 3");
+    for (t, r) in series.rounds.iter().enumerate() {
+        if t == 2 || t == 3 {
+            assert_eq!(r.participants, K - 1, "round {t} should miss worker 2");
+            assert_eq!(r.faults, 1, "round {t}");
+        } else {
+            assert_eq!(r.participants, K, "round {t} should be full");
+            assert_eq!(r.faults, 0, "round {t}");
+        }
+    }
+    // (d) The first post-rejoin uplink is a forced full refresh. The
+    // client-level pin lives in `net::client`'s unit tests (a rejoined
+    // session must uplink `Full` even when the policy says scalar); here
+    // the deployment-level evidence is round 4's uplink volume: at least
+    // one dense gradient (worker 2's forced refresh) rode along with the
+    // other workers' messages. floats_up is cumulative, so the round-4
+    // delta is exactly this round's uplink floats.
+    let round4_floats = series.rounds[4].floats_up - series.rounds[3].floats_up;
+    assert!(
+        round4_floats >= DIM as u64 + (K as u64 - 1),
+        "round 4 uplink carried {round4_floats} floats — no room for worker 2's \
+         forced dense refresh"
+    );
+    assert!(series.rounds[4].full_sends >= 1, "no refresh at all in round 4");
+    assert!(ledger.consistent());
 }
 
 /// Property (a)+(b)+(c) over a sweep of seeded random plans on the
