@@ -26,6 +26,12 @@ pub struct CountingAlloc;
 
 // SAFETY: delegates every operation to `System`; the counters are plain
 // relaxed atomics with no allocation of their own.
+//
+// The one unsafe block this repo permits: implementing `GlobalAlloc`
+// requires it, and the impl adds nothing beyond counter bumps around
+// `System` calls. Any other `unsafe` anywhere in the tree is a lint
+// violation — justify a new one here or don't write it.
+// lint: allow(unsafe_code, "GlobalAlloc is an unsafe trait; this impl only wraps System with relaxed counters")
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);

@@ -74,11 +74,11 @@ impl Compressor for Atomo {
     // rounds are not on the scalar steady-state path, so the workspace is
     // unused here.
     fn compress(&mut self, grad: &mut Vec<f32>, _ws: &mut Workspace) -> Cost {
-        match self.segments.clone() {
+        match &self.segments {
             None => self.compress_slice(grad.as_mut_slice()),
             Some(segs) => {
                 let mut total = Cost { floats: 0, bits: 0 };
-                for (off, size) in segs {
+                for &(off, size) in segs {
                     let c = self.compress_slice(&mut grad[off..off + size]);
                     total.floats += c.floats;
                     total.bits += c.bits;

@@ -14,7 +14,7 @@ pub struct ErrorFeedback<C: Compressor> {
 impl<C: Compressor> ErrorFeedback<C> {
     /// Wrap `inner` with an (initially empty) residual memory.
     pub fn new(inner: C) -> Self {
-        Self { inner, residual: Vec::new() }
+        Self { inner, residual: Vec::new() } // lint: allow(alloc_discipline, "cold constructor: the empty residual never reallocates after first resize")
     }
 
     /// The accumulated not-yet-transmitted residual.

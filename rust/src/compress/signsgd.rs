@@ -20,6 +20,7 @@ impl Compressor for SignSgd {
             return Cost { floats: 0, bits: 0 };
         }
         let scale =
+            // lint: allow(reduction_order, "signSGD scale: single-worker mean-|x| in slice order, same on every engine")
             (grad.iter().map(|x| x.abs() as f64).sum::<f64>() / m as f64) as f32;
         for x in grad.iter_mut() {
             *x = if *x >= 0.0 { scale } else { -scale };

@@ -336,7 +336,7 @@ pub fn run_fl(
 
     let dim = server.theta.len();
     for t in 0..cfg.rounds {
-        let start = std::time::Instant::now();
+        let start = std::time::Instant::now(); // lint: allow(determinism, "round wall-clock metric: observability only, never fed into aggregation")
         // Scheduled rejoins: a severed connection restored at round t
         // forces the worker's next uplink to be a full refresh — the
         // in-memory mirror of the client-side reconnect reconciliation
@@ -379,6 +379,7 @@ pub fn run_fl(
                 )
             })?;
             for (loss, msg) in results {
+                // lint: allow(reduction_order, "participant-order f64 loss sum, mirrored exactly by every engine")
                 train_loss_sum += loss;
                 ledger.record(msg.worker, msg.cost, msg.is_scalar());
                 msgs.push(msg);
@@ -388,6 +389,7 @@ pub fn run_fl(
                 let (loss, mut grad) = timers.time("local_sgd", || {
                     trainer.local_round(w, &server.theta, cfg.tau, cfg.eta)
                 })?;
+                // lint: allow(reduction_order, "participant-order f64 loss sum, mirrored exactly by every engine")
                 train_loss_sum += loss;
                 let msg = timers.time("lbgm_uplink", || {
                     workers[w].process_round(t, &mut grad, loss, &cfg.policy)

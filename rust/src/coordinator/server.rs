@@ -59,7 +59,7 @@ impl Server {
     /// in the same round (one message per worker).
     pub fn apply(&mut self, msgs: &[WorkerMsg]) -> Result<()> {
         // Renormalize omega over the participating set.
-        let wsum: f32 = msgs.iter().map(|m| self.weights[m.worker]).sum();
+        let wsum: f32 = msgs.iter().map(|m| self.weights[m.worker]).sum(); // lint: allow(reduction_order, "k-term omega renormalization in msgs order; msgs are pre-sorted by worker")
         anyhow::ensure!(wsum > 0.0, "no participating workers");
         let Server { theta, lbgs, weights, eta, ws } = self;
         let eta = *eta;

@@ -198,6 +198,7 @@ impl PjrtTrainer {
 }
 
 impl LocalTrainer for PjrtTrainer {
+    // lint: allow(reduction_order, "per-step f64 loss average in fixed tau order; never crosses workers")
     fn local_round(
         &mut self,
         worker: usize,
@@ -223,6 +224,7 @@ impl LocalTrainer for PjrtTrainer {
         Ok((loss_sum / tau as f64, acc))
     }
 
+    // lint: allow(reduction_order, "eval-metric sums in fixed batch order; diagnostics, not aggregation")
     fn eval(&mut self, theta: &[f32]) -> Result<(f64, f64)> {
         match &self.source {
             Source::Image { ds, .. } => {
@@ -347,6 +349,7 @@ impl MockTrainer {
     }
 
     /// Global loss at theta (exact).
+    // lint: allow(reduction_order, "closed-form quadratic loss in fixed worker/coordinate order")
     pub fn global_loss(&self, theta: &[f32]) -> f64 {
         self.weights
             .iter()
@@ -366,6 +369,7 @@ impl MockTrainer {
 /// The quadratic-federation local round, shared by [`MockTrainer`] and its
 /// detached per-worker shards so the sequential and threaded engines run
 /// the exact same arithmetic (and hence stay bit-identical per seed).
+// lint: allow(reduction_order, "fixed coordinate-order f64 loss accumulation, shared verbatim by both engines")
 fn quadratic_local_round(
     opt: &[f32],
     rng: &mut Rng,

@@ -137,6 +137,7 @@ where
         // Deterministic aggregation order regardless of thread scheduling.
         msgs.sort_by_key(|m| m.worker);
         let train_loss = train_loss_or_carry(
+            // lint: allow(reduction_order, "worker-sorted f64 loss sum, the engines' shared canonical order")
             msgs.iter().map(|m| m.train_loss).sum::<f64>(),
             msgs.len(),
             &series,

@@ -38,7 +38,7 @@ impl LbgStore {
                 buf.clear();
                 buf.extend_from_slice(grad);
             }
-            slot => *slot = Some(grad.to_vec()),
+            slot => *slot = Some(grad.to_vec()), // lint: allow(alloc_discipline, "one-time slot fill on a worker's first refresh; steady state reuses the buffer")
         }
         self.refreshes[worker] += 1;
     }
@@ -53,7 +53,7 @@ impl LbgStore {
         self.slots
             .iter()
             .map(|s| s.as_ref().map(|v| v.len() * 4).unwrap_or(0))
-            .sum()
+            .sum() // lint: allow(reduction_order, "integer byte count: usize addition is associative")
     }
 
     /// Structural equality with another store (the state-coherence invariant).

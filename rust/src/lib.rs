@@ -87,6 +87,7 @@ pub mod data;
 pub mod figures;
 pub mod lbgm;
 pub mod linalg;
+pub mod lint;
 #[allow(missing_docs)]
 pub mod metrics;
 #[allow(missing_docs)]

@@ -1,0 +1,203 @@
+//! `lint: allow(rule, "reason")` annotation parsing and scoping.
+//!
+//! An annotation is an ordinary `//` comment whose trimmed text starts
+//! with `lint:`. Two placements are recognized:
+//!
+//! * **Trailing** — after code on the same line: covers that line only.
+//! * **Standalone** — a comment-only line: covers the next code line
+//!   plus the full statement or item it begins (so one annotation above
+//!   a `fn` covers the whole body; above a `{` it covers the block).
+//!
+//! The reason string is mandatory and must be non-empty: an exception
+//! without a recorded justification is itself a violation. Doc comments
+//! never parse as annotations (their extra marker character is kept in
+//! the comment text), so rule documentation can quote the syntax freely.
+
+use crate::lint::lexer::{extent_end, Line};
+
+/// A parsed, well-formed `lint: allow` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// Rule id the annotation suppresses.
+    pub rule: String,
+    /// Human-readable justification (always non-empty).
+    pub reason: String,
+    /// First covered source line (1-based).
+    pub start: usize,
+    /// Last covered source line (1-based).
+    pub end: usize,
+}
+
+/// A malformed annotation, reported as a violation by the rule engine.
+#[derive(Debug, Clone)]
+pub struct AnnotError {
+    /// 1-based line of the broken comment.
+    pub line: usize,
+    /// What is wrong with it.
+    pub message: String,
+}
+
+/// Extract every annotation (and every malformed attempt) from `lines`.
+pub fn collect(lines: &[Line]) -> (Vec<Allow>, Vec<AnnotError>) {
+    let mut allows = Vec::new();
+    let mut errors = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let text = line.comment.trim();
+        let Some(rest) = text.strip_prefix("lint:") else {
+            continue;
+        };
+        match parse_allow(rest) {
+            Ok((rule, reason)) => {
+                let (start, end) = coverage(lines, idx);
+                allows.push(Allow { line: idx + 1, rule, reason, start, end });
+            }
+            Err(message) => errors.push(AnnotError { line: idx + 1, message }),
+        }
+    }
+    (allows, errors)
+}
+
+fn parse_allow(rest: &str) -> Result<(String, String), String> {
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Err("expected `lint: allow(rule, \"reason\")`".to_string());
+    };
+    let rest = rest.trim_start();
+    let rule: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if rule.is_empty() {
+        return Err("missing rule name in `lint: allow(...)`".to_string());
+    }
+    let rest = rest[rule.len()..].trim_start();
+    let Some(rest) = rest.strip_prefix(',') else {
+        return Err(format!(
+            "allow({rule}): missing `, \"reason\"` — every exception must record why it is sound"
+        ));
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('"') else {
+        return Err(format!("allow({rule}): reason must be a double-quoted string"));
+    };
+    let Some(q) = rest.find('"') else {
+        return Err(format!("allow({rule}): unterminated reason string"));
+    };
+    let reason = rest[..q].trim().to_string();
+    if reason.is_empty() {
+        return Err(format!(
+            "allow({rule}): empty reason — say why the exception is sound"
+        ));
+    }
+    let tail = rest[q + 1..].trim_start();
+    let Some(tail) = tail.strip_prefix(')') else {
+        return Err(format!("allow({rule}): expected `)` after the reason string"));
+    };
+    if !tail.trim().is_empty() {
+        return Err(format!("allow({rule}): trailing text after `lint: allow(...)`"));
+    }
+    Ok((rule, reason))
+}
+
+/// Covered line range (1-based, inclusive) for the annotation at `idx`.
+fn coverage(lines: &[Line], idx: usize) -> (usize, usize) {
+    if !lines[idx].code.trim().is_empty() {
+        // Trailing annotation: its own line only.
+        return (idx + 1, idx + 1);
+    }
+    // Standalone: skip blank/comment-only and attribute lines, then
+    // cover the statement or item that follows.
+    let mut j = idx + 1;
+    while j < lines.len() {
+        let code = lines[j].code.trim();
+        if code.is_empty() || code.starts_with("#[") {
+            j += 1;
+        } else {
+            break;
+        }
+    }
+    if j >= lines.len() {
+        // Nothing follows: covers nothing, surfaces as an unused allow.
+        return (idx + 1, idx + 1);
+    }
+    (j + 1, extent_end(lines, j) + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::strip;
+
+    #[test]
+    fn trailing_allow_covers_its_line_only() {
+        let src = "bad();\nworse(); // lint: allow(determinism, \"pinned by tests\")\n";
+        let (allows, errors) = collect(&strip(src));
+        assert!(errors.is_empty());
+        assert_eq!(allows.len(), 1);
+        assert_eq!((allows[0].start, allows[0].end), (2, 2));
+        assert_eq!(allows[0].rule, "determinism");
+        assert_eq!(allows[0].reason, "pinned by tests");
+    }
+
+    #[test]
+    fn standalone_allow_covers_following_item() {
+        let src = "\
+// lint: allow(panic_freedom, \"all indices length-checked\")
+fn decode(
+    buf: &[u8],
+) -> u8 {
+    buf[0]
+}
+after();
+";
+        let (allows, errors) = collect(&strip(src));
+        assert!(errors.is_empty());
+        assert_eq!((allows[0].start, allows[0].end), (2, 6));
+    }
+
+    #[test]
+    fn standalone_allow_skips_attributes() {
+        let src = "\
+// lint: allow(unsafe_code, \"delegates to System\")
+#[inline]
+fn f() {
+    body();
+}
+";
+        let (allows, _) = collect(&strip(src));
+        assert_eq!((allows[0].start, allows[0].end), (3, 5));
+    }
+
+    #[test]
+    fn missing_reason_is_an_error() {
+        let src = "x(); // lint: allow(determinism)\n";
+        let (allows, errors) = collect(&strip(src));
+        assert!(allows.is_empty());
+        assert_eq!(errors.len(), 1);
+        assert!(errors[0].message.contains("reason"));
+    }
+
+    #[test]
+    fn empty_reason_is_an_error() {
+        let src = "x(); // lint: allow(determinism, \"  \")\n";
+        let (_, errors) = collect(&strip(src));
+        assert_eq!(errors.len(), 1);
+    }
+
+    #[test]
+    fn garbage_after_allow_is_an_error() {
+        let src = "x(); // lint: allow(determinism, \"why\") and more\n";
+        let (_, errors) = collect(&strip(src));
+        assert_eq!(errors.len(), 1);
+    }
+
+    #[test]
+    fn doc_comments_never_parse_as_annotations() {
+        let src = "/// lint: allow(determinism, \"doc example\")\nfn f() {}\n";
+        let (allows, errors) = collect(&strip(src));
+        assert!(allows.is_empty());
+        assert!(errors.is_empty());
+    }
+}

@@ -1,0 +1,356 @@
+//! Lightweight Rust source lexer for the `fedlint` pass.
+//!
+//! `fedlint` does not parse Rust. It classifies every character of a
+//! source file as *code*, *comment text*, or *literal body* — exactly
+//! enough to run substring rules over real code without false positives
+//! from prose or string contents. The classifier is a character state
+//! machine that understands line comments (doc comments included),
+//! nested block comments, string literals with escapes (and `\`-newline
+//! continuations), byte strings, raw strings of any hash arity, and char
+//! literals (disambiguated from lifetimes by lookahead).
+//!
+//! On top of the cleaned lines it derives `#[cfg(test)]` / `#[test]`
+//! *test regions* — the attribute through the end of the item it
+//! annotates — so rules can skip test code, plus a shared *extent*
+//! helper used by the annotation layer to scope a standalone
+//! `lint: allow` comment to the statement or item that follows it.
+
+/// One source line split into its code and comment parts.
+///
+/// String and char-literal *bodies* are blanked to spaces in `code` (the
+/// delimiters remain), so substring rules never match inside literals.
+/// `comment` holds the text after `//` (or inside a block comment) with
+/// the comment markers stripped — a doc comment's extra `/` or `!` is
+/// kept, which is what lets the annotation parser ignore doc text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Line {
+    /// Code text with literal bodies blanked.
+    pub code: String,
+    /// Comment text carried by the line (empty when none).
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Split `source` into [`Line`]s, classifying every character.
+pub fn strip(source: &str) -> Vec<Line> {
+    let chars: Vec<char> = source.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if let Some((len, hashes)) = raw_str_open(&chars, i) {
+                    code.extend(chars[i..i + len].iter());
+                    state = State::RawStr(hashes);
+                    i += len;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'b'
+                    && chars.get(i + 1) == Some(&'"')
+                    && !prev_is_ident(&chars, i)
+                {
+                    code.push('b');
+                    code.push('"');
+                    state = State::Str;
+                    i += 2;
+                } else if c == '\'' {
+                    i = consume_char_or_lifetime(&chars, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    match chars.get(i + 1) {
+                        // `\`-newline continuation: let the main loop see
+                        // the newline so line numbers stay exact.
+                        Some('\n') | None => i += 1,
+                        Some(_) => {
+                            code.push(' ');
+                            i += 2;
+                        }
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment });
+    }
+    lines
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && {
+        let p = chars[i - 1];
+        p.is_alphanumeric() || p == '_'
+    }
+}
+
+/// Match `r"`, `r#"`, `br"`, ... at `i`; returns (consumed length,
+/// hash count). Raw identifiers (`r#fn`) don't match (no quote).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, u32)> {
+    if prev_is_ident(chars, i) {
+        return None;
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(i + 1 + k) == Some(&'#'))
+}
+
+/// At a `'` in code position `i`: consume a char literal (body blanked)
+/// or a bare lifetime tick; returns the next index.
+fn consume_char_or_lifetime(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: scan to the closing quote.
+        code.push('\'');
+        let mut j = i + 1;
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            code.push(' ');
+            j += if chars[j] == '\\' { 2 } else { 1 };
+        }
+        if chars.get(j) == Some(&'\'') {
+            code.push('\'');
+            j + 1
+        } else {
+            j
+        }
+    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+        // One-char literal like 'a' (blanked so '{' or '}' in a char
+        // literal can't confuse brace matching).
+        code.push('\'');
+        code.push(' ');
+        code.push('\'');
+        i + 3
+    } else {
+        // Lifetime: keep the tick and move on.
+        code.push('\'');
+        i + 1
+    }
+}
+
+/// Per-line mask: `true` for lines inside a `#[cfg(test)]` or `#[test]`
+/// region (the attribute through the end of the item it annotates).
+pub fn test_region_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") || lines[i].code.contains("#[test]") {
+            let end = extent_end(lines, i);
+            for m in mask.iter_mut().take(end + 1).skip(i) {
+                *m = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Last line (0-based) of the statement or item starting at line
+/// `start`: the line where the first `{`-opened block closes again, or —
+/// before any block opens — the line carrying a `;` at depth zero or a
+/// `}` closing an enclosing block. Returns the final line when the file
+/// ends first.
+pub fn extent_end(lines: &[Line], start: usize) -> usize {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for (j, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                ';' if !opened && depth == 0 => return j,
+                _ => {}
+            }
+            if depth < 0 || (opened && depth == 0) {
+                return j;
+            }
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        strip(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_are_blanked_but_delimited() {
+        let c = codes("let x = \"HashMap inside\";\n");
+        assert_eq!(c.len(), 1);
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].starts_with("let x = \""));
+        assert!(c[0].ends_with("\";"));
+    }
+
+    #[test]
+    fn comments_are_captured_not_code() {
+        let lines = strip("foo(); // trailing HashMap note\n");
+        assert!(!lines[0].code.contains("HashMap"));
+        assert_eq!(lines[0].comment.trim(), "trailing HashMap note");
+    }
+
+    #[test]
+    fn doc_comment_text_keeps_marker_prefix() {
+        let lines = strip("/// lint: allow(x, \"y\")\n");
+        assert!(lines[0].comment.starts_with('/'));
+        assert!(lines[0].code.trim().is_empty());
+    }
+
+    #[test]
+    fn raw_strings_span_lines() {
+        let src = "let s = r#\"line one .unwrap()\nline two HashMap\"#;\nnext();\n";
+        let c = codes(src);
+        assert_eq!(c.len(), 3);
+        assert!(!c[0].contains(".unwrap()"));
+        assert!(!c[1].contains("HashMap"));
+        assert_eq!(c[2], "next();");
+    }
+
+    #[test]
+    fn escapes_and_continuations_keep_line_count() {
+        let src = "let s = \"a\\\"b\";\nlet t = \"c\\\nd\";\ndone();\n";
+        let c = codes(src);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[2], "done();");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let c = codes("let a: Vec<&'static str> = f('{', b'}');\n");
+        // Both brace char literals are blanked; the lifetime tick stays.
+        assert!(!c[0].contains('{'));
+        assert!(!c[0].contains('}'));
+        assert!(c[0].contains("'static"));
+    }
+
+    #[test]
+    fn nested_block_comments_end_correctly() {
+        let c = codes("/* outer /* inner */ still comment */ code();\n");
+        assert_eq!(c[0].trim(), "code();");
+    }
+
+    #[test]
+    fn test_region_covers_trailing_mod() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n";
+        let lines = strip(src);
+        let mask = test_region_mask(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true]);
+    }
+
+    #[test]
+    fn test_region_on_use_statement_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn real() {}\n";
+        let mask = test_region_mask(&strip(src));
+        assert_eq!(mask, vec![true, true, false]);
+    }
+
+    #[test]
+    fn extent_spans_multiline_fn_signatures() {
+        let src = "fn f(\n    a: usize,\n) -> usize {\n    a\n}\nnext();\n";
+        let lines = strip(src);
+        assert_eq!(extent_end(&lines, 0), 4);
+    }
+}

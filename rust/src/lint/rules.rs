@@ -1,0 +1,528 @@
+//! The `fedlint` rule engine: rule ids, path scopes, token heuristics,
+//! and the per-file check.
+//!
+//! Each rule is a set of substring/token heuristics run over *cleaned*
+//! code lines (comments and literal bodies removed by the lexer), scoped
+//! to the path prefixes where its invariant is load-bearing. The rules
+//! are deliberately narrow: they exist to front-run the runtime suites
+//! (`golden_trace`, `engine_parity`, `net_loopback`, the zero-alloc
+//! bench gate), not to re-implement clippy. A hit is either fixed or
+//! carries a `lint: allow(rule, "reason")` annotation; an annotation
+//! that suppresses nothing is itself a violation, so stale exceptions
+//! cannot accumulate.
+
+use crate::lint::annot::{self, Allow};
+use crate::lint::lexer::{self, Line};
+
+/// One rule hit: file, 1-based line, rule id, and what to do about it.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Repo-relative path, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id (one of [`RULE_NAMES`], or [`ANNOTATION`]).
+    pub rule: &'static str,
+    /// Human-oriented description of the hit.
+    pub message: String,
+}
+
+/// Rule id: no wall clocks, hash-order containers, or ad-hoc RNG on
+/// aggregation paths — timing goes through the deadline seams,
+/// randomness through `util::rng`.
+pub const DETERMINISM: &str = "determinism";
+/// Rule id: no raw float reductions outside `linalg::vec_ops`, whose
+/// kernels pin the bit-exact lane order.
+pub const REDUCTION_ORDER: &str = "reduction_order";
+/// Rule id: no panics or unchecked indexing in frame-handling code —
+/// a malformed or hostile peer must surface as a protocol error.
+pub const PANIC_FREEDOM: &str = "panic_freedom";
+/// Rule id: no heap allocation in the Workspace-threaded hot paths
+/// (statically complements the runtime 0-allocs/op bench gate).
+pub const ALLOC_DISCIPLINE: &str = "alloc_discipline";
+/// Rule id: `unsafe` is denied repo-wide; the one sanctioned exception
+/// (the counting allocator) carries an inline allow.
+pub const UNSAFE_CODE: &str = "unsafe_code";
+/// Pseudo-rule id for malformed, unknown, or unused annotations.
+pub const ANNOTATION: &str = "annotation";
+
+/// Every real rule id, in reporting order.
+pub const RULE_NAMES: &[&str] = &[
+    DETERMINISM,
+    REDUCTION_ORDER,
+    PANIC_FREEDOM,
+    ALLOC_DISCIPLINE,
+    UNSAFE_CODE,
+];
+
+/// Aggregation paths where scheduling, hashing, or clock nondeterminism
+/// would desync the golden traces.
+const DETERMINISM_SCOPE: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/lbgm/",
+    "rust/src/compress/",
+    "rust/src/sim/",
+    "rust/src/net/",
+];
+
+/// Same blast radius as [`DETERMINISM_SCOPE`]: a stray float reduction
+/// anywhere on these paths changes theta bit-for-bit. `linalg` itself is
+/// excluded — it is where the pinned kernels live.
+const REDUCTION_SCOPE: &[&str] = DETERMINISM_SCOPE;
+
+/// Frame-handling code that faces the network: a panic here is a
+/// remotely triggerable crash of the fleet.
+const PANIC_SCOPE: &[&str] = &[
+    "rust/src/net/wire.rs",
+    "rust/src/net/server.rs",
+    "rust/src/net/client.rs",
+];
+
+/// Workspace-threaded hot paths with a zero-alloc steady-state claim.
+const ALLOC_SCOPE: &[&str] = &[
+    "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/worker.rs",
+    "rust/src/lbgm/",
+    "rust/src/compress/",
+    "rust/src/linalg/vec_ops.rs",
+    "rust/src/linalg/workspace.rs",
+];
+
+const DETERMINISM_TOKENS: &[&str] = &[
+    "HashMap",
+    "HashSet",
+    "RandomState",
+    "DefaultHasher",
+    "Instant::now",
+    "SystemTime",
+    "thread_rng",
+    "from_entropy",
+    "StdRng",
+    "SmallRng",
+    "getrandom",
+];
+
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+const PANIC_ASSERTS: &[&str] = &["assert!(", "assert_eq!(", "assert_ne!("];
+
+const ALLOC_TOKENS: &[&str] = &["Vec::new()", ".to_vec()", ".clone()"];
+
+fn in_scope(rel_path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|p| rel_path.starts_with(p))
+}
+
+/// Float-accumulation heuristics. Integer reductions are exempted by
+/// explicit type ascription (`: usize`, `.sum::<u64>()`, ...); `+=` is
+/// only flagged when the line carries a float marker, which keeps
+/// integer counters out while catching `loss_sum += x as f64` loops.
+fn reduction_hit(code: &str) -> Option<&'static str> {
+    if code.contains(".fold(") {
+        return Some("`.fold(..)`");
+    }
+    if code.contains(".sum::<f") {
+        return Some("float-typed `.sum::<f..>()`");
+    }
+    if code.contains(".sum()") {
+        let int_ascribed = [": usize", ": u8", ": u16", ": u32", ": u64", ": i32", ": i64"]
+            .iter()
+            .any(|t| code.contains(t));
+        if !int_ascribed {
+            return Some("untyped `.sum()`");
+        }
+    }
+    if code.contains("+=") {
+        let floaty = [" as f32", " as f64", ".powi(", "f32::", "f64::", "sum +="]
+            .iter()
+            .any(|t| code.contains(t));
+        if floaty {
+            return Some("`+=` float accumulation");
+        }
+    }
+    None
+}
+
+/// `true` when `code` contains `word` delimited by non-identifier chars.
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    code.match_indices(word).any(|(p, _)| {
+        let before_ok = p == 0 || {
+            let b = bytes[p - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let after = p + word.len();
+        let after_ok = after >= bytes.len() || {
+            let b = bytes[after];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        before_ok && after_ok
+    })
+}
+
+/// `assert!` family with a word boundary before it, so the side-effect
+/// free `debug_assert*` forms stay legal.
+fn has_hard_assert(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    PANIC_ASSERTS.iter().any(|pat| {
+        code.match_indices(pat).any(|(p, _)| {
+            p == 0 || {
+                let b = bytes[p - 1];
+                !(b.is_ascii_alphanumeric() || b == b'_')
+            }
+        })
+    })
+}
+
+/// `expr[..]`-style direct indexing: `[` immediately preceded by an
+/// identifier char, `)`, `]`, or `?`. Attribute (`#[`, `#![`) and macro
+/// (`vec![`) brackets don't match, nor do slice/array types.
+fn has_indexing(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    bytes.iter().enumerate().any(|(p, &b)| {
+        b == b'[' && p > 0 && {
+            let prev = bytes[p - 1];
+            prev.is_ascii_alphanumeric()
+                || prev == b'_'
+                || prev == b')'
+                || prev == b']'
+                || prev == b'?'
+        }
+    })
+}
+
+/// Report `message` at `line_no` unless a matching allow covers it (in
+/// which case the allow is marked used).
+fn emit(
+    rel_path: &str,
+    allows: &[Allow],
+    used: &mut [bool],
+    violations: &mut Vec<Violation>,
+    line_no: usize,
+    rule: &'static str,
+    message: String,
+) {
+    for (i, a) in allows.iter().enumerate() {
+        if a.rule == rule && a.start <= line_no && line_no <= a.end {
+            used[i] = true;
+            return;
+        }
+    }
+    violations.push(Violation { file: rel_path.to_string(), line: line_no, rule, message });
+}
+
+/// Run every rule over one cleaned file. Returns the violations plus the
+/// number of honored (used) allow annotations.
+pub fn check(rel_path: &str, lines: &[Line]) -> (Vec<Violation>, usize) {
+    let mask = lexer::test_region_mask(lines);
+    let (allows, annot_errors) = annot::collect(lines);
+    let mut used = vec![false; allows.len()];
+    let mut violations: Vec<Violation> = annot_errors
+        .into_iter()
+        .map(|e| Violation {
+            file: rel_path.to_string(),
+            line: e.line,
+            rule: ANNOTATION,
+            message: e.message,
+        })
+        .collect();
+    for (i, a) in allows.iter().enumerate() {
+        if !RULE_NAMES.contains(&a.rule.as_str()) {
+            used[i] = true; // don't also report it as unused
+            violations.push(Violation {
+                file: rel_path.to_string(),
+                line: a.line,
+                rule: ANNOTATION,
+                message: format!(
+                    "unknown rule `{}` in lint allow (known: {})",
+                    a.rule,
+                    RULE_NAMES.join(", ")
+                ),
+            });
+        }
+    }
+
+    for (idx, line) in lines.iter().enumerate() {
+        let line_no = idx + 1;
+        let code = line.code.as_str();
+        if !mask[idx] {
+            if in_scope(rel_path, DETERMINISM_SCOPE) {
+                for t in DETERMINISM_TOKENS {
+                    if code.contains(t) {
+                        emit(
+                            rel_path,
+                            &allows,
+                            &mut used,
+                            &mut violations,
+                            line_no,
+                            DETERMINISM,
+                            format!(
+                                "nondeterministic construct `{t}` on an aggregation path — \
+                                 route timing through the deadline seams and randomness \
+                                 through util::rng, or annotate why ordering is unaffected"
+                            ),
+                        );
+                    }
+                }
+            }
+            if in_scope(rel_path, REDUCTION_SCOPE) {
+                if let Some(what) = reduction_hit(code) {
+                    emit(
+                        rel_path,
+                        &allows,
+                        &mut used,
+                        &mut violations,
+                        line_no,
+                        REDUCTION_ORDER,
+                        format!(
+                            "float accumulation ({what}) outside linalg::vec_ops — \
+                             reduction order must stay bit-pinned; use the kernels or \
+                             annotate with the ordering argument"
+                        ),
+                    );
+                }
+            }
+            if in_scope(rel_path, PANIC_SCOPE) {
+                for t in PANIC_TOKENS {
+                    if code.contains(t) {
+                        emit(
+                            rel_path,
+                            &allows,
+                            &mut used,
+                            &mut violations,
+                            line_no,
+                            PANIC_FREEDOM,
+                            format!(
+                                "`{t}` in frame-handling code — a malformed or hostile \
+                                 peer must produce a protocol error, not a crash"
+                            ),
+                        );
+                    }
+                }
+                if has_hard_assert(code) {
+                    emit(
+                        rel_path,
+                        &allows,
+                        &mut used,
+                        &mut violations,
+                        line_no,
+                        PANIC_FREEDOM,
+                        "release-mode assert in frame-handling code — return an error or \
+                         downgrade to debug_assert"
+                            .to_string(),
+                    );
+                }
+                if has_indexing(code) {
+                    emit(
+                        rel_path,
+                        &allows,
+                        &mut used,
+                        &mut violations,
+                        line_no,
+                        PANIC_FREEDOM,
+                        "direct indexing in frame-handling code — use get()/bounds-checked \
+                         access, or annotate the length proof"
+                            .to_string(),
+                    );
+                }
+            }
+            if in_scope(rel_path, ALLOC_SCOPE) {
+                for t in ALLOC_TOKENS {
+                    if code.contains(t) {
+                        emit(
+                            rel_path,
+                            &allows,
+                            &mut used,
+                            &mut violations,
+                            line_no,
+                            ALLOC_DISCIPLINE,
+                            format!(
+                                "`{t}` in a Workspace-threaded hot path — lease scratch \
+                                 from the Workspace arena, or annotate why this is off \
+                                 the steady-state path"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        // `unsafe` is denied everywhere, test code included.
+        if has_word(code, "unsafe") {
+            emit(
+                rel_path,
+                &allows,
+                &mut used,
+                &mut violations,
+                line_no,
+                UNSAFE_CODE,
+                "`unsafe` is denied repo-wide; the counting allocator in \
+                 rust/src/bench/alloc.rs is the single sanctioned exception"
+                    .to_string(),
+            );
+        }
+    }
+
+    for (i, a) in allows.iter().enumerate() {
+        if !used[i] {
+            violations.push(Violation {
+                file: rel_path.to_string(),
+                line: a.line,
+                rule: ANNOTATION,
+                message: format!(
+                    "unused lint allow for `{}` — it suppresses nothing; remove it",
+                    a.rule
+                ),
+            });
+        }
+    }
+    violations.sort_by_key(|v| v.line);
+    let honored = used.iter().filter(|u| **u).count();
+    (violations, honored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::strip;
+
+    fn lint(path: &str, src: &str) -> Vec<Violation> {
+        check(path, &strip(src)).0
+    }
+
+    const DET_PATH: &str = "rust/src/coordinator/round.rs";
+    const NET_PATH: &str = "rust/src/net/wire.rs";
+    const ALLOC_PATH: &str = "rust/src/lbgm/store.rs";
+
+    #[test]
+    fn determinism_fires_quiets_and_scopes() {
+        let bad = "use std::collections::HashMap;\n";
+        let v = lint(DET_PATH, bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, DETERMINISM);
+        assert_eq!(v[0].line, 1);
+        assert!(lint(DET_PATH, "use std::collections::BTreeMap;\n").is_empty());
+        let annotated =
+            "use std::collections::HashMap; // lint: allow(determinism, \"never iterated\")\n";
+        assert!(lint(DET_PATH, annotated).is_empty());
+        // Out of scope: the figure harnesses may hash and clock freely.
+        assert!(lint("rust/src/figures/common.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn determinism_catches_clocks() {
+        let v = lint(DET_PATH, "let t0 = Instant::now();\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, DETERMINISM);
+    }
+
+    #[test]
+    fn reduction_order_heuristics() {
+        let v = lint(DET_PATH, "let s: f32 = xs.iter().sum();\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, REDUCTION_ORDER);
+        assert_eq!(lint(DET_PATH, "let s = xs.iter().sum::<f64>();\n").len(), 1);
+        assert_eq!(lint(DET_PATH, "let s = xs.iter().fold(0.0, f);\n").len(), 1);
+        assert_eq!(lint(DET_PATH, "loss_sum += x;\n").len(), 1);
+        assert_eq!(lint(DET_PATH, "acc += x as f64;\n").len(), 1);
+        // Integer reductions and counters stay legal.
+        assert!(lint(DET_PATH, "let n: usize = xs.iter().map(f).sum();\n").is_empty());
+        assert!(lint(DET_PATH, "let n = xs.iter().sum::<u64>();\n").is_empty());
+        assert!(lint(DET_PATH, "count += 1;\n").is_empty());
+        // linalg is the kernel home, not in scope.
+        assert!(lint("rust/src/linalg/vec_ops.rs", "acc += x as f64;\n").is_empty());
+    }
+
+    #[test]
+    fn panic_freedom_tokens_and_indexing() {
+        assert_eq!(lint(NET_PATH, "let x = v.pop().unwrap();\n").len(), 1);
+        assert_eq!(lint(NET_PATH, "let x = v.first().expect(\"x\");\n").len(), 1);
+        assert_eq!(lint(NET_PATH, "assert!(ok);\n").len(), 1);
+        assert_eq!(lint(NET_PATH, "let b = buf[0];\n").len(), 1);
+        assert_eq!(lint(NET_PATH, "let b = take(1)?[0];\n").len(), 1);
+        assert_eq!(lint(NET_PATH, "let s = &buf[4..8];\n").len(), 1);
+        // Not indexing: attributes, macros, types, array literals.
+        assert!(lint(NET_PATH, "#[derive(Debug)]\n").is_empty());
+        assert!(lint(NET_PATH, "let v = vec![0u8; 4];\n").is_empty());
+        assert!(lint(NET_PATH, "fn f(b: &mut [u8]) {}\n").is_empty());
+        assert!(lint(NET_PATH, "let t = [0u8; 8];\n").is_empty());
+        // debug_assert is the sanctioned form.
+        assert!(lint(NET_PATH, "debug_assert_eq!(a, b);\n").is_empty());
+        // Out of scope: panics in the figure harness are fine.
+        assert!(lint("rust/src/figures/common.rs", "x.unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn panic_freedom_skips_test_regions() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(lint(NET_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn alloc_discipline_fires_and_quiets() {
+        assert_eq!(lint(ALLOC_PATH, "let v = g.to_vec();\n").len(), 1);
+        assert_eq!(lint(ALLOC_PATH, "let v: Vec<f32> = Vec::new();\n").len(), 1);
+        assert_eq!(lint(ALLOC_PATH, "let v = other.clone();\n").len(), 1);
+        assert!(lint(ALLOC_PATH, "buf.extend_from_slice(g);\n").is_empty());
+        // Trainers and figures are not hot paths.
+        assert!(lint("rust/src/coordinator/trainer.rs", "let v = g.to_vec();\n").is_empty());
+    }
+
+    #[test]
+    fn unsafe_fires_everywhere_even_in_tests() {
+        let word = ["un", "safe"].concat(); // avoid a literal token here
+        let in_test = format!("#[cfg(test)]\nmod tests {{\n    {word} fn t() {{}}\n}}\n");
+        let v = lint("rust/src/figures/common.rs", &in_test);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, UNSAFE_CODE);
+        // ...but not as a substring of a longer identifier.
+        let ident = format!("let {word}_mode = 1;\n");
+        assert!(lint("rust/src/figures/common.rs", &ident).is_empty());
+    }
+
+    #[test]
+    fn standalone_allow_covers_a_whole_fn() {
+        let src = "\
+// lint: allow(panic_freedom, \"every index is length-checked above\")
+fn decode(buf: &[u8]) -> u8 {
+    let b = buf[0];
+    buf[1] + b
+}
+";
+        assert!(lint(NET_PATH, src).is_empty());
+        // Removing the annotation resurfaces both hits.
+        let stripped = src.lines().skip(1).collect::<Vec<_>>().join("\n");
+        assert_eq!(lint(NET_PATH, &stripped).len(), 2);
+    }
+
+    #[test]
+    fn unused_allow_is_a_violation() {
+        let src = "safe_code(); // lint: allow(determinism, \"nothing here\")\n";
+        let v = lint(DET_PATH, src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, ANNOTATION);
+        assert!(v[0].message.contains("unused"));
+    }
+
+    #[test]
+    fn unknown_rule_and_missing_reason_are_violations() {
+        let v = lint(DET_PATH, "x(); // lint: allow(speling, \"oops\")\n");
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("unknown rule"));
+        let v = lint(DET_PATH, "use std::collections::HashMap; // lint: allow(determinism)\n");
+        // The malformed allow suppresses nothing: both it and the
+        // underlying hit are reported.
+        assert_eq!(v.len(), 2, "{v:?}");
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_fire() {
+        let src = "let msg = \"HashMap .unwrap() unsafe\"; // HashMap in prose\n";
+        assert!(lint(NET_PATH, src).is_empty());
+    }
+}

@@ -1,0 +1,76 @@
+//! Deterministic source-tree walker for `fedlint`.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Directories scanned, relative to the repo root. `rust/tests` is test
+/// code wholesale (integration suites may unwrap freely) and is not
+/// walked; `benches` and `examples` are — they ship as release targets
+/// and the `unsafe` rule must see them.
+pub const ROOTS: &[&str] = &["rust/src", "benches", "examples"];
+
+/// One discovered source file.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Path relative to the repo root, `/`-separated.
+    pub rel_path: String,
+    /// Full file contents.
+    pub text: String,
+}
+
+/// Collect every `.rs` file under [`ROOTS`], sorted by relative path so
+/// reports (and any future caching) are byte-stable across platforms.
+pub fn walk(repo_root: &Path) -> Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    for root in ROOTS {
+        let dir = repo_root.join(root);
+        if dir.is_dir() {
+            collect(&dir, repo_root, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.rel_path.cmp(&b.rel_path));
+    Ok(out)
+}
+
+fn collect(dir: &Path, repo_root: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    let entries =
+        fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect(&path, repo_root, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(repo_root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("read {}", path.display()))?;
+            out.push(SourceFile { rel_path: rel, text });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_the_repo_sorted_and_without_tests_dir() {
+        let files = walk(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+        assert!(files.iter().any(|f| f.rel_path == "rust/src/net/server.rs"));
+        assert!(files.iter().any(|f| f.rel_path == "rust/src/lint/walker.rs"));
+        assert!(files.iter().any(|f| f.rel_path.starts_with("benches/")));
+        assert!(files.iter().any(|f| f.rel_path.starts_with("examples/")));
+        assert!(!files.iter().any(|f| f.rel_path.starts_with("rust/tests/")));
+        let paths: Vec<_> = files.iter().map(|f| f.rel_path.as_str()).collect();
+        let mut sorted = paths.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(paths, sorted, "walk order must be sorted and duplicate-free");
+    }
+}

@@ -8,6 +8,9 @@
 //!       ids: fig1 fig2 fig3 fig5 fig6 fig7 fig8 sampling theory
 //!   serve  --listen ADDR [..]     networked aggregation server (TCP)
 //!   worker --connect ADDR --id K  one networked worker process
+//!   lint [--root DIR] [--report FILE]   run the fedlint static-analysis
+//!       pass over the source tree (exits nonzero on any violation; see
+//!       the `lint` module docs for the rules and annotation grammar)
 //!
 //! Common flags for `train`: --variant --dataset --workers --rounds --tau
 //!   --eta --delta --noniid true|false --codec identity|topk|topk_ef|atomo|
@@ -146,8 +149,9 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("figure") => cmd_figure(args),
         Some("serve") => cmd_serve(args),
         Some("worker") => cmd_worker(args),
+        Some("lint") => cmd_lint(args),
         _ => {
-            println!("usage: fedrecycle <info|train|analyze|figure|serve|worker> [flags]");
+            println!("usage: fedrecycle <info|train|analyze|figure|serve|worker|lint> [flags]");
             println!("       fedrecycle figure all --scale default --out results");
             println!("       fedrecycle serve --listen 127.0.0.1:7878 --workers 4 --dim 64");
             println!("       fedrecycle worker --connect 127.0.0.1:7878 --id 0 --workers 4 --dim 64");
@@ -363,6 +367,26 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let served =
         connect_worker_with_retry(addr.as_str(), id, &mut trainer, cfg.codec.build(), &retry)?;
     println!("worker {id}: served {served} rounds, shut down cleanly");
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = args.get_or("root", ".");
+    let report = fedrecycle::lint::run_tree(Path::new(&root))?;
+    let rendered = report.render();
+    print!("{rendered}");
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, &rendered)?;
+    }
+    anyhow::ensure!(
+        report.files_scanned > 0,
+        "no Rust sources found under --root {root} — run from the repo root"
+    );
+    anyhow::ensure!(
+        report.is_clean(),
+        "fedlint found {} violation(s)",
+        report.violations.len()
+    );
     Ok(())
 }
 

@@ -343,7 +343,7 @@ impl Acceptor {
     /// Block for a queued session until `until`; `None` on timeout or if
     /// the accept thread is gone.
     pub fn recv_deadline(&self, until: Instant) -> Option<Session> {
-        let now = Instant::now();
+        let now = Instant::now(); // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
         if until <= now {
             return self.try_session();
         }
@@ -366,14 +366,23 @@ impl Acceptor {
                 Session::Fresh { worker, link } => (worker, link),
                 Session::Rejoin { worker, link, .. } => (worker, link),
             };
-            if slots[w].is_none() {
-                slots[w] = Some(link);
-                connected += 1;
-            } else {
-                eprintln!("net: rejecting duplicate worker {w}");
+            match slots.get_mut(w) {
+                Some(slot) if slot.is_none() => {
+                    *slot = Some(link);
+                    connected += 1;
+                }
+                Some(_) => eprintln!("net: rejecting duplicate worker {w}"),
+                None => eprintln!("net: rejecting out-of-range worker {w}"),
             }
         }
-        Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+        let mut fleet: Vec<Box<dyn Link>> = Vec::with_capacity(k);
+        for (w, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(link) => fleet.push(link),
+                None => anyhow::bail!("fleet assembly finished with worker {w} unseated"),
+            }
+        }
+        Ok(fleet)
     }
 
     /// Ask the accept thread to exit (honored within its poll interval).
@@ -451,6 +460,7 @@ fn collect_update(
     let mut drains = 0u32;
     let result = (|| -> Result<(WorkerMsg, u64)> {
         loop {
+            // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
             let remaining = deadline.saturating_duration_since(Instant::now());
             let timeout = if remaining.is_zero() {
                 drains += 1;
@@ -534,16 +544,18 @@ fn seat(
         }
         Session::Rejoin { worker, last_round, link } => (worker, link, last_round),
     };
-    if w >= links.len() {
+    let Some(slot) = links.get_mut(w) else {
         eprintln!("net: dropping session for out-of-range worker {w}");
         return;
-    }
-    links[w] = match plan {
+    };
+    *slot = match plan {
         Some(p) => Box::new(ChaosLink::wrap(link, w, Arc::clone(p))),
         None => link,
     };
     ledger.record_rejoin(w);
-    rejoins_seen[w] += 1;
+    if let Some(seen) = rejoins_seen.get_mut(w) {
+        *seen += 1;
+    }
     match last {
         Some(r) => {
             eprintln!("net: worker {w} rejoined before round {t} (last served round {r})")
@@ -583,7 +595,7 @@ pub fn run_server_rounds_elastic(
     let mut rejoins_seen = vec![0usize; k];
 
     for t in 0..cfg.rounds {
-        let start = Instant::now();
+        let start = Instant::now(); // lint: allow(determinism, "round wall-clock metric: observability only, never fed into aggregation")
 
         // Elasticity: re-seat whatever the accept thread has queued, then
         // wait (bounded) for rejoins the fault plan schedules by this
@@ -593,10 +605,14 @@ pub fn run_server_rounds_elastic(
                 seat(links, s, el.plan.as_ref(), &mut ledger, &mut rejoins_seen, t);
             }
             if let Some(plan) = el.plan.as_deref() {
+                // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
                 let wait_until = Instant::now() + el.rejoin_wait;
                 loop {
-                    let missing: Vec<usize> = (0..k)
-                        .filter(|&w| rejoins_seen[w] < plan.rejoins_due(w, t))
+                    let missing: Vec<usize> = rejoins_seen
+                        .iter()
+                        .enumerate()
+                        .filter(|&(w, &seen)| seen < plan.rejoins_due(w, t))
+                        .map(|(w, _)| w)
                         .collect();
                     if missing.is_empty() {
                         break;
@@ -621,7 +637,9 @@ pub fn run_server_rounds_elastic(
                             // round. (A genuine late rejoin still re-seats
                             // through the opportunistic drain above.)
                             for w in missing {
-                                rejoins_seen[w] = plan.rejoins_due(w, t);
+                                if let Some(seen) = rejoins_seen.get_mut(w) {
+                                    *seen = plan.rejoins_due(w, t);
+                                }
                             }
                             break;
                         }
@@ -643,6 +661,7 @@ pub fn run_server_rounds_elastic(
         let encoded = frame.to_bytes();
         let mut reachable = Vec::with_capacity(planned.len());
         for &w in &planned {
+            // lint: allow(panic_freedom, "w comes from sample_clients over 0..k and links.len() == k — in range by construction")
             match links[w].send_raw(&encoded) {
                 Ok(sent) => {
                     ledger.record_down(w, dense_cost(dim));
@@ -662,10 +681,12 @@ pub fn run_server_rounds_elastic(
         // starve the workers after it. The reduction below still runs in
         // participant order (reachable is sorted), which keeps
         // aggregation bit-identical to the sequential engine.
+        // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
         let deadline = Instant::now() + round_deadline;
         let mut order = Vec::with_capacity(reachable.len());
         let mut tasks: Vec<(usize, &mut Box<dyn Link>)> =
             Vec::with_capacity(reachable.len());
+        // lint: allow(panic_freedom, "wanted.len() == k and every index comes from sample_clients over 0..k")
         {
             let mut wanted = vec![false; k];
             for &w in &reachable {
@@ -691,7 +712,14 @@ pub fn run_server_rounds_elastic(
         let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(order.len());
         let mut train_loss_sum = 0f64;
         for (w, out) in order.into_iter().zip(collected) {
-            let out = out.expect("collector thread fills every slot");
+            let Some(out) = out else {
+                // A scoped collector thread always writes its slot before
+                // the scope joins; if one ever vanished, count the worker
+                // absent for the round rather than killing the fleet.
+                eprintln!("net: no collector result for worker {w} (round {t})");
+                ledger.record_fault(w);
+                continue;
+            };
             if out.stale_bytes > 0 {
                 ledger.record_wire_up(out.stale_bytes);
             }
@@ -699,6 +727,7 @@ pub fn run_server_rounds_elastic(
                 Ok((msg, bytes)) => {
                     ledger.record_wire_up(bytes);
                     ledger.record(w, msg.cost, msg.is_scalar());
+                    // lint: allow(reduction_order, "participant-order f64 train-loss sum, identical to the sequential engine")
                     train_loss_sum += msg.train_loss;
                     msgs.push(msg);
                 }
@@ -745,6 +774,7 @@ pub fn run_server_rounds_elastic(
         el.acceptor.stop();
         // Grace drain: a worker that rejoined as the run ended still gets
         // its Shutdown instead of hanging on a silent link.
+        // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
         let grace = Instant::now() + SHUTDOWN_GRACE;
         while let Some(session) = el.acceptor.recv_deadline(grace) {
             let mut link = match session {

@@ -129,6 +129,7 @@ pub fn fnv1a(bytes: &[u8]) -> u32 {
 /// Cheap structural peek at an encoded frame: its tag byte, or `None` when
 /// the buffer is shorter than a header or the magic doesn't match. No
 /// payload validation — callers that need the frame still decode it.
+// lint: allow(panic_freedom, "indices 0..7 sit below the HEADER_LEN length check above them")
 pub fn peek_tag(bytes: &[u8]) -> Option<u8> {
     if bytes.len() >= HEADER_LEN && bytes[0..4] == MAGIC {
         Some(bytes[6])
@@ -140,6 +141,7 @@ pub fn peek_tag(bytes: &[u8]) -> Option<u8> {
 /// For an encoded `Round` frame, the round number `t`; `None` for any
 /// other tag or a malformed buffer. Used by the chaos layer to match
 /// in-flight broadcasts against a fault plan without a full decode.
+// lint: allow(panic_freedom, "slice is length-checked against HEADER_LEN + 8 before indexing")
 pub fn peek_round(bytes: &[u8]) -> Option<u64> {
     if peek_tag(bytes) != Some(TAG_ROUND) || bytes.len() < HEADER_LEN + 8 {
         return None;
@@ -192,6 +194,7 @@ impl<'a> Reader<'a> {
         self.buf.len() - self.pos
     }
 
+    // lint: allow(panic_freedom, "slice bounds follow from the ensure! on remaining() above")
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(
             n <= self.remaining(),
@@ -203,15 +206,18 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    // lint: allow(panic_freedom, "take(1) returned exactly one byte, so [0] is in range")
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
+    // lint: allow(panic_freedom, "take(4) returned exactly four bytes, so b[0..4] is in range")
     pub fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    // lint: allow(panic_freedom, "take(8) returned exactly eight bytes, so b[0..8] is in range")
     pub fn u64(&mut self) -> Result<u64> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
@@ -226,6 +232,7 @@ impl<'a> Reader<'a> {
     }
 
     /// Read `n` little-endian f32s.
+    // lint: allow(panic_freedom, "chunks_exact(4) yields 4-byte windows, so c[0..4] is in range")
     pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let bytes = n
             .checked_mul(4)
@@ -401,6 +408,7 @@ impl Frame {
     /// builds too, because a wrapped u32 length field would silently
     /// desync the byte stream; an oversized frame must be a loud error at
     /// the sender.
+    // lint: allow(panic_freedom, "deliberate sender-side assert: a wrapped u32 length would desync the stream")
     pub fn to_bytes(&self) -> Vec<u8> {
         let n = self.payload_len();
         assert!(n <= MAX_PAYLOAD, "frame payload {n} bytes exceeds MAX_PAYLOAD");
@@ -440,6 +448,7 @@ impl Frame {
     }
 
     /// Decode a complete frame from exactly `buf` (trailing bytes = error).
+    // lint: allow(panic_freedom, "every index sits below the ensure! chain fixing buf.len() = HEADER_LEN + n + CHECKSUM_LEN")
     pub fn from_bytes(buf: &[u8]) -> Result<Frame> {
         ensure!(
             buf.len() >= HEADER_LEN + CHECKSUM_LEN,
@@ -519,6 +528,7 @@ impl Frame {
     /// `max_payload` *before* allocating for it — the header length field
     /// is attacker-controlled until the checksum verifies, so
     /// pre-handshake receivers pass [`HANDSHAKE_MAX_PAYLOAD`] here.
+    // lint: allow(panic_freedom, "header is a fixed [u8; HEADER_LEN] array, indices are compile-time constants")
     pub fn read_from_limit(r: &mut dyn Read, max_payload: usize) -> Result<Frame> {
         let cap = max_payload.min(MAX_PAYLOAD);
         let mut header = [0u8; HEADER_LEN];

@@ -258,7 +258,7 @@ impl FaultPlan {
     pub fn scheduled_slots(&self, workers: usize, rounds: usize) -> usize {
         (0..workers)
             .map(|w| (0..rounds).filter(|&t| self.absent(w, t)).count())
-            .sum()
+            .sum() // lint: allow(reduction_order, "integer slot count: usize addition is associative")
     }
 
     /// Generate a concrete plan pseudo-randomly from a seed: each worker
