@@ -24,6 +24,7 @@ use fedrecycle::coordinator::worker::Worker;
 use fedrecycle::lbgm::ThresholdPolicy;
 use fedrecycle::linalg::vec_ops::{self, reference};
 use fedrecycle::linalg::{eigh, explained_components, GramPca, Workspace};
+use fedrecycle::obs::{self, record_to, Event, UplinkTracker};
 use fedrecycle::util::rng::Rng;
 
 #[global_allocator]
@@ -173,6 +174,51 @@ fn main() {
         msgs_k.clear();
         msgs_k.push(msg);
         server_k.apply(&msgs_k).expect("steady-state round");
+    });
+
+    // Same steady-state loop with tracing enabled: the four canonical
+    // events (round start, broadcast, uplink, commit) recorded per op
+    // into a preallocated ring through the shared handle — still
+    // allocation-free, pinning the obs layer's zero-alloc claim with
+    // telemetry turned on.
+    let trace = Some(obs::shared(obs::recorder::DEFAULT_CAPACITY));
+    let mut tracker = UplinkTracker::new(1);
+    let mut worker_t = Worker::new(0, Box::new(Identity));
+    let mut server_t = Server::new(vec![0.0f32; DIM], vec![1.0], 0.01);
+    let mut grad_t = template.clone();
+    let mut msgs_t = Vec::with_capacity(1);
+    let mut tt = 0usize;
+    let msg0 = worker_t.process_round(tt, &mut grad_t, 0.0, &policy);
+    tracker.classify(0, msg0.is_scalar());
+    msgs_t.push(msg0);
+    server_t.apply(&msgs_t).expect("bootstrap round");
+    r.bench("worker_round_traced_steady_state_256k", (3 * DIM * 4) as u64, || {
+        tt += 1;
+        record_to(&trace, Event::RoundStart { t: tt as u32, sampled: 1 });
+        record_to(
+            &trace,
+            Event::BroadcastSent { t: tt as u32, worker: 0, floats: DIM as u64 },
+        );
+        grad_t.clear();
+        grad_t.extend_from_slice(&template);
+        let msg = worker_t.process_round(tt, &mut grad_t, 0.0, &policy);
+        assert!(msg.is_scalar(), "steady state must stay scalar");
+        record_to(
+            &trace,
+            Event::WorkerUplink {
+                t: tt as u32,
+                worker: 0,
+                kind: tracker.classify(0, msg.is_scalar()),
+                floats: msg.cost.floats,
+            },
+        );
+        msgs_t.clear();
+        msgs_t.push(msg);
+        server_t.apply(&msgs_t).expect("steady-state round");
+        record_to(
+            &trace,
+            Event::RoundCommit { t: tt as u32, participants: 1, faults: 0 },
+        );
     });
 
     // --- report + gate ------------------------------------------------------

@@ -261,6 +261,7 @@ impl ExperimentConfig {
             parallelism: self.parallelism,
             transport: self.transport,
             faults: self.faults.clone(),
+            trace: None,
         }
     }
 }

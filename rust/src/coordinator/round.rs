@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::compress::{dense_cost, Compressor};
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
+use crate::obs::{record_to, Event, TraceHandle, UplinkTracker};
 use crate::sim::FaultPlan;
 use crate::util::timer::PhaseTimer;
 
@@ -142,6 +143,11 @@ pub struct FlConfig {
     /// FedAvg weights renormalized over that set. Every engine honors the
     /// same plan identically (`tests/chaos_recovery.rs`).
     pub faults: Option<FaultPlan>,
+    /// Shared trace recorder (`None` = tracing off, the default). Every
+    /// engine emits the same deterministic event stream into it —
+    /// rejoins, round start, broadcasts, uplinks, faults, commit —
+    /// bit-identical per seed (`tests/trace_parity.rs`).
+    pub trace: Option<TraceHandle>,
 }
 
 impl Default for FlConfig {
@@ -158,6 +164,7 @@ impl Default for FlConfig {
             parallelism: Parallelism::default(),
             transport: Transport::default(),
             faults: None,
+            trace: None,
         }
     }
 }
@@ -333,10 +340,16 @@ pub fn run_fl(
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
     let mut timers = PhaseTimer::new();
+    let mut uplink_kinds = UplinkTracker::new(k);
 
     let dim = server.theta.len();
     for t in 0..cfg.rounds {
         let start = std::time::Instant::now(); // lint: allow(determinism, "round wall-clock metric: observability only, never fed into aggregation")
+        // Phase-timer snapshots: the accumulating totals minus these
+        // give the per-round t_* telemetry columns.
+        let t_train0 = timers.get("local_sgd");
+        let t_compress0 = timers.get("lbgm_uplink");
+        let t_aggregate0 = timers.get("aggregate");
         // Scheduled rejoins: a severed connection restored at round t
         // forces the worker's next uplink to be a full refresh — the
         // in-memory mirror of the client-side reconnect reconciliation
@@ -348,20 +361,31 @@ pub fn run_fl(
             for w in plan.rejoins_at(t).filter(|&w| w < k) {
                 workers[w].force_full_next();
                 ledger.record_rejoin(w);
+                record_to(&cfg.trace, Event::Rejoin { t: t as u32, worker: w as u32 });
             }
         }
         let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
         let planned_n = planned.len();
+        record_to(
+            &cfg.trace,
+            Event::RoundStart { t: t as u32, sampled: planned_n as u32 },
+        );
         // The theta broadcast is a real transmission to every *sampled*
         // worker: the server cannot know who will fail, so the downlink is
         // accounted for the full planned set even under faults.
+        let down = dense_cost(dim);
         for &w in &planned {
-            ledger.record_down(w, dense_cost(dim));
+            ledger.record_down(w, down);
+            record_to(
+                &cfg.trace,
+                Event::BroadcastSent { t: t as u32, worker: w as u32, floats: down.floats },
+            );
         }
         // Fault injection: absent workers miss the whole round — they
         // neither train nor uplink, so none of their state advances (the
         // invariant that keeps LBG copies coherent across absences).
-        let participants = apply_faults(cfg.faults.as_ref(), planned, t, &mut ledger);
+        let participants =
+            apply_faults(cfg.faults.as_ref(), planned.clone(), t, &mut ledger);
         let mut msgs = Vec::with_capacity(participants.len());
         let mut train_loss_sum = 0f64;
         if let Some(shards) = shards.as_deref_mut() {
@@ -398,11 +422,46 @@ pub fn run_fl(
                 msgs.push(msg);
             }
         }
+        // Uplink events are emitted in aggregation (message) order — the
+        // one order every engine reproduces bit-identically.
+        for msg in &msgs {
+            record_to(
+                &cfg.trace,
+                Event::WorkerUplink {
+                    t: t as u32,
+                    worker: msg.worker as u32,
+                    kind: uplink_kinds.classify(msg.worker, msg.is_scalar()),
+                    floats: msg.cost.floats,
+                },
+            );
+        }
         // A round with no arrivals commits without touching the model
         // (the partial-participation degenerate case) instead of erroring.
         if !msgs.is_empty() {
             timers.time("aggregate", || server.apply(&msgs))?;
         }
+        // Absences surface in the trace at commit time, in planned
+        // order: the net server cannot know who is missing until the
+        // collection closes, so this is the one placement every engine
+        // can share.
+        if cfg.trace.is_some() {
+            for &w in &planned {
+                if !participants.contains(&w) {
+                    record_to(
+                        &cfg.trace,
+                        Event::FaultInjected { t: t as u32, worker: w as u32 },
+                    );
+                }
+            }
+        }
+        record_to(
+            &cfg.trace,
+            Event::RoundCommit {
+                t: t as u32,
+                participants: msgs.len() as u32,
+                faults: (planned_n - msgs.len()) as u32,
+            },
+        );
 
         if cfg.check_coherence {
             for &w in &participants {
@@ -427,6 +486,9 @@ pub fn run_fl(
             wall_secs: start.elapsed().as_secs_f64(),
             participants: msgs.len(),
             faults: planned_n - msgs.len(),
+            t_train: timers.get("local_sgd") - t_train0,
+            t_compress: timers.get("lbgm_uplink") - t_compress0,
+            t_aggregate: timers.get("aggregate") - t_aggregate0,
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {

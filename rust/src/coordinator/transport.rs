@@ -20,6 +20,8 @@ use anyhow::Result;
 use crate::compress::{dense_cost, Compressor};
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
+use crate::obs::{record_to, Event, UplinkTracker};
+use crate::util::timer::PhaseTimer;
 
 use super::accounting::CommLedger;
 use super::messages::WorkerMsg;
@@ -96,15 +98,22 @@ where
     let mut server = Server::new(theta0, weights, eta);
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
+    let mut timers = PhaseTimer::new();
+    let mut uplink_kinds = UplinkTracker::new(k);
 
     let dim = server.theta.len();
     for t in 0..cfg.rounds {
+        // Per-round phase deltas: training/compression run on the worker
+        // threads, so only comm and aggregate are visible here.
+        let t_comm0 = timers.get("comm");
+        let t_aggregate0 = timers.get("aggregate");
         // Scheduled rejoins: mirror of the sequential engine's sever
         // reconciliation (see `run_fl`) so every engine honors the plan
         // identically.
         if let Some(plan) = cfg.faults.as_ref() {
             for w in plan.rejoins_at(t).filter(|&w| w < k) {
                 ledger.record_rejoin(w);
+                record_to(&cfg.trace, Event::Rejoin { t: t as u32, worker: w as u32 });
                 down_txs[w]
                     .send(Downlink::ForceFull)
                     .map_err(|_| anyhow::anyhow!("worker {w} hung up"))?;
@@ -112,30 +121,57 @@ where
         }
         let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
         let planned_n = planned.len();
+        record_to(
+            &cfg.trace,
+            Event::RoundStart { t: t as u32, sampled: planned_n as u32 },
+        );
         // The downlink is accounted for every sampled worker (the server
         // broadcasts before it can know who will fail)...
+        let down = dense_cost(dim);
         for &w in &planned {
-            ledger.record_down(w, dense_cost(dim));
+            ledger.record_down(w, down);
+            record_to(
+                &cfg.trace,
+                Event::BroadcastSent { t: t as u32, worker: w as u32, floats: down.floats },
+            );
         }
         // ...but a faulted worker never receives its Round command, so its
         // thread's state stays frozen for the round (same round-absence
         // semantics as every other engine).
-        let participants = apply_faults(cfg.faults.as_ref(), planned, t, &mut ledger);
+        let participants =
+            apply_faults(cfg.faults.as_ref(), planned.clone(), t, &mut ledger);
         // One clone of theta per round, refcount-bumped per participant.
         let theta = Arc::new(server.theta.clone());
-        for &w in &participants {
-            down_txs[w]
-                .send(Downlink::Round { t, theta: Arc::clone(&theta) })
-                .map_err(|_| anyhow::anyhow!("worker {w} hung up"))?;
-        }
         let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(participants.len());
-        for _ in 0..participants.len() {
-            let msg = up_rx.recv().map_err(|_| anyhow::anyhow!("uplink closed"))?;
-            ledger.record(msg.worker, msg.cost, msg.is_scalar());
-            msgs.push(msg);
-        }
+        timers.time("comm", || -> Result<()> {
+            for &w in &participants {
+                down_txs[w]
+                    .send(Downlink::Round { t, theta: Arc::clone(&theta) })
+                    .map_err(|_| anyhow::anyhow!("worker {w} hung up"))?;
+            }
+            for _ in 0..participants.len() {
+                let msg =
+                    up_rx.recv().map_err(|_| anyhow::anyhow!("uplink closed"))?;
+                ledger.record(msg.worker, msg.cost, msg.is_scalar());
+                msgs.push(msg);
+            }
+            Ok(())
+        })?;
         // Deterministic aggregation order regardless of thread scheduling.
         msgs.sort_by_key(|m| m.worker);
+        // Uplink events follow the sorted aggregation order — the one
+        // order every engine reproduces bit-identically.
+        for msg in &msgs {
+            record_to(
+                &cfg.trace,
+                Event::WorkerUplink {
+                    t: t as u32,
+                    worker: msg.worker as u32,
+                    kind: uplink_kinds.classify(msg.worker, msg.is_scalar()),
+                    floats: msg.cost.floats,
+                },
+            );
+        }
         let train_loss = train_loss_or_carry(
             // lint: allow(reduction_order, "worker-sorted f64 loss sum, the engines' shared canonical order")
             msgs.iter().map(|m| m.train_loss).sum::<f64>(),
@@ -143,8 +179,28 @@ where
             &series,
         );
         if !msgs.is_empty() {
-            server.apply(&msgs)?;
+            timers.time("aggregate", || server.apply(&msgs))?;
         }
+        // Absences surface in the trace at commit time, in planned
+        // order — the shared placement across all engines (see `run_fl`).
+        if cfg.trace.is_some() {
+            for &w in &planned {
+                if !participants.contains(&w) {
+                    record_to(
+                        &cfg.trace,
+                        Event::FaultInjected { t: t as u32, worker: w as u32 },
+                    );
+                }
+            }
+        }
+        record_to(
+            &cfg.trace,
+            Event::RoundCommit {
+                t: t as u32,
+                participants: msgs.len() as u32,
+                faults: (planned_n - msgs.len()) as u32,
+            },
+        );
 
         let mut rec = RoundRecord {
             round: t,
@@ -157,6 +213,8 @@ where
             scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
             participants: msgs.len(),
             faults: planned_n - msgs.len(),
+            t_comm: timers.get("comm") - t_comm0,
+            t_aggregate: timers.get("aggregate") - t_aggregate0,
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {

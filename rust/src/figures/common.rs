@@ -85,10 +85,23 @@ pub fn run_arm(
     cfg: &ExperimentConfig,
     name: &str,
 ) -> Result<FlOutcome> {
+    run_arm_traced(rt, manifest, cfg, name, None)
+}
+
+/// [`run_arm`] with an optional trace recorder threaded into the round
+/// engine (`fedrecycle train --trace run.jsonl`).
+pub fn run_arm_traced(
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &ExperimentConfig,
+    name: &str,
+    trace: Option<crate::obs::TraceHandle>,
+) -> Result<FlOutcome> {
     crate::config::validate(cfg)?;
     let mut trainer = make_trainer(rt, manifest, cfg)?;
     let theta0 = manifest.variant(&cfg.variant)?.load_init()?;
-    let fl = cfg.fl_config();
+    let mut fl = cfg.fl_config();
+    fl.trace = trace;
     let codec = cfg.codec;
     // ATOMO decomposes per layer: hand the codec the manifest's segments.
     let segments: Vec<(usize, usize)> = manifest

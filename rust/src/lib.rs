@@ -50,6 +50,22 @@
 //! worker's round trip at the downlink, so absent workers never train and
 //! their LBGM look-back state stays coherent (`tests/chaos_recovery.rs`).
 //!
+//! # Observability & tracing
+//!
+//! The [`obs`] layer records what the ledgers can only total: a typed,
+//! deterministic event stream (round lifecycle, broadcasts, uplinks
+//! with their Scalar/Full/Refresh classification, faults, rejoins)
+//! captured into a preallocated ring buffer at 0 allocs/op, with
+//! wall-clock timestamps admitted only through a single lint-annotated
+//! clock seam ([`obs::clock`]). The deterministic stream is
+//! bit-identical across all four engines per seed
+//! (`tests/trace_parity.rs`); `--trace run.jsonl` exports it and
+//! `fedrecycle trace run.jsonl` summarizes it. A preregistered metrics
+//! registry ([`obs::metrics`]) unifies `CommLedger` and `PhaseTimer`
+//! readings into per-round snapshots, and the leveled, rate-limited
+//! logger ([`obs::log`], `--log-level`) replaces ad-hoc `eprintln!` in
+//! the net layer — quiet by default, so test output stays clean.
+//!
 //! # Performance
 //!
 //! The per-round numeric path is zero-allocation in steady state: the
@@ -92,6 +108,7 @@ pub mod lint;
 pub mod metrics;
 #[allow(missing_docs)]
 pub mod net;
+pub mod obs;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]

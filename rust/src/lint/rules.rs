@@ -63,6 +63,7 @@ const DETERMINISM_SCOPE: &[&str] = &[
     "rust/src/compress/",
     "rust/src/sim/",
     "rust/src/net/",
+    "rust/src/obs/",
 ];
 
 /// Same blast radius as [`DETERMINISM_SCOPE`]: a stray float reduction
@@ -86,6 +87,7 @@ const ALLOC_SCOPE: &[&str] = &[
     "rust/src/compress/",
     "rust/src/linalg/vec_ops.rs",
     "rust/src/linalg/workspace.rs",
+    "rust/src/obs/",
 ];
 
 const DETERMINISM_TOKENS: &[&str] = &[

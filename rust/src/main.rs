@@ -11,6 +11,7 @@
 //!   lint [--root DIR] [--report FILE]   run the fedlint static-analysis
 //!       pass over the source tree (exits nonzero on any violation; see
 //!       the `lint` module docs for the rules and annotation grammar)
+//!   trace <run.jsonl>             summarize a trace written by --trace
 //!
 //! Common flags for `train`: --variant --dataset --workers --rounds --tau
 //!   --eta --delta --noniid true|false --codec identity|topk|topk_ef|atomo|
@@ -26,6 +27,10 @@
 //!   --faults plan.json  (deterministic chaos: a seeded FaultPlan of
 //!   per-worker per-round drop/delay/disconnect/corrupt events; rounds
 //!   commit with whichever workers arrive — see the `sim` module docs)
+//!   --trace run.jsonl  (record the deterministic round-event stream and
+//!   write it as JSONL after the run; `fedrecycle trace run.jsonl`
+//!   summarizes it) and --log-level off|error|warn|info|debug (obs-layer
+//!   diagnostics; default off) apply to train/serve/worker
 //!
 //! `serve`/`worker` run the mock federation over real sockets; the two
 //! sides must agree on --workers --dim --spread --sigma --seed, and every
@@ -41,7 +46,7 @@ use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use fedrecycle::analysis::gradient_space::centralized_analysis;
 use fedrecycle::config::{CodecKind, ExperimentConfig, PolicyKind};
@@ -53,6 +58,7 @@ use fedrecycle::net::{
     connect_worker_with_retry, run_server_rounds_elastic, run_tcp_fl, Acceptor,
     ElasticOpts, ReconnectCfg,
 };
+use fedrecycle::obs;
 use fedrecycle::runtime::{Manifest, Runtime};
 use fedrecycle::sim::FaultPlan;
 use fedrecycle::util::cli::Args;
@@ -123,6 +129,39 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// Honor the shared observability flags (`--log-level`, `--trace PATH`):
+/// installs the global log level, and when tracing is requested returns
+/// the JSONL destination plus a fresh shared recorder to thread into the
+/// round engine via `FlConfig::trace`.
+fn obs_from_args(args: &Args) -> Result<(Option<PathBuf>, Option<obs::TraceHandle>)> {
+    if let Some(text) = args.get("log-level") {
+        let level = obs::log::Level::parse(text).ok_or_else(|| {
+            anyhow::anyhow!("--log-level {text}: expected off|error|warn|info|debug")
+        })?;
+        obs::log::set_level(level);
+    }
+    Ok(match args.get("trace") {
+        Some(p) => (
+            Some(PathBuf::from(p)),
+            Some(obs::shared(obs::recorder::DEFAULT_CAPACITY)),
+        ),
+        None => (None, None),
+    })
+}
+
+/// Flush a `--trace` recorder to its JSONL destination (no-op when
+/// tracing is off).
+fn flush_trace(path: &Option<PathBuf>, trace: &Option<obs::TraceHandle>) -> Result<()> {
+    if let (Some(path), Some(handle)) = (path, trace) {
+        let rec = handle
+            .lock()
+            .map_err(|_| anyhow::anyhow!("trace recorder lock poisoned"))?;
+        obs::sink::write_jsonl(path, &rec)?;
+        println!("trace: {} event(s) -> {}", rec.len(), path.display());
+    }
+    Ok(())
+}
+
 /// Shape of the analytic mock federation used by the deployment paths
 /// (`train --transport threads|tcp`, `serve`, `worker`). Server and worker
 /// processes must agree on these (and on --workers/--seed) for the run to
@@ -150,11 +189,13 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("worker") => cmd_worker(args),
         Some("lint") => cmd_lint(args),
+        Some("trace") => cmd_trace(args),
         _ => {
-            println!("usage: fedrecycle <info|train|analyze|figure|serve|worker|lint> [flags]");
+            println!("usage: fedrecycle <info|train|analyze|figure|serve|worker|lint|trace> [flags]");
             println!("       fedrecycle figure all --scale default --out results");
             println!("       fedrecycle serve --listen 127.0.0.1:7878 --workers 4 --dim 64");
             println!("       fedrecycle worker --connect 127.0.0.1:7878 --id 0 --workers 4 --dim 64");
+            println!("       fedrecycle trace run.jsonl   (written by train/serve --trace)");
             Ok(())
         }
     }
@@ -181,13 +222,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.transport != Transport::Memory {
         return cmd_train_deployment(args, cfg);
     }
+    let (trace_path, trace) = obs_from_args(args)?;
     let (rt, manifest) = load_env(args)?;
     println!(
         "train: variant={} dataset={} K={} T={} tau={} eta={} delta={} codec={:?} par={:?}",
         cfg.variant, cfg.dataset, cfg.workers, cfg.rounds, cfg.tau, cfg.eta,
         cfg.delta, cfg.codec, cfg.parallelism
     );
-    let outc = figures::common::run_arm(&rt, &manifest, &cfg, &cfg.name.clone())?;
+    let outc = figures::common::run_arm_traced(
+        &rt,
+        &manifest,
+        &cfg,
+        &cfg.name.clone(),
+        trace.clone(),
+    )?;
+    flush_trace(&trace_path, &trace)?;
     println!(
         "done: final metric {:.4} | floats {:>12} | bits {:>14} | scalar msgs {:.1}%",
         outc.series.final_metric(),
@@ -222,9 +271,11 @@ fn cmd_train_deployment(args: &Args, cfg: ExperimentConfig) -> Result<()> {
         cfg.dataset
     );
     fedrecycle::config::validate(&cfg)?;
+    let (trace_path, trace) = obs_from_args(args)?;
     let spec = mock_spec(args);
     let k = cfg.workers;
-    let fl = cfg.fl_config();
+    let mut fl = cfg.fl_config();
+    fl.trace = trace.clone();
     let mut eval = MockTrainer::new(spec.dim, k, spec.spread, 0.0, cfg.seed);
     let weights = eval.weights();
     let codec = cfg.codec;
@@ -255,6 +306,7 @@ fn cmd_train_deployment(args: &Args, cfg: ExperimentConfig) -> Result<()> {
         )?,
         Transport::Memory => unreachable!("dispatched above"),
     };
+    flush_trace(&trace_path, &trace)?;
     print_deployment_summary(&series, &ledger);
     if let Some(out) = args.get("out") {
         write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[series])?;
@@ -296,9 +348,11 @@ fn print_deployment_summary(
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
     fedrecycle::config::validate(&cfg)?;
+    let (trace_path, trace) = obs_from_args(args)?;
     let spec = mock_spec(args);
     let k = cfg.workers;
-    let fl = cfg.fl_config();
+    let mut fl = cfg.fl_config();
+    fl.trace = trace.clone();
     let listen = args.get_or("listen", "127.0.0.1:7878");
     let listener = TcpListener::bind(&listen)?;
     println!(
@@ -321,7 +375,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             p.events.len(),
             p.seed
         );
-        links = fedrecycle::sim::chaos::wrap_links(links, p);
+        links = fedrecycle::sim::chaos::wrap_links_traced(links, p, fl.trace.clone());
     }
     println!("all {k} workers connected; training (rejoins stay open)");
     let elastic = ElasticOpts {
@@ -339,6 +393,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &cfg.name,
         Some(&elastic),
     )?;
+    flush_trace(&trace_path, &trace)?;
     print_deployment_summary(&series, &ledger);
     if let Some(out) = args.get("out") {
         write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[series])?;
@@ -352,6 +407,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// rejoining the run mid-flight with LBGM state intact.
 fn cmd_worker(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
+    let (trace_path, _trace) = obs_from_args(args)?;
+    if trace_path.is_some() {
+        println!(
+            "worker: --trace records the round-event stream server-side; \
+             pass it to `serve` (only --log-level applies here)"
+        );
+    }
     let spec = mock_spec(args);
     let id = args.usize_or("id", 0);
     let addr = args.get_or("connect", "127.0.0.1:7878");
@@ -387,6 +449,18 @@ fn cmd_lint(args: &Args) -> Result<()> {
         "fedlint found {} violation(s)",
         report.violations.len()
     );
+    Ok(())
+}
+
+/// `trace`: summarize a JSONL trace written by a `--trace` run.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: fedrecycle trace <run.jsonl>"))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    print!("{}", obs::sink::summarize(&text)?);
     Ok(())
 }
 

@@ -33,6 +33,17 @@ pub struct RoundRecord {
     /// late, disconnected, or corrupt — this round's count, not
     /// cumulative).
     pub faults: usize,
+    /// Seconds spent in local SGD this round (wall clock; telemetry
+    /// only — never compared across engines).
+    pub t_train: f64,
+    /// Seconds spent in LBGM uplink compression this round (0 where the
+    /// engine fuses it into training).
+    pub t_compress: f64,
+    /// Seconds the transport spent broadcasting and collecting this
+    /// round (0 for the in-process sequential engine).
+    pub t_comm: f64,
+    /// Seconds spent applying the aggregate this round.
+    pub t_aggregate: f64,
 }
 
 /// A named training run's full history.
@@ -109,6 +120,19 @@ impl RunSeries {
         } else {
             s as f64 / (s + f) as f64
         }
+    }
+
+    /// Whole-run phase-timing totals
+    /// `(t_train, t_compress, t_comm, t_aggregate)` in seconds.
+    pub fn total_phase_secs(&self) -> (f64, f64, f64, f64) {
+        self.rounds.iter().fold((0.0, 0.0, 0.0, 0.0), |acc, r| {
+            (
+                acc.0 + r.t_train,
+                acc.1 + r.t_compress,
+                acc.2 + r.t_comm,
+                acc.3 + r.t_aggregate,
+            )
+        })
     }
 
     /// Communication saving vs a baseline's total floats (paper's "% savings").

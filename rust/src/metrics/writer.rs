@@ -11,13 +11,15 @@ pub fn write_csv(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
     if let Some(dir) = path.parent() {
         fs::create_dir_all(dir)?;
     }
+    // Phase-timing columns are appended after the PR-5 columns so the
+    // committed golden traces extend instead of breaking.
     let mut out = String::from(
-        "run,round,train_loss,test_loss,test_metric,floats_up,bits_up,floats_down,bits_down,wire_up_bytes,wire_down_bytes,full_sends,scalar_sends,wall_secs,participants,faults\n",
+        "run,round,train_loss,test_loss,test_metric,floats_up,bits_up,floats_down,bits_down,wire_up_bytes,wire_down_bytes,full_sends,scalar_sends,wall_secs,participants,faults,t_train,t_compress,t_comm,t_aggregate\n",
     );
     for run in runs {
         for r in &run.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.4},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.4},{:.4},{:.4},{:.4}\n",
                 run.name,
                 r.round,
                 r.train_loss,
@@ -33,7 +35,11 @@ pub fn write_csv(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
                 r.scalar_sends,
                 r.wall_secs,
                 r.participants,
-                r.faults
+                r.faults,
+                r.t_train,
+                r.t_compress,
+                r.t_comm,
+                r.t_aggregate
             ));
         }
     }
@@ -47,6 +53,7 @@ pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
         fs::create_dir_all(dir)?;
     }
     let items = runs.iter().map(|r| {
+        let (t_train, t_compress, t_comm, t_aggregate) = r.total_phase_secs();
         obj(vec![
             ("name", s(&r.name)),
             ("rounds", num(r.rounds.len() as f64)),
@@ -60,6 +67,10 @@ pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
             ("scalar_fraction", num(r.scalar_fraction())),
             ("total_faults", num(r.total_faults() as f64)),
             ("min_participants", num(r.min_participants() as f64)),
+            ("t_train", num(t_train)),
+            ("t_compress", num(t_compress)),
+            ("t_comm", num(t_comm)),
+            ("t_aggregate", num(t_aggregate)),
         ])
     });
     fs::write(path, Json::to_string(&arr(items)))?;
@@ -81,9 +92,15 @@ mod tests {
         let csv = std::fs::read_to_string(dir.join("a.csv")).unwrap();
         assert!(csv.lines().count() == 2);
         assert!(csv.contains("demo,0"));
-        assert!(csv.lines().next().unwrap().ends_with("participants,faults"));
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("participants,faults,t_train,t_compress,t_comm,t_aggregate"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",0.0000,0.0000,0.0000,0.0000"));
         let j = Json::parse(&std::fs::read_to_string(dir.join("a.json")).unwrap()).unwrap();
         assert_eq!(j.as_arr().unwrap()[0].req_str("name").unwrap(), "demo");
         assert_eq!(j.as_arr().unwrap()[0].req_f64("total_faults").unwrap(), 0.0);
+        assert_eq!(j.as_arr().unwrap()[0].req_f64("t_aggregate").unwrap(), 0.0);
     }
 }

@@ -255,7 +255,7 @@ pub fn connect_worker_with_retry<A: ToSocketAddrs + Clone>(
             *failures < retry.max_attempts,
             "worker {id} gave up after {failures} attempts: {why}"
         );
-        eprintln!("net: worker {id}: {why}; retrying in {backoff:?}");
+        crate::obs_warn!("net: worker {id}: {why}; retrying in {backoff:?}");
         std::thread::sleep(*backoff);
         *backoff = (*backoff * 2).min(retry.max_backoff);
         Ok(())

@@ -120,7 +120,7 @@ where
     let mut links = acceptor.wait_for_fleet(k)?;
     let plan = cfg.faults.as_ref().map(|p| std::sync::Arc::new(p.clone()));
     if let Some(p) = &plan {
-        links = crate::sim::chaos::wrap_links(links, p);
+        links = crate::sim::chaos::wrap_links_traced(links, p, cfg.trace.clone());
     }
     let elastic = server::ElasticOpts {
         acceptor: &acceptor,
@@ -196,7 +196,7 @@ where
         link.set_recv_timeout(None)?;
     }
     if let Some(plan) = &cfg.faults {
-        server_links = crate::sim::chaos::wrap_links(server_links, plan);
+        server_links = crate::sim::chaos::wrap_links_traced(server_links, plan, cfg.trace.clone());
     }
     let out = run_server_rounds(
         &mut server_links,

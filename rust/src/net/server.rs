@@ -65,8 +65,11 @@ use crate::coordinator::server::Server;
 use crate::coordinator::trainer::LocalTrainer;
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
+use crate::obs::{record_to, Event, UplinkTracker};
 use crate::sim::chaos::ChaosLink;
 use crate::sim::FaultPlan;
+use crate::util::timer::PhaseTimer;
+use crate::{obs_debug, obs_info, obs_warn};
 
 use super::link::{Link, TcpLink};
 use super::wire::{self, Frame};
@@ -259,16 +262,25 @@ fn accept_loop(
                     .name("fl-handshake".into())
                     .spawn(move || match handshake_stream(stream, k, dim, &cfg, timeout) {
                         Ok(session) => {
+                            let (worker, rejoin) = match &session {
+                                Session::Fresh { worker, .. } => (*worker, false),
+                                Session::Rejoin { worker, .. } => (*worker, true),
+                            };
+                            record_to(
+                                &cfg.trace,
+                                Event::HandshakeAccepted { worker: worker as u32, rejoin },
+                            );
                             // The round loop may already be gone (run over);
                             // a dropped registry just closes the socket.
                             let _ = tx.send(session);
                         }
                         Err(e) => {
-                            eprintln!("net: rejecting connection from {peer}: {e:#}")
+                            record_to(&cfg.trace, Event::HandshakeRejected { code: 0 });
+                            obs_warn!("net: rejecting connection from {peer}: {e:#}");
                         }
                     });
                 if let Err(e) = spawned {
-                    eprintln!("net: cannot spawn handshake thread for {peer}: {e}");
+                    obs_warn!("net: cannot spawn handshake thread for {peer}: {e}");
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -278,13 +290,13 @@ fn accept_loop(
             Err(e) => {
                 hard_errors += 1;
                 if hard_errors >= MAX_ACCEPT_ERRORS {
-                    eprintln!(
+                    obs_warn!(
                         "net: accept failing persistently ({e}); giving up on new \
                          connections — workers can no longer rejoin this run"
                     );
                     return;
                 }
-                eprintln!("net: accept failed: {e}");
+                obs_warn!("net: accept failed: {e}");
                 thread::sleep(ACCEPT_POLL);
             }
         }
@@ -371,8 +383,8 @@ impl Acceptor {
                     *slot = Some(link);
                     connected += 1;
                 }
-                Some(_) => eprintln!("net: rejecting duplicate worker {w}"),
-                None => eprintln!("net: rejecting out-of-range worker {w}"),
+                Some(_) => obs_warn!("net: rejecting duplicate worker {w}"),
+                None => obs_warn!("net: rejecting out-of-range worker {w}"),
             }
         }
         let mut fleet: Vec<Box<dyn Link>> = Vec::with_capacity(k);
@@ -481,7 +493,7 @@ fn collect_update(
             };
             ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
             if msg.round < t {
-                eprintln!(
+                obs_debug!(
                     "net: discarding worker {w}'s stale round-{} update in round {t}",
                     msg.round
                 );
@@ -530,13 +542,14 @@ fn seat(
     links: &mut [Box<dyn Link>],
     session: Session,
     plan: Option<&Arc<FaultPlan>>,
+    trace: &Option<crate::obs::TraceHandle>,
     ledger: &mut CommLedger,
     rejoins_seen: &mut [usize],
     t: usize,
 ) {
     let (w, link, last) = match session {
         Session::Fresh { worker, .. } => {
-            eprintln!(
+            obs_warn!(
                 "net: rejecting mid-run Hello for already-seated worker {worker} \
                  (round {t}); returning workers must send Rejoin"
             );
@@ -545,11 +558,11 @@ fn seat(
         Session::Rejoin { worker, last_round, link } => (worker, link, last_round),
     };
     let Some(slot) = links.get_mut(w) else {
-        eprintln!("net: dropping session for out-of-range worker {w}");
+        obs_warn!("net: dropping session for out-of-range worker {w}");
         return;
     };
     *slot = match plan {
-        Some(p) => Box::new(ChaosLink::wrap(link, w, Arc::clone(p))),
+        Some(p) => Box::new(ChaosLink::wrap_traced(link, w, Arc::clone(p), trace.clone())),
         None => link,
     };
     ledger.record_rejoin(w);
@@ -558,9 +571,9 @@ fn seat(
     }
     match last {
         Some(r) => {
-            eprintln!("net: worker {w} rejoined before round {t} (last served round {r})")
+            obs_info!("net: worker {w} rejoined before round {t} (last served round {r})")
         }
-        None => eprintln!("net: worker {w} rejoined before round {t} (never served)"),
+        None => obs_info!("net: worker {w} rejoined before round {t} (never served)"),
     }
 }
 
@@ -593,16 +606,20 @@ pub fn run_server_rounds_elastic(
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
     let mut rejoins_seen = vec![0usize; k];
+    let mut timers = PhaseTimer::new();
+    let mut uplink_kinds = UplinkTracker::new(k);
 
     for t in 0..cfg.rounds {
         let start = Instant::now(); // lint: allow(determinism, "round wall-clock metric: observability only, never fed into aggregation")
+        let t_comm0 = timers.get("comm");
+        let t_aggregate0 = timers.get("aggregate");
 
         // Elasticity: re-seat whatever the accept thread has queued, then
         // wait (bounded) for rejoins the fault plan schedules by this
         // round — a planned recovery must not race the round clock.
         if let Some(el) = elastic {
             while let Some(s) = el.acceptor.try_session() {
-                seat(links, s, el.plan.as_ref(), &mut ledger, &mut rejoins_seen, t);
+                seat(links, s, el.plan.as_ref(), &cfg.trace, &mut ledger, &mut rejoins_seen, t);
             }
             if let Some(plan) = el.plan.as_deref() {
                 // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
@@ -622,12 +639,13 @@ pub fn run_server_rounds_elastic(
                             links,
                             s,
                             el.plan.as_ref(),
+                            &cfg.trace,
                             &mut ledger,
                             &mut rejoins_seen,
                             t,
                         ),
                         None => {
-                            eprintln!(
+                            obs_warn!(
                                 "net: proceeding without scheduled rejoin(s) of \
                                  workers {missing:?} (round {t})"
                             );
@@ -648,7 +666,21 @@ pub fn run_server_rounds_elastic(
             }
         }
 
+        // Deterministic rejoin events come from the fault plan — the
+        // socket-level re-seats above surface as diagnostic
+        // HandshakeAccepted events instead — so the parity stream
+        // matches the in-memory engines exactly.
+        if let Some(plan) = cfg.faults.as_ref() {
+            for w in plan.rejoins_at(t).filter(|&w| w < k) {
+                record_to(&cfg.trace, Event::Rejoin { t: t as u32, worker: w as u32 });
+            }
+        }
+
         let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        record_to(
+            &cfg.trace,
+            Event::RoundStart { t: t as u32, sampled: planned.len() as u32 },
+        );
 
         // Downlink: broadcast the global model to this round's sampled
         // workers — encoded once, the same byte buffer fanned out to every
@@ -659,21 +691,36 @@ pub fn run_server_rounds_elastic(
         // stays absent (free to rejoin later) while the others proceed.
         let frame = Frame::Round { t: t as u64, theta: server.theta.clone() };
         let encoded = frame.to_bytes();
+        let down = dense_cost(dim);
         let mut reachable = Vec::with_capacity(planned.len());
-        for &w in &planned {
-            // lint: allow(panic_freedom, "w comes from sample_clients over 0..k and links.len() == k — in range by construction")
-            match links[w].send_raw(&encoded) {
-                Ok(sent) => {
-                    ledger.record_down(w, dense_cost(dim));
-                    ledger.record_wire_down(sent as u64);
-                    reachable.push(w);
-                }
-                Err(e) => {
-                    eprintln!("net: worker {w} unreachable for round {t}: {e:#}");
-                    ledger.record_fault(w);
+        timers.time("comm", || {
+            for &w in &planned {
+                // lint: allow(panic_freedom, "w comes from sample_clients over 0..k and links.len() == k — in range by construction")
+                match links[w].send_raw(&encoded) {
+                    Ok(sent) => {
+                        ledger.record_down(w, down);
+                        ledger.record_wire_down(sent as u64);
+                        record_to(
+                            &cfg.trace,
+                            Event::BroadcastSent {
+                                t: t as u32,
+                                worker: w as u32,
+                                floats: down.floats,
+                            },
+                        );
+                        reachable.push(w);
+                    }
+                    Err(e) => {
+                        obs_warn!("net: worker {w} unreachable for round {t}: {e:#}");
+                        record_to(
+                            &cfg.trace,
+                            Event::Sever { t: t as u32, worker: w as u32 },
+                        );
+                        ledger.record_fault(w);
+                    }
                 }
             }
-        }
+        });
 
         // Uplink: collect every reachable worker's update concurrently —
         // one scoped thread per worker against the shared absolute
@@ -701,12 +748,14 @@ pub fn run_server_rounds_elastic(
         }
         let mut collected: Vec<Option<CollectOutcome>> = Vec::new();
         collected.resize_with(tasks.len(), || None);
-        thread::scope(|scope| {
-            for ((w, link), out) in tasks.into_iter().zip(collected.iter_mut()) {
-                scope.spawn(move || {
-                    *out = Some(collect_update(link.as_mut(), w, t, deadline));
-                });
-            }
+        timers.time("comm", || {
+            thread::scope(|scope| {
+                for ((w, link), out) in tasks.into_iter().zip(collected.iter_mut()) {
+                    scope.spawn(move || {
+                        *out = Some(collect_update(link.as_mut(), w, t, deadline));
+                    });
+                }
+            });
         });
 
         let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(order.len());
@@ -716,7 +765,7 @@ pub fn run_server_rounds_elastic(
                 // A scoped collector thread always writes its slot before
                 // the scope joins; if one ever vanished, count the worker
                 // absent for the round rather than killing the fleet.
-                eprintln!("net: no collector result for worker {w} (round {t})");
+                obs_warn!("net: no collector result for worker {w} (round {t})");
                 ledger.record_fault(w);
                 continue;
             };
@@ -727,19 +776,52 @@ pub fn run_server_rounds_elastic(
                 Ok((msg, bytes)) => {
                     ledger.record_wire_up(bytes);
                     ledger.record(w, msg.cost, msg.is_scalar());
+                    record_to(
+                        &cfg.trace,
+                        Event::WorkerUplink {
+                            t: t as u32,
+                            worker: w as u32,
+                            kind: uplink_kinds.classify(w, msg.is_scalar()),
+                            floats: msg.cost.floats,
+                        },
+                    );
                     // lint: allow(reduction_order, "participant-order f64 train-loss sum, identical to the sequential engine")
                     train_loss_sum += msg.train_loss;
                     msgs.push(msg);
                 }
                 Err(e) => {
-                    eprintln!("net: worker {w} absent from round {t}: {e:#}");
+                    obs_warn!("net: worker {w} absent from round {t}: {e:#}");
+                    record_to(
+                        &cfg.trace,
+                        Event::DeadlineMiss { t: t as u32, worker: w as u32 },
+                    );
                     ledger.record_fault(w);
                 }
             }
         }
         if !msgs.is_empty() {
-            server.apply(&msgs)?;
+            timers.time("aggregate", || server.apply(&msgs))?;
         }
+        // Absences surface in the trace at commit time, in planned order —
+        // the shared placement across all engines (see `run_fl`).
+        if cfg.trace.is_some() {
+            for &w in &planned {
+                if !msgs.iter().any(|m| m.worker == w) {
+                    record_to(
+                        &cfg.trace,
+                        Event::FaultInjected { t: t as u32, worker: w as u32 },
+                    );
+                }
+            }
+        }
+        record_to(
+            &cfg.trace,
+            Event::RoundCommit {
+                t: t as u32,
+                participants: msgs.len() as u32,
+                faults: (planned.len() - msgs.len()) as u32,
+            },
+        );
 
         let mut rec = RoundRecord {
             round: t,
@@ -755,6 +837,8 @@ pub fn run_server_rounds_elastic(
             wall_secs: start.elapsed().as_secs_f64(),
             participants: msgs.len(),
             faults: planned.len() - msgs.len(),
+            t_comm: timers.get("comm") - t_comm0,
+            t_aggregate: timers.get("aggregate") - t_aggregate0,
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {

@@ -1,0 +1,51 @@
+//! The single wall-clock seam of the observability layer.
+//!
+//! fedlint's `determinism` rule bans ad-hoc clock reads across the
+//! aggregation paths, and `rust/src/obs/` is inside that scope. Trace
+//! timestamps are wall-clock by nature, so the whole layer funnels
+//! through this one annotated constructor: the origin instant is
+//! captured exactly once per recorder and every timestamp is a
+//! monotonic microsecond offset from it. Timestamps ride only the
+//! diagnostic channel — `Recorder::deterministic_stream` strips them —
+//! so clock skew can never leak into parity-checked payloads.
+
+use std::time::Instant;
+
+/// Monotonic clock fixed at recorder construction.
+#[derive(Clone, Copy, Debug)]
+pub struct Clock {
+    origin: Instant,
+}
+
+impl Clock {
+    /// Capture the run origin — the only wall-clock read in the
+    /// observability layer.
+    pub fn new() -> Self {
+        let origin = Instant::now(); // lint: allow(determinism, "the one obs clock seam: timestamps are diagnostic-only and stripped from the parity stream")
+        Self { origin }
+    }
+
+    /// Microseconds elapsed since the run origin.
+    pub fn micros(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micros_is_monotonic_from_the_origin() {
+        let c = Clock::new();
+        let a = c.micros();
+        let b = c.micros();
+        assert!(b >= a, "clock went backwards: {a} -> {b}");
+    }
+}

@@ -1,0 +1,352 @@
+//! Typed trace events with a fixed-size, allocation-free encoding.
+//!
+//! Events split into two classes. **Deterministic** events — round
+//! lifecycle, broadcasts, uplinks, faults, rejoins — carry payloads that
+//! are pure functions of seed + config, so the filtered stream is
+//! bit-diffable across all four engines (`tests/trace_parity.rs` pins
+//! that). **Diagnostic** events — deadline misses, severs, handshake
+//! outcomes — describe wall-clock and transport accidents; they are
+//! recorded with timestamps but excluded from parity comparison.
+//!
+//! Every payload is a handful of fixed-width integers, packed into
+//! [`Encoded`] (one tag byte, one kind byte, two `u32` operands, one
+//! `u64` operand), so recording an event never touches the heap.
+
+/// How a worker's uplink message is classified for telemetry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UplinkKind {
+    /// LBG scalar step: a single look-back coefficient rode the wire.
+    Scalar,
+    /// First dense gradient from this worker (subspace bootstrap).
+    Full,
+    /// A later dense gradient: the worker refreshed its look-back basis
+    /// (including the forced refresh after a rejoin).
+    Refresh,
+}
+
+/// Derives [`UplinkKind`] from payload shape alone, identically on every
+/// engine: the first dense payload from a worker is `Full` (bootstrap),
+/// every later dense payload is `Refresh`, scalars are `Scalar`.
+/// Preallocated per run; `classify` never allocates.
+#[derive(Debug)]
+pub struct UplinkTracker {
+    seen_full: Vec<bool>,
+}
+
+impl UplinkTracker {
+    /// Tracker for a fleet of `k` workers.
+    pub fn new(k: usize) -> Self {
+        Self { seen_full: vec![false; k] }
+    }
+
+    /// Classify one uplink from `worker` given whether it was a scalar.
+    pub fn classify(&mut self, worker: usize, is_scalar: bool) -> UplinkKind {
+        if is_scalar {
+            return UplinkKind::Scalar;
+        }
+        match self.seen_full.get_mut(worker) {
+            Some(seen) if *seen => UplinkKind::Refresh,
+            Some(seen) => {
+                *seen = true;
+                UplinkKind::Full
+            }
+            // Out-of-range worker id: classify conservatively as Full.
+            None => UplinkKind::Full,
+        }
+    }
+}
+
+/// One trace event. All payloads are fixed-width integers so recording
+/// is allocation-free; see [`Encoded`] for the packed form and the
+/// module docs for the deterministic/diagnostic split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A round began; `sampled` workers were planned to participate.
+    RoundStart {
+        /// Round index.
+        t: u32,
+        /// Number of planned (sampled) workers.
+        sampled: u32,
+    },
+    /// The model was broadcast to one planned worker.
+    BroadcastSent {
+        /// Round index.
+        t: u32,
+        /// Receiving worker.
+        worker: u32,
+        /// Model floats sent down.
+        floats: u64,
+    },
+    /// One worker's update arrived and joined the aggregate.
+    WorkerUplink {
+        /// Round index.
+        t: u32,
+        /// Sending worker.
+        worker: u32,
+        /// Payload classification.
+        kind: UplinkKind,
+        /// Uplink floats carried by the message.
+        floats: u64,
+    },
+    /// A planned worker contributed nothing to the round.
+    FaultInjected {
+        /// Round index.
+        t: u32,
+        /// Absent worker.
+        worker: u32,
+    },
+    /// A previously absent worker rejoined ahead of this round (its
+    /// next uplink is a forced dense refresh).
+    Rejoin {
+        /// Round index.
+        t: u32,
+        /// Rejoining worker.
+        worker: u32,
+    },
+    /// The round committed with this participation tally.
+    RoundCommit {
+        /// Round index.
+        t: u32,
+        /// Updates aggregated.
+        participants: u32,
+        /// Planned workers that never arrived.
+        faults: u32,
+    },
+    /// Diagnostic: a worker missed the round collection deadline.
+    DeadlineMiss {
+        /// Round index.
+        t: u32,
+        /// Late worker.
+        worker: u32,
+    },
+    /// Diagnostic: a worker's link was torn down mid-run.
+    Sever {
+        /// Round index at which the link died.
+        t: u32,
+        /// Severed worker.
+        worker: u32,
+    },
+    /// Diagnostic: the server accepted a worker handshake.
+    HandshakeAccepted {
+        /// Seated worker.
+        worker: u32,
+        /// `true` when this was a protocol-v2 rejoin, not a first hello.
+        rejoin: bool,
+    },
+    /// Diagnostic: the server rejected a handshake.
+    HandshakeRejected {
+        /// Coarse reason class (wire protocol error code space).
+        code: u32,
+    },
+}
+
+// Deterministic tags live below `DIAG_BASE`, diagnostics at or above it;
+// `Encoded::is_deterministic` keys off that split.
+const TAG_ROUND_START: u8 = 0;
+const TAG_BROADCAST_SENT: u8 = 1;
+const TAG_WORKER_UPLINK: u8 = 2;
+const TAG_FAULT_INJECTED: u8 = 3;
+const TAG_REJOIN: u8 = 4;
+const TAG_ROUND_COMMIT: u8 = 5;
+const DIAG_BASE: u8 = 16;
+const TAG_DEADLINE_MISS: u8 = 16;
+const TAG_SEVER: u8 = 17;
+const TAG_HANDSHAKE_ACCEPTED: u8 = 18;
+const TAG_HANDSHAKE_REJECTED: u8 = 19;
+
+const KIND_SCALAR: u8 = 0;
+const KIND_FULL: u8 = 1;
+const KIND_REFRESH: u8 = 2;
+
+/// The fixed-size packed form of an [`Event`]: one tag byte, one kind
+/// byte, two `u32` operands, one `u64` operand. `Copy + Eq`, so ring
+/// slots are plain stores and parity comparison is `==` on slices.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Encoded {
+    /// Event discriminant.
+    pub tag: u8,
+    /// Sub-kind (uplink classification, rejoin flag); 0 when unused.
+    pub kind: u8,
+    /// First operand (usually the round index).
+    pub a: u32,
+    /// Second operand (usually the worker id).
+    pub b: u32,
+    /// Wide operand (float counts); 0 when unused.
+    pub c: u64,
+}
+
+impl Encoded {
+    /// `true` for events whose payload is a pure function of seed +
+    /// config — the parity-checked stream.
+    pub fn is_deterministic(&self) -> bool {
+        self.tag < DIAG_BASE
+    }
+
+    /// Unpack into the typed form; `None` for an unknown tag or kind
+    /// (possible when reading a trace written by a newer build).
+    pub fn decode(&self) -> Option<Event> {
+        let ev = match self.tag {
+            TAG_ROUND_START => Event::RoundStart { t: self.a, sampled: self.b },
+            TAG_BROADCAST_SENT => {
+                Event::BroadcastSent { t: self.a, worker: self.b, floats: self.c }
+            }
+            TAG_WORKER_UPLINK => {
+                let kind = match self.kind {
+                    KIND_SCALAR => UplinkKind::Scalar,
+                    KIND_FULL => UplinkKind::Full,
+                    KIND_REFRESH => UplinkKind::Refresh,
+                    _ => return None,
+                };
+                Event::WorkerUplink { t: self.a, worker: self.b, kind, floats: self.c }
+            }
+            TAG_FAULT_INJECTED => Event::FaultInjected { t: self.a, worker: self.b },
+            TAG_REJOIN => Event::Rejoin { t: self.a, worker: self.b },
+            TAG_ROUND_COMMIT => {
+                Event::RoundCommit { t: self.a, participants: self.b, faults: self.c as u32 }
+            }
+            TAG_DEADLINE_MISS => Event::DeadlineMiss { t: self.a, worker: self.b },
+            TAG_SEVER => Event::Sever { t: self.a, worker: self.b },
+            TAG_HANDSHAKE_ACCEPTED => {
+                Event::HandshakeAccepted { worker: self.b, rejoin: self.kind == 1 }
+            }
+            TAG_HANDSHAKE_REJECTED => Event::HandshakeRejected { code: self.b },
+            _ => return None,
+        };
+        Some(ev)
+    }
+}
+
+impl Event {
+    /// Pack into the fixed-size wire form. Total function: every event
+    /// round-trips through [`Encoded::decode`] bit-identically.
+    pub fn encode(self) -> Encoded {
+        match self {
+            Event::RoundStart { t, sampled } => {
+                Encoded { tag: TAG_ROUND_START, kind: 0, a: t, b: sampled, c: 0 }
+            }
+            Event::BroadcastSent { t, worker, floats } => {
+                Encoded { tag: TAG_BROADCAST_SENT, kind: 0, a: t, b: worker, c: floats }
+            }
+            Event::WorkerUplink { t, worker, kind, floats } => {
+                let kind = match kind {
+                    UplinkKind::Scalar => KIND_SCALAR,
+                    UplinkKind::Full => KIND_FULL,
+                    UplinkKind::Refresh => KIND_REFRESH,
+                };
+                Encoded { tag: TAG_WORKER_UPLINK, kind, a: t, b: worker, c: floats }
+            }
+            Event::FaultInjected { t, worker } => {
+                Encoded { tag: TAG_FAULT_INJECTED, kind: 0, a: t, b: worker, c: 0 }
+            }
+            Event::Rejoin { t, worker } => {
+                Encoded { tag: TAG_REJOIN, kind: 0, a: t, b: worker, c: 0 }
+            }
+            Event::RoundCommit { t, participants, faults } => Encoded {
+                tag: TAG_ROUND_COMMIT,
+                kind: 0,
+                a: t,
+                b: participants,
+                c: u64::from(faults),
+            },
+            Event::DeadlineMiss { t, worker } => {
+                Encoded { tag: TAG_DEADLINE_MISS, kind: 0, a: t, b: worker, c: 0 }
+            }
+            Event::Sever { t, worker } => {
+                Encoded { tag: TAG_SEVER, kind: 0, a: t, b: worker, c: 0 }
+            }
+            Event::HandshakeAccepted { worker, rejoin } => Encoded {
+                tag: TAG_HANDSHAKE_ACCEPTED,
+                kind: u8::from(rejoin),
+                a: 0,
+                b: worker,
+                c: 0,
+            },
+            Event::HandshakeRejected { code } => {
+                Encoded { tag: TAG_HANDSHAKE_REJECTED, kind: 0, a: 0, b: code, c: 0 }
+            }
+        }
+    }
+
+    /// `true` when this event belongs to the parity-checked stream.
+    pub fn is_deterministic(self) -> bool {
+        self.encode().is_deterministic()
+    }
+
+    /// Stable snake_case name for sinks and summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            Event::RoundStart { .. } => "round_start",
+            Event::BroadcastSent { .. } => "broadcast_sent",
+            Event::WorkerUplink { .. } => "worker_uplink",
+            Event::FaultInjected { .. } => "fault_injected",
+            Event::Rejoin { .. } => "rejoin",
+            Event::RoundCommit { .. } => "round_commit",
+            Event::DeadlineMiss { .. } => "deadline_miss",
+            Event::Sever { .. } => "sever",
+            Event::HandshakeAccepted { .. } => "handshake_accepted",
+            Event::HandshakeRejected { .. } => "handshake_rejected",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_events() -> Vec<Event> {
+        vec![
+            Event::RoundStart { t: 3, sampled: 4 },
+            Event::BroadcastSent { t: 3, worker: 1, floats: 64 },
+            Event::WorkerUplink { t: 3, worker: 1, kind: UplinkKind::Scalar, floats: 1 },
+            Event::WorkerUplink { t: 0, worker: 2, kind: UplinkKind::Full, floats: 64 },
+            Event::WorkerUplink { t: 5, worker: 2, kind: UplinkKind::Refresh, floats: 64 },
+            Event::FaultInjected { t: 2, worker: 2 },
+            Event::Rejoin { t: 4, worker: 2 },
+            Event::RoundCommit { t: 3, participants: 3, faults: 1 },
+            Event::DeadlineMiss { t: 3, worker: 0 },
+            Event::Sever { t: 2, worker: 2 },
+            Event::HandshakeAccepted { worker: 2, rejoin: true },
+            Event::HandshakeRejected { code: 7 },
+        ]
+    }
+
+    #[test]
+    fn every_event_roundtrips_through_the_fixed_encoding() {
+        for ev in all_events() {
+            let enc = ev.encode();
+            assert_eq!(enc.decode(), Some(ev), "{ev:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_split_matches_the_taxonomy() {
+        for ev in all_events() {
+            let expect = !matches!(
+                ev,
+                Event::DeadlineMiss { .. }
+                    | Event::Sever { .. }
+                    | Event::HandshakeAccepted { .. }
+                    | Event::HandshakeRejected { .. }
+            );
+            assert_eq!(ev.is_deterministic(), expect, "{ev:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_tags_and_kinds_decode_to_none() {
+        assert_eq!(Encoded { tag: 200, kind: 0, a: 0, b: 0, c: 0 }.decode(), None);
+        assert_eq!(Encoded { tag: 2, kind: 9, a: 0, b: 0, c: 0 }.decode(), None);
+    }
+
+    #[test]
+    fn tracker_classifies_bootstrap_then_refresh() {
+        let mut tr = UplinkTracker::new(2);
+        assert_eq!(tr.classify(0, true), UplinkKind::Scalar);
+        assert_eq!(tr.classify(0, false), UplinkKind::Full);
+        assert_eq!(tr.classify(0, false), UplinkKind::Refresh);
+        assert_eq!(tr.classify(1, false), UplinkKind::Full);
+        assert_eq!(tr.classify(0, true), UplinkKind::Scalar);
+        // Out-of-range ids never panic.
+        assert_eq!(tr.classify(9, false), UplinkKind::Full);
+    }
+}

@@ -1,0 +1,362 @@
+//! Preregistered-key metrics registry: counters, gauges, and a fixed
+//! integer histogram, sized at compile time so recording is an array
+//! store — no maps, no allocation after construction.
+//!
+//! The registry is the unification point the ISSUE asks for: a
+//! [`RoundRecord`] already carries both the `CommLedger`-derived
+//! accounting columns and the `PhaseTimer`-derived phase columns, so
+//! [`Metrics::observe_round`] folds one committed round into a single
+//! snapshot, and [`Metrics::observe_ledger`] /
+//! [`Metrics::observe_timers`] reconcile the end-of-run totals.
+
+use crate::coordinator::CommLedger;
+use crate::metrics::RoundRecord;
+use crate::util::timer::PhaseTimer;
+
+/// Monotonic counter keys. Cumulative wire counters mirror the ledger
+/// (latest value wins); tally counters accumulate per round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Rounds committed.
+    Rounds,
+    /// Cumulative uplink floats (ledger `total_floats`).
+    UpFloats,
+    /// Cumulative uplink payload bits (ledger `total_bits`).
+    UpBits,
+    /// Cumulative downlink floats.
+    DownFloats,
+    /// Cumulative downlink payload bits.
+    DownBits,
+    /// Measured uplink wire bytes (networked engines only).
+    WireUpBytes,
+    /// Measured downlink wire bytes (networked engines only).
+    WireDownBytes,
+    /// Dense (Full/Refresh) uplinks.
+    FullSends,
+    /// Scalar uplinks.
+    ScalarSends,
+    /// Planned-but-absent worker slots.
+    Faults,
+    /// Worker rejoins.
+    Rejoins,
+}
+
+impl Counter {
+    /// Number of counter keys.
+    pub const COUNT: usize = 11;
+
+    /// Every key in export order.
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::Rounds,
+        Counter::UpFloats,
+        Counter::UpBits,
+        Counter::DownFloats,
+        Counter::DownBits,
+        Counter::WireUpBytes,
+        Counter::WireDownBytes,
+        Counter::FullSends,
+        Counter::ScalarSends,
+        Counter::Faults,
+        Counter::Rejoins,
+    ];
+
+    /// Stable snake_case key name for export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Rounds => "rounds",
+            Counter::UpFloats => "up_floats",
+            Counter::UpBits => "up_bits",
+            Counter::DownFloats => "down_floats",
+            Counter::DownBits => "down_bits",
+            Counter::WireUpBytes => "wire_up_bytes",
+            Counter::WireDownBytes => "wire_down_bytes",
+            Counter::FullSends => "full_sends",
+            Counter::ScalarSends => "scalar_sends",
+            Counter::Faults => "faults",
+            Counter::Rejoins => "rejoins",
+        }
+    }
+}
+
+/// Last-value gauge keys (per-round readings; latest round wins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// Participants in the latest committed round.
+    Participants,
+    /// Training loss of the latest committed round.
+    TrainLoss,
+    /// Seconds spent in local SGD this round (`t_train`).
+    TTrain,
+    /// Seconds spent in LBGM compression this round (`t_compress`).
+    TCompress,
+    /// Seconds spent in transport send/collect this round (`t_comm`).
+    TComm,
+    /// Seconds spent applying the aggregate this round (`t_aggregate`).
+    TAggregate,
+}
+
+impl Gauge {
+    /// Number of gauge keys.
+    pub const COUNT: usize = 6;
+
+    /// Every key in export order.
+    pub const ALL: [Gauge; Gauge::COUNT] = [
+        Gauge::Participants,
+        Gauge::TrainLoss,
+        Gauge::TTrain,
+        Gauge::TCompress,
+        Gauge::TComm,
+        Gauge::TAggregate,
+    ];
+
+    /// Stable snake_case key name for export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::Participants => "participants",
+            Gauge::TrainLoss => "train_loss",
+            Gauge::TTrain => "t_train",
+            Gauge::TCompress => "t_compress",
+            Gauge::TComm => "t_comm",
+            Gauge::TAggregate => "t_aggregate",
+        }
+    }
+}
+
+/// Buckets in the participants histogram: exact counts `0..=15`, with
+/// the last bucket saturating everything larger.
+pub const HIST_BUCKETS: usize = 17;
+
+/// Fixed-bucket integer histogram (no floats, no allocation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+}
+
+impl Histogram {
+    /// Record one integer observation.
+    pub fn record(&mut self, value: usize) {
+        let idx = value.min(HIST_BUCKETS - 1);
+        if let Some(b) = self.buckets.get_mut(idx) {
+            *b += 1;
+        }
+        self.count += 1;
+    }
+
+    /// Observations landed in bucket `idx` (0 when out of range).
+    pub fn bucket(&self, idx: usize) -> u64 {
+        self.buckets.get(idx).copied().unwrap_or(0)
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// The per-run metrics registry. All storage is fixed-size arrays
+/// indexed by the preregistered [`Counter`] / [`Gauge`] keys.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Metrics {
+    counters: [u64; Counter::COUNT],
+    gauges: [f64; Gauge::COUNT],
+    participants: Histogram,
+}
+
+impl Metrics {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to a counter.
+    pub fn inc(&mut self, key: Counter, by: u64) {
+        if let Some(c) = self.counters.get_mut(key as usize) {
+            *c += by;
+        }
+    }
+
+    /// Overwrite a counter with a cumulative reading.
+    pub fn store(&mut self, key: Counter, value: u64) {
+        if let Some(c) = self.counters.get_mut(key as usize) {
+            *c = value;
+        }
+    }
+
+    /// Current counter value.
+    pub fn counter(&self, key: Counter) -> u64 {
+        self.counters.get(key as usize).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to its latest reading.
+    pub fn set(&mut self, key: Gauge, value: f64) {
+        if let Some(g) = self.gauges.get_mut(key as usize) {
+            *g = value;
+        }
+    }
+
+    /// Current gauge value.
+    pub fn gauge(&self, key: Gauge) -> f64 {
+        self.gauges.get(key as usize).copied().unwrap_or(0.0)
+    }
+
+    /// Participants-per-round histogram.
+    pub fn participants_hist(&self) -> &Histogram {
+        &self.participants
+    }
+
+    /// Fold one committed round into the registry. The record's
+    /// cumulative columns (ledger-derived) overwrite, its per-round
+    /// columns (tallies, phase timings) accumulate or gauge.
+    pub fn observe_round(&mut self, r: &RoundRecord) {
+        self.inc(Counter::Rounds, 1);
+        self.store(Counter::UpFloats, r.floats_up);
+        self.store(Counter::UpBits, r.bits_up);
+        self.store(Counter::DownFloats, r.floats_down);
+        self.store(Counter::DownBits, r.bits_down);
+        self.store(Counter::WireUpBytes, r.wire_up_bytes);
+        self.store(Counter::WireDownBytes, r.wire_down_bytes);
+        self.inc(Counter::FullSends, r.full_sends);
+        self.inc(Counter::ScalarSends, r.scalar_sends);
+        self.inc(Counter::Faults, r.faults as u64);
+        self.set(Gauge::Participants, r.participants as f64);
+        self.set(Gauge::TrainLoss, r.train_loss);
+        self.set(Gauge::TTrain, r.t_train);
+        self.set(Gauge::TCompress, r.t_compress);
+        self.set(Gauge::TComm, r.t_comm);
+        self.set(Gauge::TAggregate, r.t_aggregate);
+        self.participants.record(r.participants);
+    }
+
+    /// Reconcile cumulative counters against the final ledger (the
+    /// authoritative accounting source).
+    pub fn observe_ledger(&mut self, ledger: &CommLedger) {
+        self.store(Counter::UpFloats, ledger.total_floats);
+        self.store(Counter::UpBits, ledger.total_bits);
+        self.store(Counter::DownFloats, ledger.total_down_floats());
+        self.store(Counter::DownBits, ledger.total_down_bits());
+        self.store(Counter::WireUpBytes, ledger.wire_up_bytes);
+        self.store(Counter::WireDownBytes, ledger.wire_down_bytes);
+        self.store(Counter::FullSends, ledger.full_msgs);
+        self.store(Counter::ScalarSends, ledger.scalar_msgs);
+        self.store(Counter::Faults, ledger.total_faults);
+        self.store(Counter::Rejoins, ledger.total_rejoins);
+    }
+
+    /// Capture whole-run phase totals from a [`PhaseTimer`] into the
+    /// phase gauges.
+    pub fn observe_timers(&mut self, timers: &PhaseTimer) {
+        self.set(Gauge::TTrain, timers.get("local_sgd"));
+        self.set(Gauge::TCompress, timers.get("lbgm_uplink"));
+        self.set(Gauge::TComm, timers.get("comm"));
+        self.set(Gauge::TAggregate, timers.get("aggregate"));
+    }
+
+    /// Export every key with its value, counters first, in the stable
+    /// [`Counter::ALL`] / [`Gauge::ALL`] order.
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        let mut out = Vec::with_capacity(Counter::COUNT + Gauge::COUNT);
+        for key in Counter::ALL {
+            out.push((key.name(), self.counter(key) as f64));
+        }
+        for key in Gauge::ALL {
+            out.push((key.name(), self.gauge(key)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_index_by_key() {
+        let mut m = Metrics::new();
+        m.inc(Counter::Rounds, 2);
+        m.inc(Counter::Rounds, 1);
+        m.store(Counter::UpFloats, 640);
+        m.set(Gauge::TrainLoss, 0.25);
+        assert_eq!(m.counter(Counter::Rounds), 3);
+        assert_eq!(m.counter(Counter::UpFloats), 640);
+        assert_eq!(m.gauge(Gauge::TrainLoss), 0.25);
+        assert_eq!(m.counter(Counter::Faults), 0);
+    }
+
+    #[test]
+    fn observe_round_unifies_ledger_and_timer_columns() {
+        let mut m = Metrics::new();
+        let r = RoundRecord {
+            round: 0,
+            train_loss: 1.5,
+            floats_up: 64,
+            full_sends: 4,
+            participants: 4,
+            t_train: 0.5,
+            t_aggregate: 0.125,
+            ..Default::default()
+        };
+        m.observe_round(&r);
+        let r2 = RoundRecord {
+            round: 1,
+            train_loss: 1.0,
+            floats_up: 68,
+            scalar_sends: 4,
+            participants: 3,
+            faults: 1,
+            t_train: 0.25,
+            ..Default::default()
+        };
+        m.observe_round(&r2);
+
+        assert_eq!(m.counter(Counter::Rounds), 2);
+        assert_eq!(m.counter(Counter::UpFloats), 68, "cumulative: latest wins");
+        assert_eq!(m.counter(Counter::FullSends), 4);
+        assert_eq!(m.counter(Counter::ScalarSends), 4);
+        assert_eq!(m.counter(Counter::Faults), 1);
+        assert_eq!(m.gauge(Gauge::Participants), 3.0);
+        assert_eq!(m.gauge(Gauge::TTrain), 0.25);
+        assert_eq!(m.participants_hist().count(), 2);
+        assert_eq!(m.participants_hist().bucket(4), 1);
+        assert_eq!(m.participants_hist().bucket(3), 1);
+    }
+
+    #[test]
+    fn observe_ledger_reconciles_totals() {
+        use crate::compress::Cost;
+        let mut ledger = CommLedger::new(3);
+        ledger.record(0, Cost { floats: 64, bits: 2048 }, false);
+        ledger.record(1, Cost { floats: 1, bits: 32 }, true);
+        ledger.record_down(0, Cost { floats: 64, bits: 2048 });
+        ledger.record_fault(2);
+        ledger.record_rejoin(2);
+        let mut m = Metrics::new();
+        m.observe_ledger(&ledger);
+        assert_eq!(m.counter(Counter::UpFloats), 65);
+        assert_eq!(m.counter(Counter::DownFloats), 64);
+        assert_eq!(m.counter(Counter::FullSends), 1);
+        assert_eq!(m.counter(Counter::ScalarSends), 1);
+        assert_eq!(m.counter(Counter::Faults), 1);
+        assert_eq!(m.counter(Counter::Rejoins), 1);
+    }
+
+    #[test]
+    fn histogram_saturates_its_last_bucket() {
+        let mut h = Histogram::default();
+        h.record(0);
+        h.record(16);
+        h.record(500);
+        assert_eq!(h.bucket(0), 1);
+        assert_eq!(h.bucket(HIST_BUCKETS - 1), 2);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.bucket(999), 0);
+    }
+
+    #[test]
+    fn rows_exports_every_preregistered_key() {
+        let rows = Metrics::new().rows();
+        assert_eq!(rows.len(), Counter::COUNT + Gauge::COUNT);
+        assert_eq!(rows[0].0, "rounds");
+        assert!(rows.iter().any(|(k, _)| *k == "t_aggregate"));
+    }
+}

@@ -1,0 +1,36 @@
+//! Observability: deterministic tracing, leveled logging, and a
+//! preregistered metrics registry — dependency-free, threaded through
+//! all four round engines and the chaos sim.
+//!
+//! # Design
+//!
+//! * [`event`] — typed events with a fixed-size encoding. Deterministic
+//!   events (round lifecycle, broadcasts, uplinks, faults, rejoins)
+//!   have payloads that are pure functions of seed + config, so the
+//!   stream is bit-diffable across engines; diagnostic events (deadline
+//!   misses, severs, handshakes) describe transport accidents and are
+//!   excluded from parity.
+//! * [`recorder`] — a preallocated ring buffer behind
+//!   [`TraceHandle`]; recording in the steady-state round loop is
+//!   0 allocs/op (gated by `benches/regress.rs`).
+//! * [`clock`] — the single fedlint-annotated wall-clock seam; all
+//!   timestamps are offsets from one origin and never enter the
+//!   parity-checked stream.
+//! * [`metrics`] — counters/gauges/histograms with preregistered keys,
+//!   unifying `CommLedger` and `PhaseTimer` readings per round.
+//! * [`log`] — leveled, count-rate-limited diagnostics replacing the
+//!   ad-hoc `eprintln!` sites (quiet by default; `--log-level` raises).
+//! * [`sink`] — JSONL export and the `fedrecycle trace` summarizer.
+//!
+//! Engines opt in through `FlConfig::trace`; a `None` handle keeps the
+//! entire layer out of the round loop.
+
+pub mod clock;
+pub mod event;
+pub mod log;
+pub mod metrics;
+pub mod recorder;
+pub mod sink;
+
+pub use event::{Encoded, Event, UplinkKind, UplinkTracker};
+pub use recorder::{record_to, shared, Recorded, Recorder, TraceHandle};

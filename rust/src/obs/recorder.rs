@@ -1,0 +1,196 @@
+//! Zero-allocation ring-buffer recorder for trace events.
+//!
+//! All slots are allocated once at construction; `record` packs the
+//! event into a fixed-size [`Recorded`] slot in place and wraps when
+//! full (counting what it overwrote), so the steady-state round loop
+//! with tracing enabled stays at 0 allocs/op — pinned by the
+//! `worker_round_traced_steady_state_256k` gate in `benches/regress.rs`
+//! and by fedlint's `alloc_discipline` sweep over `rust/src/obs/`.
+
+use std::sync::{Arc, Mutex};
+
+use super::clock::Clock;
+use super::event::{Encoded, Event};
+
+/// Default ring capacity (events). 16 Ki slots × 24 bytes ≈ 400 KiB —
+/// roomy enough that the test-scale runs never wrap.
+pub const DEFAULT_CAPACITY: usize = 16_384;
+
+/// One recorded slot: a global sequence number, a microsecond timestamp
+/// (diagnostic only — never compared for parity), and the fixed-size
+/// event encoding.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Recorded {
+    /// Monotonic per-recorder sequence number (counts drops too).
+    pub seq: u64,
+    /// Microseconds since the recorder's clock origin.
+    pub ts_micros: u64,
+    /// The packed event.
+    pub ev: Encoded,
+}
+
+/// Shared recorder handle threaded through engines via
+/// `FlConfig::trace`. Engines hold the lock only for the duration of a
+/// single fixed-size slot write.
+pub type TraceHandle = Arc<Mutex<Recorder>>;
+
+/// Allocate a shared recorder with `cap` slots.
+pub fn shared(cap: usize) -> TraceHandle {
+    Arc::new(Mutex::new(Recorder::with_capacity(cap)))
+}
+
+/// Record `ev` into an optional trace handle. A poisoned lock is
+/// ignored rather than propagated — telemetry must never take a round
+/// loop down.
+pub fn record_to(trace: &Option<TraceHandle>, ev: Event) {
+    if let Some(handle) = trace {
+        if let Ok(mut rec) = handle.lock() {
+            rec.record(ev);
+        }
+    }
+}
+
+/// Preallocated ring buffer of [`Recorded`] slots.
+#[derive(Debug)]
+pub struct Recorder {
+    buf: Vec<Recorded>,
+    /// Next write position.
+    head: usize,
+    /// Live slots (≤ capacity).
+    len: usize,
+    seq: u64,
+    dropped: u64,
+    clock: Clock,
+}
+
+impl Recorder {
+    /// Ring with `cap` slots (clamped to at least 1), fully allocated
+    /// up front.
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            buf: vec![Recorded::default(); cap],
+            head: 0,
+            len: 0,
+            seq: 0,
+            dropped: 0,
+            clock: Clock::new(),
+        }
+    }
+
+    /// Append one event, overwriting the oldest slot when the ring is
+    /// full. Never allocates.
+    pub fn record(&mut self, ev: Event) {
+        let ts = self.clock.micros();
+        let cap = self.buf.len();
+        if self.len == cap {
+            self.dropped += 1;
+        } else {
+            self.len += 1;
+        }
+        if let Some(slot) = self.buf.get_mut(self.head) {
+            *slot = Recorded { seq: self.seq, ts_micros: ts, ev: ev.encode() };
+        }
+        self.seq += 1;
+        self.head = (self.head + 1) % cap;
+    }
+
+    /// Slot capacity of the ring.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `true` when nothing has been recorded (or everything dropped).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Events overwritten because the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Held events, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Recorded> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).filter_map(move |i| self.buf.get((start + i) % cap))
+    }
+
+    /// The parity-checked stream: deterministic events only, sequence
+    /// numbers and timestamps stripped. `tests/trace_parity.rs` asserts
+    /// this is bit-identical across all four engines.
+    pub fn deterministic_stream(&self) -> Vec<Encoded> {
+        self.iter().map(|r| r.ev).filter(Encoded::is_deterministic).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u32) -> Event {
+        Event::RoundStart { t, sampled: 4 }
+    }
+
+    #[test]
+    fn records_in_order_with_increasing_seq() {
+        let mut r = Recorder::with_capacity(8);
+        for t in 0..5 {
+            r.record(ev(t));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+        let seqs: Vec<u64> = r.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        let rounds: Vec<u32> = r.iter().map(|s| s.ev.a).collect();
+        assert_eq!(rounds, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn wrap_overwrites_oldest_and_counts_drops() {
+        let mut r = Recorder::with_capacity(4);
+        for t in 0..10 {
+            r.record(ev(t));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let rounds: Vec<u32> = r.iter().map(|s| s.ev.a).collect();
+        assert_eq!(rounds, vec![6, 7, 8, 9], "oldest first after wrap");
+    }
+
+    #[test]
+    fn deterministic_stream_strips_diagnostics_and_timestamps() {
+        let mut r = Recorder::with_capacity(8);
+        r.record(Event::RoundStart { t: 0, sampled: 2 });
+        r.record(Event::DeadlineMiss { t: 0, worker: 1 });
+        r.record(Event::RoundCommit { t: 0, participants: 1, faults: 1 });
+        let stream = r.deterministic_stream();
+        assert_eq!(stream.len(), 2);
+        assert!(stream.iter().all(Encoded::is_deterministic));
+    }
+
+    #[test]
+    fn record_to_tolerates_missing_handle() {
+        record_to(&None, ev(0));
+        let h = shared(4);
+        record_to(&Some(Arc::clone(&h)), ev(1));
+        let guard = h.lock().unwrap();
+        assert_eq!(guard.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = Recorder::with_capacity(0);
+        r.record(ev(0));
+        r.record(ev(1));
+        assert_eq!(r.capacity(), 1);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+    }
+}

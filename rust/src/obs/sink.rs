@@ -1,0 +1,276 @@
+//! Trace sinks: JSONL export and the human summarizer behind
+//! `fedrecycle trace <run.jsonl>`.
+//!
+//! The export format is one JSON object per line. The first line is a
+//! `trace_meta` header (format version, event count, ring drops); every
+//! following line is one decoded event with its sequence number and
+//! microsecond timestamp. Sinks run after the round loop finishes, so
+//! they may allocate freely — the zero-alloc claim covers recording,
+//! not export.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::event::{Event, UplinkKind};
+use super::recorder::{Recorded, Recorder};
+use crate::util::json::{self, Json};
+
+/// Trace format version written into the `trace_meta` header.
+pub const TRACE_VERSION: u64 = 1;
+
+fn kind_str(kind: UplinkKind) -> &'static str {
+    match kind {
+        UplinkKind::Scalar => "scalar",
+        UplinkKind::Full => "full",
+        UplinkKind::Refresh => "refresh",
+    }
+}
+
+/// Render one recorded slot as a single JSON object (one JSONL line).
+pub fn event_json(slot: &Recorded) -> Json {
+    let mut pairs = vec![
+        ("seq", json::num(slot.seq as f64)),
+        ("ts_us", json::num(slot.ts_micros as f64)),
+    ];
+    match slot.ev.decode() {
+        Some(ev) => {
+            pairs.push(("ev", json::s(ev.name())));
+            match ev {
+                Event::RoundStart { t, sampled } => {
+                    pairs.push(("t", json::num(f64::from(t))));
+                    pairs.push(("sampled", json::num(f64::from(sampled))));
+                }
+                Event::BroadcastSent { t, worker, floats } => {
+                    pairs.push(("t", json::num(f64::from(t))));
+                    pairs.push(("worker", json::num(f64::from(worker))));
+                    pairs.push(("floats", json::num(floats as f64)));
+                }
+                Event::WorkerUplink { t, worker, kind, floats } => {
+                    pairs.push(("t", json::num(f64::from(t))));
+                    pairs.push(("worker", json::num(f64::from(worker))));
+                    pairs.push(("kind", json::s(kind_str(kind))));
+                    pairs.push(("floats", json::num(floats as f64)));
+                }
+                Event::FaultInjected { t, worker }
+                | Event::Rejoin { t, worker }
+                | Event::DeadlineMiss { t, worker }
+                | Event::Sever { t, worker } => {
+                    pairs.push(("t", json::num(f64::from(t))));
+                    pairs.push(("worker", json::num(f64::from(worker))));
+                }
+                Event::RoundCommit { t, participants, faults } => {
+                    pairs.push(("t", json::num(f64::from(t))));
+                    pairs.push(("participants", json::num(f64::from(participants))));
+                    pairs.push(("faults", json::num(f64::from(faults))));
+                }
+                Event::HandshakeAccepted { worker, rejoin } => {
+                    pairs.push(("worker", json::num(f64::from(worker))));
+                    pairs.push(("rejoin", Json::Bool(rejoin)));
+                }
+                Event::HandshakeRejected { code } => {
+                    pairs.push(("code", json::num(f64::from(code))));
+                }
+            }
+        }
+        None => {
+            pairs.push(("ev", json::s("unknown")));
+            pairs.push(("tag", json::num(f64::from(slot.ev.tag))));
+        }
+    }
+    json::obj(pairs)
+}
+
+/// Serialize the full recorder contents as JSONL (meta header first,
+/// then events oldest-first).
+pub fn to_jsonl(rec: &Recorder) -> String {
+    let meta = json::obj(vec![
+        ("ev", json::s("trace_meta")),
+        ("version", json::num(TRACE_VERSION as f64)),
+        ("events", json::num(rec.len() as f64)),
+        ("dropped", json::num(rec.dropped() as f64)),
+    ]);
+    let mut out = String::with_capacity(64 + rec.len() * 96);
+    out.push_str(&meta.to_string());
+    out.push('\n');
+    for slot in rec.iter() {
+        out.push_str(&event_json(slot).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write the recorder contents to `path` as JSONL, creating parent
+/// directories as needed.
+pub fn write_jsonl(path: &Path, rec: &Recorder) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, to_jsonl(rec))
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+/// Per-event-type tallies plus round aggregates pulled from a JSONL
+/// trace; the parsed form behind [`summarize`].
+#[derive(Debug, Default)]
+struct Summary {
+    counts: Vec<(String, u64)>,
+    rounds: u64,
+    participants: u64,
+    faults: u64,
+    scalar: u64,
+    full: u64,
+    refresh: u64,
+    dropped: u64,
+    first_us: Option<u64>,
+    last_us: u64,
+}
+
+impl Summary {
+    fn bump(&mut self, name: &str) {
+        for entry in self.counts.iter_mut() {
+            if entry.0 == name {
+                entry.1 += 1;
+                return;
+            }
+        }
+        self.counts.push((name.to_string(), 1));
+    }
+}
+
+/// Summarize a JSONL trace (as written by [`write_jsonl`]) into a
+/// human-readable report.
+pub fn summarize(text: &str) -> Result<String> {
+    let mut s = Summary::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        let name = v.req_str("ev").with_context(|| format!("line {}", i + 1))?;
+        if name == "trace_meta" {
+            s.dropped = v.get("dropped").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            continue;
+        }
+        s.bump(name);
+        if let Some(ts) = v.get("ts_us").and_then(Json::as_f64) {
+            let ts = ts as u64;
+            if s.first_us.is_none() {
+                s.first_us = Some(ts);
+            }
+            s.last_us = ts;
+        }
+        match name {
+            "round_commit" => {
+                s.rounds += 1;
+                let p = v.get("participants").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let f = v.get("faults").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                s.participants += p;
+                s.faults += f;
+            }
+            "worker_uplink" => match v.get("kind").and_then(Json::as_str) {
+                Some("scalar") => s.scalar += 1,
+                Some("full") => s.full += 1,
+                Some("refresh") => s.refresh += 1,
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+    let mut out = String::with_capacity(512);
+    let span_us = s.last_us.saturating_sub(s.first_us.unwrap_or(0));
+    let _ = writeln!(out, "trace summary");
+    let _ = writeln!(out, "  rounds committed     {}", s.rounds);
+    let _ = writeln!(out, "  participant slots    {}", s.participants);
+    let _ = writeln!(out, "  fault slots          {}", s.faults);
+    let _ = writeln!(
+        out,
+        "  uplinks              {} scalar / {} full / {} refresh",
+        s.scalar, s.full, s.refresh
+    );
+    let _ = writeln!(out, "  span                 {:.3} ms", span_us as f64 / 1000.0);
+    if s.dropped > 0 {
+        let _ = writeln!(out, "  ring drops           {}", s.dropped);
+    }
+    let _ = writeln!(out, "  events by type");
+    for (name, n) in &s.counts {
+        let _ = writeln!(out, "    {name:<20} {n}");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_recorder() -> Recorder {
+        let mut r = Recorder::with_capacity(32);
+        r.record(Event::Rejoin { t: 2, worker: 1 });
+        r.record(Event::RoundStart { t: 2, sampled: 2 });
+        r.record(Event::BroadcastSent { t: 2, worker: 0, floats: 16 });
+        r.record(Event::BroadcastSent { t: 2, worker: 1, floats: 16 });
+        r.record(Event::WorkerUplink {
+            t: 2,
+            worker: 0,
+            kind: UplinkKind::Scalar,
+            floats: 1,
+        });
+        r.record(Event::WorkerUplink {
+            t: 2,
+            worker: 1,
+            kind: UplinkKind::Refresh,
+            floats: 16,
+        });
+        r.record(Event::DeadlineMiss { t: 2, worker: 3 });
+        r.record(Event::RoundCommit { t: 2, participants: 2, faults: 0 });
+        r
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_carry_the_payload() {
+        let rec = sample_recorder();
+        let text = to_jsonl(&rec);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + rec.len());
+        let meta = Json::parse(lines[0]).unwrap();
+        assert_eq!(meta.req_str("ev").unwrap(), "trace_meta");
+        assert_eq!(meta.req_usize("events").unwrap(), rec.len());
+        let uplink = Json::parse(lines[6]).unwrap();
+        assert_eq!(uplink.req_str("ev").unwrap(), "worker_uplink");
+        assert_eq!(uplink.req_str("kind").unwrap(), "refresh");
+        assert_eq!(uplink.req_usize("floats").unwrap(), 16);
+    }
+
+    #[test]
+    fn summarize_counts_rounds_uplinks_and_faults() {
+        let text = to_jsonl(&sample_recorder());
+        let report = summarize(&text).unwrap();
+        assert!(report.contains("rounds committed     1"), "{report}");
+        assert!(report.contains("participant slots    2"), "{report}");
+        assert!(report.contains("1 scalar / 0 full / 1 refresh"), "{report}");
+        assert!(report.contains("deadline_miss"), "{report}");
+    }
+
+    #[test]
+    fn summarize_rejects_malformed_lines_with_position() {
+        let err = summarize("{\"ev\":\"round_start\"}\nnot json\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+    }
+
+    #[test]
+    fn write_jsonl_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("fedrecycle-obs-sink-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("run.jsonl");
+        write_jsonl(&path, &sample_recorder()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(summarize(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

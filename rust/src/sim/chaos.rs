@@ -33,6 +33,7 @@ use anyhow::Result;
 use crate::coordinator::messages::{Payload, WorkerMsg, SCALAR_COST};
 use crate::net::link::Link;
 use crate::net::wire::{self, Frame};
+use crate::obs::{record_to, Event, TraceHandle};
 use crate::util::rng::Rng;
 
 use super::fault::{FaultKind, FaultPlan};
@@ -57,6 +58,9 @@ pub struct ChaosLink {
     plan: Arc<FaultPlan>,
     /// Armed by a swallowed downlink; consumed by the next `recv`.
     pending: Option<(u64, FaultKind)>,
+    /// Optional trace handle: transport teardowns at a sever-span start
+    /// surface as diagnostic [`Event::Sever`] trace events.
+    trace: Option<TraceHandle>,
 }
 
 /// Replacement transport for a severed connection: every operation fails.
@@ -83,7 +87,18 @@ impl Link for DeadLink {
 
 impl ChaosLink {
     pub fn wrap(inner: Box<dyn Link>, worker: usize, plan: Arc<FaultPlan>) -> Self {
-        Self { inner, worker, plan, pending: None }
+        Self::wrap_traced(inner, worker, plan, None)
+    }
+
+    /// [`ChaosLink::wrap`] with a trace handle, so a sever-span teardown
+    /// is visible in the diagnostic trace stream.
+    pub fn wrap_traced(
+        inner: Box<dyn Link>,
+        worker: usize,
+        plan: Arc<FaultPlan>,
+        trace: Option<TraceHandle>,
+    ) -> Self {
+        Self { inner, worker, plan, pending: None, trace }
     }
 
     /// The fault-kind-specific receive failure for round `t`.
@@ -144,6 +159,10 @@ impl Link for ChaosLink {
                 // the plan's absence schedule is enforced by swallowing
                 // below until the span ends).
                 if kind == FaultKind::Sever && t as usize == ev.from {
+                    record_to(
+                        &self.trace,
+                        Event::Sever { t: t as u32, worker: self.worker as u32 },
+                    );
                     self.inner = Box::new(DeadLink);
                 }
                 // Swallow the broadcast: the caller's accounting sees the
@@ -174,12 +193,23 @@ impl Link for ChaosLink {
 /// Wrap a full set of server-side worker links (`links[w]` is worker w's
 /// connection) in [`ChaosLink`]s replaying `plan`.
 pub fn wrap_links(links: Vec<Box<dyn Link>>, plan: &FaultPlan) -> Vec<Box<dyn Link>> {
+    wrap_links_traced(links, plan, None)
+}
+
+/// [`wrap_links`] with a shared trace handle (cloned into every
+/// decorator), so sever teardowns land in the diagnostic trace stream.
+pub fn wrap_links_traced(
+    links: Vec<Box<dyn Link>>,
+    plan: &FaultPlan,
+    trace: Option<TraceHandle>,
+) -> Vec<Box<dyn Link>> {
     let plan = Arc::new(plan.clone());
     links
         .into_iter()
         .enumerate()
         .map(|(w, inner)| {
-            Box::new(ChaosLink::wrap(inner, w, Arc::clone(&plan))) as Box<dyn Link>
+            Box::new(ChaosLink::wrap_traced(inner, w, Arc::clone(&plan), trace.clone()))
+                as Box<dyn Link>
         })
         .collect()
 }

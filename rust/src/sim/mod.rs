@@ -26,5 +26,5 @@
 pub mod chaos;
 pub mod fault;
 
-pub use chaos::{wrap_links, ChaosLink};
+pub use chaos::{wrap_links, wrap_links_traced, ChaosLink};
 pub use fault::{ChaosSpec, FaultEvent, FaultKind, FaultPlan, WorkerProfile};

@@ -86,6 +86,7 @@ fn base_cfg(delta: f64, seed: u64) -> FlConfig {
         parallelism: Parallelism::Sequential,
         transport: Transport::Memory,
         faults: None,
+        trace: None,
     }
 }
 

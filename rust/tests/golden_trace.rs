@@ -6,8 +6,9 @@
 //! `target/golden-diff/lbgm_small.fresh.csv` over the committed file) and
 //! say so in the commit.
 //!
-//! `wall_secs` is zeroed before the diff (the only nondeterministic
-//! column); everything else in the engine is bit-reproducible per seed.
+//! `wall_secs` and the four `t_*` phase-timing columns are zeroed before
+//! the diff (the only nondeterministic, wall-clock-derived columns);
+//! everything else in the engine is bit-reproducible per seed.
 
 use fedrecycle::compress::Identity;
 use fedrecycle::coordinator::round::{run_fl, FlConfig, Parallelism};
@@ -37,6 +38,10 @@ fn lbgm_small_run_matches_golden_trace() {
             .expect("golden run failed");
     for r in &mut out.series.rounds {
         r.wall_secs = 0.0;
+        r.t_train = 0.0;
+        r.t_compress = 0.0;
+        r.t_comm = 0.0;
+        r.t_aggregate = 0.0;
     }
     let dir = std::env::temp_dir().join("fedrecycle_golden_trace");
     let path = dir.join("fresh.csv");

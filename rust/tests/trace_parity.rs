@@ -1,0 +1,244 @@
+//! Trace-parity suite: with tracing enabled, all four round engines must
+//! emit bit-identical *deterministic* event streams for the same seed +
+//! config — the stream is a pure function of (seed, config, fault plan),
+//! never of scheduling, transport, or wall clock. Diagnostic events
+//! (deadline misses, severs, handshakes) are excluded by
+//! [`fedrecycle::obs::Recorder::deterministic_stream`], which is exactly
+//! the parity surface.
+//!
+//! The base seed honors `FL_SEED` so CI can sweep a seed matrix; set
+//! `FEDRECYCLE_TRACE=1` to dump each engine's JSONL under `target/trace/`
+//! (CI uploads that directory as a failure artifact).
+
+use std::sync::Arc;
+
+use fedrecycle::compress::{Compressor, Identity};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, Parallelism};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::coordinator::transport::run_threaded_fl;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::net::{run_mem_fl, run_tcp_fl};
+use fedrecycle::obs::{self, Encoded, Event, TraceHandle};
+use fedrecycle::sim::FaultPlan;
+use fedrecycle::testkit::scenarios;
+
+const DIM: usize = 16;
+const K: usize = 4;
+const ROUNDS: usize = 8;
+const SPREAD: f32 = 0.25;
+const SIGMA: f32 = 0.03;
+
+fn base_seed() -> u64 {
+    std::env::var("FL_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+fn codec() -> Box<dyn Compressor> {
+    Box::new(Identity)
+}
+
+fn cfg(delta: f64, seed: u64, faults: Option<FaultPlan>, trace: TraceHandle) -> FlConfig {
+    FlConfig {
+        rounds: ROUNDS,
+        tau: 2,
+        eta: 0.05,
+        policy: ThresholdPolicy::fixed(delta),
+        sample_fraction: 1.0,
+        eval_every: 4,
+        seed,
+        check_coherence: true,
+        parallelism: Parallelism::Sequential,
+        faults,
+        trace: Some(trace),
+        ..Default::default()
+    }
+}
+
+/// Drain one engine's recorder: optionally dump the full JSONL (for CI
+/// artifacts), then return the parity-checked stream.
+fn stream_of(name: &str, trace: &TraceHandle) -> Vec<Encoded> {
+    let rec = trace.lock().unwrap();
+    assert_eq!(rec.dropped(), 0, "{name}: ring wrapped — raise the test capacity");
+    if std::env::var("FEDRECYCLE_TRACE").is_ok() {
+        let dir = std::path::Path::new("target").join("trace");
+        obs::sink::write_jsonl(&dir.join(format!("{name}.jsonl")), &rec).unwrap();
+    }
+    rec.deterministic_stream()
+}
+
+fn engine_fl(name: &str, delta: f64, seed: u64, faults: Option<FaultPlan>, par: Parallelism) -> Vec<Encoded> {
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let mut c = cfg(delta, seed, faults, Arc::clone(&trace));
+    c.parallelism = par;
+    let mut t = MockTrainer::new(DIM, K, SPREAD, SIGMA, seed);
+    run_fl(&mut t, vec![0.0; DIM], &c, &|| codec(), name).unwrap();
+    stream_of(name, &trace)
+}
+
+fn engine_threaded(name: &str, delta: f64, seed: u64, faults: Option<FaultPlan>) -> Vec<Encoded> {
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let c = cfg(delta, seed, faults, Arc::clone(&trace));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, seed);
+    let weights = eval.weights();
+    run_threaded_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| codec(),
+        name,
+    )
+    .unwrap();
+    stream_of(name, &trace)
+}
+
+fn engine_mem(name: &str, delta: f64, seed: u64, faults: Option<FaultPlan>) -> Vec<Encoded> {
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let c = cfg(delta, seed, faults, Arc::clone(&trace));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, seed);
+    let weights = eval.weights();
+    run_mem_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| codec(),
+        name,
+        None,
+    )
+    .unwrap();
+    stream_of(name, &trace)
+}
+
+fn engine_tcp(name: &str, delta: f64, seed: u64, faults: Option<FaultPlan>) -> Vec<Encoded> {
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let c = cfg(delta, seed, faults, Arc::clone(&trace));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, seed);
+    let weights = eval.weights();
+    run_tcp_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| codec(),
+        name,
+    )
+    .unwrap();
+    stream_of(name, &trace)
+}
+
+/// Bit-diff every stream against the first, reporting the first
+/// diverging event (decoded, when possible) rather than a wall of hex.
+fn assert_streams_identical(streams: &[(&str, Vec<Encoded>)]) {
+    let (ref_name, ref_stream) = &streams[0];
+    assert!(!ref_stream.is_empty(), "{ref_name}: empty deterministic stream");
+    for (name, stream) in &streams[1..] {
+        for (i, (a, b)) in ref_stream.iter().zip(stream.iter()).enumerate() {
+            assert_eq!(
+                a, b,
+                "{name} diverged from {ref_name} at event {i}: {:?} vs {:?}",
+                b.decode(),
+                a.decode()
+            );
+        }
+        assert_eq!(
+            stream.len(),
+            ref_stream.len(),
+            "{name} vs {ref_name}: stream lengths differ"
+        );
+    }
+}
+
+fn count(stream: &[Encoded], pred: impl Fn(&Event) -> bool) -> usize {
+    stream.iter().filter_map(Encoded::decode).filter(|e| pred(e)).count()
+}
+
+/// A clean full-participation run: all four engines (the sequential and
+/// scoped-thread branches of `run_fl`, the mpsc star, and both net
+/// drivers) emit one bit-identical stream with the canonical per-round
+/// shape.
+#[test]
+fn clean_run_streams_are_bit_identical_across_engines() {
+    let seed = 41 + base_seed();
+    let d = 0.4;
+    let streams = vec![
+        ("clean_fl_seq", engine_fl("clean_fl_seq", d, seed, None, Parallelism::Sequential)),
+        ("clean_fl_thr", engine_fl("clean_fl_thr", d, seed, None, Parallelism::Threads(2))),
+        ("clean_star", engine_threaded("clean_star", d, seed, None)),
+        ("clean_mem", engine_mem("clean_mem", d, seed, None)),
+        ("clean_tcp", engine_tcp("clean_tcp", d, seed, None)),
+    ];
+    assert_streams_identical(&streams);
+
+    let s = &streams[0].1;
+    assert_eq!(count(s, |e| matches!(e, Event::RoundStart { .. })), ROUNDS);
+    assert_eq!(count(s, |e| matches!(e, Event::RoundCommit { .. })), ROUNDS);
+    assert_eq!(count(s, |e| matches!(e, Event::BroadcastSent { .. })), K * ROUNDS);
+    assert_eq!(count(s, |e| matches!(e, Event::WorkerUplink { .. })), K * ROUNDS);
+    assert_eq!(count(s, |e| matches!(e, Event::FaultInjected { .. })), 0);
+    assert_eq!(count(s, |e| matches!(e, Event::Rejoin { .. })), 0);
+    // Every commit reports full participation.
+    assert_eq!(
+        count(s, |e| matches!(e, Event::RoundCommit { participants, faults, .. }
+            if *participants == K as u32 && *faults == 0)),
+        ROUNDS
+    );
+}
+
+/// The acceptance chaos scenario: worker 2 is severed in rounds 2–3 and
+/// rejoins for round 4. On TCP the socket genuinely dies and the rejoin
+/// rides the elastic accept loop; in-memory engines model the same plan
+/// arithmetically — the deterministic streams must still be
+/// bit-identical, with the faults and the rejoin at the same offsets.
+#[test]
+fn sever_and_rejoin_streams_are_bit_identical_across_engines() {
+    let seed = 3 + base_seed();
+    let d = 0.9;
+    let plan = || Some(scenarios::disconnect_then_rejoin(2, 2, 4));
+    let streams = vec![
+        ("sever_fl_seq", engine_fl("sever_fl_seq", d, seed, plan(), Parallelism::Sequential)),
+        ("sever_fl_thr", engine_fl("sever_fl_thr", d, seed, plan(), Parallelism::Threads(2))),
+        ("sever_star", engine_threaded("sever_star", d, seed, plan())),
+        ("sever_mem", engine_mem("sever_mem", d, seed, plan())),
+        ("sever_tcp", engine_tcp("sever_tcp", d, seed, plan())),
+    ];
+    assert_streams_identical(&streams);
+
+    let s = &streams[0].1;
+    // The swallowed broadcasts still count as sent (they die in the
+    // network), so the downlink shape matches the clean run.
+    assert_eq!(count(s, |e| matches!(e, Event::BroadcastSent { .. })), K * ROUNDS);
+    // Worker 2 misses exactly rounds 2 and 3...
+    assert_eq!(
+        count(s, |e| matches!(e, Event::FaultInjected { t, worker } if *worker == 2 && (*t == 2 || *t == 3))),
+        2
+    );
+    assert_eq!(count(s, |e| matches!(e, Event::FaultInjected { .. })), 2);
+    assert_eq!(count(s, |e| matches!(e, Event::WorkerUplink { .. })), K * ROUNDS - 2);
+    // ...and rejoins at round 4, where its first uplink is the forced
+    // dense refresh (scalar steady state everywhere else under delta=0.9
+    // makes a spurious or missing refresh change the stream).
+    assert_eq!(
+        count(s, |e| matches!(e, Event::Rejoin { t, worker } if *t == 4 && *worker == 2)),
+        1
+    );
+    assert_eq!(count(s, |e| matches!(e, Event::Rejoin { .. })), 1);
+    assert_eq!(
+        count(s, |e| matches!(e, Event::RoundCommit { t, participants, faults }
+            if (*t == 2 || *t == 3) && *participants == (K - 1) as u32 && *faults == 1)),
+        2
+    );
+}
+
+/// Repeat runs of one engine with the same seed are bit-identical too —
+/// the stream carries no run-local state (timestamps and sequence
+/// numbers live outside the parity surface).
+#[test]
+fn repeat_runs_reproduce_the_stream() {
+    let seed = 29 + base_seed();
+    let a = engine_tcp("repeat_a", 0.4, seed, Some(scenarios::drop_worker(2, 2, 4)));
+    let b = engine_tcp("repeat_b", 0.4, seed, Some(scenarios::drop_worker(2, 2, 4)));
+    assert_streams_identical(&[("repeat_a", a), ("repeat_b", b)]);
+}
