@@ -18,12 +18,14 @@
 use std::path::PathBuf;
 
 use fedrecycle::bench::{check_baseline, load_baseline, CountingAlloc, Regression};
-use fedrecycle::compress::{reference_topk, Compressor, Identity, TopK};
+use fedrecycle::compress::{reference_topk, Compressor, Identity, TopK, WireCodec};
 use fedrecycle::coordinator::server::Server;
 use fedrecycle::coordinator::worker::Worker;
 use fedrecycle::lbgm::ThresholdPolicy;
 use fedrecycle::linalg::vec_ops::{self, reference};
 use fedrecycle::linalg::{eigh, explained_components, GramPca, Workspace};
+use fedrecycle::net::quant;
+use fedrecycle::net::wire::{self, Frame};
 use fedrecycle::obs::{self, record_to, Event, UplinkTracker};
 use fedrecycle::util::rng::Rng;
 
@@ -220,6 +222,50 @@ fn main() {
             Event::RoundCommit { t: tt as u32, participants: 1, faults: 0 },
         );
     });
+
+    // --- wire protocol v3: raw vs q8 Round frames at 1M params -------------
+    // The q8 frame moves ~4x fewer bytes, so its encode/decode must also be
+    // cheaper than the raw path it replaces (the ratio gate), and the
+    // quantization kernel itself must stay allocation-free into a reused
+    // buffer (the alloc gate) — it runs once per broadcast on the server's
+    // round hot path.
+    const W: usize = 1 << 20;
+    let theta_w = randv(W, 11);
+    let raw_round = Frame::Round { t: 9, theta: theta_w.clone() };
+    let mut q8_payload = Vec::with_capacity(WireCodec::Q8.packed_len(W));
+    quant::encode(WireCodec::Q8, &theta_w, &mut q8_payload);
+    let q8_round = Frame::RoundQ {
+        t: 9,
+        base: wire::DENSE_BASE,
+        codec: WireCodec::Q8.to_wire(),
+        count: W as u64,
+        data: q8_payload,
+    };
+    r.bench_pair(
+        "encode_round_q8_1M",
+        (4 * W) as u64,
+        || q8_round.to_bytes(),
+        || raw_round.to_bytes(),
+    );
+    let raw_round_bytes = raw_round.to_bytes();
+    let q8_round_bytes = q8_round.to_bytes();
+    r.bench_pair(
+        "decode_round_q8_1M",
+        (4 * W) as u64,
+        || Frame::from_bytes(&q8_round_bytes).expect("q8 round decodes"),
+        || Frame::from_bytes(&raw_round_bytes).expect("raw round decodes"),
+    );
+    let mut packed = Vec::with_capacity(WireCodec::Q8.packed_len(W));
+    quant::encode(WireCodec::Q8, &theta_w, &mut packed); // high-water warmup
+    r.bench("quantize_q8_steady_state_1M", (4 * W) as u64, || {
+        packed.clear();
+        quant::encode(WireCodec::Q8, &theta_w, &mut packed);
+    });
+    println!(
+        "round frame sizes at 1M params: raw={}B, q8={}B",
+        raw_round.wire_bytes(),
+        q8_round.wire_bytes()
+    );
 
     // --- report + gate ------------------------------------------------------
     let out = PathBuf::from(

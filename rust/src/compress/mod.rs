@@ -23,6 +23,77 @@ pub use topk::{reference_topk, TopK};
 
 use crate::linalg::Workspace;
 
+/// Wire-level value codec for the networked deployment (protocol v3):
+/// how `Round` broadcasts and full/refresh `Update` uplinks pack their
+/// f32 vectors on a real link. Orthogonal to the [`Compressor`] stack —
+/// a `Compressor` shapes *which effective gradient* is shared (the
+/// paper's modeled floats/bits axes), while the wire codec shapes *how
+/// many bytes* that vector costs on a socket (the measured wire-byte
+/// ledgers). `Raw` is the default and the bit-parity surface: every
+/// golden/parity suite runs raw and stays bit-identical. `Q8`/`F16`
+/// trade bounded quantization error (compensated by error feedback on
+/// both sides; see `net::quant`) for ~4×/2× smaller frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WireCodec {
+    /// Full-precision f32 frames (protocol v1/v2 layout; bit-exact).
+    #[default]
+    Raw,
+    /// Per-vector affine int8: min + scale header, one byte per value.
+    Q8,
+    /// IEEE-754 binary16, round-to-nearest-even.
+    F16,
+}
+
+impl WireCodec {
+    /// Parse a CLI/JSON spelling: `raw`, `q8`, or `f16`.
+    pub fn parse(s: &str) -> anyhow::Result<WireCodec> {
+        match s {
+            "raw" => Ok(WireCodec::Raw),
+            "q8" => Ok(WireCodec::Q8),
+            "f16" => Ok(WireCodec::F16),
+            other => anyhow::bail!("bad wire codec `{other}` (want raw|q8|f16)"),
+        }
+    }
+
+    /// The codec byte carried in v3 frames.
+    pub fn to_wire(self) -> u8 {
+        match self {
+            WireCodec::Raw => 0,
+            WireCodec::Q8 => 1,
+            WireCodec::F16 => 2,
+        }
+    }
+
+    /// Decode a v3 frame's codec byte.
+    pub fn from_wire(b: u8) -> anyhow::Result<WireCodec> {
+        match b {
+            0 => Ok(WireCodec::Raw),
+            1 => Ok(WireCodec::Q8),
+            2 => Ok(WireCodec::F16),
+            other => anyhow::bail!("unknown wire codec byte {other}"),
+        }
+    }
+
+    /// Exact packed size of `n` values under this codec (the `data`
+    /// field of a `RoundQ`/`UpdateQ` frame).
+    pub fn packed_len(self, n: usize) -> usize {
+        match self {
+            WireCodec::Raw => 4 * n,
+            WireCodec::Q8 => 8 + n,
+            WireCodec::F16 => 2 * n,
+        }
+    }
+
+    /// The canonical CLI spelling ([`parse`](Self::parse)'s inverse).
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodec::Raw => "raw",
+            WireCodec::Q8 => "q8",
+            WireCodec::F16 => "f16",
+        }
+    }
+}
+
 /// Exact uplink cost of one compressed gradient transmission.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Cost {
@@ -62,5 +133,22 @@ mod tests {
         let c = dense_cost(10);
         assert_eq!(c.floats, 10);
         assert_eq!(c.bits, 320);
+    }
+
+    #[test]
+    fn wire_codec_parses_and_round_trips_its_wire_byte() {
+        assert_eq!(WireCodec::parse("raw").unwrap(), WireCodec::Raw);
+        assert_eq!(WireCodec::parse("q8").unwrap(), WireCodec::Q8);
+        assert_eq!(WireCodec::parse("f16").unwrap(), WireCodec::F16);
+        assert!(WireCodec::parse("zstd").is_err());
+        assert_eq!(WireCodec::default(), WireCodec::Raw);
+        for c in [WireCodec::Raw, WireCodec::Q8, WireCodec::F16] {
+            assert_eq!(WireCodec::from_wire(c.to_wire()).unwrap(), c);
+        }
+        assert!(WireCodec::from_wire(3).is_err());
+        // Packed sizes: q8 pays an 8-byte affine header, f16 halves.
+        assert_eq!(WireCodec::Raw.packed_len(100), 400);
+        assert_eq!(WireCodec::Q8.packed_len(100), 108);
+        assert_eq!(WireCodec::F16.packed_len(100), 200);
     }
 }

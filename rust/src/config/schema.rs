@@ -127,6 +127,10 @@ pub struct ExperimentConfig {
     /// Deterministic fault-injection schedule (`--faults plan.json` on the
     /// CLI, or an inline `"faults": {...}` object in a JSON config).
     pub faults: Option<FaultPlan>,
+    /// Wire-level value codec for networked transports (`raw` | `q8` |
+    /// `f16`). `raw` is the default and the bit-parity surface; in-memory
+    /// engines ignore the knob entirely.
+    pub wire_codec: crate::compress::WireCodec,
 }
 
 impl Default for ExperimentConfig {
@@ -152,6 +156,7 @@ impl Default for ExperimentConfig {
             parallelism: Parallelism::default(),
             transport: Transport::default(),
             faults: None,
+            wire_codec: crate::compress::WireCodec::Raw,
         }
     }
 }
@@ -236,6 +241,9 @@ impl ExperimentConfig {
         if let Some(f) = j.get("faults") {
             c.faults = Some(FaultPlan::from_json(f)?);
         }
+        if let Some(v) = gets("wire_codec") {
+            c.wire_codec = crate::compress::WireCodec::parse(&v)?;
+        }
         Ok(c)
     }
 
@@ -262,6 +270,7 @@ impl ExperimentConfig {
             transport: self.transport,
             faults: self.faults.clone(),
             trace: None,
+            wire_codec: self.wire_codec,
         }
     }
 }
@@ -379,6 +388,25 @@ mod tests {
         ));
         assert!(ExperimentConfig::from_json(
             &Json::parse(r#"{"policy":"psychic"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn wire_codec_parsing_and_lowering() {
+        use crate::compress::WireCodec;
+        // Default stays raw (the bit-parity surface).
+        let d = ExperimentConfig::default();
+        assert_eq!(d.wire_codec, WireCodec::Raw);
+        assert_eq!(d.fl_config().wire_codec, WireCodec::Raw);
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire_codec":"q8"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.wire_codec, WireCodec::Q8);
+        assert_eq!(c.fl_config().wire_codec, WireCodec::Q8);
+        assert!(ExperimentConfig::from_json(
+            &Json::parse(r#"{"wire_codec":"zstd"}"#).unwrap()
         )
         .is_err());
     }

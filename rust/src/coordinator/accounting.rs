@@ -40,6 +40,14 @@ pub struct CommLedger {
     pub wire_up_bytes: u64,
     /// Measured framed bytes sent over real links (0 in-memory).
     pub wire_down_bytes: u64,
+    /// Raw-equivalent uplink bytes: what the same logical frames would
+    /// have measured on a protocol-v3 `raw` session. Equal to
+    /// `wire_up_bytes` on raw sessions; the gap is the quantized-codec
+    /// saving (`q8`/`f16` `UpdateQ` frames). 0 in-memory.
+    pub wire_up_raw_bytes: u64,
+    /// Raw-equivalent downlink bytes (dense `Round` broadcasts); the gap
+    /// to `wire_down_bytes` is the quantized + delta-encoding saving.
+    pub wire_down_raw_bytes: u64,
     /// Fault events observed: planned participants whose round update never
     /// made it into an aggregation (dropped, late, disconnected, corrupt).
     pub total_faults: u64,
@@ -97,6 +105,29 @@ impl CommLedger {
     /// Record measured wire bytes of one sent (downlink) frame.
     pub fn record_wire_down(&mut self, bytes: u64) {
         self.wire_down_bytes += bytes;
+    }
+
+    /// Record the raw-equivalent bytes of one received uplink frame (what
+    /// the frame would have measured on a raw session; equal to the actual
+    /// bytes when the session *is* raw).
+    pub fn record_wire_up_raw(&mut self, bytes: u64) {
+        self.wire_up_raw_bytes += bytes;
+    }
+
+    /// Record the raw-equivalent bytes of one sent downlink broadcast.
+    pub fn record_wire_down_raw(&mut self, bytes: u64) {
+        self.wire_down_raw_bytes += bytes;
+    }
+
+    /// Measured bytes saved by the wire codec against the raw baseline,
+    /// `(uplink, downlink)`. Zero on raw sessions and in-memory runs by
+    /// construction. Saturating: a degenerate session where framing
+    /// overhead exceeds the raw cost reports 0, not an underflow.
+    pub fn wire_savings(&self) -> (u64, u64) {
+        (
+            self.wire_up_raw_bytes.saturating_sub(self.wire_up_bytes),
+            self.wire_down_raw_bytes.saturating_sub(self.wire_down_bytes),
+        )
     }
 
     /// Record one fault: a planned participant whose update did not arrive
@@ -242,5 +273,26 @@ mod tests {
         assert_eq!(l.wire_down_bytes, 56);
         assert_eq!(l.wire_up_bytes, 82);
         assert!(l.consistent());
+    }
+
+    #[test]
+    fn raw_equivalent_bytes_expose_codec_savings() {
+        let mut l = CommLedger::new(1);
+        // A quantized session: the actual bytes undercut the raw baseline.
+        l.record_wire_down(120);
+        l.record_wire_down_raw(400);
+        l.record_wire_up(130);
+        l.record_wire_up_raw(410);
+        assert_eq!(l.wire_savings(), (280, 280));
+        // A raw session records the same value on both counters: no saving.
+        let mut r = CommLedger::new(1);
+        r.record_wire_down(400);
+        r.record_wire_down_raw(400);
+        assert_eq!(r.wire_savings(), (0, 0));
+        // Saturation: framing overhead above raw never underflows.
+        let mut o = CommLedger::new(1);
+        o.record_wire_up(50);
+        o.record_wire_up_raw(40);
+        assert_eq!(o.wire_savings(), (0, 0));
     }
 }

@@ -137,6 +137,13 @@ pub struct FlConfig {
     /// Deployment transport the launcher dispatches on; results are
     /// independent of it too (asserted by `tests/net_loopback.rs`).
     pub transport: Transport,
+    /// Wire-level value codec for networked transports (protocol v3):
+    /// `Raw` (default) keeps every frame bit-identical to the in-memory
+    /// engines; `Q8`/`F16` quantize `Round` broadcasts and full `Update`
+    /// uplinks with error feedback, trading bounded model error for
+    /// measured wire-byte savings. The in-memory engines ignore this
+    /// knob entirely (they move no wire bytes).
+    pub wire_codec: crate::compress::WireCodec,
     /// Deterministic fault-injection schedule (`None` = clean run). A
     /// faulted worker misses its round entirely — it neither trains nor
     /// uplinks, and the round commits with the workers that arrived,
@@ -163,6 +170,7 @@ impl Default for FlConfig {
             check_coherence: false,
             parallelism: Parallelism::default(),
             transport: Transport::default(),
+            wire_codec: crate::compress::WireCodec::Raw,
             faults: None,
             trace: None,
         }

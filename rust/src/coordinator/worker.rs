@@ -67,6 +67,17 @@ impl Worker {
         self.lbg.as_ref().map(|l| l.as_slice())
     }
 
+    /// Replace the worker-side LBG copy with `effective` — the values the
+    /// server actually decoded. Wire-codec error feedback: on a quantized
+    /// (`q8`/`f16`) session the server reconstructs a *dequantized* refresh
+    /// gradient, so the worker's LBG must track that reconstruction, not
+    /// the pre-quantization buffer, or every later scalar `rho` would scale
+    /// a vector the server doesn't hold. Raw sessions never call this.
+    pub fn resync_lbg(&mut self, effective: Vec<f32>) {
+        self.lbg_norm2 = norm2(&effective);
+        self.lbg = Some(Arc::new(effective));
+    }
+
     /// Force the next uplink to be a full-gradient refresh regardless of
     /// the policy decision. Rejoin reconciliation: after a lost connection
     /// the worker cannot know whether its latest refresh was applied

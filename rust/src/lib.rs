@@ -22,7 +22,9 @@
 //!
 //! The [`net`] layer turns the simulation into a real client/server
 //! system: a versioned, checksummed binary wire codec ([`net::wire`],
-//! protocol v2 with a `Rejoin` re-handshake; v1 still accepted), framed
+//! protocol v3 with quantized `q8`/`f16` frames, delta-encoded
+//! broadcasts, chunked streaming, and a token-authenticated `Rejoin3`
+//! re-handshake; v1/v2 peers still fully served), framed
 //! TCP links plus a deterministic latency/bandwidth/loss shaper
 //! ([`net::link`]), and a **concurrent, elastic** server / reconnecting
 //! worker-client pair ([`net::server`], [`net::client`]) exposed as the

@@ -72,11 +72,13 @@ const DETERMINISM_SCOPE: &[&str] = &[
 const REDUCTION_SCOPE: &[&str] = DETERMINISM_SCOPE;
 
 /// Frame-handling code that faces the network: a panic here is a
-/// remotely triggerable crash of the fleet.
+/// remotely triggerable crash of the fleet. `quant` is in scope because
+/// it decodes attacker-controlled `RoundQ`/`UpdateQ` payload bytes.
 const PANIC_SCOPE: &[&str] = &[
     "rust/src/net/wire.rs",
     "rust/src/net/server.rs",
     "rust/src/net/client.rs",
+    "rust/src/net/quant.rs",
 ];
 
 /// Workspace-threaded hot paths with a zero-alloc steady-state claim.

@@ -31,6 +31,10 @@
 //!   write it as JSONL after the run; `fedrecycle trace run.jsonl`
 //!   summarizes it) and --log-level off|error|warn|info|debug (obs-layer
 //!   diagnostics; default off) apply to train/serve/worker
+//!   --wire-codec raw|q8|f16  (protocol-v3 wire value codec for the tcp
+//!   transport and serve/worker; raw is the default and the bit-parity
+//!   surface, q8/f16 trade bounded quantization error for measured wire
+//!   bytes — the JSON summary's *_raw_bytes columns report the saving)
 //!
 //! `serve`/`worker` run the mock federation over real sockets; the two
 //! sides must agree on --workers --dim --spread --sigma --seed, and every
@@ -39,8 +43,11 @@
 //! The server is elastic: its accept thread keeps listening for the whole
 //! run, so a worker that crashes or loses its network can come back — the
 //! `worker` subcommand reconnects with capped backoff (--retries,
-//! --backoff-ms) and re-handshakes with a protocol-v2 `Rejoin`, resuming
-//! with the next round's broadcast.
+//! --backoff-ms), bounds its serve-phase reads (--serve-timeout SECS, so a
+//! server killed without closing its sockets cannot wedge the worker), and
+//! re-handshakes with `Rejoin` — or the token-authenticated protocol-v3
+//! `Rejoin3` on q8/f16 sessions — resuming with the next round's
+//! broadcast.
 
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
@@ -125,6 +132,9 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(p) = args.get("faults") {
         cfg.faults = Some(FaultPlan::from_file(Path::new(p))?);
+    }
+    if let Some(v) = args.get("wire-codec") {
+        cfg.wire_codec = fedrecycle::compress::WireCodec::parse(v)?;
     }
     Ok(cfg)
 }
@@ -367,7 +377,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let handshake = Duration::from_secs(args.u64_or("handshake-timeout", 120));
     let deadline = Duration::from_secs(args.u64_or("round-deadline", 600));
     let acceptor = Acceptor::spawn(listener, k, spec.dim, &fl, handshake)?;
-    let mut links = acceptor.wait_for_fleet(k)?;
+    let (mut links, codecs) = acceptor.wait_for_fleet(k)?;
     let plan = fl.faults.as_ref().map(|p| std::sync::Arc::new(p.clone()));
     if let Some(p) = &plan {
         println!(
@@ -385,6 +395,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let (series, ledger, _theta) = run_server_rounds_elastic(
         &mut links,
+        codecs,
         &mut eval,
         vec![0.0; spec.dim],
         weights,
@@ -421,13 +432,22 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let retry = ReconnectCfg {
         max_attempts: args.usize_or("retries", ReconnectCfg::default().max_attempts),
         initial_backoff: Duration::from_millis(args.u64_or("backoff-ms", 25)),
+        // Default pairs with `serve`'s --round-deadline default (600s)
+        // plus slack; 0 disables the bound (the pre-v3 behavior).
+        serve_timeout: Duration::from_secs(args.u64_or("serve-timeout", 630)),
         ..ReconnectCfg::default()
     };
     let mut trainer =
         MockTrainer::new(spec.dim, cfg.workers, spec.spread, spec.sigma, cfg.seed);
     println!("worker {id}: connecting to {addr}");
-    let served =
-        connect_worker_with_retry(addr.as_str(), id, &mut trainer, cfg.codec.build(), &retry)?;
+    let served = connect_worker_with_retry(
+        addr.as_str(),
+        id,
+        &mut trainer,
+        cfg.codec.build(),
+        cfg.wire_codec,
+        &retry,
+    )?;
     println!("worker {id}: served {served} rounds, shut down cleanly");
     Ok(())
 }

@@ -21,6 +21,13 @@ pub struct RoundRecord {
     pub wire_up_bytes: u64,
     /// Cumulative measured wire bytes sent by the server.
     pub wire_down_bytes: u64,
+    /// Cumulative raw-equivalent uplink bytes: what the same frames
+    /// would have measured on a protocol-v3 `raw` session. Equals
+    /// `wire_up_bytes` on raw sessions; the gap is the `q8`/`f16`
+    /// codec saving. (JSON summary only — not a CSV column.)
+    pub wire_up_raw_bytes: u64,
+    /// Cumulative raw-equivalent downlink bytes (dense broadcasts).
+    pub wire_down_raw_bytes: u64,
     /// Workers that sent a full gradient (vs a scalar LBC) this round.
     pub full_sends: usize,
     pub scalar_sends: usize,
@@ -88,6 +95,16 @@ impl RunSeries {
     pub fn total_wire_bytes(&self) -> (u64, u64) {
         self.last()
             .map(|r| (r.wire_up_bytes, r.wire_down_bytes))
+            .unwrap_or((0, 0))
+    }
+
+    /// Total raw-equivalent wire bytes, `(uplink, downlink)`: the bytes a
+    /// `raw`-codec session would have moved for the same logical frames.
+    /// The gap to [`total_wire_bytes`](Self::total_wire_bytes) is the
+    /// measured quantized/delta saving; zero gap on raw and in-memory runs.
+    pub fn total_wire_raw_bytes(&self) -> (u64, u64) {
+        self.last()
+            .map(|r| (r.wire_up_raw_bytes, r.wire_down_raw_bytes))
             .unwrap_or((0, 0))
     }
 

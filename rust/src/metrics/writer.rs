@@ -64,6 +64,8 @@ pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
             ("total_floats_down", num(r.total_floats_down() as f64)),
             ("wire_up_bytes", num(r.total_wire_bytes().0 as f64)),
             ("wire_down_bytes", num(r.total_wire_bytes().1 as f64)),
+            ("wire_up_raw_bytes", num(r.total_wire_raw_bytes().0 as f64)),
+            ("wire_down_raw_bytes", num(r.total_wire_raw_bytes().1 as f64)),
             ("scalar_fraction", num(r.scalar_fraction())),
             ("total_faults", num(r.total_faults() as f64)),
             ("min_participants", num(r.min_participants() as f64)),

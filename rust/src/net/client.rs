@@ -11,8 +11,10 @@
 //! state and the last served round — lives in a [`WorkerSession`], so a
 //! dropped link is not the end of the worker: [`connect_worker_with_retry`]
 //! reconnects with capped exponential backoff, re-handshakes with
-//! `Frame::Rejoin { worker, last_round }` (wire protocol v2), and resumes
-//! serving. Two reconciliation rules keep the rejoin sound:
+//! `Frame::Rejoin { worker, last_round }` (wire protocol v2) — or, when
+//! the session was opened on protocol v3, with `Frame::Rejoin3` carrying
+//! the model dimension and the session token the `Welcome3` issued — and
+//! resumes serving. Two reconciliation rules keep the rejoin sound:
 //!
 //! * **Round monotonicity** — the session tracks the last round it served
 //!   and rejects a `Round { t }` that does not move forward (a duplicate
@@ -24,19 +26,36 @@
 //!   ([`Worker::force_full_next`]): the worker cannot know whether its
 //!   last refresh was applied server-side, and one dense uplink restores
 //!   LBG coherence unconditionally.
+//!
+//! # Wire value codecs (protocol v3)
+//!
+//! A worker with a non-raw [`WireCodec`] preference opens with `Hello3`;
+//! the server's `Welcome3` names the codec the session actually runs
+//! (server wins) and the session token. On a quantized session the client
+//! accepts `RoundQ` broadcasts — dense, or delta-encoded against the last
+//! theta it reconstructed (the server forces dense after any rejoin or
+//! absence) — and uplinks full gradients as `UpdateQ` with client-side
+//! error feedback: quantization error is carried in a residual and folded
+//! into the next refresh, and the worker's LBG copy is resynced to the
+//! *dequantized* values so both ends keep scaling the same basis vector.
+//! Scalar uplinks and raw sessions use the plain v1/v2 frames, which is
+//! what keeps a raw session byte-identical to protocol v2.
 
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::compress::Compressor;
+use crate::compress::{Compressor, WireCodec};
+use crate::coordinator::messages::{Payload, WorkerMsg};
 use crate::coordinator::trainer::LocalTrainer;
 use crate::coordinator::worker::Worker;
 use crate::lbgm::ThresholdPolicy;
 
-use super::link::{Link, TcpLink};
+use super::link::{recv_frame, send_frame, Link, TcpLink};
+use super::quant;
 use super::wire::{self, Frame};
+use super::DEFAULT_ROUND_DEADLINE;
 
 /// Reconnect/backoff knobs for [`connect_worker_with_retry`].
 #[derive(Clone, Copy, Debug)]
@@ -52,6 +71,13 @@ pub struct ReconnectCfg {
     /// How long a (re)handshake waits for the server's `Welcome` before
     /// counting the attempt as failed (zero = wait forever).
     pub handshake_timeout: Duration,
+    /// Serve-phase receive deadline (zero = wait forever). A server that
+    /// dies mid-round without closing its sockets (SIGKILL, network
+    /// partition, a silently wedged peer) leaves a blocking `recv` that
+    /// never returns — the bug this bounds: no broadcast should take
+    /// longer than the server's round deadline plus slack, so a recv that
+    /// does is treated as a lost link and re-enters the rejoin loop.
+    pub serve_timeout: Duration,
 }
 
 impl Default for ReconnectCfg {
@@ -61,6 +87,10 @@ impl Default for ReconnectCfg {
             initial_backoff: Duration::from_millis(25),
             max_backoff: Duration::from_secs(2),
             handshake_timeout: Duration::from_secs(30),
+            // The server holds a round open at most DEFAULT_ROUND_DEADLINE;
+            // generous slack on top so eval/aggregation hiccups between
+            // rounds never masquerade as a dead server.
+            serve_timeout: DEFAULT_ROUND_DEADLINE.saturating_add(Duration::from_secs(30)),
         }
     }
 }
@@ -82,7 +112,9 @@ enum ServeEnd {
 }
 
 /// The connection-survivable worker state: LBGM look-back machine, served
-/// round counter, and round-monotonicity cursor.
+/// round counter, round-monotonicity cursor, and the v3 session state
+/// (negotiated wire codec, session token, downlink delta base, uplink
+/// error-feedback residual).
 struct WorkerSession {
     id: usize,
     worker: Worker,
@@ -90,18 +122,49 @@ struct WorkerSession {
     /// Last round this worker served (`None` before the first).
     last_round: Option<u64>,
     /// Completed handshakes; 0 means the next handshake is a fresh `Hello`,
-    /// anything later re-handshakes with `Rejoin`.
+    /// anything later re-handshakes with `Rejoin`/`Rejoin3`.
     connections: usize,
+    /// Wire-codec preference sent in `Hello3` (raw opens with plain
+    /// `Hello` — the v2 surface).
+    pref: WireCodec,
+    /// The codec the session actually runs: the server's `Welcome3` choice,
+    /// or raw until/unless one arrives.
+    codec: WireCodec,
+    /// Session token issued by `Welcome3`; echoing it in `Rejoin3`
+    /// authenticates the re-seat. `None` on v1/v2 sessions.
+    token: Option<u64>,
+    /// Last theta this worker reconstructed, keyed by round — the base the
+    /// server may delta-encode the next `RoundQ` against. Dropped on
+    /// rejoin (the server forces dense after any absence).
+    recon: Option<(u64, Vec<f32>)>,
+    /// Error-feedback residual: what the last quantized uplink lost, to be
+    /// folded into the next full gradient before encoding. Empty on raw
+    /// sessions and cleared on rejoin (the forced refresh restarts the
+    /// feedback loop from the actual gradient).
+    residual: Vec<f32>,
 }
 
 impl WorkerSession {
-    fn new(id: usize, codec: Box<dyn Compressor>) -> Self {
-        Self { id, worker: Worker::new(id, codec), served: 0, last_round: None, connections: 0 }
+    fn new(id: usize, codec: Box<dyn Compressor>, pref: WireCodec) -> Self {
+        Self {
+            id,
+            worker: Worker::new(id, codec),
+            served: 0,
+            last_round: None,
+            connections: 0,
+            pref,
+            codec: WireCodec::Raw,
+            token: None,
+            recon: None,
+            residual: Vec::new(),
+        }
     }
 
-    /// Handshake on a fresh link: `Hello` on the first connection, `Rejoin`
-    /// afterwards. Validates the server's `Welcome` (dimension), applies
-    /// the session receive caps, and — on a rejoin — arms the forced full
+    /// Handshake on a fresh link: `Hello` (or `Hello3` when a non-raw
+    /// codec is preferred) on the first connection, `Rejoin`/`Rejoin3`
+    /// afterwards. Validates the server's welcome (dimension), adopts the
+    /// negotiated codec and session token from a `Welcome3`, applies the
+    /// session receive caps, and — on a rejoin — arms the forced full
     /// refresh that reconciles the LBGM look-back state.
     fn handshake(&mut self, link: &mut dyn Link, dim: usize) -> Result<SessionParams> {
         // Until the server proves itself with a valid Welcome, cap what we
@@ -109,18 +172,46 @@ impl WorkerSession {
         // guard).
         link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
         let frame = if self.connections == 0 {
-            Frame::Hello { worker: self.id as u32, dim: dim as u64 }
+            if self.pref == WireCodec::Raw {
+                // The v2 surface: a raw-preferring worker is exactly a v2
+                // peer on the wire.
+                Frame::Hello { worker: self.id as u32, dim: dim as u64 }
+            } else {
+                Frame::Hello3 {
+                    worker: self.id as u32,
+                    dim: dim as u64,
+                    codec: self.pref.to_wire(),
+                }
+            }
         } else {
-            Frame::Rejoin {
-                worker: self.id as u32,
-                last_round: self.last_round.unwrap_or(wire::REJOIN_NEVER_SERVED),
+            let last = self.last_round.unwrap_or(wire::REJOIN_NEVER_SERVED);
+            match self.token {
+                // v3 session: the rejoin authenticates itself and
+                // re-validates the model dimension at the handshake.
+                Some(token) => Frame::Rejoin3 {
+                    worker: self.id as u32,
+                    last_round: last,
+                    dim: dim as u64,
+                    token,
+                },
+                None => Frame::Rejoin { worker: self.id as u32, last_round: last },
             }
         };
         link.send(&frame)?;
         let reply = link.recv()?;
-        let tag = reply.tag();
-        let Frame::Welcome { dim: sdim, tau, eta, delta } = reply else {
-            bail!("expected Welcome, got tag {tag}");
+        let (sdim, tau, eta, delta) = match reply {
+            Frame::Welcome { dim, tau, eta, delta } => {
+                self.codec = WireCodec::Raw;
+                self.token = None;
+                (dim, tau, eta, delta)
+            }
+            Frame::Welcome3 { dim, tau, eta, delta, token, codec } => {
+                self.codec = WireCodec::from_wire(codec)
+                    .context("server negotiated an unknown wire codec")?;
+                self.token = Some(token);
+                (dim, tau, eta, delta)
+            }
+            other => bail!("expected Welcome, got tag {}", other.tag()),
         };
         ensure!(
             sdim == dim as u64,
@@ -132,11 +223,118 @@ impl WorkerSession {
         if self.connections > 0 {
             // Rejoin reconciliation: the last refresh may or may not have
             // been applied server-side; one forced dense uplink restores
-            // coherence either way.
+            // coherence either way. The delta base and the error-feedback
+            // residual are stale for the same reason — the server forces
+            // the next broadcast dense after any absence, and the forced
+            // refresh restarts the feedback loop from the raw gradient.
             self.worker.force_full_next();
+            self.recon = None;
+            self.residual.clear();
         }
         self.connections += 1;
         Ok(SessionParams { tau: tau as usize, eta, policy: ThresholdPolicy::fixed(delta) })
+    }
+
+    /// Round monotonicity: a duplicate or replayed broadcast would advance
+    /// the trainer and LBGM state twice and silently desync `served`/round
+    /// counters. Forward gaps are legal (sampling, absences); going
+    /// backwards or standing still is a protocol violation.
+    fn check_monotonic(&self, t: u64) -> Result<()> {
+        if let Some(last) = self.last_round {
+            ensure!(
+                t > last,
+                "server replayed round {t} (last served round {last})"
+            );
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the broadcast theta from a `RoundQ` frame: dequantize,
+    /// and — when delta-encoded — add onto the held base, which must be
+    /// exactly the round the server claims to have encoded against.
+    fn reconstruct_round_q(
+        &mut self,
+        dim: usize,
+        t: u64,
+        base: u64,
+        codec: u8,
+        count: u64,
+        data: &[u8],
+    ) -> Result<Vec<f32>> {
+        self.check_monotonic(t)?;
+        ensure!(
+            codec == self.codec.to_wire(),
+            "RoundQ codec {codec} on a {} session",
+            self.codec.name()
+        );
+        ensure!(
+            count as usize == dim,
+            "RoundQ carries {count} values, session dim is {dim}"
+        );
+        let eff = quant::decode(self.codec, count as usize, data)?;
+        if base == wire::DENSE_BASE {
+            return Ok(eff);
+        }
+        match self.recon.take() {
+            Some((bt, mut held)) if bt == base => {
+                for (h, e) in held.iter_mut().zip(&eff) {
+                    *h += *e;
+                }
+                Ok(held)
+            }
+            Some((bt, _)) => bail!(
+                "round {t} delta-encoded against round {base}, this worker holds round {bt}"
+            ),
+            None => bail!(
+                "round {t} delta-encoded against round {base}, this worker holds no base"
+            ),
+        }
+    }
+
+    /// Uplink one processed round. Scalar messages and raw sessions use
+    /// the plain v1/v2 `Update` frame; a full gradient on a quantized
+    /// session goes out as `UpdateQ` with client-side error feedback: the
+    /// residual the previous quantization lost is folded into the gradient
+    /// before encoding, the new residual is what *this* encoding lost, and
+    /// the worker's LBG copy is resynced to the effective (dequantized)
+    /// values — the vector the server actually holds and will scale by
+    /// later scalar LBCs.
+    fn send_update(&mut self, link: &mut dyn Link, msg: WorkerMsg) -> Result<()> {
+        if self.codec == WireCodec::Raw || msg.is_scalar() {
+            send_frame(link, &Frame::Update(msg))?;
+            return Ok(());
+        }
+        let WorkerMsg { worker, round, payload, cost, train_loss } = msg;
+        let Payload::Full { grad } = payload else {
+            bail!("non-scalar message without a full gradient");
+        };
+        let mut corrected = grad.as_ref().clone();
+        if self.residual.len() == corrected.len() {
+            for (c, r) in corrected.iter_mut().zip(&self.residual) {
+                *c += *r;
+            }
+        }
+        let mut data = Vec::with_capacity(self.codec.packed_len(corrected.len()));
+        quant::encode(self.codec, &corrected, &mut data);
+        let effective = quant::decode(self.codec, corrected.len(), &data)?;
+        self.residual.clear();
+        self.residual
+            .extend(corrected.iter().zip(&effective).map(|(c, e)| c - e));
+        self.worker.resync_lbg(effective);
+        send_frame(
+            link,
+            &Frame::UpdateQ {
+                worker: worker as u32,
+                round: round as u64,
+                train_loss,
+                floats: cost.floats,
+                bits: cost.bits,
+                codec: self.codec.to_wire(),
+                count: corrected.len() as u64,
+                data,
+            },
+        )?;
+        Ok(())
     }
 
     /// Serve rounds over `link` until the server shuts the session down
@@ -149,42 +347,46 @@ impl WorkerSession {
         trainer: &mut dyn LocalTrainer,
         params: &SessionParams,
     ) -> Result<ServeEnd> {
+        let dim = trainer.dim();
+        // Largest legal assembled downlink: a Round frame carrying dim
+        // params plus framing (a chunked v3 broadcast reassembles to this).
+        let max_total = wire::HEADER_LEN + wire::session_max_payload(dim) + wire::CHECKSUM_LEN;
         loop {
-            let frame = match link.recv() {
+            // A garbled chunk stream is indistinguishable mid-assembly from
+            // a dying transport, so every recv failure takes the rejoin
+            // path rather than killing the session.
+            let frame = match recv_frame(link, max_total) {
                 Ok(f) => f,
                 Err(e) => return Ok(ServeEnd::LinkLost(e)),
             };
-            match frame {
+            let (t, theta) = match frame {
                 Frame::Shutdown => return Ok(ServeEnd::Shutdown),
                 Frame::Round { t, theta } => {
-                    // Round monotonicity: a duplicate or replayed broadcast
-                    // would advance the trainer and LBGM state twice and
-                    // silently desync `served`/round counters. Forward gaps
-                    // are legal (sampling, absences); going backwards or
-                    // standing still is a protocol violation.
-                    if let Some(last) = self.last_round {
-                        ensure!(
-                            t > last,
-                            "server replayed round {t} (last served round {last})"
-                        );
-                    }
-                    let (loss, mut grad) =
-                        trainer.local_round(self.id, &theta, params.tau, params.eta)?;
-                    let msg = self.worker.process_round(
-                        t as usize,
-                        &mut grad,
-                        loss,
-                        &params.policy,
-                    );
-                    // State advanced: record the round before the uplink so
-                    // a send failure still rejoins with the truthful cursor.
-                    self.last_round = Some(t);
-                    self.served += 1;
-                    if let Err(e) = link.send(&Frame::Update(msg)) {
-                        return Ok(ServeEnd::LinkLost(e));
-                    }
+                    self.check_monotonic(t)?;
+                    (t, theta)
+                }
+                Frame::RoundQ { t, base, codec, count, data } => {
+                    let theta = self.reconstruct_round_q(dim, t, base, codec, count, &data)?;
+                    (t, theta)
                 }
                 other => bail!("unexpected frame tag {} from server", other.tag()),
+            };
+            let (loss, mut grad) =
+                trainer.local_round(self.id, &theta, params.tau, params.eta)?;
+            let msg = self.worker.process_round(t as usize, &mut grad, loss, &params.policy);
+            // State advanced: record the round before the uplink so a send
+            // failure still rejoins with the truthful cursor.
+            self.last_round = Some(t);
+            self.served += 1;
+            if self.codec != WireCodec::Raw {
+                // Hold the reconstruction as the next delta base. The
+                // server promotes its matching copy only after this
+                // round's update arrives, so a lost uplink (we rejoin,
+                // recon is cleared) keeps both ends dense-coherent.
+                self.recon = Some((t, theta));
+            }
+            if let Err(e) = self.send_update(link, msg) {
+                return Ok(ServeEnd::LinkLost(e));
             }
         }
     }
@@ -193,7 +395,8 @@ impl WorkerSession {
 /// Handshake and serve rounds over an established link until the server
 /// sends `Shutdown`. Returns the number of rounds served. A transport
 /// failure is an error here — for a worker that survives its link, use
-/// [`connect_worker_with_retry`].
+/// [`connect_worker_with_retry`]. Always a raw-codec (v2-surface) session;
+/// wire-codec preferences are a [`connect_worker_with_retry`] feature.
 ///
 /// `trainer.local_round(id, ..)` is driven with this worker's shard only;
 /// the trainer's other worker streams are never touched, which is what
@@ -204,7 +407,7 @@ pub fn run_worker(
     trainer: &mut dyn LocalTrainer,
     codec: Box<dyn Compressor>,
 ) -> Result<usize> {
-    let mut session = WorkerSession::new(id, codec);
+    let mut session = WorkerSession::new(id, codec, WireCodec::Raw);
     let params = session.handshake(link, trainer.dim())?;
     match session.serve(link, trainer, &params)? {
         ServeEnd::Shutdown => Ok(session.served),
@@ -229,21 +432,27 @@ pub fn connect_worker<A: ToSocketAddrs>(
 
 /// Like [`connect_worker`], but elastic: a lost connection (or failed
 /// connect/handshake) is retried with capped exponential backoff, the
-/// re-handshake uses `Frame::Rejoin` so the server re-seats this worker's
-/// slot, and the LBGM state carries over (with a forced full refresh as
-/// the first post-rejoin uplink). Returns the total rounds served across
-/// all connections. Protocol violations — wrong dimension on `Welcome`
-/// comes back as a handshake failure, a replayed round as a fatal error —
-/// are not retried past `retry.max_attempts`.
+/// re-handshake uses `Frame::Rejoin` (or the authenticated `Rejoin3` on a
+/// v3 session) so the server re-seats this worker's slot, and the LBGM
+/// state carries over (with a forced full refresh as the first
+/// post-rejoin uplink). Returns the total rounds served across all
+/// connections. Protocol violations — wrong dimension on `Welcome` comes
+/// back as a handshake failure, a replayed round as a fatal error — are
+/// not retried past `retry.max_attempts`.
+///
+/// `wire_codec` is this worker's *preference*: [`WireCodec::Raw`] opens
+/// with the plain v2 `Hello`; `q8`/`f16` open with `Hello3`, and the
+/// session then runs whatever codec the server's `Welcome3` names.
 pub fn connect_worker_with_retry<A: ToSocketAddrs + Clone>(
     addr: A,
     id: usize,
     trainer: &mut dyn LocalTrainer,
     codec: Box<dyn Compressor>,
+    wire_codec: WireCodec,
     retry: &ReconnectCfg,
 ) -> Result<usize> {
     let dim = trainer.dim();
-    let mut session = WorkerSession::new(id, codec);
+    let mut session = WorkerSession::new(id, codec, wire_codec);
     let mut failures = 0usize;
     let mut backoff = retry.initial_backoff;
     let fail = |failures: &mut usize, backoff: &mut Duration, why: String| -> Result<()> {
@@ -281,7 +490,14 @@ pub fn connect_worker_with_retry<A: ToSocketAddrs + Clone>(
                 continue;
             }
         };
-        link.set_recv_timeout(None)?;
+        // The serve phase keeps a *bounded* recv deadline (the old code
+        // cleared it here, so a server that died without closing the
+        // socket hung this worker forever). A deadline trip surfaces as a
+        // recv error in `serve`, i.e. `ServeEnd::LinkLost` — exactly the
+        // rejoin path.
+        let serve_deadline =
+            if retry.serve_timeout.is_zero() { None } else { Some(retry.serve_timeout) };
+        link.set_recv_timeout(serve_deadline)?;
         let served_before = session.served;
         match session.serve(&mut link, trainer, &params)? {
             ServeEnd::Shutdown => return Ok(session.served),
@@ -405,7 +621,7 @@ mod tests {
     fn rejoin_handshake_reports_last_round_and_forces_full() {
         let dim = 8;
         let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 5);
-        let mut session = WorkerSession::new(1, Box::new(Identity));
+        let mut session = WorkerSession::new(1, Box::new(Identity), WireCodec::Raw);
 
         // Connection 1: handshake + serve rounds 0 and 1, then the link
         // "dies" (a receive timeout, the same error class as a dead TCP
@@ -468,7 +684,7 @@ mod tests {
     #[test]
     fn rejoin_before_any_round_uses_the_sentinel() {
         let dim = 4;
-        let mut session = WorkerSession::new(0, Box::new(Identity));
+        let mut session = WorkerSession::new(0, Box::new(Identity), WireCodec::Raw);
         let (mut srv, mut wrk) = MemLink::pair();
         srv.send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 0.5 })
             .unwrap();
@@ -502,10 +718,212 @@ mod tests {
             initial_backoff: Duration::from_millis(1),
             max_backoff: Duration::from_millis(2),
             handshake_timeout: Duration::from_secs(1),
+            serve_timeout: Duration::from_secs(1),
         };
-        let err = connect_worker_with_retry(addr, 0, &mut trainer, Box::new(Identity), &retry)
-            .unwrap_err()
-            .to_string();
+        let err = connect_worker_with_retry(
+            addr,
+            0,
+            &mut trainer,
+            Box::new(Identity),
+            WireCodec::Raw,
+            &retry,
+        )
+        .unwrap_err()
+        .to_string();
         assert!(err.contains("gave up"), "{err}");
+    }
+
+    /// A quantized session end to end, scripted server-side: `Hello3`
+    /// opener, `Welcome3` adoption, a dense `RoundQ` answered with an
+    /// `UpdateQ` whose payload dequantizes to the LBG the worker now
+    /// holds, then a delta `RoundQ` against the held base, then a
+    /// `Rejoin3` echoing the issued token after the link dies.
+    #[test]
+    fn quantized_session_negotiates_reconstructs_and_rejoins_with_token() {
+        let dim = 8;
+        let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 5);
+        let mut session = WorkerSession::new(1, Box::new(Identity), WireCodec::Q8);
+
+        let (mut srv, mut wrk) = MemLink::pair();
+        srv.send(&Frame::Welcome3 {
+            dim: dim as u64,
+            tau: 1,
+            eta: 0.05,
+            delta: 2.0,
+            token: 777,
+            codec: WireCodec::Q8.to_wire(),
+        })
+        .unwrap();
+        let params = session.handshake(&mut wrk, dim).unwrap();
+        match srv.recv().unwrap() {
+            Frame::Hello3 { worker, dim: d, codec } => {
+                assert_eq!(worker, 1);
+                assert_eq!(d, dim as u64);
+                assert_eq!(codec, WireCodec::Q8.to_wire());
+            }
+            other => panic!("expected Hello3, got {other:?}"),
+        }
+        assert_eq!(session.codec, WireCodec::Q8);
+        assert_eq!(session.token, Some(777));
+
+        // Round 0: dense broadcast. The uplink is a quantized refresh whose
+        // dequantized values equal the worker's (resynced) LBG copy.
+        let theta0: Vec<f32> = (0..dim).map(|i| i as f32 * 0.125).collect();
+        let mut d0 = Vec::new();
+        quant::encode(WireCodec::Q8, &theta0, &mut d0);
+        let eff_theta0 = quant::decode(WireCodec::Q8, dim, &d0).unwrap();
+        srv.send(&Frame::RoundQ {
+            t: 0,
+            base: wire::DENSE_BASE,
+            codec: WireCodec::Q8.to_wire(),
+            count: dim as u64,
+            data: d0,
+        })
+        .unwrap();
+        // Round 1: delta against the round-0 reconstruction.
+        let theta1: Vec<f32> = eff_theta0.iter().map(|x| x + 0.5).collect();
+        let delta1: Vec<f32> = theta1.iter().zip(&eff_theta0).map(|(a, b)| a - b).collect();
+        let mut d1 = Vec::new();
+        quant::encode(WireCodec::Q8, &delta1, &mut d1);
+        srv.send(&Frame::RoundQ {
+            t: 1,
+            base: 0,
+            codec: WireCodec::Q8.to_wire(),
+            count: dim as u64,
+            data: d1,
+        })
+        .unwrap();
+        wrk.set_recv_timeout(Some(Duration::from_millis(30))).unwrap();
+        match session.serve(&mut wrk, &mut trainer, &params).unwrap() {
+            ServeEnd::LinkLost(_) => {}
+            ServeEnd::Shutdown => panic!("dead link reported as clean shutdown"),
+        }
+        assert_eq!(session.served, 2);
+        match srv.recv().unwrap() {
+            Frame::UpdateQ { worker, round, codec, count, data, .. } => {
+                assert_eq!((worker, round), (1, 0));
+                assert_eq!(codec, WireCodec::Q8.to_wire());
+                assert_eq!(count, dim as u64);
+                let eff = quant::decode(WireCodec::Q8, dim, &data).unwrap();
+                assert_eq!(session.worker.lbg().unwrap(), &eff[..], "LBG not resynced");
+            }
+            other => panic!("expected UpdateQ, got {other:?}"),
+        }
+        // The client reconstructed round 1 as base + delta, exactly.
+        assert!(matches!(srv.recv().unwrap(), Frame::UpdateQ { round: 1, .. }));
+        let (bt, held) = session.recon.clone().unwrap();
+        assert_eq!(bt, 1);
+        for (h, t) in held.iter().zip(&theta1) {
+            assert!((h - t).abs() < 1e-6, "delta reconstruction drifted");
+        }
+
+        // The reconnect re-handshakes with Rejoin3 carrying dim + token,
+        // and drops the stale delta base.
+        let (mut srv2, mut wrk2) = MemLink::pair();
+        srv2.send(&Frame::Welcome3 {
+            dim: dim as u64,
+            tau: 1,
+            eta: 0.05,
+            delta: 2.0,
+            token: 777,
+            codec: WireCodec::Q8.to_wire(),
+        })
+        .unwrap();
+        session.handshake(&mut wrk2, dim).unwrap();
+        match srv2.recv().unwrap() {
+            Frame::Rejoin3 { worker, last_round, dim: d, token } => {
+                assert_eq!((worker, last_round), (1, 1));
+                assert_eq!(d, dim as u64);
+                assert_eq!(token, 777);
+            }
+            other => panic!("expected Rejoin3, got {other:?}"),
+        }
+        assert!(session.recon.is_none(), "stale delta base survived the rejoin");
+        assert!(session.residual.is_empty(), "stale EF residual survived the rejoin");
+    }
+
+    /// A delta `RoundQ` whose base is not the held round is a protocol
+    /// error — silently applying it would desync theta between the ends.
+    #[test]
+    fn delta_round_against_the_wrong_base_is_fatal() {
+        let dim = 4;
+        let mut trainer = MockTrainer::new(dim, 2, 0.2, 0.0, 5);
+        let mut session = WorkerSession::new(0, Box::new(Identity), WireCodec::F16);
+        let (mut srv, mut wrk) = MemLink::pair();
+        srv.send(&Frame::Welcome3 {
+            dim: dim as u64,
+            tau: 1,
+            eta: 0.05,
+            delta: 0.5,
+            token: 1,
+            codec: WireCodec::F16.to_wire(),
+        })
+        .unwrap();
+        let params = session.handshake(&mut wrk, dim).unwrap();
+        let _ = srv.recv().unwrap();
+        let mut data = Vec::new();
+        quant::encode(WireCodec::F16, &vec![0.25f32; dim], &mut data);
+        // No round was ever served: there is no base to delta against.
+        srv.send(&Frame::RoundQ {
+            t: 0,
+            base: 7,
+            codec: WireCodec::F16.to_wire(),
+            count: dim as u64,
+            data,
+        })
+        .unwrap();
+        let err = format!(
+            "{:#}",
+            session.serve(&mut wrk, &mut trainer, &params).unwrap_err()
+        );
+        assert!(err.contains("holds no base"), "{err}");
+    }
+
+    /// Error feedback's defining invariant, at the wire boundary: after
+    /// every uplink, `residual == corrected - effective` exactly, where
+    /// `corrected = grad + previous residual` — so quantization error is
+    /// carried forward, not dropped, and it never compounds (each round's
+    /// residual is one encoding's loss, bounded by the codec's step).
+    #[test]
+    fn uplink_error_feedback_residual_is_the_encoding_loss_exactly() {
+        let dim = 16;
+        let mut session = WorkerSession::new(0, Box::new(Identity), WireCodec::Q8);
+        session.codec = WireCodec::Q8; // as if negotiated
+        let (mut srv, mut wrk) = MemLink::pair();
+        let grad: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.731).sin()).collect();
+        let policy = ThresholdPolicy::fixed(-1.0); // every round refreshes
+        let mut prev_residual = vec![0.0f32; dim];
+        for round in 0..3 {
+            let mut g = grad.clone();
+            let msg = session.worker.process_round(round, &mut g, 0.0, &policy);
+            session.send_update(&mut wrk, msg).unwrap();
+            let Frame::UpdateQ { data, .. } = srv.recv().unwrap() else {
+                panic!("expected UpdateQ")
+            };
+            let eff = quant::decode(WireCodec::Q8, dim, &data).unwrap();
+            assert_eq!(session.worker.lbg().unwrap(), &eff[..], "LBG not resynced");
+            // grad was refreshed from the *resynced* LBG each round, but
+            // the policy forces a refresh of the same `grad` vector, so
+            // corrected_r = grad + residual_{r-1} exactly.
+            let corrected: Vec<f32> =
+                grad.iter().zip(&prev_residual).map(|(g, r)| g + r).collect();
+            for ((res, c), e) in session.residual.iter().zip(&corrected).zip(&eff) {
+                assert_eq!(*res, c - e, "residual is not this encoding's loss");
+            }
+            // One encoding's q8 loss is at most the quantization step of
+            // the corrected vector's range — no compounding across rounds.
+            let mut lo = f32::MAX;
+            let mut hi = f32::MIN;
+            for &c in &corrected {
+                lo = lo.min(c);
+                hi = hi.max(c);
+            }
+            let bound = quant::q8_error_bound(lo, hi) + 1e-6;
+            for r in &session.residual {
+                assert!(r.abs() <= bound, "round {round}: residual {r} exceeds {bound}");
+            }
+            prev_residual.clear();
+            prev_residual.extend_from_slice(&session.residual);
+        }
     }
 }

@@ -66,6 +66,35 @@ pub trait Link: Send {
     fn set_recv_limit(&mut self, max_payload: usize);
 }
 
+/// Send `frame`, streaming it as bounded [`Frame::Chunk`] continuation
+/// frames when its encoding exceeds [`wire::CHUNK_DATA_LEN`] (protocol
+/// v3). Returns the total wire bytes sent (chunk framing overhead
+/// included). Frames that fit in one buffer take the plain
+/// [`Link::send`] path, byte-identical to protocol v1/v2 — callers on a
+/// raw v1/v2 session can use this unconditionally.
+pub fn send_frame(link: &mut dyn Link, frame: &Frame) -> Result<usize> {
+    match frame.chunk_frames(wire::CHUNK_DATA_LEN) {
+        None => link.send(frame),
+        Some(chunks) => {
+            let mut sent = 0usize;
+            for c in &chunks {
+                sent += link.send(c)?;
+            }
+            Ok(sent)
+        }
+    }
+}
+
+/// Receive one logical frame, reassembling a chunk stream when the peer
+/// streamed it (protocol v3). `max_total` caps the assembled inner
+/// frame's wire bytes — pass the session receive limit plus framing
+/// overhead. Non-chunk frames pass through untouched, so this is safe
+/// (and byte-identical) on v1/v2 sessions too.
+pub fn recv_frame(link: &mut dyn Link, max_total: usize) -> Result<Frame> {
+    let first = link.recv()?;
+    wire::assemble_chunks(first, max_total, &mut || link.recv())
+}
+
 // ---------------------------------------------------------------------------
 // TCP.
 // ---------------------------------------------------------------------------

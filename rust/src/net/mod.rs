@@ -20,8 +20,16 @@
 //!   fatal — and free to rejoin).
 //! * [`client`] — the worker loop: handshake, train on `Round`, uplink an
 //!   `Update`, exit on `Shutdown`; [`connect_worker_with_retry`] adds a
-//!   capped-backoff reconnect loop that re-handshakes with `Rejoin`
-//!   (wire protocol v2) and carries the LBGM state across connections.
+//!   capped-backoff reconnect loop that re-handshakes with `Rejoin` (or
+//!   the token-authenticated `Rejoin3`) and carries the LBGM state across
+//!   connections, plus a bounded serve-phase recv deadline so a server
+//!   that dies without closing its sockets cannot wedge the worker.
+//! * [`quant`] — wire protocol v3's value codecs (`q8`/`f16`), selected
+//!   per session by `FlConfig::wire_codec`: quantized `RoundQ`/`UpdateQ`
+//!   frames with error feedback on both ends, delta-encoded broadcasts,
+//!   and bounded `Chunk` streaming for large payloads. The default `raw`
+//!   codec keeps the v2 byte surface exactly, and v1/v2 peers are always
+//!   served raw regardless of the server's codec.
 //!
 //! For reproducible torture tests, [`crate::sim`] wraps these links in a
 //! seeded fault-injection decorator ([`ChaosLink`](crate::sim::ChaosLink));
@@ -47,11 +55,12 @@
 
 pub mod client;
 pub mod link;
+pub mod quant;
 pub mod server;
 pub mod wire;
 
 pub use client::{connect_worker, connect_worker_with_retry, run_worker, ReconnectCfg};
-pub use link::{Link, LinkProfile, MemLink, SimLink, TcpLink};
+pub use link::{recv_frame, send_frame, Link, LinkProfile, MemLink, SimLink, TcpLink};
 pub use server::{
     accept_workers, handshake_accept, handshake_one, run_server_rounds,
     run_server_rounds_elastic, Acceptor, ElasticOpts, HandshakeOutcome, Session,
@@ -107,17 +116,28 @@ where
     let listener = TcpListener::bind(("127.0.0.1", 0))?;
     let addr = listener.local_addr()?;
     let mut handles = Vec::with_capacity(k);
+    // Workers inherit the run's wire-codec preference; the server's
+    // handshake negotiates the same value back, so a `raw` config keeps
+    // every session on the v2 byte surface (bit parity).
+    let wire_codec = cfg.wire_codec;
     for id in 0..k {
         let mut trainer = make_trainer(id);
         let codec = codec();
         handles.push(std::thread::spawn(move || -> Result<usize> {
-            connect_worker_with_retry(addr, id, &mut trainer, codec, &ReconnectCfg::default())
+            connect_worker_with_retry(
+                addr,
+                id,
+                &mut trainer,
+                codec,
+                wire_codec,
+                &ReconnectCfg::default(),
+            )
         }));
     }
     let dim = theta0.len();
     let acceptor =
         server::Acceptor::spawn(listener, k, dim, cfg, DEFAULT_HANDSHAKE_TIMEOUT)?;
-    let mut links = acceptor.wait_for_fleet(k)?;
+    let (mut links, codecs) = acceptor.wait_for_fleet(k)?;
     let plan = cfg.faults.as_ref().map(|p| std::sync::Arc::new(p.clone()));
     if let Some(p) = &plan {
         links = crate::sim::chaos::wrap_links_traced(links, p, cfg.trace.clone());
@@ -129,6 +149,7 @@ where
     };
     let out = run_server_rounds_elastic(
         &mut links,
+        codecs,
         eval_trainer,
         theta0,
         weights,

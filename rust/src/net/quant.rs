@@ -1,0 +1,334 @@
+//! `net::quant` — bit-packed value codecs for wire protocol v3.
+//!
+//! Packs an f32 vector into the `data` field of a `RoundQ`/`UpdateQ`
+//! frame and back. Two lossy codecs, selected per session by the
+//! `--wire-codec` knob ([`WireCodec`]):
+//!
+//! * **Q8** — per-vector affine int8: an 8-byte header (`lo: f32`,
+//!   `scale: f32`), then one byte per value. `q = round((x - lo)/scale)`
+//!   with `scale = (hi - lo)/255`, dequantized as `lo + q*scale`, so the
+//!   worst-case per-element error is `scale/2 = (hi - lo)/510`. A
+//!   constant vector encodes with `scale = 0` and dequantizes exactly
+//!   (the all-zero gradient stays exactly zero — the error-feedback
+//!   fixed point the property tests pin).
+//! * **F16** — IEEE-754 binary16 with round-to-nearest-even, halving the
+//!   bytes for ~3 decimal digits of mantissa. Overflow saturates to
+//!   ±inf; subnormals and signed zeros are preserved.
+//!
+//! Both codecs are deterministic, byte-stable functions of their input —
+//! the quantized parity surface is *bounded error*, not bit equality
+//! (raw frames remain the bit-parity surface; see ARCHITECTURE.md).
+//! Lossiness is compensated one layer up by error feedback: uplinks add
+//! the client's residual before packing and keep `corrected − dq(q)`,
+//! downlinks delta-encode against the receiver's reconstruction, so the
+//! quantization error of round t does not compound into round t+1.
+//!
+//! The affine scheme follows the uniform-quantization baselines of
+//! Konečný et al. (structured updates) and the QRR scheme in PAPERS.md;
+//! the repo's modeled-cost [`Compressor`](crate::compress::Compressor)
+//! stack is untouched — this layer changes measured wire bytes only.
+
+use anyhow::{ensure, Result};
+
+use crate::compress::WireCodec;
+
+use super::wire::Reader;
+
+/// Append the packed encoding of `xs` under `codec` to `out` (exactly
+/// [`WireCodec::packed_len`]`(xs.len())` bytes). `Raw` packs plain
+/// little-endian f32 bit patterns.
+pub fn encode(codec: WireCodec, xs: &[f32], out: &mut Vec<u8>) {
+    out.reserve(codec.packed_len(xs.len()));
+    match codec {
+        WireCodec::Raw => {
+            for &x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        WireCodec::Q8 => q8_encode(xs, out),
+        WireCodec::F16 => {
+            for &x in xs {
+                out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Decode `count` values packed by [`encode`]; errors when `data` is not
+/// exactly the codec's packed length.
+pub fn decode(codec: WireCodec, count: usize, data: &[u8]) -> Result<Vec<f32>> {
+    ensure!(
+        data.len() == codec.packed_len(count),
+        "{} data length {} != {} for {count} values",
+        codec.name(),
+        data.len(),
+        codec.packed_len(count)
+    );
+    let mut r = Reader::new(data);
+    match codec {
+        WireCodec::Raw => r.f32s(count),
+        WireCodec::Q8 => {
+            let lo = r.f32()?;
+            let scale = r.f32()?;
+            let qs = r.bytes(count)?;
+            Ok(qs.iter().map(|&q| lo + q as f32 * scale).collect())
+        }
+        WireCodec::F16 => {
+            let raw = r.bytes(2 * count)?;
+            Ok(raw
+                .chunks_exact(2)
+                .map(|c| {
+                    let mut b = [0u8; 2];
+                    b.copy_from_slice(c);
+                    f16_bits_to_f32(u16::from_le_bytes(b))
+                })
+                .collect())
+        }
+    }
+}
+
+/// Dequantized image of `xs` under `codec`: what the receiver will
+/// decode. The error-feedback layers keep their state against this
+/// (identical bytes on both ends), so client LBG and server LBG stores
+/// stay bit-coherent even on a lossy codec.
+pub fn effective(codec: WireCodec, xs: &[f32]) -> Vec<f32> {
+    let mut packed = Vec::with_capacity(codec.packed_len(xs.len()));
+    encode(codec, xs, &mut packed);
+    // encode and decode are exact inverses of the length contract, so
+    // this cannot fail for a buffer encode just produced.
+    decode(codec, xs.len(), &packed).unwrap_or_default()
+}
+
+/// Worst-case per-element absolute error of [`WireCodec::Q8`] for a
+/// vector spanning `[lo, hi]`: half a quantization step.
+pub fn q8_error_bound(lo: f32, hi: f32) -> f32 {
+    (hi - lo) / 510.0
+}
+
+fn q8_encode(xs: &[f32], out: &mut Vec<u8>) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    if !(lo <= hi) {
+        // Empty input (or all-NaN, which a finite training loop never
+        // produces): encode a degenerate zero range.
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let scale = (hi - lo) / 255.0;
+    out.extend_from_slice(&lo.to_le_bytes());
+    out.extend_from_slice(&scale.to_le_bytes());
+    for &x in xs {
+        let q = if scale > 0.0 {
+            ((x - lo) / scale).round().clamp(0.0, 255.0)
+        } else {
+            0.0
+        };
+        out.push(q as u8);
+    }
+}
+
+/// f32 → IEEE-754 binary16 bit pattern, round-to-nearest-even. Overflow
+/// saturates to ±inf; NaN stays NaN (payload truncated, quiet bit set).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN: keep the class; force a quiet NaN if the truncated
+        // mantissa would collapse a NaN into an infinity.
+        if man == 0 {
+            return sign | 0x7C00;
+        }
+        let m = ((man >> 13) as u16) | 0x0200;
+        return sign | 0x7C00 | m;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // Normal half: round the 13 truncated mantissa bits to nearest,
+        // ties to even. The increment correctly carries into the
+        // exponent (and up to inf) because the bit layout is contiguous.
+        let mant = man >> 13;
+        let rest = man & 0x1FFF;
+        let half = 0x1000;
+        let mut h = (sign as u32) | (((unbiased + 15) as u32) << 10) | mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    if unbiased >= -24 {
+        // Subnormal half: shift the full significand (implicit bit made
+        // explicit) into place, then round to nearest even.
+        let shift = (-14 - unbiased) as u32; // 1..=10
+        let full = man | 0x0080_0000;
+        let rest_bits = 13 + shift;
+        let mant = full >> rest_bits;
+        let rest = full & ((1u32 << rest_bits) - 1);
+        let half = 1u32 << (rest_bits - 1);
+        let mut h = (sign as u32) | mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    sign // underflow → signed zero
+}
+
+/// IEEE-754 binary16 bit pattern → f32 (exact: every half is an f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man != 0 {
+        // Subnormal half: normalize into an f32 normal.
+        let mut e = 113u32;
+        let mut m = man;
+        while (m & 0x0400) == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        sign | (e << 23) | ((m & 0x03FF) << 13)
+    } else {
+        sign // ±0
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{forall, VecF32};
+
+    #[test]
+    fn q8_round_trip_error_is_within_half_a_step() {
+        let gen = VecF32 { min_len: 1, max_len: 200, scale: 8.0 };
+        forall(7, 80, &gen, |xs| {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in xs.iter() {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            let got = effective(WireCodec::Q8, xs);
+            if got.len() != xs.len() {
+                return Err("length changed".into());
+            }
+            let bound = q8_error_bound(lo, hi) * (1.0 + 1e-4) + 1e-6;
+            for (a, b) in xs.iter().zip(got.iter()) {
+                if (a - b).abs() > bound {
+                    return Err(format!("|{a} - {b}| > {bound}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn q8_constant_vectors_are_exact() {
+        for v in [0.0f32, -0.0, 1.5, -273.25] {
+            let xs = vec![v; 33];
+            let got = effective(WireCodec::Q8, &xs);
+            for g in got {
+                assert_eq!(g.to_bits(), (v + 0.0).to_bits(), "constant {v} drifted");
+            }
+        }
+        // Empty vectors pack to just the affine header.
+        let mut out = Vec::new();
+        encode(WireCodec::Q8, &[], &mut out);
+        assert_eq!(out.len(), WireCodec::Q8.packed_len(0));
+        assert_eq!(decode(WireCodec::Q8, 0, &out).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn q8_extremes_map_to_range_endpoints() {
+        let xs = vec![-2.0f32, 0.0, 3.0];
+        let got = effective(WireCodec::Q8, &xs);
+        // lo and hi quantize to q=0 and q=255 and dequantize exactly
+        // (up to the f32 rounding of lo + 255*scale).
+        assert!((got[0] + 2.0).abs() < 1e-6);
+        assert!((got[2] - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn f16_round_trips_exactly_representable_values() {
+        // Every value here is exactly representable in binary16.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 1024.0, 65504.0, -65504.0, 6.1035156e-5] {
+            let got = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(got.to_bits(), v.to_bits(), "{v} drifted");
+        }
+        // Signed zero is preserved.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-0.0)).to_bits(), (-0.0f32).to_bits());
+        // Infinities and NaN keep their class.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf; tiny values flush to signed zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e-20)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_relative_error_is_bounded_for_normals() {
+        let gen = VecF32 { min_len: 1, max_len: 128, scale: 100.0 };
+        forall(11, 60, &gen, |xs| {
+            let got = effective(WireCodec::F16, xs);
+            for (a, b) in xs.iter().zip(got.iter()) {
+                // Round-to-nearest in binary16: relative error <= 2^-11
+                // for normal halves; subnormals get an absolute bound of
+                // half the smallest subnormal step.
+                let tol = a.abs() * 4.9e-4 + 3.0e-8;
+                if (a - b).abs() > tol {
+                    return Err(format!("|{a} - {b}| > {tol}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next half
+        // (1 + 2^-10); ties-to-even rounds it down to 1.0.
+        let tie = 1.0f32 + f32::powi(2.0, -11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tie)), 1.0);
+        // 1 + 3*2^-11 ties between 1+2^-10 and 1+2^-9; even is 1+2^-9.
+        let tie_up = 1.0f32 + 3.0 * f32::powi(2.0, -11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tie_up)), 1.0 + f32::powi(2.0, -9));
+    }
+
+    #[test]
+    fn packed_lengths_match_the_codec_contract() {
+        let xs: Vec<f32> = (0..57).map(|i| (i as f32 - 28.0) * 0.375).collect();
+        for codec in [WireCodec::Raw, WireCodec::Q8, WireCodec::F16] {
+            let mut out = Vec::new();
+            encode(codec, &xs, &mut out);
+            assert_eq!(out.len(), codec.packed_len(xs.len()), "{}", codec.name());
+            let back = decode(codec, xs.len(), &out).unwrap();
+            assert_eq!(back.len(), xs.len());
+            // Raw is bit-exact.
+            if codec == WireCodec::Raw {
+                for (a, b) in xs.iter().zip(back.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            // Wrong-length data is rejected.
+            assert!(decode(codec, xs.len() + 1, &out).is_err());
+        }
+    }
+}

@@ -19,14 +19,31 @@
 //!   `tests/net_loopback.rs` and `tests/engine_parity.rs`).
 //! * **Mid-run rejoin**: the accept thread keeps listening after round 0.
 //!   A returning worker re-handshakes with `Frame::Rejoin { worker,
-//!   last_round }` (wire protocol v2; v1 `Hello` is still accepted), the
-//!   round loop re-seats its link at the next round boundary, and the
+//!   last_round }` (wire protocol v2; v1 `Hello` is still accepted) or —
+//!   on a v3 session — `Frame::Rejoin3`, which additionally carries the
+//!   model dimension (revalidated at the handshake, not first uplink) and
+//!   the session token issued by `Welcome3` ([`session_token`]; a
+//!   mismatch rejects the re-seat before it can displace a live worker).
+//!   The round loop re-seats its link at the next round boundary, and the
 //!   worker resumes with the next `Round` broadcast — which replays the
 //!   full current theta, so no extra state transfer is needed (LBGM's
 //!   downlink is always dense). The client side reconciles its LBGM
 //!   look-back state by forcing its first post-rejoin uplink to be `Full`
 //!   (see [`connect_worker_with_retry`]), which restores LBG coherence no
 //!   matter what was in flight when the connection died.
+//!
+//! **Wire value codecs (protocol v3).** A peer that opens with `Hello3`
+//! negotiates a value codec for the session: the server replies with its
+//! own configured [`WireCodec`] (the server wins, so one fleet-wide knob
+//! governs the run). On a `q8`/`f16` session the theta broadcast goes out
+//! as a [`Frame::RoundQ`] — delta-encoded against the last reconstruction
+//! the worker provably applied ([`DownlinkState`]), forced dense after any
+//! rejoin, absence, or send failure — and full-gradient uplinks arrive as
+//! `Frame::UpdateQ`, dequantized here into the exact values both sides
+//! agree on. v1/v2 peers (and `raw` sessions) keep the byte-identical
+//! dense `Round`/`Update` path. The ledger additionally records the
+//! *raw-equivalent* bytes of every round-protocol frame, so per-round
+//! quantized-vs-raw savings fall out of the measured columns.
 //!
 //! Rounds use **partial-participation aggregation**: a worker whose update
 //! doesn't arrive by the deadline — timeout, disconnect, corrupt frame, or
@@ -56,9 +73,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::compress::dense_cost;
+use crate::compress::{dense_cost, Cost, WireCodec};
 use crate::coordinator::accounting::CommLedger;
-use crate::coordinator::messages::WorkerMsg;
+use crate::coordinator::messages::{Payload, WorkerMsg};
 use crate::coordinator::round::{eval_or_carry, train_loss_or_carry, FlConfig};
 use crate::coordinator::sampling::sample_clients;
 use crate::coordinator::server::Server;
@@ -68,10 +85,12 @@ use crate::metrics::{RoundRecord, RunSeries};
 use crate::obs::{record_to, Event, UplinkTracker};
 use crate::sim::chaos::ChaosLink;
 use crate::sim::FaultPlan;
+use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 use crate::{obs_debug, obs_info, obs_warn};
 
-use super::link::{Link, TcpLink};
+use super::link::{recv_frame, send_frame, Link, TcpLink};
+use super::quant;
 use super::wire::{self, Frame};
 
 /// Poll cadence of the nonblocking accept loop (how quickly a stop request
@@ -104,34 +123,63 @@ pub fn policy_delta(policy: ThresholdPolicy) -> Result<f64> {
     }
 }
 
+/// Domain-separation constant folded into the run seed before deriving
+/// session tokens, so tokens never collide with any other stream drawn
+/// from the same seed (sampling, trainers, fault plans).
+const TOKEN_DOMAIN: u64 = 0x7365_7373_5f76_33; // "sess_v3"
+
+/// The session token issued to `worker` in `Welcome3` and demanded back
+/// in every `Rejoin3`. Derived deterministically from the run seed, so
+/// the handshake can re-derive it instead of storing per-worker state —
+/// and so both engines of a parity pair issue identical tokens.
+///
+/// This is an anti-footgun, not cryptography: it stops a misconfigured
+/// duplicate worker (or a test harness crossing its wires) from silently
+/// displacing a seated peer with a forged `Rejoin3`. Anyone who can read
+/// the run config — or observe the `Welcome3` in cleartext — can mint
+/// tokens; transport-level security is out of scope (see ROADMAP).
+pub fn session_token(seed: u64, worker: u32) -> u64 {
+    let mut root = Rng::new(seed ^ TOKEN_DOMAIN);
+    let mut stream = root.fork(worker as u64);
+    stream.next_u64()
+}
+
 /// How a freshly handshaken connection introduced itself.
 pub enum HandshakeOutcome {
-    /// A first-time `Hello`.
+    /// A first-time `Hello` (v1/v2) or `Hello3` (v3).
     Fresh {
         /// The worker id the peer claimed (validated against `K`).
         worker: usize,
+        /// Negotiated wire value codec for the session: the server's
+        /// configured codec for a `Hello3` peer, always `Raw` for v1/v2.
+        codec: WireCodec,
     },
-    /// A mid-run `Rejoin` re-handshake (wire protocol v2).
+    /// A mid-run `Rejoin` (v2) or token-authenticated `Rejoin3` (v3)
+    /// re-handshake.
     Rejoin {
         /// The worker id the peer claimed (validated against `K`).
         worker: usize,
         /// The last round the worker served before losing its connection,
         /// if it ever completed one.
         last_round: Option<u64>,
+        /// Negotiated wire value codec (see `Fresh::codec`).
+        codec: WireCodec,
     },
 }
 
 /// One handshaken connection, as delivered by the [`Acceptor`] to the
 /// round loop's session registry.
 pub enum Session {
-    /// A fresh `Hello` handshake.
+    /// A fresh `Hello`/`Hello3` handshake.
     Fresh {
         /// Validated worker id.
         worker: usize,
         /// The post-handshake link (session receive caps already applied).
         link: Box<dyn Link>,
+        /// Negotiated wire value codec for the session.
+        codec: WireCodec,
     },
-    /// A mid-run `Rejoin` re-handshake.
+    /// A mid-run `Rejoin`/`Rejoin3` re-handshake.
     Rejoin {
         /// Validated worker id.
         worker: usize,
@@ -139,12 +187,22 @@ pub enum Session {
         last_round: Option<u64>,
         /// The post-handshake link (session receive caps already applied).
         link: Box<dyn Link>,
+        /// Negotiated wire value codec for the session.
+        codec: WireCodec,
     },
 }
 
 /// Server half of the handshake on one freshly connected link: expect
-/// `Hello` (fresh session) or `Rejoin` (returning worker, protocol v2),
-/// validate it against the federation shape, reply `Welcome`.
+/// `Hello`/`Hello3` (fresh session) or `Rejoin`/`Rejoin3` (returning
+/// worker), validate it against the federation shape, reply `Welcome`
+/// (v1/v2 openers) or `Welcome3` (v3 openers, carrying the session token
+/// and the negotiated codec — the server's configured [`WireCodec`]).
+///
+/// A v3 `Rejoin3` is validated strictly at the handshake: worker range,
+/// model dimension, *and* session token. A v2 `Rejoin` carries neither
+/// dim nor token, so its dimension is validated at the first full uplink
+/// instead (see [`collect_update`]'s length check) and its re-seat is
+/// unauthenticated — the documented v2 limitation (see [`seat`]).
 pub fn handshake_accept(
     link: &mut dyn Link,
     k: usize,
@@ -154,7 +212,7 @@ pub fn handshake_accept(
     let delta = policy_delta(cfg.policy)?;
     let frame = link.recv()?;
     let tag = frame.tag();
-    let outcome = match frame {
+    let (outcome, v3) = match frame {
         Frame::Hello { worker, dim: wdim } => {
             let w = worker as usize;
             ensure!(w < k, "worker id {w} out of range (K={k})");
@@ -162,22 +220,78 @@ pub fn handshake_accept(
                 wdim == dim as u64,
                 "worker {w} has dim {wdim}, server expects {dim}"
             );
-            HandshakeOutcome::Fresh { worker: w }
+            (HandshakeOutcome::Fresh { worker: w, codec: WireCodec::Raw }, false)
+        }
+        Frame::Hello3 { worker, dim: wdim, codec } => {
+            let w = worker as usize;
+            ensure!(w < k, "worker id {w} out of range (K={k})");
+            ensure!(
+                wdim == dim as u64,
+                "worker {w} has dim {wdim}, server expects {dim}"
+            );
+            // The peer's preference must at least be a codec we know;
+            // negotiation itself is server-wins.
+            WireCodec::from_wire(codec)
+                .with_context(|| format!("worker {w}'s Hello3 codec preference"))?;
+            (HandshakeOutcome::Fresh { worker: w, codec: cfg.wire_codec }, true)
         }
         Frame::Rejoin { worker, last_round } => {
             let w = worker as usize;
             ensure!(w < k, "rejoining worker id {w} out of range (K={k})");
             let last = (last_round != wire::REJOIN_NEVER_SERVED).then_some(last_round);
-            HandshakeOutcome::Rejoin { worker: w, last_round: last }
+            (
+                HandshakeOutcome::Rejoin {
+                    worker: w,
+                    last_round: last,
+                    codec: WireCodec::Raw,
+                },
+                false,
+            )
+        }
+        Frame::Rejoin3 { worker, last_round, dim: wdim, token } => {
+            let w = worker as usize;
+            ensure!(w < k, "rejoining worker id {w} out of range (K={k})");
+            ensure!(
+                wdim == dim as u64,
+                "rejoining worker {w} has dim {wdim}, server expects {dim}"
+            );
+            ensure!(
+                token == session_token(cfg.seed, worker),
+                "rejoining worker {w} presented a bad session token"
+            );
+            let last = (last_round != wire::REJOIN_NEVER_SERVED).then_some(last_round);
+            (
+                HandshakeOutcome::Rejoin {
+                    worker: w,
+                    last_round: last,
+                    codec: cfg.wire_codec,
+                },
+                true,
+            )
         }
         _ => bail!("expected Hello or Rejoin, got tag {tag}"),
     };
-    link.send(&Frame::Welcome {
-        dim: dim as u64,
-        tau: cfg.tau as u32,
-        eta: cfg.eta,
-        delta,
-    })?;
+    if v3 {
+        let (worker, codec) = match &outcome {
+            HandshakeOutcome::Fresh { worker, codec }
+            | HandshakeOutcome::Rejoin { worker, codec, .. } => (*worker, *codec),
+        };
+        link.send(&Frame::Welcome3 {
+            dim: dim as u64,
+            tau: cfg.tau as u32,
+            eta: cfg.eta,
+            delta,
+            token: session_token(cfg.seed, worker as u32),
+            codec: codec.to_wire(),
+        })?;
+    } else {
+        link.send(&Frame::Welcome {
+            dim: dim as u64,
+            tau: cfg.tau as u32,
+            eta: cfg.eta,
+            delta,
+        })?;
+    }
     Ok(outcome)
 }
 
@@ -191,7 +305,7 @@ pub fn handshake_one(
     cfg: &FlConfig,
 ) -> Result<usize> {
     match handshake_accept(link, k, dim, cfg)? {
-        HandshakeOutcome::Fresh { worker } => Ok(worker),
+        HandshakeOutcome::Fresh { worker, .. } => Ok(worker),
         HandshakeOutcome::Rejoin { worker, .. } => {
             bail!("worker {worker} sent Rejoin where a fresh Hello was required")
         }
@@ -221,11 +335,11 @@ fn handshake_stream(
     link.set_recv_timeout(None)?;
     link.set_recv_limit(wire::session_max_payload(dim));
     Ok(match outcome {
-        HandshakeOutcome::Fresh { worker } => {
-            Session::Fresh { worker, link: Box::new(link) }
+        HandshakeOutcome::Fresh { worker, codec } => {
+            Session::Fresh { worker, link: Box::new(link), codec }
         }
-        HandshakeOutcome::Rejoin { worker, last_round } => {
-            Session::Rejoin { worker, last_round, link: Box::new(link) }
+        HandshakeOutcome::Rejoin { worker, last_round, codec } => {
+            Session::Rejoin { worker, last_round, link: Box::new(link), codec }
         }
     })
 }
@@ -363,24 +477,29 @@ impl Acceptor {
     }
 
     /// Block until all `k` worker slots have handshaken, and return their
-    /// links indexed by worker id. A connection that fails its handshake
-    /// is rejected (dropped, closing its socket) by its handshake thread
-    /// without touching the others; a duplicate worker id is rejected
-    /// here, first connection wins.
-    pub fn wait_for_fleet(&self, k: usize) -> Result<Vec<Box<dyn Link>>> {
-        let mut slots: Vec<Option<Box<dyn Link>>> = (0..k).map(|_| None).collect();
+    /// links plus per-worker negotiated wire codecs, both indexed by
+    /// worker id. A connection that fails its handshake is rejected
+    /// (dropped, closing its socket) by its handshake thread without
+    /// touching the others; a duplicate worker id is rejected here, first
+    /// connection wins.
+    pub fn wait_for_fleet(
+        &self,
+        k: usize,
+    ) -> Result<(Vec<Box<dyn Link>>, Vec<WireCodec>)> {
+        let mut slots: Vec<Option<(Box<dyn Link>, WireCodec)>> =
+            (0..k).map(|_| None).collect();
         let mut connected = 0usize;
         while connected < k {
             let session = self.rx.recv().map_err(|_| {
                 anyhow::anyhow!("accept thread exited before the fleet connected")
             })?;
-            let (w, link) = match session {
-                Session::Fresh { worker, link } => (worker, link),
-                Session::Rejoin { worker, link, .. } => (worker, link),
+            let (w, link, codec) = match session {
+                Session::Fresh { worker, link, codec } => (worker, link, codec),
+                Session::Rejoin { worker, link, codec, .. } => (worker, link, codec),
             };
             match slots.get_mut(w) {
                 Some(slot) if slot.is_none() => {
-                    *slot = Some(link);
+                    *slot = Some((link, codec));
                     connected += 1;
                 }
                 Some(_) => obs_warn!("net: rejecting duplicate worker {w}"),
@@ -388,13 +507,17 @@ impl Acceptor {
             }
         }
         let mut fleet: Vec<Box<dyn Link>> = Vec::with_capacity(k);
+        let mut codecs: Vec<WireCodec> = Vec::with_capacity(k);
         for (w, slot) in slots.into_iter().enumerate() {
             match slot {
-                Some(link) => fleet.push(link),
+                Some((link, codec)) => {
+                    fleet.push(link);
+                    codecs.push(codec);
+                }
                 None => anyhow::bail!("fleet assembly finished with worker {w} unseated"),
             }
         }
-        Ok(fleet)
+        Ok((fleet, codecs))
     }
 
     /// Ask the accept thread to exit (honored within its poll interval).
@@ -414,7 +537,10 @@ impl Drop for Acceptor {
 
 /// Accept workers on `listener` until all `k` slots are filled, handshake
 /// each (in parallel — a silent connection stalls only itself), and return
-/// their links indexed by worker id. The accept thread is torn down on
+/// their links indexed by worker id. Negotiated codecs are discarded: this
+/// fixed-fleet entry point serves raw sessions (drive quantized fleets
+/// through [`Acceptor::wait_for_fleet`] + [`run_server_rounds_elastic`],
+/// which carry the per-worker codecs). The accept thread is torn down on
 /// return; for a server that keeps listening for mid-run rejoins, spawn an
 /// [`Acceptor`] directly and keep it alive alongside
 /// [`run_server_rounds_elastic`].
@@ -432,7 +558,7 @@ pub fn accept_workers(
         cfg,
         handshake_timeout,
     )?;
-    let fleet = acceptor.wait_for_fleet(k);
+    let fleet = acceptor.wait_for_fleet(k).map(|(links, _codecs)| links);
     // O_NONBLOCK is a file-*description* flag shared with the caller's
     // handle through the dup; restore blocking mode so this borrowed
     // listener comes back the way it was lent — but only after the accept
@@ -444,9 +570,12 @@ pub fn accept_workers(
 
 /// One worker's round collection outcome (see [`collect_update`]).
 struct CollectOutcome {
-    /// The round update and its measured wire bytes, or the failure that
-    /// marks the worker absent for the round.
-    result: Result<(WorkerMsg, u64)>,
+    /// The round update, its measured wire bytes, its raw-equivalent
+    /// bytes (what a v3 `raw` session would have measured for the same
+    /// logical update; equal to the measured bytes on raw sessions), and
+    /// whether it arrived quantized — or the failure that marks the
+    /// worker absent for the round.
+    result: Result<(WorkerMsg, u64, u64, bool)>,
     /// Measured bytes of stale frames discarded along the way — they
     /// really crossed the link, so the ledger records them even when the
     /// collection ultimately fails.
@@ -462,15 +591,26 @@ struct CollectOutcome {
 /// merely slow to read them), at most [`MAX_DEADLINE_DRAINS`] reads of
 /// [`QUEUE_DRAIN_TIMEOUT`] each, so a late-but-queued update is accepted
 /// while an update still in flight is not waited for.
+///
+/// Accepts plain `Update` frames (any protocol version) and quantized v3
+/// `UpdateQ` frames, which are dequantized here into the exact values the
+/// worker computed for itself via [`quant::effective`] — both LBG copies
+/// see identical bit patterns. A full-gradient `Update` whose length
+/// disagrees with the model `dim` is rejected at this first uplink — the
+/// v2 `Rejoin` path carries no dim in its handshake, so this check is
+/// where an impostor or misconfigured rejoiner with the wrong model shape
+/// is caught on v2 sessions.
 fn collect_update(
     link: &mut dyn Link,
     w: usize,
     t: usize,
+    dim: usize,
     deadline: Instant,
 ) -> CollectOutcome {
+    let max_total = wire::HEADER_LEN + wire::session_max_payload(dim) + wire::CHECKSUM_LEN;
     let mut stale_bytes = 0u64;
     let mut drains = 0u32;
-    let result = (|| -> Result<(WorkerMsg, u64)> {
+    let result = (|| -> Result<(WorkerMsg, u64, u64, bool)> {
         loop {
             // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
             let remaining = deadline.saturating_duration_since(Instant::now());
@@ -485,11 +625,51 @@ fn collect_update(
                 remaining
             };
             link.set_recv_timeout(Some(timeout))?;
-            let frame = link.recv()?;
+            let frame = recv_frame(link, max_total)?;
             let bytes = frame.wire_bytes() as u64;
             let tag = frame.tag();
-            let Frame::Update(msg) = frame else {
-                bail!("worker {w} sent tag {tag} mid-round");
+            let (msg, raw_bytes, quantized) = match frame {
+                Frame::Update(msg) => {
+                    if let Payload::Full { grad } = &msg.payload {
+                        ensure!(
+                            grad.len() == dim,
+                            "worker {w} uplinked a {}-dim gradient, model dim is {dim}",
+                            grad.len()
+                        );
+                    }
+                    (msg, bytes, false)
+                }
+                Frame::UpdateQ {
+                    worker,
+                    round,
+                    train_loss,
+                    floats,
+                    bits,
+                    codec,
+                    count,
+                    data,
+                } => {
+                    let codec = WireCodec::from_wire(codec)
+                        .with_context(|| format!("worker {w}'s UpdateQ codec"))?;
+                    ensure!(
+                        count as usize == dim,
+                        "worker {w} uplinked a {count}-dim quantized gradient, \
+                         model dim is {dim}"
+                    );
+                    let effective = quant::decode(codec, dim, &data)?;
+                    let msg = WorkerMsg {
+                        worker: worker as usize,
+                        round: round as usize,
+                        payload: Payload::Full { grad: Arc::new(effective) },
+                        cost: Cost { floats, bits },
+                        train_loss,
+                    };
+                    // Raw equivalent: the same logical update as a dense
+                    // v3 `Update` frame (an Arc refcount bump, no copy).
+                    let raw = Frame::Update(msg.clone()).wire_bytes() as u64;
+                    (msg, raw, true)
+                }
+                _ => bail!("worker {w} sent tag {tag} mid-round"),
             };
             ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
             if msg.round < t {
@@ -501,10 +681,70 @@ fn collect_update(
                 continue;
             }
             ensure!(msg.round == t, "worker {w} answered round {} in round {t}", msg.round);
-            return Ok((msg, bytes));
+            return Ok((msg, bytes, raw_bytes, quantized));
         }
     })();
     CollectOutcome { result, stale_bytes }
+}
+
+/// Per-worker downlink delta-encoding state for quantized sessions.
+///
+/// `base` is the last theta reconstruction the worker has provably
+/// applied (its round-`r` update arrived, so it received and decoded the
+/// round-`r` broadcast); `pending` is the reconstruction of a broadcast
+/// sent but not yet acknowledged that way. Both hold the *server's own
+/// dequantization* of what it sent — structural error feedback: the next
+/// delta is computed against exactly the values the worker holds, so
+/// quantization error never compounds across rounds. Reset to default
+/// (forcing the next broadcast dense) after any rejoin, absence, or send
+/// failure, when the worker's copy can no longer be assumed.
+#[derive(Default)]
+struct DownlinkState {
+    base: Option<(u64, Vec<f32>)>,
+    pending: Option<(u64, Vec<f32>)>,
+}
+
+/// Broadcast round `t`'s theta to one quantized-session worker as a
+/// [`Frame::RoundQ`]: delta-encoded against the worker's acked base when
+/// one exists, dense (`base = `[`wire::DENSE_BASE`]) otherwise. Large
+/// frames are streamed in bounded chunks by [`send_frame`]. On success
+/// the server-side reconstruction is parked in `state.pending`, promoted
+/// to `state.base` only once the worker's round-`t` update proves the
+/// broadcast was applied.
+fn send_round_q(
+    link: &mut dyn Link,
+    codec: WireCodec,
+    t: u64,
+    theta: &[f32],
+    state: &mut DownlinkState,
+) -> Result<usize> {
+    let mut data = Vec::new();
+    let (base_round, recon) = match state.base.as_ref() {
+        Some((bt, base)) if base.len() == theta.len() => {
+            let delta: Vec<f32> =
+                theta.iter().zip(base.iter()).map(|(th, b)| th - b).collect();
+            quant::encode(codec, &delta, &mut data);
+            let eff = quant::decode(codec, delta.len(), &data)?;
+            let recon: Vec<f32> =
+                base.iter().zip(eff.iter()).map(|(b, e)| b + e).collect();
+            (*bt, recon)
+        }
+        _ => {
+            quant::encode(codec, theta, &mut data);
+            let recon = quant::decode(codec, theta.len(), &data)?;
+            (wire::DENSE_BASE, recon)
+        }
+    };
+    let frame = Frame::RoundQ {
+        t,
+        base: base_round,
+        codec: codec.to_wire(),
+        count: theta.len() as u64,
+        data,
+    };
+    let sent = send_frame(link, &frame)?;
+    state.pending = Some((t, recon));
+    Ok(sent)
 }
 
 /// Elasticity knobs for [`run_server_rounds_elastic`]: where mid-run
@@ -530,16 +770,21 @@ pub struct ElasticOpts<'a> {
 /// healthy) worker. It is rejected and dropped, exactly like a duplicate
 /// during the accept phase.
 ///
-/// Known limitation: the protocol is unauthenticated, so this guard is a
-/// speed bump, not a wall — a duplicate running the stock reconnect loop
-/// escalates its retry to `Rejoin` after the drop and can still displace
-/// the seated worker (which then rejoins and displaces it back). The
-/// federation stays *correct* under such flapping — every re-seat forces
-/// a dense refresh, so LBG copies remain coherent — it just burns uplink
-/// bytes and round faults. Authenticating rejoins (a per-session token
-/// issued in `Welcome`) needs a v3 frame layout; see ROADMAP.
+/// On a v3 session the `Rejoin3` re-handshake was already authenticated
+/// by [`handshake_accept`] against the [`session_token`] issued in
+/// `Welcome3`, so a duplicate without the token never reaches this table.
+/// Known v2 limitation: the legacy `Rejoin` frame carries no token, so on
+/// v2 sessions this guard is a speed bump, not a wall — a duplicate
+/// running the stock reconnect loop escalates its retry to `Rejoin` after
+/// the drop and can still displace the seated worker (which then rejoins
+/// and displaces it back). The federation stays *correct* under such
+/// flapping — every re-seat forces a dense refresh, so LBG copies remain
+/// coherent — it just burns uplink bytes and round faults.
+#[allow(clippy::too_many_arguments)]
 fn seat(
     links: &mut [Box<dyn Link>],
+    codecs: &mut [WireCodec],
+    downlink: &mut [DownlinkState],
     session: Session,
     plan: Option<&Arc<FaultPlan>>,
     trace: &Option<crate::obs::TraceHandle>,
@@ -547,7 +792,7 @@ fn seat(
     rejoins_seen: &mut [usize],
     t: usize,
 ) {
-    let (w, link, last) = match session {
+    let (w, link, last, codec) = match session {
         Session::Fresh { worker, .. } => {
             obs_warn!(
                 "net: rejecting mid-run Hello for already-seated worker {worker} \
@@ -555,7 +800,9 @@ fn seat(
             );
             return;
         }
-        Session::Rejoin { worker, last_round, link } => (worker, link, last_round),
+        Session::Rejoin { worker, last_round, link, codec } => {
+            (worker, link, last_round, codec)
+        }
     };
     let Some(slot) = links.get_mut(w) else {
         obs_warn!("net: dropping session for out-of-range worker {w}");
@@ -565,6 +812,14 @@ fn seat(
         Some(p) => Box::new(ChaosLink::wrap_traced(link, w, Arc::clone(p), trace.clone())),
         None => link,
     };
+    if let Some(c) = codecs.get_mut(w) {
+        *c = codec;
+    }
+    // The rejoined worker holds no trusted reconstruction: force its next
+    // quantized broadcast dense.
+    if let Some(d) = downlink.get_mut(w) {
+        *d = DownlinkState::default();
+    }
     ledger.record_rejoin(w);
     if let Some(seen) = rejoins_seen.get_mut(w) {
         *seen += 1;
@@ -590,6 +845,7 @@ fn seat(
 #[allow(clippy::too_many_arguments)]
 pub fn run_server_rounds_elastic(
     links: &mut [Box<dyn Link>],
+    codecs: Vec<WireCodec>,
     eval_trainer: &mut dyn LocalTrainer,
     theta0: Vec<f32>,
     weights: Vec<f32>,
@@ -601,11 +857,15 @@ pub fn run_server_rounds_elastic(
     let k = links.len();
     ensure!(k > 0, "no worker links");
     ensure!(weights.len() == k, "weights/links length mismatch");
+    ensure!(codecs.len() == k, "codecs/links length mismatch");
+    let mut codecs = codecs;
     let mut server = Server::new(theta0, weights, cfg.eta);
     let dim = server.theta.len();
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
     let mut rejoins_seen = vec![0usize; k];
+    let mut downlink: Vec<DownlinkState> = Vec::with_capacity(k);
+    downlink.resize_with(k, DownlinkState::default);
     let mut timers = PhaseTimer::new();
     let mut uplink_kinds = UplinkTracker::new(k);
 
@@ -619,7 +879,17 @@ pub fn run_server_rounds_elastic(
         // round — a planned recovery must not race the round clock.
         if let Some(el) = elastic {
             while let Some(s) = el.acceptor.try_session() {
-                seat(links, s, el.plan.as_ref(), &cfg.trace, &mut ledger, &mut rejoins_seen, t);
+                seat(
+                    links,
+                    &mut codecs,
+                    &mut downlink,
+                    s,
+                    el.plan.as_ref(),
+                    &cfg.trace,
+                    &mut ledger,
+                    &mut rejoins_seen,
+                    t,
+                );
             }
             if let Some(plan) = el.plan.as_deref() {
                 // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
@@ -637,6 +907,8 @@ pub fn run_server_rounds_elastic(
                     match el.acceptor.recv_deadline(wait_until) {
                         Some(s) => seat(
                             links,
+                            &mut codecs,
+                            &mut downlink,
                             s,
                             el.plan.as_ref(),
                             &cfg.trace,
@@ -683,23 +955,42 @@ pub fn run_server_rounds_elastic(
         );
 
         // Downlink: broadcast the global model to this round's sampled
-        // workers — encoded once, the same byte buffer fanned out to every
-        // link. Bytes leaving the server are accounted even if the network
-        // (or an injected fault) eats them downstream. A link whose send
-        // fails outright (peer's socket is gone) marks its worker absent
-        // for the round instead of killing the run — the crashed worker
-        // stays absent (free to rejoin later) while the others proceed.
+        // workers. Raw sessions get the v1/v2 `Round` frame — encoded
+        // once, the same byte buffer fanned out to every raw link, so the
+        // raw path stays byte-identical frame-for-frame. Quantized (v3)
+        // sessions get a per-worker `RoundQ` instead, delta-encoded
+        // against that worker's acked reconstruction. Bytes leaving the
+        // server are accounted even if the network (or an injected fault)
+        // eats them downstream; every broadcast also records its
+        // raw-equivalent bytes so the measured codec saving is a ledger
+        // subtraction. A link whose send fails outright (peer's socket is
+        // gone) marks its worker absent for the round instead of killing
+        // the run — the crashed worker stays absent (free to rejoin
+        // later) while the others proceed, and its delta state resets so
+        // its next quantized broadcast is dense.
         let frame = Frame::Round { t: t as u64, theta: server.theta.clone() };
         let encoded = frame.to_bytes();
+        let raw_len = encoded.len() as u64;
         let down = dense_cost(dim);
         let mut reachable = Vec::with_capacity(planned.len());
         timers.time("comm", || {
             for &w in &planned {
-                // lint: allow(panic_freedom, "w comes from sample_clients over 0..k and links.len() == k — in range by construction")
-                match links[w].send_raw(&encoded) {
+                // lint: allow(panic_freedom, "w comes from sample_clients over 0..k; links, codecs, and downlink all have length k — in range by construction")
+                let sent = match codecs[w] {
+                    WireCodec::Raw => links[w].send_raw(&encoded),
+                    q => send_round_q(
+                        links[w].as_mut(),
+                        q,
+                        t as u64,
+                        &server.theta,
+                        &mut downlink[w],
+                    ),
+                };
+                match sent {
                     Ok(sent) => {
                         ledger.record_down(w, down);
                         ledger.record_wire_down(sent as u64);
+                        ledger.record_wire_down_raw(raw_len);
                         record_to(
                             &cfg.trace,
                             Event::BroadcastSent {
@@ -717,6 +1008,9 @@ pub fn run_server_rounds_elastic(
                             Event::Sever { t: t as u32, worker: w as u32 },
                         );
                         ledger.record_fault(w);
+                        if let Some(d) = downlink.get_mut(w) {
+                            *d = DownlinkState::default();
+                        }
                     }
                 }
             }
@@ -752,7 +1046,7 @@ pub fn run_server_rounds_elastic(
             thread::scope(|scope| {
                 for ((w, link), out) in tasks.into_iter().zip(collected.iter_mut()) {
                     scope.spawn(move || {
-                        *out = Some(collect_update(link.as_mut(), w, t, deadline));
+                        *out = Some(collect_update(link.as_mut(), w, t, dim, deadline));
                     });
                 }
             });
@@ -770,18 +1064,22 @@ pub fn run_server_rounds_elastic(
                 continue;
             };
             if out.stale_bytes > 0 {
+                // Stale frames are ledgered at their measured size on both
+                // counters — they carry no useful raw equivalent.
                 ledger.record_wire_up(out.stale_bytes);
+                ledger.record_wire_up_raw(out.stale_bytes);
             }
             match out.result {
-                Ok((msg, bytes)) => {
+                Ok((msg, bytes, raw_bytes, quantized)) => {
                     ledger.record_wire_up(bytes);
+                    ledger.record_wire_up_raw(raw_bytes);
                     ledger.record(w, msg.cost, msg.is_scalar());
                     record_to(
                         &cfg.trace,
                         Event::WorkerUplink {
                             t: t as u32,
                             worker: w as u32,
-                            kind: uplink_kinds.classify(w, msg.is_scalar()),
+                            kind: uplink_kinds.classify_wire(w, msg.is_scalar(), quantized),
                             floats: msg.cost.floats,
                         },
                     );
@@ -797,6 +1095,21 @@ pub fn run_server_rounds_elastic(
                     );
                     ledger.record_fault(w);
                 }
+            }
+        }
+        // Delta-ack bookkeeping: a worker whose round-t update arrived has
+        // provably applied the round-t broadcast, so its pending
+        // reconstruction becomes the next delta base. A planned worker
+        // that did not arrive may or may not have decoded the broadcast —
+        // its state resets, forcing its next quantized broadcast dense.
+        for &w in &planned {
+            let Some(ds) = downlink.get_mut(w) else { continue };
+            if msgs.iter().any(|m| m.worker == w) {
+                if let Some(p) = ds.pending.take() {
+                    ds.base = Some(p);
+                }
+            } else {
+                *ds = DownlinkState::default();
             }
         }
         if !msgs.is_empty() {
@@ -832,6 +1145,8 @@ pub fn run_server_rounds_elastic(
             bits_down: ledger.down_bits,
             wire_up_bytes: ledger.wire_up_bytes,
             wire_down_bytes: ledger.wire_down_bytes,
+            wire_up_raw_bytes: ledger.wire_up_raw_bytes,
+            wire_down_raw_bytes: ledger.wire_down_raw_bytes,
             full_sends: msgs.iter().filter(|m| !m.is_scalar()).count(),
             scalar_sends: msgs.iter().filter(|m| m.is_scalar()).count(),
             wall_secs: start.elapsed().as_secs_f64(),
@@ -895,8 +1210,10 @@ pub fn run_server_rounds(
     round_deadline: Duration,
     name: &str,
 ) -> Result<(RunSeries, CommLedger, Vec<f32>)> {
+    let codecs = vec![WireCodec::Raw; links.len()];
     run_server_rounds_elastic(
         links,
+        codecs,
         eval_trainer,
         theta0,
         weights,
@@ -1033,9 +1350,11 @@ mod tests {
         let (mut srv, mut wrk) = MemLink::pair();
         wrk.send(&Frame::Rejoin { worker: 2, last_round: 5 }).unwrap();
         match handshake_accept(&mut srv, 4, 10, &cfg()).unwrap() {
-            HandshakeOutcome::Rejoin { worker, last_round } => {
+            HandshakeOutcome::Rejoin { worker, last_round, codec } => {
                 assert_eq!(worker, 2);
                 assert_eq!(last_round, Some(5));
+                // v2 peers always run raw, whatever the server's codec.
+                assert_eq!(codec, WireCodec::Raw);
             }
             HandshakeOutcome::Fresh { .. } => panic!("rejoin handshook as fresh"),
         }
@@ -1056,6 +1375,129 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("out of range"), "{err}");
+    }
+
+    /// v3 negotiation: a `Hello3` opener gets a `Welcome3` carrying the
+    /// *server's* configured codec (server wins, whatever the client
+    /// preferred) and the worker's session token; a v1/v2 `Hello` on the
+    /// same server still gets a plain `Welcome` and a raw session.
+    #[test]
+    fn hello3_negotiates_the_server_codec_and_issues_a_token() {
+        let server_cfg = FlConfig { wire_codec: WireCodec::Q8, seed: 99, ..cfg() };
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello3 { worker: 2, dim: 10, codec: WireCodec::F16.to_wire() })
+            .unwrap();
+        match handshake_accept(&mut srv, 4, 10, &server_cfg).unwrap() {
+            HandshakeOutcome::Fresh { worker, codec } => {
+                assert_eq!(worker, 2);
+                assert_eq!(codec, WireCodec::Q8, "negotiation is server-wins");
+            }
+            HandshakeOutcome::Rejoin { .. } => panic!("Hello3 handshook as rejoin"),
+        }
+        match wrk.recv().unwrap() {
+            Frame::Welcome3 { dim, tau, eta, delta, token, codec } => {
+                assert_eq!(dim, 10);
+                assert_eq!(tau, 3);
+                assert_eq!(eta, 0.1);
+                assert_eq!(delta, 0.25);
+                assert_eq!(token, session_token(99, 2));
+                assert_eq!(codec, WireCodec::Q8.to_wire());
+            }
+            other => panic!("wrong reply {other:?}"),
+        }
+
+        // A v2 Hello on the same quantized server stays fully served, raw.
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello { worker: 1, dim: 10 }).unwrap();
+        match handshake_accept(&mut srv, 4, 10, &server_cfg).unwrap() {
+            HandshakeOutcome::Fresh { worker, codec } => {
+                assert_eq!(worker, 1);
+                assert_eq!(codec, WireCodec::Raw);
+            }
+            HandshakeOutcome::Rejoin { .. } => panic!("Hello handshook as rejoin"),
+        }
+        assert!(matches!(wrk.recv().unwrap(), Frame::Welcome { .. }));
+
+        // A Hello3 with an unknown codec byte is rejected.
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Hello3 { worker: 0, dim: 10, codec: 9 }).unwrap();
+        assert!(handshake_accept(&mut srv, 4, 10, &server_cfg).is_err());
+    }
+
+    /// The acceptance pin: a `Rejoin3` echoing the issued token is seated
+    /// with last_round and dim validated; a duplicate presenting the
+    /// wrong token is rejected at the handshake, before it can displace
+    /// the seated worker; a right-token rejoin with the wrong model dim
+    /// is rejected too (the satellite-2 fix, v3 path).
+    #[test]
+    fn rejoin3_token_and_dim_are_validated_at_the_handshake() {
+        let server_cfg = FlConfig { wire_codec: WireCodec::F16, seed: 7, ..cfg() };
+        let good = session_token(7, 2);
+
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Rejoin3 { worker: 2, last_round: 5, dim: 10, token: good })
+            .unwrap();
+        match handshake_accept(&mut srv, 4, 10, &server_cfg).unwrap() {
+            HandshakeOutcome::Rejoin { worker, last_round, codec } => {
+                assert_eq!(worker, 2);
+                assert_eq!(last_round, Some(5));
+                assert_eq!(codec, WireCodec::F16);
+            }
+            HandshakeOutcome::Fresh { .. } => panic!("rejoin3 handshook as fresh"),
+        }
+        match wrk.recv().unwrap() {
+            Frame::Welcome3 { token, .. } => assert_eq!(token, good),
+            other => panic!("wrong reply {other:?}"),
+        }
+
+        // Wrong token: rejected, and the error names the token so the
+        // operator can tell auth failures from shape mismatches.
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Rejoin3 {
+            worker: 2,
+            last_round: 5,
+            dim: 10,
+            token: good ^ 1,
+        })
+        .unwrap();
+        let err = handshake_accept(&mut srv, 4, 10, &server_cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("session token"), "{err}");
+
+        // Right token, wrong dim: rejected at the handshake (not deferred
+        // to the first uplink as on v2).
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Rejoin3 { worker: 2, last_round: 5, dim: 12, token: good })
+            .unwrap();
+        let err = handshake_accept(&mut srv, 4, 10, &server_cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dim 12"), "{err}");
+
+        // The never-served sentinel still maps to None.
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::Rejoin3 {
+            worker: 2,
+            last_round: wire::REJOIN_NEVER_SERVED,
+            dim: 10,
+            token: good,
+        })
+        .unwrap();
+        match handshake_accept(&mut srv, 4, 10, &server_cfg).unwrap() {
+            HandshakeOutcome::Rejoin { last_round, .. } => assert_eq!(last_round, None),
+            HandshakeOutcome::Fresh { .. } => panic!("rejoin3 handshook as fresh"),
+        }
+    }
+
+    /// Session tokens are deterministic in (seed, worker) and distinct
+    /// across both axes — the property the stateless re-derivation in
+    /// `handshake_accept` relies on.
+    #[test]
+    fn session_tokens_are_deterministic_and_distinct() {
+        assert_eq!(session_token(1, 0), session_token(1, 0));
+        assert_ne!(session_token(1, 0), session_token(1, 1));
+        assert_ne!(session_token(1, 0), session_token(2, 0));
     }
 
     /// A worker whose socket is already dead at broadcast time is marked
@@ -1142,10 +1584,12 @@ mod tests {
         wrk.send(&Frame::Update(scalar_update(1, 0))).unwrap();
         wrk.send(&Frame::Update(scalar_update(1, 2))).unwrap();
         let deadline = Instant::now() + Duration::from_secs(5);
-        let out = collect_update(&mut srv, 1, 2, deadline);
-        let (msg, bytes) = out.result.unwrap();
+        let out = collect_update(&mut srv, 1, 2, 4, deadline);
+        let (msg, bytes, raw_bytes, quantized) = out.result.unwrap();
         assert_eq!(msg.round, 2);
         assert_eq!(bytes, Frame::Update(scalar_update(1, 2)).wire_bytes() as u64);
+        assert_eq!(raw_bytes, bytes, "a plain Update is its own raw equivalent");
+        assert!(!quantized);
         // The discarded stale frame still crossed the link: its measured
         // bytes are reported so the caller can ledger them.
         assert_eq!(
@@ -1155,7 +1599,7 @@ mod tests {
         // A frame from the future is a protocol violation, not discardable.
         let (mut srv, mut wrk) = MemLink::pair();
         wrk.send(&Frame::Update(scalar_update(1, 7))).unwrap();
-        let err = collect_update(&mut srv, 1, 2, deadline)
+        let err = collect_update(&mut srv, 1, 2, 4, deadline)
             .result
             .unwrap_err()
             .to_string();
@@ -1163,7 +1607,96 @@ mod tests {
         // A wrong-worker update is rejected outright.
         let (mut srv, mut wrk) = MemLink::pair();
         wrk.send(&Frame::Update(scalar_update(3, 2))).unwrap();
-        assert!(collect_update(&mut srv, 1, 2, deadline).result.is_err());
+        assert!(collect_update(&mut srv, 1, 2, 4, deadline).result.is_err());
+    }
+
+    /// Satellite pin: a full-gradient uplink whose length disagrees with
+    /// the model dimension is a protocol error at the first uplink — the
+    /// v2 `Rejoin` handshake carries no dim, so this is where a
+    /// wrong-shape rejoiner is caught on v2 sessions.
+    #[test]
+    fn full_update_with_wrong_dim_is_rejected_at_first_uplink() {
+        use std::sync::Arc;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let (mut srv, mut wrk) = MemLink::pair();
+        let msg = WorkerMsg {
+            worker: 1,
+            round: 2,
+            payload: Payload::Full { grad: Arc::new(vec![0.5; 6]) },
+            cost: crate::compress::dense_cost(6),
+            train_loss: 0.1,
+        };
+        wrk.send(&Frame::Update(msg)).unwrap();
+        let err = collect_update(&mut srv, 1, 2, 4, deadline)
+            .result
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("6-dim gradient, model dim is 4"), "{err}");
+        // The right shape passes the same gate.
+        let (mut srv, mut wrk) = MemLink::pair();
+        let msg = WorkerMsg {
+            worker: 1,
+            round: 2,
+            payload: Payload::Full { grad: Arc::new(vec![0.5; 4]) },
+            cost: crate::compress::dense_cost(4),
+            train_loss: 0.1,
+        };
+        wrk.send(&Frame::Update(msg)).unwrap();
+        assert!(collect_update(&mut srv, 1, 2, 4, deadline).result.is_ok());
+    }
+
+    /// A quantized `UpdateQ` uplink decodes into the dequantized gradient,
+    /// reports both its measured and raw-equivalent bytes, and is flagged
+    /// quantized; a count/dim mismatch is rejected.
+    #[test]
+    fn quantized_update_decodes_and_reports_raw_equivalent() {
+        let dim = 64;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let grad: Vec<f32> = (0..dim).map(|i| (i as f32) * 0.25 - 4.0).collect();
+        let mut data = Vec::new();
+        quant::encode(WireCodec::Q8, &grad, &mut data);
+        let frame = Frame::UpdateQ {
+            worker: 1,
+            round: 2,
+            train_loss: 0.5,
+            floats: dim as u64,
+            bits: 32 * dim as u64,
+            codec: WireCodec::Q8.to_wire(),
+            count: dim as u64,
+            data: data.clone(),
+        };
+        let sent_bytes = frame.wire_bytes() as u64;
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&frame).unwrap();
+        let (msg, bytes, raw_bytes, quantized) =
+            collect_update(&mut srv, 1, 2, dim, deadline).result.unwrap();
+        assert!(quantized);
+        assert_eq!(bytes, sent_bytes);
+        assert!(raw_bytes > bytes, "q8 must undercut its raw equivalent");
+        let Payload::Full { grad: got } = &msg.payload else {
+            panic!("quantized update must decode to a full payload");
+        };
+        assert_eq!(got.as_slice(), quant::effective(WireCodec::Q8, &grad).as_slice());
+        assert_eq!(msg.cost.floats, dim as u64);
+
+        // count != dim is a protocol error.
+        let (mut srv, mut wrk) = MemLink::pair();
+        wrk.send(&Frame::UpdateQ {
+            worker: 1,
+            round: 2,
+            train_loss: 0.5,
+            floats: dim as u64,
+            bits: 32 * dim as u64,
+            codec: WireCodec::Q8.to_wire(),
+            count: dim as u64,
+            data,
+        })
+        .unwrap();
+        let err = collect_update(&mut srv, 1, 2, dim + 1, deadline)
+            .result
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("quantized gradient"), "{err}");
     }
 
     /// The deadline semantics pinned (satellite bugfix): an update already
@@ -1178,14 +1711,14 @@ mod tests {
         wrk.send(&Frame::Update(scalar_update(1, 4))).unwrap();
         let expired = Instant::now();
         std::thread::sleep(Duration::from_millis(2));
-        let out = collect_update(&mut srv, 1, 4, expired);
+        let out = collect_update(&mut srv, 1, 4, 4, expired);
         assert_eq!(out.result.unwrap().0.round, 4, "queued update must be drained");
 
         // (b) Nothing queued at expiry: absent, quickly and with the
         // deadline named — not a 1 ms-per-retry crawl.
         let (mut srv, _wrk) = MemLink::pair();
         let begin = Instant::now();
-        let err = collect_update(&mut srv, 1, 4, begin)
+        let err = collect_update(&mut srv, 1, 4, 4, begin)
             .result
             .unwrap_err()
             .to_string();
@@ -1205,7 +1738,7 @@ mod tests {
             wrk.send(&Frame::Update(scalar_update(1, 0))).unwrap();
         }
         wrk.send(&Frame::Update(scalar_update(1, 4))).unwrap();
-        let out = collect_update(&mut srv, 1, 4, Instant::now());
+        let out = collect_update(&mut srv, 1, 4, 4, Instant::now());
         let err = out.result.unwrap_err().to_string();
         assert!(err.contains("deadline"), "{err}");
         // The drained stale bytes are still reported for the ledger.
@@ -1249,8 +1782,9 @@ mod tests {
             }
         });
         let begin = Instant::now();
-        let links = acceptor.wait_for_fleet(1).unwrap();
+        let (links, codecs) = acceptor.wait_for_fleet(1).unwrap();
         assert_eq!(links.len(), 1);
+        assert_eq!(codecs, vec![WireCodec::Raw]);
         assert!(
             begin.elapsed() < Duration::from_secs(10),
             "silent socket stalled the fleet for {:?}",
@@ -1315,6 +1849,7 @@ mod tests {
             worker: 1,
             last_round: Some(7),
             link: Box::new(srv1),
+            codec: WireCodec::Raw,
         })
         .unwrap();
         let acceptor = Acceptor::from_channel(rx);
@@ -1325,6 +1860,7 @@ mod tests {
         let mut eval = MockTrainer::new(dim, 2, 0.2, 0.0, 1);
         let (series, ledger, _theta) = run_server_rounds_elastic(
             &mut links,
+            vec![WireCodec::Raw; 2],
             &mut eval,
             vec![0.0; dim],
             vec![0.5, 0.5],

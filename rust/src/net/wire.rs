@@ -6,16 +6,18 @@
 //! frames). Hand-rolled on purpose: no serde, no external deps, and a
 //! byte-stable layout the tests can assert against.
 //!
-//! # Frame layout (protocol version 2; all integers little-endian)
+//! # Frame layout (protocol version 3; all integers little-endian)
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "FRLB" (FedRecycle Look-Back)
 //! 4       2     protocol version (u16) — the lowest version that defines
-//!               the frame's tag (1 for the PR-2 frames, 2 for Rejoin);
-//!               this build accepts 1..=2 (see the version table below)
+//!               the frame's tag (1 for the PR-2 frames, 2 for Rejoin,
+//!               3 for the quantized/auth/chunk frames); this build
+//!               accepts 1..=3 (see the version table below)
 //! 6       1     frame tag (Hello=1 Welcome=2 Round=3 Shutdown=4 Update=5
-//!               Rejoin=6)
+//!               Rejoin=6 Hello3=7 Welcome3=8 Rejoin3=9 RoundQ=10
+//!               UpdateQ=11 Chunk=12)
 //! 7       1     reserved, must be 0 (room for flags in a later version)
 //! 8       4     payload length n (u32, capped at 1 GiB)
 //! 12      n     payload (tag-specific, see below)
@@ -28,17 +30,21 @@
 //! |--------------|----------|-------|
 //! | 1            | yes      | the PR-2 protocol: `Hello`..`Update` only; a v1 `Rejoin` tag is a decode error |
 //! | 2            | yes      | adds `Rejoin` (mid-run worker re-handshake) |
-//! | >= 3         | no       | rejected at the header, before any payload read |
+//! | 3            | yes      | adds quantized payloads (`RoundQ`/`UpdateQ`), delta-encoded broadcasts, session tokens (`Hello3`/`Welcome3`/`Rejoin3`), and bounded `Chunk` streaming |
+//! | >= 4         | no       | rejected at the header, before any payload read |
 //!
 //! Negotiation is per *frame*, not per session, and compatibility is
 //! two-way by construction: the encoder stamps each frame with the
 //! **lowest** version that defines its tag ([`Frame::min_version`] — the
-//! PR-2 frames stay v1 on the wire), and the decoder accepts any version
-//! in [`MIN_PROTO_VERSION`]`..=`[`PROTO_VERSION`]. A v1 worker therefore
-//! handshakes (`Hello`) and serves rounds against a v2 server unchanged —
+//! PR-2 frames stay v1 on the wire, `Rejoin` is v2, the new frames are
+//! v3), and the decoder accepts any version in
+//! [`MIN_PROTO_VERSION`]`..=`[`PROTO_VERSION`]. A v1 worker therefore
+//! handshakes (`Hello`) and serves rounds against a v3 server unchanged —
 //! every frame it receives is v1-stamped — it simply cannot rejoin after
-//! a dropped connection (`Rejoin` is v2-stamped, which a v1 decoder
-//! rejects).
+//! a dropped connection, and a v2 worker rejoins but is always served
+//! raw f32 frames. Only a peer that *opens* with `Hello3` ever receives
+//! a v3-stamped frame (session-codec negotiation happens in the
+//! handshake, above this layer).
 //!
 //! Payload encodings (`f32`/`f64` are IEEE-754 little-endian bit patterns,
 //! so a loopback round trip is *bit-identical* — the foundation of the
@@ -58,6 +64,37 @@
 //!   returning worker asks to be re-seated mid-run instead of starting a
 //!   fresh session.
 //!
+//! Protocol v3 adds (client ↔ server; see [`crate::net::quant`] for the
+//! bit-packed value codecs):
+//!
+//! * `Hello3`   — worker id `u32`, dim `u64`, preferred wire codec `u8`
+//!   (0 = raw, 1 = q8, 2 = f16). Opening with `Hello3` declares v3
+//!   support; the server's `Welcome3` reply carries the *negotiated*
+//!   codec (the server's `--wire-codec` knob wins).
+//! * `Welcome3` — dim `u64`, tau `u32`, eta `f32`, delta `f64`, session
+//!   token `u64`, negotiated codec `u8`. The token authenticates every
+//!   later re-seat of this worker id.
+//! * `Rejoin3`  — worker id `u32`, last served round `u64`, dim `u64`,
+//!   session token `u64`. The server re-validates the dimension at the
+//!   handshake (a v2 `Rejoin` peer is validated via its first uplink's
+//!   length instead) and rejects a token mismatch, closing the
+//!   duplicate-worker-id displacement hole.
+//! * `RoundQ`   — round `u64`, delta base round `u64` ([`DENSE_BASE`]
+//!   when the values are absolute, otherwise the round whose acked
+//!   reconstruction the values are a delta against), codec `u8`, count
+//!   `u64`, then the codec's packed bytes.
+//! * `UpdateQ`  — worker `u32`, round `u64`, train_loss `f64`,
+//!   cost.floats `u64`, cost.bits `u64`, codec `u8`, count `u64`, then
+//!   the packed bytes of a full/refresh gradient (scalar uplinks stay
+//!   plain `Update` frames — one f32 has nothing left to quantize).
+//! * `Chunk`    — total `u64`, offset `u64`, data bytes: one bounded
+//!   slice of a larger encoded frame. A frame whose encoding exceeds
+//!   [`CHUNK_DATA_LEN`] is streamed as consecutive `Chunk` frames
+//!   (offsets strictly increasing from 0, each individually
+//!   checksummed); the receiver reassembles and decodes the inner frame
+//!   with the full validation chain instead of trusting one
+//!   1 GiB-capped length field.
+//!
 //! Every decoder rejects wrong magic, unknown versions, nonzero reserved
 //! bytes, length mismatches, trailing bytes, and checksum failures — the
 //! property tests assert that *any* single-byte corruption or truncation
@@ -68,18 +105,25 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::compress::Cost;
+use crate::compress::{Cost, WireCodec};
 use crate::coordinator::messages::{Payload, WorkerMsg};
 
 /// Frame magic: "FRLB".
 pub const MAGIC: [u8; 4] = *b"FRLB";
 /// The newest protocol version this build understands. Outbound frames
-/// carry [`Frame::min_version`], not this, so v1 peers stay served.
-pub const PROTO_VERSION: u16 = 2;
+/// carry [`Frame::min_version`], not this, so v1/v2 peers stay served.
+pub const PROTO_VERSION: u16 = 3;
 /// The oldest protocol version this build still accepts. v1 peers speak
-/// the same frames minus [`Frame::Rejoin`]; see the module-level version
-/// table.
+/// the same frames minus [`Frame::Rejoin`] and the v3 set; see the
+/// module-level version table.
 pub const MIN_PROTO_VERSION: u16 = 1;
+/// `base` sentinel in [`Frame::RoundQ`]: the packed values are absolute
+/// model parameters, not a delta against an earlier reconstruction.
+pub const DENSE_BASE: u64 = u64::MAX;
+/// Largest `data` slice one [`Frame::Chunk`] carries; an encoded frame
+/// longer than this is streamed as consecutive chunks (see
+/// [`chunk_frames`]).
+pub const CHUNK_DATA_LEN: usize = 1 << 20;
 /// `last_round` sentinel in [`Frame::Rejoin`]: the worker reconnected
 /// before it ever completed a round.
 pub const REJOIN_NEVER_SERVED: u64 = u64::MAX;
@@ -113,6 +157,12 @@ const TAG_ROUND: u8 = 3;
 const TAG_SHUTDOWN: u8 = 4;
 const TAG_UPDATE: u8 = 5;
 const TAG_REJOIN: u8 = 6;
+const TAG_HELLO3: u8 = 7;
+const TAG_WELCOME3: u8 = 8;
+const TAG_REJOIN3: u8 = 9;
+const TAG_ROUND_Q: u8 = 10;
+const TAG_UPDATE_Q: u8 = 11;
+const TAG_CHUNK: u8 = 12;
 
 /// FNV-1a 32-bit hash. A single-byte change anywhere in the input is
 /// guaranteed to change the digest (xor then multiply by an odd prime is
@@ -126,24 +176,48 @@ pub fn fnv1a(bytes: &[u8]) -> u32 {
     h
 }
 
-/// Cheap structural peek at an encoded frame: its tag byte, or `None` when
-/// the buffer is shorter than a header or the magic doesn't match. No
-/// payload validation — callers that need the frame still decode it.
-// lint: allow(panic_freedom, "indices 0..7 sit below the HEADER_LEN length check above them")
+/// Structural peek at an encoded frame: its tag byte, or `None` when the
+/// buffer fails the *envelope* rules [`Frame::from_bytes`] enforces —
+/// magic, version window, zero reserved byte, consistent length field,
+/// and trailing checksum. Tag-specific payload decoding stays the
+/// decoder's job, but the checksum already covers the payload bytes, so
+/// a peek that succeeds on a corrupted buffer would be a codec bug
+/// (property-tested: peeks and `from_bytes` agree on every corrupted or
+/// truncated buffer).
+// lint: allow(panic_freedom, "every index sits below the length checks fixing buf.len() = HEADER_LEN + n + CHECKSUM_LEN")
 pub fn peek_tag(bytes: &[u8]) -> Option<u8> {
-    if bytes.len() >= HEADER_LEN && bytes[0..4] == MAGIC {
-        Some(bytes[6])
-    } else {
-        None
+    if bytes.len() < HEADER_LEN + CHECKSUM_LEN || bytes[0..4] != MAGIC {
+        return None;
     }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if !(MIN_PROTO_VERSION..=PROTO_VERSION).contains(&version) || bytes[7] != 0 {
+        return None;
+    }
+    let n = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+    if n > MAX_PAYLOAD || bytes.len() != HEADER_LEN + n + CHECKSUM_LEN {
+        return None;
+    }
+    let body = HEADER_LEN + n;
+    let stored = u32::from_le_bytes([
+        bytes[body],
+        bytes[body + 1],
+        bytes[body + 2],
+        bytes[body + 3],
+    ]);
+    if stored != fnv1a(&bytes[..body]) {
+        return None;
+    }
+    Some(bytes[6])
 }
 
-/// For an encoded `Round` frame, the round number `t`; `None` for any
-/// other tag or a malformed buffer. Used by the chaos layer to match
-/// in-flight broadcasts against a fault plan without a full decode.
+/// For an encoded `Round` (or quantized `RoundQ`) frame, the round number
+/// `t`; `None` for any other tag or a buffer [`peek_tag`] rejects. Used
+/// by the chaos layer to match in-flight broadcasts against a fault plan
+/// without a full decode — both layouts carry `t` first in the payload.
 // lint: allow(panic_freedom, "slice is length-checked against HEADER_LEN + 8 before indexing")
 pub fn peek_round(bytes: &[u8]) -> Option<u64> {
-    if peek_tag(bytes) != Some(TAG_ROUND) || bytes.len() < HEADER_LEN + 8 {
+    let tag = peek_tag(bytes)?;
+    if !(tag == TAG_ROUND || tag == TAG_ROUND_Q) || bytes.len() < HEADER_LEN + 8 {
         return None;
     }
     let mut t = [0u8; 8];
@@ -242,6 +316,18 @@ impl<'a> Reader<'a> {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
+    }
+
+    /// Read exactly `n` raw bytes.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Take every remaining payload byte (for trailing variable-length
+    /// data whose size the frame header already fixed).
+    pub fn rest(&mut self) -> &'a [u8] {
+        // take() of exactly remaining() cannot fail its bounds ensure.
+        self.take(self.remaining()).unwrap_or_default()
     }
 
     /// Assert the payload was consumed exactly (trailing bytes = error).
@@ -357,6 +443,41 @@ pub enum Frame {
     /// ([`REJOIN_NEVER_SERVED`] if it never completed one); the server
     /// replies `Welcome` and resumes the worker at the next broadcast.
     Rejoin { worker: u32, last_round: u64 },
+    /// Client → server handshake (protocol v3): like `Hello`, plus the
+    /// worker's preferred wire codec. Opening with this frame declares v3
+    /// support; the server's `Welcome3` carries the negotiated codec.
+    Hello3 { worker: u32, dim: u64, codec: u8 },
+    /// Server → client handshake reply (protocol v3): the session
+    /// hyperparameters plus the session token every later `Rejoin3` must
+    /// echo, and the negotiated wire codec for this session.
+    Welcome3 { dim: u64, tau: u32, eta: f32, delta: f64, token: u64, codec: u8 },
+    /// Client → server re-handshake (protocol v3): `Rejoin` plus the
+    /// model dimension (re-validated at the handshake instead of failing
+    /// rounds later) and the session token issued by `Welcome3` (a
+    /// mismatch rejects the re-seat).
+    Rejoin3 { worker: u32, last_round: u64, dim: u64, token: u64 },
+    /// Server → client downlink (protocol v3): a quantized model
+    /// broadcast. `base` is [`DENSE_BASE`] for absolute values or the
+    /// round whose acked reconstruction the values are a delta against;
+    /// `data` is the codec's packing of `count` values
+    /// (see [`crate::net::quant`]).
+    RoundQ { t: u64, base: u64, codec: u8, count: u64, data: Vec<u8> },
+    /// Client → server uplink (protocol v3): a quantized full/refresh
+    /// gradient. Scalar uplinks stay plain `Update` frames.
+    UpdateQ {
+        worker: u32,
+        round: u64,
+        train_loss: f64,
+        floats: u64,
+        bits: u64,
+        codec: u8,
+        count: u64,
+        data: Vec<u8>,
+    },
+    /// One bounded slice of a larger encoded frame (protocol v3):
+    /// `data` is `total`-byte inner frame bytes `[offset, offset+len)`.
+    /// See [`chunk_frames`]/[`assemble_chunks`].
+    Chunk { total: u64, offset: u64, data: Vec<u8> },
 }
 
 impl Frame {
@@ -368,6 +489,12 @@ impl Frame {
             Frame::Shutdown => TAG_SHUTDOWN,
             Frame::Update(_) => TAG_UPDATE,
             Frame::Rejoin { .. } => TAG_REJOIN,
+            Frame::Hello3 { .. } => TAG_HELLO3,
+            Frame::Welcome3 { .. } => TAG_WELCOME3,
+            Frame::Rejoin3 { .. } => TAG_REJOIN3,
+            Frame::RoundQ { .. } => TAG_ROUND_Q,
+            Frame::UpdateQ { .. } => TAG_UPDATE_Q,
+            Frame::Chunk { .. } => TAG_CHUNK,
         }
     }
 
@@ -379,6 +506,12 @@ impl Frame {
             Frame::Shutdown => 0,
             Frame::Update(m) => m.encoded_len(),
             Frame::Rejoin { .. } => 4 + 8,
+            Frame::Hello3 { .. } => 4 + 8 + 1,
+            Frame::Welcome3 { .. } => 8 + 4 + 4 + 8 + 8 + 1,
+            Frame::Rejoin3 { .. } => 4 + 8 + 8 + 8,
+            Frame::RoundQ { data, .. } => 8 + 8 + 1 + 8 + data.len(),
+            Frame::UpdateQ { data, .. } => 4 + 8 + 8 + 8 + 8 + 1 + 8 + data.len(),
+            Frame::Chunk { data, .. } => 8 + 8 + data.len(),
         }
     }
 
@@ -388,6 +521,12 @@ impl Frame {
     /// see the module-level version table).
     pub fn min_version(&self) -> u16 {
         match self {
+            Frame::Hello3 { .. }
+            | Frame::Welcome3 { .. }
+            | Frame::Rejoin3 { .. }
+            | Frame::RoundQ { .. }
+            | Frame::UpdateQ { .. }
+            | Frame::Chunk { .. } => 3,
             Frame::Rejoin { .. } => 2,
             _ => 1,
         }
@@ -439,6 +578,47 @@ impl Frame {
             Frame::Rejoin { worker, last_round } => {
                 put_u32(&mut out, *worker);
                 put_u64(&mut out, *last_round);
+            }
+            Frame::Hello3 { worker, dim, codec } => {
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *dim);
+                out.push(*codec);
+            }
+            Frame::Welcome3 { dim, tau, eta, delta, token, codec } => {
+                put_u64(&mut out, *dim);
+                put_u32(&mut out, *tau);
+                put_f32(&mut out, *eta);
+                put_f64(&mut out, *delta);
+                put_u64(&mut out, *token);
+                out.push(*codec);
+            }
+            Frame::Rejoin3 { worker, last_round, dim, token } => {
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *last_round);
+                put_u64(&mut out, *dim);
+                put_u64(&mut out, *token);
+            }
+            Frame::RoundQ { t, base, codec, count, data } => {
+                put_u64(&mut out, *t);
+                put_u64(&mut out, *base);
+                out.push(*codec);
+                put_u64(&mut out, *count);
+                out.extend_from_slice(data);
+            }
+            Frame::UpdateQ { worker, round, train_loss, floats, bits, codec, count, data } => {
+                put_u32(&mut out, *worker);
+                put_u64(&mut out, *round);
+                put_f64(&mut out, *train_loss);
+                put_u64(&mut out, *floats);
+                put_u64(&mut out, *bits);
+                out.push(*codec);
+                put_u64(&mut out, *count);
+                out.extend_from_slice(data);
+            }
+            Frame::Chunk { total, offset, data } => {
+                put_u64(&mut out, *total);
+                put_u64(&mut out, *offset);
+                out.extend_from_slice(data);
             }
         }
         debug_assert_eq!(out.len(), HEADER_LEN + n);
@@ -504,6 +684,91 @@ impl Frame {
                 ensure!(version >= 2, "Rejoin frame requires protocol v2, got v{version}");
                 Frame::Rejoin { worker: r.u32()?, last_round: r.u64()? }
             }
+            TAG_HELLO3 => {
+                ensure!(version >= 3, "Hello3 frame requires protocol v3, got v{version}");
+                let worker = r.u32()?;
+                let dim = r.u64()?;
+                let codec = r.u8()?;
+                WireCodec::from_wire(codec)?;
+                Frame::Hello3 { worker, dim, codec }
+            }
+            TAG_WELCOME3 => {
+                ensure!(version >= 3, "Welcome3 frame requires protocol v3, got v{version}");
+                let dim = r.u64()?;
+                let tau = r.u32()?;
+                let eta = r.f32()?;
+                let delta = r.f64()?;
+                let token = r.u64()?;
+                let codec = r.u8()?;
+                WireCodec::from_wire(codec)?;
+                Frame::Welcome3 { dim, tau, eta, delta, token, codec }
+            }
+            TAG_REJOIN3 => {
+                ensure!(version >= 3, "Rejoin3 frame requires protocol v3, got v{version}");
+                Frame::Rejoin3 {
+                    worker: r.u32()?,
+                    last_round: r.u64()?,
+                    dim: r.u64()?,
+                    token: r.u64()?,
+                }
+            }
+            TAG_ROUND_Q => {
+                ensure!(version >= 3, "RoundQ frame requires protocol v3, got v{version}");
+                let t = r.u64()?;
+                let base = r.u64()?;
+                let codec = r.u8()?;
+                let count = r.u64()?;
+                let kind = WireCodec::from_wire(codec)?;
+                let want = kind.packed_len(count as usize);
+                ensure!(
+                    r.remaining() == want,
+                    "RoundQ data length {} != {want} for {} x {count}",
+                    r.remaining(),
+                    kind.name()
+                );
+                let data = r.rest().to_vec();
+                Frame::RoundQ { t, base, codec, count, data }
+            }
+            TAG_UPDATE_Q => {
+                ensure!(version >= 3, "UpdateQ frame requires protocol v3, got v{version}");
+                let worker = r.u32()?;
+                let round = r.u64()?;
+                let train_loss = r.f64()?;
+                let floats = r.u64()?;
+                let bits = r.u64()?;
+                let codec = r.u8()?;
+                let count = r.u64()?;
+                let kind = WireCodec::from_wire(codec)?;
+                let want = kind.packed_len(count as usize);
+                ensure!(
+                    r.remaining() == want,
+                    "UpdateQ data length {} != {want} for {} x {count}",
+                    r.remaining(),
+                    kind.name()
+                );
+                let data = r.rest().to_vec();
+                Frame::UpdateQ { worker, round, train_loss, floats, bits, codec, count, data }
+            }
+            TAG_CHUNK => {
+                ensure!(version >= 3, "Chunk frame requires protocol v3, got v{version}");
+                let total = r.u64()?;
+                let offset = r.u64()?;
+                let data = r.rest().to_vec();
+                ensure!(!data.is_empty(), "empty Chunk frame");
+                ensure!(
+                    total <= (HEADER_LEN + MAX_PAYLOAD + CHECKSUM_LEN) as u64,
+                    "Chunk total {total} exceeds the frame cap"
+                );
+                ensure!(
+                    offset
+                        .checked_add(data.len() as u64)
+                        .map(|end| end <= total)
+                        .unwrap_or(false),
+                    "Chunk [{offset}, +{}) overruns total {total}",
+                    data.len()
+                );
+                Frame::Chunk { total, offset, data }
+            }
             other => bail!("unknown frame tag {other}"),
         };
         r.done()?;
@@ -522,6 +787,31 @@ impl Frame {
     /// error such as a read timeout arrives).
     pub fn read_from(r: &mut dyn Read) -> Result<Frame> {
         Frame::read_from_limit(r, MAX_PAYLOAD)
+    }
+
+    /// Split this frame's encoding into bounded [`Frame::Chunk`] frames
+    /// when it exceeds `max_data` bytes; `None` when it fits in a single
+    /// frame and should be sent as-is. Chunk offsets are strictly
+    /// increasing from 0 and each chunk is individually checksummed, so
+    /// the receiver validates the stream incrementally instead of
+    /// trusting one 1 GiB-capped length field.
+    pub fn chunk_frames(&self, max_data: usize) -> Option<Vec<Frame>> {
+        let bytes = self.to_bytes();
+        let max_data = max_data.max(1);
+        if bytes.len() <= max_data {
+            return None;
+        }
+        let total = bytes.len() as u64;
+        Some(
+            bytes
+                .chunks(max_data)
+                .scan(0u64, |off, c| {
+                    let chunk = Frame::Chunk { total, offset: *off, data: c.to_vec() };
+                    *off += c.len() as u64;
+                    Some(chunk)
+                })
+                .collect(),
+        )
     }
 
     /// Like [`Frame::read_from`] but rejecting any payload longer than
@@ -548,6 +838,51 @@ impl Frame {
         buf.extend_from_slice(&rest);
         Frame::from_bytes(&buf)
     }
+}
+
+/// Reassemble a chunked frame stream: `first` is the frame a receiver
+/// just decoded (returned unchanged when it is not a [`Frame::Chunk`]),
+/// `next` yields each following frame, and `max_total` caps the
+/// assembled inner frame's wire bytes (receivers derive it from their
+/// session receive limit, so a hostile `total` cannot force a large
+/// allocation). The inner frame passes through the full
+/// [`Frame::from_bytes`] validation chain — magic, version, checksum —
+/// once reassembled, and nested chunks are rejected.
+pub fn assemble_chunks(
+    first: Frame,
+    max_total: usize,
+    next: &mut dyn FnMut() -> Result<Frame>,
+) -> Result<Frame> {
+    let Frame::Chunk { total, offset, data } = first else {
+        return Ok(first);
+    };
+    ensure!(offset == 0, "chunk stream starts at offset {offset}, not 0");
+    let cap = max_total.min(HEADER_LEN + MAX_PAYLOAD + CHECKSUM_LEN);
+    ensure!(
+        total <= cap as u64,
+        "chunked frame of {total} bytes exceeds receive limit {cap}"
+    );
+    let want = total as usize;
+    let mut buf = Vec::with_capacity(want);
+    buf.extend_from_slice(&data);
+    while buf.len() < want {
+        let Frame::Chunk { total: t2, offset: o2, data: d2 } = next()? else {
+            bail!("non-Chunk frame interleaved in a chunk stream");
+        };
+        ensure!(t2 == total, "chunk total changed mid-stream: {t2} != {total}");
+        ensure!(
+            o2 as usize == buf.len(),
+            "chunk offset {o2} out of order (have {} bytes)",
+            buf.len()
+        );
+        buf.extend_from_slice(&d2);
+    }
+    let inner = Frame::from_bytes(&buf)?;
+    ensure!(
+        !matches!(inner, Frame::Chunk { .. }),
+        "nested Chunk inside a chunk stream"
+    );
+    Ok(inner)
 }
 
 #[cfg(test)]
@@ -614,6 +949,28 @@ mod tests {
             Frame::Update(scalar_msg(0.75)),
             Frame::Update(full_msg(vec![0.5; 7])),
             Frame::Rejoin { worker: 3, last_round: 17 },
+            Frame::Hello3 { worker: 4, dim: 1024, codec: 1 },
+            Frame::Welcome3 {
+                dim: 1024,
+                tau: 2,
+                eta: 0.05,
+                delta: 0.2,
+                token: 0xDEAD_BEEF,
+                codec: 1,
+            },
+            Frame::Rejoin3 { worker: 3, last_round: 17, dim: 1024, token: 7 },
+            Frame::RoundQ { t: 9, base: DENSE_BASE, codec: 1, count: 3, data: vec![0; 11] },
+            Frame::UpdateQ {
+                worker: 3,
+                round: 9,
+                train_loss: 0.5,
+                floats: 3,
+                bits: 24,
+                codec: 2,
+                count: 3,
+                data: vec![0; 6],
+            },
+            Frame::Chunk { total: 40, offset: 8, data: vec![1, 2, 3, 4] },
         ];
         for f in &frames {
             assert_eq!(f.to_bytes().len(), f.wire_bytes(), "{f:?}");
@@ -711,6 +1068,28 @@ mod tests {
             Frame::from_bytes(&Frame::Rejoin { worker: 2, last_round: 4 }.to_bytes()),
             Ok(Frame::Rejoin { worker: 2, last_round: 4 })
         ));
+
+        // The v3 frames are stamped v3 on the wire and round-trip.
+        let v3_frames = [
+            Frame::Hello3 { worker: 2, dim: 8, codec: 1 },
+            Frame::Welcome3 { dim: 8, tau: 1, eta: 0.1, delta: 0.2, token: 9, codec: 1 },
+            Frame::Rejoin3 { worker: 2, last_round: 4, dim: 8, token: 9 },
+            Frame::RoundQ { t: 1, base: DENSE_BASE, codec: 2, count: 2, data: vec![0; 4] },
+            Frame::Chunk { total: 64, offset: 0, data: vec![7; 8] },
+        ];
+        for f in &v3_frames {
+            assert_eq!(f.min_version(), 3, "{f:?}");
+            let bytes = f.to_bytes();
+            assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 3, "{f:?}");
+            assert_eq!(Frame::from_bytes(&bytes).unwrap().tag(), f.tag(), "{f:?}");
+            // Stamped v2 (or v1), a v3 tag is a protocol violation: the
+            // tag did not exist before v3.
+            let err = Frame::from_bytes(&reversion(bytes.clone(), 2))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("protocol v3"), "{err}");
+            assert!(Frame::from_bytes(&reversion(bytes, 1)).is_err());
+        }
     }
 
     #[test]
@@ -857,6 +1236,12 @@ mod tests {
         let round = Frame::Round { t: 42, theta: vec![1.0, 2.0] }.to_bytes();
         assert_eq!(peek_tag(&round), Some(TAG_ROUND));
         assert_eq!(peek_round(&round), Some(42));
+        // Quantized broadcasts peek the same round number, so the chaos
+        // layer matches them against fault plans identically.
+        let roundq =
+            Frame::RoundQ { t: 42, base: 41, codec: 1, count: 2, data: vec![0; 10] }.to_bytes();
+        assert_eq!(peek_tag(&roundq), Some(TAG_ROUND_Q));
+        assert_eq!(peek_round(&roundq), Some(42));
         let shutdown = Frame::Shutdown.to_bytes();
         assert_eq!(peek_tag(&shutdown), Some(TAG_SHUTDOWN));
         assert_eq!(peek_round(&shutdown), None);
@@ -864,10 +1249,158 @@ mod tests {
         assert_eq!(peek_round(b"not a frame at all"), None);
     }
 
+    /// Satellite bugfix pin: the peeks enforce the decoder's envelope
+    /// acceptance rules, so the chaos layer can never swallow (or match)
+    /// a frame the real decoder would reject. Every single-byte
+    /// corruption and every truncation that kills `from_bytes` kills the
+    /// peek too.
+    #[test]
+    fn prop_peeks_agree_with_the_decoder_on_corrupted_buffers() {
+        let frames = [
+            Frame::Round { t: 5, theta: vec![0.5, -1.5, 2.0, 7.75] },
+            Frame::RoundQ { t: 5, base: DENSE_BASE, codec: 1, count: 4, data: vec![3; 12] },
+            Frame::Update(scalar_msg(0.5)),
+            Frame::Chunk { total: 99, offset: 0, data: vec![1, 2, 3] },
+            Frame::Shutdown,
+        ];
+        for f in &frames {
+            let bytes = f.to_bytes();
+            assert_eq!(peek_tag(&bytes), Some(f.tag()), "{f:?}");
+            for i in 0..bytes.len() {
+                let mut corrupt = bytes.clone();
+                corrupt[i] ^= 0x5A;
+                assert!(Frame::from_bytes(&corrupt).is_err(), "byte {i} of {f:?}");
+                assert_eq!(peek_tag(&corrupt), None, "peek accepted byte-{i} corruption of {f:?}");
+                assert_eq!(peek_round(&corrupt), None, "byte {i} of {f:?}");
+            }
+            for cut in 0..bytes.len() {
+                assert!(Frame::from_bytes(&bytes[..cut]).is_err());
+                assert_eq!(peek_tag(&bytes[..cut]), None, "peek accepted {cut}-byte prefix");
+            }
+            let mut extended = bytes.clone();
+            extended.push(0);
+            assert!(Frame::from_bytes(&extended).is_err());
+            assert_eq!(peek_tag(&extended), None);
+        }
+    }
+
+    #[test]
+    fn chunked_frames_reassemble_bit_identically() {
+        let inner = Frame::Round { t: 7, theta: (0..64).map(|i| i as f32 * 0.25).collect() };
+        let bytes = inner.to_bytes();
+        // Small enough frames are not chunked.
+        assert!(inner.chunk_frames(bytes.len()).is_none());
+        // Chunked at 32-byte slices: every chunk is a valid frame on its
+        // own, offsets tile [0, total), and reassembly decodes the inner
+        // frame bit-identically.
+        let chunks = inner.chunk_frames(32).unwrap();
+        assert!(chunks.len() > 1);
+        let mut covered = 0u64;
+        for c in &chunks {
+            let Frame::Chunk { total, offset, data } = c else { panic!("not a chunk") };
+            assert_eq!(*total, bytes.len() as u64);
+            assert_eq!(*offset, covered);
+            assert!(data.len() <= 32);
+            covered += data.len() as u64;
+            // Each chunk survives its own encode/decode round trip.
+            assert!(matches!(Frame::from_bytes(&c.to_bytes()), Ok(Frame::Chunk { .. })));
+        }
+        assert_eq!(covered, bytes.len() as u64);
+        let mut rest = chunks.clone().into_iter().skip(1);
+        let got = assemble_chunks(chunks[0].clone(), bytes.len(), &mut || {
+            rest.next().ok_or_else(|| anyhow::anyhow!("stream ended early"))
+        })
+        .unwrap();
+        assert_eq!(got.to_bytes(), bytes, "reassembly not bit-identical");
+    }
+
+    #[test]
+    fn chunk_stream_violations_are_rejected() {
+        let inner = Frame::Round { t: 1, theta: vec![1.0; 50] };
+        let total = inner.to_bytes().len();
+        let chunks = inner.chunk_frames(24).unwrap();
+        // A stream must open at offset 0.
+        assert!(assemble_chunks(chunks[1].clone(), total, &mut || {
+            anyhow::bail!("unused")
+        })
+        .is_err());
+        // Out-of-order continuation is rejected.
+        let mut wrong = vec![chunks[2].clone()].into_iter();
+        assert!(assemble_chunks(chunks[0].clone(), total, &mut || {
+            wrong.next().ok_or_else(|| anyhow::anyhow!("ended"))
+        })
+        .is_err());
+        // A non-chunk frame interleaved mid-stream is rejected.
+        let mut interleaved = vec![Frame::Shutdown].into_iter();
+        assert!(assemble_chunks(chunks[0].clone(), total, &mut || {
+            interleaved.next().ok_or_else(|| anyhow::anyhow!("ended"))
+        })
+        .is_err());
+        // A total above the receive limit is rejected before allocating.
+        assert!(assemble_chunks(chunks[0].clone(), 16, &mut || {
+            anyhow::bail!("unused")
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn v3_handshake_frames_round_trip_and_fit_the_handshake_cap() {
+        let hello = Frame::Hello3 { worker: 11, dim: 777, codec: 2 };
+        match Frame::from_bytes(&hello.to_bytes()).unwrap() {
+            Frame::Hello3 { worker, dim, codec } => {
+                assert_eq!((worker, dim, codec), (11, 777, 2));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let welcome = Frame::Welcome3 {
+            dim: 777,
+            tau: 3,
+            eta: 0.125,
+            delta: -1.0,
+            token: u64::MAX - 3,
+            codec: 1,
+        };
+        match Frame::from_bytes(&welcome.to_bytes()).unwrap() {
+            Frame::Welcome3 { dim, tau, eta, delta, token, codec } => {
+                assert_eq!((dim, tau, token, codec), (777, 3, u64::MAX - 3, 1));
+                assert_eq!(eta.to_bits(), 0.125f32.to_bits());
+                assert_eq!(delta.to_bits(), (-1.0f64).to_bits());
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let rejoin = Frame::Rejoin3 {
+            worker: 9,
+            last_round: REJOIN_NEVER_SERVED,
+            dim: 777,
+            token: 42,
+        };
+        match Frame::from_bytes(&rejoin.to_bytes()).unwrap() {
+            Frame::Rejoin3 { worker, last_round, dim, token } => {
+                assert_eq!((worker, last_round, dim, token), (9, REJOIN_NEVER_SERVED, 777, 42));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // All three fit the pre-authentication receive cap.
+        for f in [&hello, &welcome, &rejoin] {
+            assert!(
+                f.to_bytes().len() <= HEADER_LEN + HANDSHAKE_MAX_PAYLOAD + CHECKSUM_LEN,
+                "{f:?}"
+            );
+        }
+        // An unknown codec byte is rejected at decode.
+        let bad = Frame::Hello3 { worker: 1, dim: 4, codec: 9 };
+        assert!(Frame::from_bytes(&bad.to_bytes()).is_err());
+        // A quantized frame whose data length disagrees with its codec
+        // and count is rejected.
+        let bad_len =
+            Frame::RoundQ { t: 0, base: DENSE_BASE, codec: 1, count: 4, data: vec![0; 5] };
+        assert!(Frame::from_bytes(&bad_len.to_bytes()).is_err());
+    }
+
     #[test]
     fn foreign_version_rejected() {
         let mut bytes = Frame::Shutdown.to_bytes();
-        bytes[4] = 3; // future protocol version (this build speaks 1..=2)
+        bytes[4] = 4; // future protocol version (this build speaks 1..=3)
         let err = Frame::from_bytes(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
         let err2 = Frame::read_from(&mut std::io::Cursor::new(bytes))

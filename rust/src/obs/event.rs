@@ -22,6 +22,12 @@ pub enum UplinkKind {
     /// A later dense gradient: the worker refreshed its look-back basis
     /// (including the forced refresh after a rejoin).
     Refresh,
+    /// `Full`, but carried as a quantized `UpdateQ` frame (wire protocol
+    /// v3, q8/f16 sessions). Raw sessions never emit the quantized kinds,
+    /// so the parity-checked stream of a raw run is unchanged.
+    QuantFull,
+    /// `Refresh` carried as a quantized `UpdateQ` frame.
+    QuantRefresh,
 }
 
 /// Derives [`UplinkKind`] from payload shape alone, identically on every
@@ -52,6 +58,21 @@ impl UplinkTracker {
             }
             // Out-of-range worker id: classify conservatively as Full.
             None => UplinkKind::Full,
+        }
+    }
+
+    /// [`classify`](UplinkTracker::classify), then lift dense kinds to
+    /// their quantized variants when the uplink rode an `UpdateQ` frame.
+    pub fn classify_wire(
+        &mut self,
+        worker: usize,
+        is_scalar: bool,
+        quantized: bool,
+    ) -> UplinkKind {
+        match (self.classify(worker, is_scalar), quantized) {
+            (UplinkKind::Full, true) => UplinkKind::QuantFull,
+            (UplinkKind::Refresh, true) => UplinkKind::QuantRefresh,
+            (kind, _) => kind,
         }
     }
 }
@@ -157,6 +178,8 @@ const TAG_HANDSHAKE_REJECTED: u8 = 19;
 const KIND_SCALAR: u8 = 0;
 const KIND_FULL: u8 = 1;
 const KIND_REFRESH: u8 = 2;
+const KIND_QUANT_FULL: u8 = 3;
+const KIND_QUANT_REFRESH: u8 = 4;
 
 /// The fixed-size packed form of an [`Event`]: one tag byte, one kind
 /// byte, two `u32` operands, one `u64` operand. `Copy + Eq`, so ring
@@ -195,6 +218,8 @@ impl Encoded {
                     KIND_SCALAR => UplinkKind::Scalar,
                     KIND_FULL => UplinkKind::Full,
                     KIND_REFRESH => UplinkKind::Refresh,
+                    KIND_QUANT_FULL => UplinkKind::QuantFull,
+                    KIND_QUANT_REFRESH => UplinkKind::QuantRefresh,
                     _ => return None,
                 };
                 Event::WorkerUplink { t: self.a, worker: self.b, kind, floats: self.c }
@@ -232,6 +257,8 @@ impl Event {
                     UplinkKind::Scalar => KIND_SCALAR,
                     UplinkKind::Full => KIND_FULL,
                     UplinkKind::Refresh => KIND_REFRESH,
+                    UplinkKind::QuantFull => KIND_QUANT_FULL,
+                    UplinkKind::QuantRefresh => KIND_QUANT_REFRESH,
                 };
                 Encoded { tag: TAG_WORKER_UPLINK, kind, a: t, b: worker, c: floats }
             }
@@ -300,6 +327,13 @@ mod tests {
             Event::WorkerUplink { t: 3, worker: 1, kind: UplinkKind::Scalar, floats: 1 },
             Event::WorkerUplink { t: 0, worker: 2, kind: UplinkKind::Full, floats: 64 },
             Event::WorkerUplink { t: 5, worker: 2, kind: UplinkKind::Refresh, floats: 64 },
+            Event::WorkerUplink { t: 6, worker: 3, kind: UplinkKind::QuantFull, floats: 64 },
+            Event::WorkerUplink {
+                t: 7,
+                worker: 3,
+                kind: UplinkKind::QuantRefresh,
+                floats: 64,
+            },
             Event::FaultInjected { t: 2, worker: 2 },
             Event::Rejoin { t: 4, worker: 2 },
             Event::RoundCommit { t: 3, participants: 3, faults: 1 },
@@ -336,6 +370,18 @@ mod tests {
     fn unknown_tags_and_kinds_decode_to_none() {
         assert_eq!(Encoded { tag: 200, kind: 0, a: 0, b: 0, c: 0 }.decode(), None);
         assert_eq!(Encoded { tag: 2, kind: 9, a: 0, b: 0, c: 0 }.decode(), None);
+    }
+
+    #[test]
+    fn quantized_uplinks_classify_like_dense_ones() {
+        let mut tr = UplinkTracker::new(2);
+        // The bootstrap/refresh state machine is shared with the raw path.
+        assert_eq!(tr.classify_wire(0, false, true), UplinkKind::QuantFull);
+        assert_eq!(tr.classify_wire(0, false, true), UplinkKind::QuantRefresh);
+        assert_eq!(tr.classify_wire(0, true, true), UplinkKind::Scalar);
+        // A raw session through the same entry point is untouched.
+        assert_eq!(tr.classify_wire(1, false, false), UplinkKind::Full);
+        assert_eq!(tr.classify_wire(1, false, false), UplinkKind::Refresh);
     }
 
     #[test]

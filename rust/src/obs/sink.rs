@@ -25,6 +25,8 @@ fn kind_str(kind: UplinkKind) -> &'static str {
         UplinkKind::Scalar => "scalar",
         UplinkKind::Full => "full",
         UplinkKind::Refresh => "refresh",
+        UplinkKind::QuantFull => "quant_full",
+        UplinkKind::QuantRefresh => "quant_refresh",
     }
 }
 

@@ -87,6 +87,7 @@ fn base_cfg(delta: f64, seed: u64) -> FlConfig {
         transport: Transport::Memory,
         faults: None,
         trace: None,
+        wire_codec: Default::default(),
     }
 }
 

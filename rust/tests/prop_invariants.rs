@@ -187,6 +187,7 @@ fn prop_fl_coherence_and_accounting_under_any_schedule() {
             transport: Transport::Memory,
             faults: None,
             trace: None,
+            wire_codec: Default::default(),
         };
         let out = run_fl(&mut trainer, vec![0.0; dim], &cfg, &|| Box::new(Identity), "p")
             .map_err(|e| format!("run failed: {e}"))?;
@@ -228,6 +229,7 @@ fn prop_vanilla_recovery_equals_fedavg() {
             transport: Transport::Memory,
             faults: None,
             trace: None,
+            wire_codec: Default::default(),
         };
         let mut t1 = MockTrainer::new(dim, s.workers, 0.2, 0.05, s.seed);
         let out = run_fl(&mut t1, vec![0.0; dim], &cfg, &|| Box::new(Identity), "l")

@@ -1,0 +1,438 @@
+//! Wire protocol v3 integration suite.
+//!
+//! What lives here (unit-level coverage is in `net::{wire, quant, server,
+//! client}` tests):
+//!
+//! * Quantized TCP deployments end to end: a `q8` run must cut the
+//!   *measured* Round-broadcast wire bytes by >= 3x against the ledger's
+//!   raw-equivalent column while staying within loss tolerance of the
+//!   raw sequential reference; `f16` must save bytes with a much tighter
+//!   loss bound. A quantized run completing at all is also the
+//!   delta-reconstruction exactness check: the client kills the session
+//!   on any base mismatch, so every post-round-0 broadcast arriving as a
+//!   delta proves both ends track the same reconstruction.
+//! * Mixed-version fleet smoke: a raw-preferring worker (the v2 byte
+//!   surface) and a `q8` worker served by the same quantized server.
+//! * Chunked frame streaming over links, plus its corruption suite
+//!   (out-of-order, interrupted, oversized, bit-flipped streams).
+//! * Token-authenticated rejoin over real TCP: wrong token and wrong dim
+//!   are rejected at the handshake, the right token is re-welcomed.
+//! * The serve-phase recv deadline: a server that goes silent mid-round
+//!   without closing its socket must not wedge the worker — the worker
+//!   rejoins and finishes (the `connect_worker_with_retry` bugfix pin;
+//!   before the fix this test hangs forever).
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use fedrecycle::compress::{Identity, WireCodec};
+use fedrecycle::coordinator::messages::Payload;
+use fedrecycle::coordinator::round::{run_fl, FlConfig, FlOutcome, Parallelism};
+use fedrecycle::coordinator::trainer::{LocalTrainer, MockTrainer};
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::net::server::session_token;
+use fedrecycle::net::wire::{self, Frame};
+use fedrecycle::net::{
+    connect_worker_with_retry, recv_frame, run_server_rounds_elastic, run_tcp_fl,
+    send_frame, Acceptor, Link, MemLink, ReconnectCfg, TcpLink,
+};
+
+const SPREAD: f32 = 0.25;
+const SIGMA: f32 = 0.03;
+
+fn cfg(delta: f64, seed: u64, codec: WireCodec) -> FlConfig {
+    FlConfig {
+        rounds: 10,
+        tau: 2,
+        eta: 0.05,
+        policy: ThresholdPolicy::fixed(delta),
+        sample_fraction: 1.0,
+        eval_every: 1,
+        seed,
+        check_coherence: false,
+        parallelism: Parallelism::Sequential,
+        wire_codec: codec,
+        ..Default::default()
+    }
+}
+
+fn sequential(dim: usize, k: usize, c: &FlConfig) -> FlOutcome {
+    let mut t = MockTrainer::new(dim, k, SPREAD, SIGMA, c.seed);
+    run_fl(&mut t, vec![0.0; dim], c, &|| Box::new(Identity), "seq").unwrap()
+}
+
+fn deployed_tcp(
+    dim: usize,
+    k: usize,
+    c: &FlConfig,
+) -> (fedrecycle::metrics::RunSeries, fedrecycle::coordinator::CommLedger, Vec<f32>) {
+    let mut eval = MockTrainer::new(dim, k, SPREAD, 0.0, c.seed);
+    let weights = eval.weights();
+    run_tcp_fl(
+        |_id| MockTrainer::new(dim, k, SPREAD, SIGMA, c.seed),
+        &mut eval,
+        vec![0.0; dim],
+        weights,
+        c,
+        &|| Box::new(Identity),
+        "tcp",
+    )
+    .unwrap()
+}
+
+fn final_test_loss(series: &fedrecycle::metrics::RunSeries) -> f64 {
+    series.rounds.last().unwrap().test_loss
+}
+
+/// The headline acceptance number: a q8 session moves >= 3x fewer
+/// measured bytes per Round broadcast than the same frames would cost
+/// raw, and the lossy codec stays within loss tolerance of the raw
+/// reference (error feedback and delta bases keep the error bounded
+/// instead of compounding).
+#[test]
+fn q8_tcp_run_cuts_round_broadcast_bytes_3x_within_loss_tolerance() {
+    let dim = 512;
+    let k = 3;
+    let raw_ref = sequential(dim, k, &cfg(-1.0, 41, WireCodec::Raw));
+    let c = cfg(-1.0, 41, WireCodec::Q8);
+    let (series, ledger, theta) = deployed_tcp(dim, k, &c);
+    assert_eq!(theta.len(), dim);
+    assert!(ledger.consistent());
+
+    // Downlink: every broadcast was a RoundQ (dense round 0, deltas
+    // after); the raw-equivalent column records what raw Round frames
+    // would have measured.
+    assert!(
+        ledger.wire_down_raw_bytes >= 3 * ledger.wire_down_bytes,
+        "q8 Round broadcasts saved less than 3x: {} raw-equivalent vs {} measured",
+        ledger.wire_down_raw_bytes,
+        ledger.wire_down_bytes
+    );
+    // Uplink: vanilla FL sends a full gradient every round, all UpdateQ.
+    assert!(
+        ledger.wire_up_raw_bytes >= 3 * ledger.wire_up_bytes,
+        "q8 uplinks saved less than 3x: {} vs {}",
+        ledger.wire_up_raw_bytes,
+        ledger.wire_up_bytes
+    );
+    let (up_saved, down_saved) = ledger.wire_savings();
+    assert!(up_saved > 0 && down_saved > 0);
+    // The per-round series snapshots the same totals (JSON summary path).
+    let last = series.rounds.last().unwrap();
+    assert_eq!(last.wire_up_raw_bytes, ledger.wire_up_raw_bytes);
+    assert_eq!(last.wire_down_raw_bytes, ledger.wire_down_raw_bytes);
+
+    // Lossy, but bounded: the q8 run's final test loss tracks the raw
+    // sequential reference.
+    let raw_loss = final_test_loss(&raw_ref.series);
+    let q8_loss = final_test_loss(&series);
+    assert!(
+        (q8_loss - raw_loss).abs() <= 0.25 * raw_loss.abs() + 1e-2,
+        "q8 loss {q8_loss} drifted from raw {raw_loss}"
+    );
+}
+
+/// f16 halves the mantissa, not the byte count as aggressively as q8 —
+/// assert real savings and a much tighter loss bound (~3 decimal digits
+/// survive the wire).
+#[test]
+fn f16_tcp_run_saves_bytes_with_tight_loss_tolerance() {
+    let dim = 384;
+    let k = 2;
+    let raw_ref = sequential(dim, k, &cfg(-1.0, 43, WireCodec::Raw));
+    let (series, ledger, _theta) = deployed_tcp(dim, k, &cfg(-1.0, 43, WireCodec::F16));
+    let (up_saved, down_saved) = ledger.wire_savings();
+    assert!(up_saved > 0, "f16 uplink saved nothing");
+    assert!(down_saved > 0, "f16 downlink saved nothing");
+    let raw_loss = final_test_loss(&raw_ref.series);
+    let f16_loss = final_test_loss(&series);
+    assert!(
+        (f16_loss - raw_loss).abs() <= 0.02 * raw_loss.abs() + 1e-3,
+        "f16 loss {f16_loss} drifted from raw {raw_loss}"
+    );
+}
+
+/// LBGM on a quantized session: scalar uplinks ride the plain v2 Update
+/// frame while refreshes are quantized, and the resynced LBG copies keep
+/// the look-back coherent (the run completes and keeps saving bytes).
+#[test]
+fn q8_session_interoperates_with_lbgm_scalars() {
+    let dim = 256;
+    let k = 3;
+    let mut c = cfg(0.4, 47, WireCodec::Q8);
+    c.rounds = 12;
+    let (series, ledger, _theta) = deployed_tcp(dim, k, &c);
+    assert!(ledger.scalar_msgs > 0, "LBGM path never engaged");
+    assert!(ledger.full_msgs > 0);
+    // Broadcasts are quantized regardless of the uplink mix.
+    assert!(ledger.wire_down_raw_bytes >= 3 * ledger.wire_down_bytes);
+    // Scalar Update frames count identically on both uplink columns, so
+    // the uplink saving comes from the refreshes alone — still nonzero.
+    assert!(ledger.wire_savings().0 > 0);
+    let losses: Vec<f64> = series.rounds.iter().map(|r| r.test_loss).collect();
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "quantized LBGM run failed to make progress: {losses:?}"
+    );
+}
+
+/// Mixed-version smoke: one raw-preferring worker (exactly the v2 byte
+/// surface on the wire) and one q8 worker, served concurrently by a
+/// quantized server. Negotiation is per session, so both finish the run.
+#[test]
+fn mixed_raw_and_q8_fleet_completes_on_one_server() {
+    let dim = 256;
+    let k = 2;
+    let c = cfg(-1.0, 53, WireCodec::Q8);
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut handles = Vec::new();
+    for (id, pref) in [(0usize, WireCodec::Raw), (1usize, WireCodec::Q8)] {
+        let seed = c.seed;
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut trainer = MockTrainer::new(dim, k, SPREAD, SIGMA, seed);
+            connect_worker_with_retry(
+                addr,
+                id,
+                &mut trainer,
+                Box::new(Identity),
+                pref,
+                &ReconnectCfg::default(),
+            )
+        }));
+    }
+    let acceptor =
+        Acceptor::spawn(listener, k, dim, &c, Duration::from_secs(30)).unwrap();
+    let (mut links, codecs) = acceptor.wait_for_fleet(k).unwrap();
+    assert_eq!(
+        codecs,
+        vec![WireCodec::Raw, WireCodec::Q8],
+        "per-session negotiation lost a codec"
+    );
+    let mut eval = MockTrainer::new(dim, k, SPREAD, 0.0, c.seed);
+    let weights = eval.weights();
+    let (_series, ledger, theta) = run_server_rounds_elastic(
+        &mut links,
+        codecs,
+        &mut eval,
+        vec![0.0; dim],
+        weights,
+        &c,
+        Duration::from_secs(60),
+        "mixed",
+        None,
+    )
+    .unwrap();
+    drop(acceptor);
+    for h in handles {
+        assert_eq!(h.join().unwrap().unwrap(), c.rounds, "a worker missed rounds");
+    }
+    assert_eq!(theta.len(), dim);
+    // Worker 0's frames count equally on both columns; worker 1's save —
+    // the gap exists but is smaller than an all-q8 fleet's.
+    let (up_saved, down_saved) = ledger.wire_savings();
+    assert!(up_saved > 0 && down_saved > 0, "mixed fleet saved nothing");
+    assert!(ledger.wire_up_raw_bytes > ledger.wire_up_bytes);
+    assert!(
+        ledger.wire_down_raw_bytes < 2 * ledger.wire_down_bytes,
+        "raw worker's broadcasts should halve the fleet-wide ratio"
+    );
+}
+
+/// A frame larger than CHUNK_DATA_LEN streams as bounded chunks and
+/// reassembles exactly; the corruption suite then breaks the stream in
+/// every way the assembler guards against.
+#[test]
+fn chunked_frames_round_trip_and_reject_corruption() {
+    // 300k params * 4 B > the 1 MiB chunk bound: send_frame must stream.
+    let dim = 300_000;
+    let theta: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.001).cos()).collect();
+    let frame = Frame::Round { t: 7, theta: theta.clone() };
+    assert!(
+        frame.chunk_frames(wire::CHUNK_DATA_LEN).is_some(),
+        "test frame too small to exercise chunking"
+    );
+    let max_total = wire::HEADER_LEN + wire::session_max_payload(dim) + wire::CHECKSUM_LEN;
+    let (mut a, mut b) = MemLink::pair();
+    let sent = send_frame(&mut a, &frame).unwrap();
+    assert!(sent > frame.wire_bytes(), "chunk framing overhead went missing");
+    match recv_frame(&mut b, max_total).unwrap() {
+        Frame::Round { t, theta: got } => {
+            assert_eq!(t, 7);
+            assert_eq!(got, theta, "chunked reassembly is not byte-exact");
+        }
+        other => panic!("wrong frame {other:?}"),
+    }
+
+    // Build a small chunked stream by hand to corrupt it.
+    let small = Frame::Round { t: 1, theta: vec![0.5; 2000] };
+    let chunks = small.chunk_frames(1024).unwrap();
+    assert!(chunks.len() >= 3);
+
+    // Out of order: the stream must start at offset 0.
+    let (mut a, mut b) = MemLink::pair();
+    a.send(&chunks[1]).unwrap();
+    let err = recv_frame(&mut b, max_total).unwrap_err().to_string();
+    assert!(err.contains("offset"), "{err}");
+
+    // Interrupted: a non-chunk frame mid-stream kills the assembly.
+    let (mut a, mut b) = MemLink::pair();
+    a.send(&chunks[0]).unwrap();
+    a.send(&Frame::Shutdown).unwrap();
+    assert!(recv_frame(&mut b, max_total).is_err());
+
+    // Oversized: a claimed total beyond the session cap is rejected
+    // before any allocation-by-attacker.
+    let (mut a, mut b) = MemLink::pair();
+    a.send(&Frame::Chunk { total: u64::MAX / 2, offset: 0, data: vec![0u8; 8] })
+        .unwrap();
+    assert!(recv_frame(&mut b, max_total).is_err());
+
+    // Bit flip inside the reassembled bytes: each chunk frame is valid,
+    // but the inner frame's checksum must catch the flip.
+    let mut inner = small.to_bytes();
+    let mid = inner.len() / 2;
+    inner[mid] ^= 0x40;
+    let total = inner.len() as u64;
+    let (mut a, mut b) = MemLink::pair();
+    let mut off = 0usize;
+    for piece in inner.chunks(1024) {
+        a.send(&Frame::Chunk { total, offset: off as u64, data: piece.to_vec() })
+            .unwrap();
+        off += piece.len();
+    }
+    let err = recv_frame(&mut b, max_total).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+}
+
+/// The acceptance pin, over real TCP: a duplicate `Rejoin3` presenting
+/// the wrong session token is rejected at the handshake (the connection
+/// dies without a Welcome), the right token is re-welcomed, and a
+/// right-token rejoin with the wrong model dim is rejected too.
+#[test]
+fn wrong_token_rejoin_is_rejected_over_tcp() {
+    let dim = 16;
+    let c = cfg(-1.0, 59, WireCodec::Q8);
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let acceptor = Acceptor::spawn(listener, 1, dim, &c, Duration::from_secs(10)).unwrap();
+
+    // The real worker 0 handshakes on protocol v3 and learns its token.
+    let mut real = TcpLink::new(std::net::TcpStream::connect(addr).unwrap()).unwrap();
+    real.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+    real.send(&Frame::Hello3 { worker: 0, dim: dim as u64, codec: WireCodec::Q8.to_wire() })
+        .unwrap();
+    let token = match real.recv().unwrap() {
+        Frame::Welcome3 { token, codec, .. } => {
+            assert_eq!(codec, WireCodec::Q8.to_wire());
+            token
+        }
+        other => panic!("expected Welcome3, got {other:?}"),
+    };
+    assert_eq!(token, session_token(c.seed, 0), "token derivation drifted");
+    let (_links, codecs) = acceptor.wait_for_fleet(1).unwrap();
+    assert_eq!(codecs, vec![WireCodec::Q8]);
+
+    // An imposter replays the rejoin with a flipped token: no Welcome,
+    // connection closed, seat untouched.
+    let mut imposter = TcpLink::new(std::net::TcpStream::connect(addr).unwrap()).unwrap();
+    imposter.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+    imposter
+        .send(&Frame::Rejoin3 { worker: 0, last_round: 0, dim: dim as u64, token: token ^ 1 })
+        .unwrap();
+    assert!(imposter.recv().is_err(), "imposter with a bad token got a reply");
+
+    // Right token, wrong dim: also rejected at the handshake.
+    let mut shrunk = TcpLink::new(std::net::TcpStream::connect(addr).unwrap()).unwrap();
+    shrunk.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+    shrunk
+        .send(&Frame::Rejoin3 { worker: 0, last_round: 0, dim: dim as u64 + 1, token })
+        .unwrap();
+    assert!(shrunk.recv().is_err(), "dim-mismatched rejoin got a reply");
+
+    // The genuine rejoin is re-welcomed with the same token.
+    let mut back = TcpLink::new(std::net::TcpStream::connect(addr).unwrap()).unwrap();
+    back.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+    back.send(&Frame::Rejoin3 { worker: 0, last_round: 0, dim: dim as u64, token })
+        .unwrap();
+    match back.recv().unwrap() {
+        Frame::Welcome3 { token: t2, .. } => assert_eq!(t2, token),
+        other => panic!("expected Welcome3 on genuine rejoin, got {other:?}"),
+    }
+}
+
+/// The serve-phase deadline pin: a server that stops mid-round *without
+/// closing its socket* (SIGKILL/partition semantics) must not wedge the
+/// worker. With the bounded serve recv deadline the worker maps the
+/// silence to a lost link, reconnects, rejoins with its true cursor, and
+/// finishes the run. Before the bugfix (recv timeout cleared after the
+/// handshake) this test hangs forever on the second accept.
+#[test]
+fn worker_rejoins_after_server_goes_silent_mid_round() {
+    let dim = 8;
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let retry = ReconnectCfg {
+        max_attempts: 10,
+        initial_backoff: Duration::from_millis(10),
+        max_backoff: Duration::from_millis(100),
+        handshake_timeout: Duration::from_secs(10),
+        serve_timeout: Duration::from_millis(300),
+    };
+    let client = std::thread::spawn(move || -> anyhow::Result<usize> {
+        let mut trainer = MockTrainer::new(dim, 1, SPREAD, SIGMA, 5);
+        connect_worker_with_retry(
+            addr,
+            0,
+            &mut trainer,
+            Box::new(Identity),
+            WireCodec::Raw,
+            &retry,
+        )
+    });
+
+    // Scripted server, connection 1: welcome, drive round 0, then go
+    // silent while HOLDING the socket open.
+    let (s1, _) = listener.accept().unwrap();
+    let mut conn1 = TcpLink::new(s1).unwrap();
+    conn1.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+    match conn1.recv().unwrap() {
+        Frame::Hello { worker: 0, dim: d } => assert_eq!(d, dim as u64),
+        other => panic!("expected Hello, got {other:?}"),
+    }
+    conn1
+        .send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 2.0 })
+        .unwrap();
+    conn1.send(&Frame::Round { t: 0, theta: vec![0.0; dim] }).unwrap();
+    assert!(matches!(conn1.recv().unwrap(), Frame::Update(_)));
+    // ...silence. conn1 stays alive in scope; the worker's 300 ms serve
+    // deadline must fire and bring it back to accept().
+
+    let (s2, _) = listener.accept().unwrap();
+    let mut conn2 = TcpLink::new(s2).unwrap();
+    conn2.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+    match conn2.recv().unwrap() {
+        Frame::Rejoin { worker, last_round } => {
+            assert_eq!(worker, 0);
+            assert_eq!(last_round, 0, "rejoin must carry the true cursor");
+        }
+        other => panic!("expected Rejoin, got {other:?}"),
+    }
+    conn2
+        .send(&Frame::Welcome { dim: dim as u64, tau: 1, eta: 0.05, delta: 2.0 })
+        .unwrap();
+    conn2.send(&Frame::Round { t: 1, theta: vec![0.01; dim] }).unwrap();
+    match conn2.recv().unwrap() {
+        Frame::Update(m) => {
+            assert_eq!(m.round, 1);
+            assert!(
+                matches!(m.payload, Payload::Full { .. }),
+                "first post-rejoin uplink must be a forced full refresh"
+            );
+        }
+        other => panic!("expected Update, got {other:?}"),
+    }
+    conn2.send(&Frame::Shutdown).unwrap();
+    drop(conn1);
+    assert_eq!(client.join().unwrap().unwrap(), 2, "worker lost a round across the rejoin");
+}
