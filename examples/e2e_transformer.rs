@@ -8,17 +8,51 @@
 //!
 //! Logs the loss curve and next-token accuracy every few rounds and writes
 //! results/e2e_transformer.csv; EXPERIMENTS.md records a reference run.
+//!
+//! # CI mode: `--mock`
+//!
+//! `--mock` swaps the PJRT transformer for a [`MockTrainer`] at a bounded
+//! transformer-shaped dimension (`--dim`, default 4096) and drives the
+//! heterogeneous-fleet scenario harness end to end: the
+//! [`FleetSpec::planet_scale`] profile (three device tiers, power-law
+//! availability, a participation dip) plus seeded chaos, under the
+//! adaptive Theorem-1 policy. No artifacts or PJRT plugin needed, so the
+//! chaos-matrix CI can run a realistic model *shape* per `FL_SEED` and
+//! publish the per-tier savings ledger:
+//!
+//!     cargo run --release --example e2e_transformer -- --mock --rounds 12
+//!
+//! Sanity gates (full round count, finite losses, internally consistent
+//! ledger) exit non-zero on violation, so CI catches a silent failure.
 
 use std::path::Path;
 
+use fedrecycle::compress::Identity;
 use fedrecycle::config::ExperimentConfig;
+use fedrecycle::coordinator::{run_fl, FlConfig, MockTrainer};
 use fedrecycle::figures::common::run_arm;
-use fedrecycle::metrics::write_csv;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::metrics::{write_csv, write_json, RunSeries};
 use fedrecycle::runtime::{Manifest, Runtime};
+use fedrecycle::sim::ChaosSpec;
+use fedrecycle::testkit::FleetSpec;
 use fedrecycle::util::cli::Args;
+
+/// Upper bounds on the CI-facing knobs: `--mock` runs must stay cheap
+/// enough for the chaos matrix even when a config typo asks for more.
+const MAX_MOCK_ROUNDS: usize = 500;
+const MAX_MOCK_DIM: usize = 1 << 16;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
+    // The chaos-matrix CI parameterizes runs by FL_SEED; an explicit
+    // --seed still wins.
+    let env_seed = std::env::var("FL_SEED").ok().and_then(|s| s.parse().ok());
+    let seed = args.u64_or("seed", env_seed.unwrap_or(4));
+    if args.flag("mock") {
+        return run_mock_scenario(&args, seed);
+    }
+
     let manifest = Manifest::load(&Manifest::default_dir())?;
     let rt = Runtime::cpu()?;
     let meta = manifest.variant("transformer_lm")?;
@@ -39,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         delta: args.f64_or("delta", 0.3),
         train_n: 10_000, // validation floor; corpus sharding is by tokens
         eval_every: args.usize_or("eval-every", 10),
-        seed: args.u64_or("seed", 4),
+        seed,
         ..Default::default()
     };
     println!(
@@ -61,8 +95,9 @@ fn main() -> anyhow::Result<()> {
             r.round, r.train_loss, r.test_loss, r.test_metric
         );
     }
-    let first = out.series.rounds.first().unwrap();
-    let last = out.series.last().unwrap();
+    check_run(&out.series, cfg.rounds)?;
+    let first = out.series.rounds.first().expect("non-empty series");
+    let last = out.series.last().expect("non-empty series");
     println!(
         "\ntrain loss {:.4} -> {:.4} (uniform baseline ln(64) = {:.4})",
         first.train_loss,
@@ -77,5 +112,79 @@ fn main() -> anyhow::Result<()> {
     println!("phase timings: {}", out.timers.report());
     write_csv(Path::new("results/e2e_transformer.csv").as_ref(), &[out.series])?;
     println!("curve written to results/e2e_transformer.csv");
+    Ok(())
+}
+
+/// The CI-runnable path: the planet-scale scenario over a bounded
+/// transformer-shaped mock federation, adaptive policy, seeded chaos,
+/// per-tier savings ledger written as JSON.
+fn run_mock_scenario(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let rounds = args.usize_or("rounds", 12).min(MAX_MOCK_ROUNDS);
+    let dim = args.usize_or("dim", 4096).min(MAX_MOCK_DIM);
+    let workers = args.usize_or("workers", 10);
+    let delta2 = args.f64_or("delta2", 0.05);
+
+    let mut spec = FleetSpec::planet_scale(rounds);
+    spec.chaos = Some(ChaosSpec::default());
+    let scenario = spec.compile(seed, workers, rounds)?;
+    let mut cfg = FlConfig {
+        rounds,
+        eta: 0.1,
+        policy: ThresholdPolicy::AdaptiveDelta2 { delta2, tau: 2 },
+        eval_every: args.usize_or("eval-every", 4),
+        seed,
+        ..Default::default()
+    };
+    scenario.apply(&mut cfg)?;
+    println!(
+        "mock transformer-shaped scenario: dim={dim} K={workers} rounds={rounds} \
+         seed={seed} tiers={:?}",
+        scenario.tiers.names
+    );
+
+    let mut trainer = MockTrainer::new(dim, workers, 0.2, 0.02, seed);
+    let out = run_fl(
+        &mut trainer,
+        vec![0.0; dim],
+        &cfg,
+        &|| Box::new(Identity),
+        "e2e_transformer_mock",
+    )?;
+    check_run(&out.series, rounds)?;
+    anyhow::ensure!(out.ledger.consistent(), "communication ledger inconsistent");
+    let tiers = out.ledger.tier_totals();
+    anyhow::ensure!(
+        tiers.len() == scenario.tiers.tier_count(),
+        "expected {} tier rows, ledger produced {}",
+        scenario.tiers.tier_count(),
+        tiers.len()
+    );
+    for t in &tiers {
+        println!(
+            "  tier {:>8}: {} workers, {} floats up, {} faults, {} rejoins",
+            t.name, t.workers, t.floats_up, t.faults, t.rejoins
+        );
+    }
+    let out_path = args.get_or("out", "results/e2e_transformer_mock.json");
+    write_json(Path::new(&out_path), &[out.series])?;
+    println!("per-tier ledger written to {out_path}");
+    Ok(())
+}
+
+/// Shared sanity gates; an `Err` here exits the process non-zero, which
+/// is what makes the example usable as a CI smoke step.
+fn check_run(series: &RunSeries, rounds: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        series.rounds.len() == rounds,
+        "run stopped early: {} of {rounds} rounds",
+        series.rounds.len()
+    );
+    for r in &series.rounds {
+        anyhow::ensure!(
+            r.train_loss.is_finite() && r.test_loss.is_finite(),
+            "non-finite loss at round {}",
+            r.round
+        );
+    }
     Ok(())
 }

@@ -28,9 +28,9 @@ pub enum PolicyKind {
     #[default]
     Fixed,
     /// The Theorem-1 adaptive condition `sin^2 <= Delta^2 / ||d||^2`.
-    /// In-process transports only: the wire protocol does not carry the
-    /// server-side state this policy needs, so `config::validate` rejects
-    /// it with the TCP transport at load time.
+    /// Servable on every transport: the decision runs client-side, and the
+    /// Welcome frame's delta slot carries the sign-flipped `Delta^2`
+    /// (see `ThresholdPolicy::wire_delta`).
     AdaptiveDelta2 {
         /// The Theorem-1 `Delta^2` constant.
         delta2: f64,
@@ -107,8 +107,8 @@ pub struct ExperimentConfig {
     /// LBP threshold; < 0 = vanilla FL. Interpreted by `policy`.
     pub delta: f64,
     /// Threshold policy (`fixed` drives the paper's delta threshold;
-    /// `adaptive` the Theorem-1 condition). Adaptive is unservable over
-    /// the TCP transport and rejected at load time.
+    /// `adaptive` the Theorem-1 condition). Both are servable on every
+    /// transport — the policy crosses the wire in the Welcome frame.
     pub policy: PolicyKind,
     pub noniid: bool,
     pub labels_per_worker: usize,
@@ -271,6 +271,8 @@ impl ExperimentConfig {
             faults: self.faults.clone(),
             trace: None,
             wire_codec: self.wire_codec,
+            tau_overrides: None,
+            tiers: None,
         }
     }
 }

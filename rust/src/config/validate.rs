@@ -3,7 +3,6 @@
 
 use anyhow::Result;
 
-use crate::coordinator::round::Transport;
 use crate::coordinator::sampling::sample_clients;
 use crate::sim::FaultKind;
 
@@ -30,16 +29,6 @@ pub fn validate(c: &ExperimentConfig) -> Result<()> {
          participation), got {}",
         c.sample_fraction
     );
-    // The wire protocol cannot carry the server-side state the adaptive
-    // Theorem-1 policy needs; fail at load time instead of at the first
-    // worker's connection (`net::server::policy_delta`).
-    if c.transport == Transport::Tcp {
-        anyhow::ensure!(
-            c.policy == PolicyKind::Fixed,
-            "the adaptive threshold policy is unservable over the TCP \
-             transport; use --transport memory|threads or --policy fixed"
-        );
-    }
     // A NaN/negative Delta^2 silently degrades the adaptive policy to
     // vanilla FL (`sin^2 <= delta2/||d||^2` never holds) — the same silent
     // degradation class as a NaN sample_fraction; reject it at load.
@@ -223,21 +212,20 @@ mod tests {
         validate(&c).unwrap();
     }
 
+    /// The adaptive policy is servable on *every* transport: the decision
+    /// runs client-side and the parameters cross the wire in the Welcome
+    /// frame's delta slot (`ThresholdPolicy::wire_delta`), so the old
+    /// load-time TCP rejection is gone.
     #[test]
-    fn adaptive_policy_over_tcp_rejected_at_load() {
-        let mut c = ExperimentConfig::default();
-        c.policy = PolicyKind::AdaptiveDelta2 { delta2: 0.01 };
-        c.transport = Transport::Tcp;
-        let err = validate(&c).unwrap_err().to_string();
-        assert!(err.contains("unservable"), "{err}");
-        // The same policy is servable in-process.
-        c.transport = Transport::Memory;
-        validate(&c).unwrap();
-        c.transport = Transport::Threads;
-        validate(&c).unwrap();
-        // And the fixed policy is servable everywhere.
-        let mut c = ExperimentConfig::default();
-        c.transport = Transport::Tcp;
-        validate(&c).unwrap();
+    fn adaptive_policy_accepted_on_every_transport() {
+        use crate::coordinator::round::Transport;
+        for transport in [Transport::Memory, Transport::Threads, Transport::Tcp] {
+            let mut c = ExperimentConfig::default();
+            c.policy = PolicyKind::AdaptiveDelta2 { delta2: 0.01 };
+            c.transport = transport;
+            validate(&c).unwrap_or_else(|e| {
+                panic!("adaptive policy rejected on {transport:?}: {e:#}")
+            });
+        }
     }
 }

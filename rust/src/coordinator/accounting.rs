@@ -17,7 +17,74 @@
 //! [`Link`]: crate::net::Link
 //! [`record_wire_down`]: CommLedger::record_wire_down
 
+use std::sync::Arc;
+
 use crate::compress::Cost;
+
+/// Device-tier map: named device classes plus a worker→tier assignment,
+/// attached to a [`CommLedger`] (via [`CommLedger::set_tiers`]) so the
+/// per-worker counters can be rolled up per tier. Accounting metadata
+/// only — tier membership never changes what any engine computes, so a
+/// tiered run stays bit-identical to the same run untiered.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TierMap {
+    /// Tier display names, indexed by tier id.
+    pub names: Vec<String>,
+    /// `of[w]` = tier id of worker `w`. Must index into `names`.
+    pub of: Vec<usize>,
+}
+
+impl TierMap {
+    /// Number of tiers.
+    pub fn tier_count(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Tier id of `worker`, if the map covers it.
+    pub fn tier_of(&self, worker: usize) -> Option<usize> {
+        self.of.get(worker).copied()
+    }
+
+    /// Every assignment indexes a named tier.
+    pub fn well_formed(&self) -> bool {
+        self.of.iter().all(|&t| t < self.names.len())
+    }
+}
+
+/// One tier's cumulative roll-up of the ledger's per-worker counters,
+/// plus the derived wire savings. JSON-only round-ledger columns — the
+/// frozen CSV header never carries these.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TierTotals {
+    /// Tier display name (from the attached [`TierMap`]).
+    pub name: String,
+    /// Workers assigned to this tier.
+    pub workers: u64,
+    /// Cumulative modeled uplink floats from this tier's workers.
+    pub floats_up: u64,
+    /// Cumulative modeled uplink bits.
+    pub bits_up: u64,
+    /// Cumulative modeled downlink floats (theta broadcasts).
+    pub floats_down: u64,
+    /// Cumulative modeled downlink bits.
+    pub bits_down: u64,
+    /// Measured framed uplink bytes (0 on in-memory transports).
+    pub wire_up_bytes: u64,
+    /// Measured framed downlink bytes (0 on in-memory transports).
+    pub wire_down_bytes: u64,
+    /// Raw-equivalent uplink bytes (see [`CommLedger::wire_up_raw_bytes`]).
+    pub wire_up_raw_bytes: u64,
+    /// Raw-equivalent downlink bytes.
+    pub wire_down_raw_bytes: u64,
+    /// Measured uplink bytes saved vs the raw baseline (saturating).
+    pub savings_up_bytes: u64,
+    /// Measured downlink bytes saved vs the raw baseline (saturating).
+    pub savings_down_bytes: u64,
+    /// Fault events charged to this tier's workers.
+    pub faults: u64,
+    /// Mid-run rejoins of this tier's workers.
+    pub rejoins: u64,
+}
 
 /// Cumulative communication accounting, total and per worker.
 #[derive(Clone, Debug, Default)]
@@ -40,6 +107,10 @@ pub struct CommLedger {
     pub wire_up_bytes: u64,
     /// Measured framed bytes sent over real links (0 in-memory).
     pub wire_down_bytes: u64,
+    per_worker_wire_up: Vec<u64>,
+    per_worker_wire_down: Vec<u64>,
+    per_worker_wire_up_raw: Vec<u64>,
+    per_worker_wire_down_raw: Vec<u64>,
     /// Raw-equivalent uplink bytes: what the same logical frames would
     /// have measured on a protocol-v3 `raw` session. Equal to
     /// `wire_up_bytes` on raw sessions; the gap is the quantized-codec
@@ -58,6 +129,8 @@ pub struct CommLedger {
     /// stay comparable across deployments).
     pub total_rejoins: u64,
     per_worker_rejoins: Vec<u64>,
+    /// Device-tier map for [`CommLedger::tier_totals`]; `None` = untiered.
+    tiers: Option<Arc<TierMap>>,
 }
 
 impl CommLedger {
@@ -67,10 +140,27 @@ impl CommLedger {
             per_worker_bits: vec![0; workers],
             per_worker_down_floats: vec![0; workers],
             per_worker_down_bits: vec![0; workers],
+            per_worker_wire_up: vec![0; workers],
+            per_worker_wire_down: vec![0; workers],
+            per_worker_wire_up_raw: vec![0; workers],
+            per_worker_wire_down_raw: vec![0; workers],
             per_worker_faults: vec![0; workers],
             per_worker_rejoins: vec![0; workers],
             ..Default::default()
         }
+    }
+
+    /// Attach a device-tier map so [`tier_totals`] can roll the per-worker
+    /// counters up per tier. Accounting metadata only.
+    ///
+    /// [`tier_totals`]: CommLedger::tier_totals
+    pub fn set_tiers(&mut self, tiers: Arc<TierMap>) {
+        self.tiers = Some(tiers);
+    }
+
+    /// The attached tier map, if any.
+    pub fn tiers(&self) -> Option<&TierMap> {
+        self.tiers.as_deref()
     }
 
     /// Record one worker's uplink message.
@@ -97,26 +187,41 @@ impl CommLedger {
         self.per_worker_down_bits[worker] += cost.bits;
     }
 
-    /// Record measured wire bytes of one received (uplink) frame.
-    pub fn record_wire_up(&mut self, bytes: u64) {
+    /// Record measured wire bytes of one frame received from `worker`.
+    pub fn record_wire_up(&mut self, worker: usize, bytes: u64) {
         self.wire_up_bytes += bytes;
+        self.per_worker_wire_up[worker] += bytes;
     }
 
-    /// Record measured wire bytes of one sent (downlink) frame.
-    pub fn record_wire_down(&mut self, bytes: u64) {
+    /// Record measured wire bytes of one frame sent to `worker`.
+    pub fn record_wire_down(&mut self, worker: usize, bytes: u64) {
         self.wire_down_bytes += bytes;
+        self.per_worker_wire_down[worker] += bytes;
     }
 
-    /// Record the raw-equivalent bytes of one received uplink frame (what
-    /// the frame would have measured on a raw session; equal to the actual
-    /// bytes when the session *is* raw).
-    pub fn record_wire_up_raw(&mut self, bytes: u64) {
+    /// Record the raw-equivalent bytes of one uplink frame received from
+    /// `worker` (what the frame would have measured on a raw session;
+    /// equal to the actual bytes when the session *is* raw).
+    pub fn record_wire_up_raw(&mut self, worker: usize, bytes: u64) {
         self.wire_up_raw_bytes += bytes;
+        self.per_worker_wire_up_raw[worker] += bytes;
     }
 
-    /// Record the raw-equivalent bytes of one sent downlink broadcast.
-    pub fn record_wire_down_raw(&mut self, bytes: u64) {
+    /// Record the raw-equivalent bytes of one downlink broadcast sent to
+    /// `worker`.
+    pub fn record_wire_down_raw(&mut self, worker: usize, bytes: u64) {
         self.wire_down_raw_bytes += bytes;
+        self.per_worker_wire_down_raw[worker] += bytes;
+    }
+
+    /// Measured wire bytes received from `worker`.
+    pub fn worker_wire_up(&self, worker: usize) -> u64 {
+        self.per_worker_wire_up[worker]
+    }
+
+    /// Measured wire bytes sent to `worker`.
+    pub fn worker_wire_down(&self, worker: usize) -> u64 {
+        self.per_worker_wire_down[worker]
     }
 
     /// Measured bytes saved by the wire codec against the raw baseline,
@@ -184,15 +289,83 @@ impl CommLedger {
         }
     }
 
+    /// Roll the per-worker counters up by device tier, in tier order.
+    /// Empty when no tier map is attached (or it is malformed / sized for
+    /// a different fleet), so untiered ledgers stay exactly as before.
+    /// Savings are saturating, mirroring [`wire_savings`].
+    ///
+    /// [`wire_savings`]: CommLedger::wire_savings
+    pub fn tier_totals(&self) -> Vec<TierTotals> {
+        let Some(map) = self.tiers.as_deref() else {
+            return Vec::new();
+        };
+        if !map.well_formed() || map.of.len() != self.per_worker_floats.len() {
+            return Vec::new();
+        }
+        let mut out: Vec<TierTotals> = map
+            .names
+            .iter()
+            .map(|n| TierTotals { name: n.clone(), ..Default::default() })
+            .collect();
+        for (w, &tier) in map.of.iter().enumerate() {
+            let t = &mut out[tier];
+            t.workers += 1;
+            t.floats_up += self.per_worker_floats[w];
+            t.bits_up += self.per_worker_bits[w];
+            t.floats_down += self.per_worker_down_floats[w];
+            t.bits_down += self.per_worker_down_bits[w];
+            t.wire_up_bytes += self.per_worker_wire_up[w];
+            t.wire_down_bytes += self.per_worker_wire_down[w];
+            t.wire_up_raw_bytes += self.per_worker_wire_up_raw[w];
+            t.wire_down_raw_bytes += self.per_worker_wire_down_raw[w];
+            t.faults += self.per_worker_faults[w];
+            t.rejoins += self.per_worker_rejoins[w];
+        }
+        for t in &mut out {
+            t.savings_up_bytes = t.wire_up_raw_bytes.saturating_sub(t.wire_up_bytes);
+            t.savings_down_bytes = t.wire_down_raw_bytes.saturating_sub(t.wire_down_bytes);
+        }
+        out
+    }
+
     /// Internal-consistency check: totals equal the per-worker sums, in
-    /// both directions, and for the fault counters.
+    /// both directions, for the measured wire bytes, and for the
+    /// fault/rejoin counters — and, when a tier map is attached, the
+    /// per-tier roll-up re-sums to the same totals.
     pub fn consistent(&self) -> bool {
-        self.per_worker_floats.iter().sum::<u64>() == self.total_floats
+        let base = self.per_worker_floats.iter().sum::<u64>() == self.total_floats
             && self.per_worker_bits.iter().sum::<u64>() == self.total_bits
             && self.per_worker_down_floats.iter().sum::<u64>() == self.down_floats
             && self.per_worker_down_bits.iter().sum::<u64>() == self.down_bits
+            && self.per_worker_wire_up.iter().sum::<u64>() == self.wire_up_bytes
+            && self.per_worker_wire_down.iter().sum::<u64>() == self.wire_down_bytes
+            && self.per_worker_wire_up_raw.iter().sum::<u64>() == self.wire_up_raw_bytes
+            && self.per_worker_wire_down_raw.iter().sum::<u64>() == self.wire_down_raw_bytes
             && self.per_worker_faults.iter().sum::<u64>() == self.total_faults
-            && self.per_worker_rejoins.iter().sum::<u64>() == self.total_rejoins
+            && self.per_worker_rejoins.iter().sum::<u64>() == self.total_rejoins;
+        if !base {
+            return false;
+        }
+        match self.tiers.as_deref() {
+            None => true,
+            Some(map) => {
+                if !map.well_formed() || map.of.len() != self.per_worker_floats.len() {
+                    return false;
+                }
+                let tiers = self.tier_totals();
+                tiers.iter().map(|t| t.workers).sum::<u64>() == map.of.len() as u64
+                    && tiers.iter().map(|t| t.floats_up).sum::<u64>() == self.total_floats
+                    && tiers.iter().map(|t| t.bits_up).sum::<u64>() == self.total_bits
+                    && tiers.iter().map(|t| t.floats_down).sum::<u64>() == self.down_floats
+                    && tiers.iter().map(|t| t.bits_down).sum::<u64>() == self.down_bits
+                    && tiers.iter().map(|t| t.wire_up_bytes).sum::<u64>()
+                        == self.wire_up_bytes
+                    && tiers.iter().map(|t| t.wire_down_bytes).sum::<u64>()
+                        == self.wire_down_bytes
+                    && tiers.iter().map(|t| t.faults).sum::<u64>() == self.total_faults
+                    && tiers.iter().map(|t| t.rejoins).sum::<u64>() == self.total_rejoins
+            }
+        }
     }
 }
 
@@ -266,12 +439,16 @@ mod tests {
 
     #[test]
     fn wire_bytes_accumulate() {
-        let mut l = CommLedger::new(1);
-        l.record_wire_down(56);
-        l.record_wire_up(41);
-        l.record_wire_up(41);
+        let mut l = CommLedger::new(2);
+        l.record_wire_down(0, 56);
+        l.record_wire_up(0, 41);
+        l.record_wire_up(1, 41);
         assert_eq!(l.wire_down_bytes, 56);
         assert_eq!(l.wire_up_bytes, 82);
+        assert_eq!(l.worker_wire_up(0), 41);
+        assert_eq!(l.worker_wire_up(1), 41);
+        assert_eq!(l.worker_wire_down(0), 56);
+        assert_eq!(l.worker_wire_down(1), 0);
         assert!(l.consistent());
     }
 
@@ -279,20 +456,89 @@ mod tests {
     fn raw_equivalent_bytes_expose_codec_savings() {
         let mut l = CommLedger::new(1);
         // A quantized session: the actual bytes undercut the raw baseline.
-        l.record_wire_down(120);
-        l.record_wire_down_raw(400);
-        l.record_wire_up(130);
-        l.record_wire_up_raw(410);
+        l.record_wire_down(0, 120);
+        l.record_wire_down_raw(0, 400);
+        l.record_wire_up(0, 130);
+        l.record_wire_up_raw(0, 410);
         assert_eq!(l.wire_savings(), (280, 280));
+        assert!(l.consistent());
         // A raw session records the same value on both counters: no saving.
         let mut r = CommLedger::new(1);
-        r.record_wire_down(400);
-        r.record_wire_down_raw(400);
+        r.record_wire_down(0, 400);
+        r.record_wire_down_raw(0, 400);
         assert_eq!(r.wire_savings(), (0, 0));
         // Saturation: framing overhead above raw never underflows.
         let mut o = CommLedger::new(1);
-        o.record_wire_up(50);
-        o.record_wire_up_raw(40);
+        o.record_wire_up(0, 50);
+        o.record_wire_up_raw(0, 40);
         assert_eq!(o.wire_savings(), (0, 0));
+    }
+
+    fn two_tier_map() -> Arc<TierMap> {
+        Arc::new(TierMap {
+            names: vec!["fiber".into(), "cellular".into()],
+            of: vec![0, 1, 1],
+        })
+    }
+
+    #[test]
+    fn tier_totals_roll_up_per_worker_counters() {
+        let mut l = CommLedger::new(3);
+        l.set_tiers(two_tier_map());
+        l.record(0, Cost { floats: 10, bits: 320 }, false);
+        l.record(1, Cost { floats: 1, bits: 32 }, true);
+        l.record(2, Cost { floats: 10, bits: 320 }, false);
+        l.record_down(0, Cost { floats: 4, bits: 128 });
+        l.record_down(2, Cost { floats: 4, bits: 128 });
+        l.record_wire_up(1, 50);
+        l.record_wire_up_raw(1, 80);
+        l.record_wire_down(1, 90);
+        l.record_wire_down_raw(1, 70); // overhead above raw: saturates
+        l.record_fault(2);
+        l.record_rejoin(1);
+        let tiers = l.tier_totals();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].name, "fiber");
+        assert_eq!(tiers[0].workers, 1);
+        assert_eq!(tiers[0].floats_up, 10);
+        assert_eq!(tiers[0].floats_down, 4);
+        assert_eq!(tiers[0].wire_up_bytes, 0);
+        assert_eq!(tiers[1].name, "cellular");
+        assert_eq!(tiers[1].workers, 2);
+        assert_eq!(tiers[1].floats_up, 11);
+        assert_eq!(tiers[1].bits_up, 352);
+        assert_eq!(tiers[1].floats_down, 4);
+        assert_eq!(tiers[1].wire_up_bytes, 50);
+        assert_eq!(tiers[1].savings_up_bytes, 30);
+        assert_eq!(tiers[1].savings_down_bytes, 0, "saturating, no underflow");
+        assert_eq!(tiers[1].faults, 1);
+        assert_eq!(tiers[1].rejoins, 1);
+        assert!(l.consistent());
+    }
+
+    #[test]
+    fn untiered_ledgers_report_no_tier_rows() {
+        let mut l = CommLedger::new(2);
+        l.record(0, Cost { floats: 5, bits: 160 }, false);
+        assert!(l.tier_totals().is_empty());
+        assert!(l.consistent());
+    }
+
+    #[test]
+    fn malformed_or_mis_sized_tier_maps_fail_consistency() {
+        // Assignment indexes a tier that has no name.
+        let mut l = CommLedger::new(2);
+        l.set_tiers(Arc::new(TierMap { names: vec!["a".into()], of: vec![0, 1] }));
+        assert!(l.tier_totals().is_empty());
+        assert!(!l.consistent());
+        // Map sized for a different fleet.
+        let mut l = CommLedger::new(3);
+        l.set_tiers(Arc::new(TierMap { names: vec!["a".into()], of: vec![0] }));
+        assert!(l.tier_totals().is_empty());
+        assert!(!l.consistent());
+        // A well-formed, correctly sized map passes.
+        let mut l = CommLedger::new(3);
+        l.set_tiers(two_tier_map());
+        assert!(l.consistent());
     }
 }

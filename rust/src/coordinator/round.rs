@@ -150,6 +150,20 @@ pub struct FlConfig {
     /// FedAvg weights renormalized over that set. Every engine honors the
     /// same plan identically (`tests/chaos_recovery.rs`).
     pub faults: Option<FaultPlan>,
+    /// Per-worker local-step overrides (device compute tiers): worker `w`
+    /// runs `tau_overrides[w]` local steps instead of the uniform `tau`.
+    /// Workers beyond the vector fall back to `tau`. Every engine resolves
+    /// steps through [`FlConfig::tau_for`] — the net deployment ships the
+    /// resolved value in each worker's `Welcome` frame — so heterogeneous
+    /// fleets stay bit-identical across engines. `None` = uniform fleet.
+    pub tau_overrides: Option<std::sync::Arc<Vec<usize>>>,
+    /// Device-tier map for per-tier ledger aggregation
+    /// ([`CommLedger::tier_totals`]): names plus a worker→tier index.
+    /// Accounting only — tier membership never changes the computation.
+    /// `None` = untiered (the per-tier ledger columns stay empty).
+    ///
+    /// [`CommLedger::tier_totals`]: super::accounting::CommLedger::tier_totals
+    pub tiers: Option<std::sync::Arc<super::accounting::TierMap>>,
     /// Shared trace recorder (`None` = tracing off, the default). Every
     /// engine emits the same deterministic event stream into it —
     /// rejoins, round start, broadcasts, uplinks, faults, commit —
@@ -172,7 +186,33 @@ impl Default for FlConfig {
             transport: Transport::default(),
             wire_codec: crate::compress::WireCodec::Raw,
             faults: None,
+            tau_overrides: None,
+            tiers: None,
             trace: None,
+        }
+    }
+}
+
+impl FlConfig {
+    /// Local SGD steps for `worker`: its override when one is set, the
+    /// uniform `tau` otherwise.
+    pub fn tau_for(&self, worker: usize) -> usize {
+        self.tau_overrides
+            .as_ref()
+            .and_then(|o| o.get(worker).copied())
+            .unwrap_or(self.tau)
+    }
+
+    /// The threshold policy as `worker` must apply it: the adaptive
+    /// Theorem-1 policy scales by the worker's *actual* local-step count
+    /// (`||d|| = ||g||/tau`), so its `tau` is rebound to
+    /// [`tau_for`](FlConfig::tau_for); fixed policies are worker-independent.
+    pub fn policy_for(&self, worker: usize) -> ThresholdPolicy {
+        match self.policy {
+            ThresholdPolicy::AdaptiveDelta2 { delta2, .. } => {
+                ThresholdPolicy::AdaptiveDelta2 { delta2, tau: self.tau_for(worker) }
+            }
+            fixed => fixed,
         }
     }
 }
@@ -284,12 +324,19 @@ fn parallel_round(
     if participants.is_empty() {
         return Ok(Vec::new());
     }
-    let policy = cfg.policy;
-    let (tau, eta) = (cfg.tau, cfg.eta);
+    let eta = cfg.eta;
     let shard_refs = select_mut(shards, participants);
     let worker_refs = select_mut(workers, participants);
-    let mut tasks: Vec<(&mut Box<dyn TrainerShard>, &mut Worker)> =
-        shard_refs.into_iter().zip(worker_refs).collect();
+    // Heterogeneous fleets: each task carries its own resolved (tau,
+    // policy), aligned with the participant order, so chunking across
+    // threads cannot skew which worker runs how many local steps.
+    let mut tasks: Vec<(&mut Box<dyn TrainerShard>, &mut Worker, usize, ThresholdPolicy)> =
+        shard_refs
+            .into_iter()
+            .zip(worker_refs)
+            .zip(participants.iter())
+            .map(|((shard, worker), &w)| (shard, worker, cfg.tau_for(w), cfg.policy_for(w)))
+            .collect();
     let mut outs: Vec<Option<Result<(f64, WorkerMsg)>>> =
         (0..tasks.len()).map(|_| None).collect();
     let n = threads.min(tasks.len()).max(1);
@@ -299,13 +346,13 @@ fn parallel_round(
             tasks.chunks_mut(chunk).zip(outs.chunks_mut(chunk))
         {
             scope.spawn(move || {
-                for ((shard, worker), out) in
+                for ((shard, worker, tau, policy), out) in
                     task_chunk.iter_mut().zip(out_chunk.iter_mut())
                 {
-                    *out = Some(shard.local_round(theta, tau, eta).map(
+                    *out = Some(shard.local_round(theta, *tau, eta).map(
                         |(loss, mut grad)| {
                             let msg =
-                                worker.process_round(round, &mut grad, loss, &policy);
+                                worker.process_round(round, &mut grad, loss, policy);
                             (loss, msg)
                         },
                     ));
@@ -347,6 +394,9 @@ pub fn run_fl(
         (0..k).map(|id| Worker::new(id, codec())).collect();
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
+    if let Some(tiers) = &cfg.tiers {
+        ledger.set_tiers(tiers.clone());
+    }
     let mut timers = PhaseTimer::new();
     let mut uplink_kinds = UplinkTracker::new(k);
 
@@ -419,12 +469,13 @@ pub fn run_fl(
         } else {
             for &w in &participants {
                 let (loss, mut grad) = timers.time("local_sgd", || {
-                    trainer.local_round(w, &server.theta, cfg.tau, cfg.eta)
+                    trainer.local_round(w, &server.theta, cfg.tau_for(w), cfg.eta)
                 })?;
                 // lint: allow(reduction_order, "participant-order f64 loss sum, mirrored exactly by every engine")
                 train_loss_sum += loss;
+                let policy = cfg.policy_for(w);
                 let msg = timers.time("lbgm_uplink", || {
-                    workers[w].process_round(t, &mut grad, loss, &cfg.policy)
+                    workers[w].process_round(t, &mut grad, loss, &policy)
                 });
                 ledger.record(w, msg.cost, msg.is_scalar());
                 msgs.push(msg);
@@ -497,6 +548,7 @@ pub fn run_fl(
             t_train: timers.get("local_sgd") - t_train0,
             t_compress: timers.get("lbgm_uplink") - t_compress0,
             t_aggregate: timers.get("aggregate") - t_aggregate0,
+            tiers: ledger.tier_totals(),
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {

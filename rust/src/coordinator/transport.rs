@@ -62,8 +62,7 @@ where
     F: Fn(usize) -> T,
 {
     let k = weights.len();
-    let policy: ThresholdPolicy = cfg.policy;
-    let (tau, eta) = (cfg.tau, cfg.eta);
+    let eta = cfg.eta;
 
     // Uplink: many producers -> one consumer.
     let (up_tx, up_rx) = mpsc::channel::<WorkerMsg>();
@@ -75,6 +74,10 @@ where
         let up = up_tx.clone();
         let mut trainer = make_trainer(id);
         let mut worker = Worker::new(id, codec());
+        // Heterogeneous fleets: each worker thread owns its resolved
+        // (tau, policy) pair, like a TCP client's per-session Welcome.
+        let tau = cfg.tau_for(id);
+        let policy: ThresholdPolicy = cfg.policy_for(id);
         handles.push(thread::spawn(move || -> Result<()> {
             while let Ok(cmd) = rx.recv() {
                 match cmd {
@@ -98,6 +101,9 @@ where
     let mut server = Server::new(theta0, weights, eta);
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
+    if let Some(tiers) = &cfg.tiers {
+        ledger.set_tiers(Arc::clone(tiers));
+    }
     let mut timers = PhaseTimer::new();
     let mut uplink_kinds = UplinkTracker::new(k);
 
@@ -215,6 +221,7 @@ where
             faults: planned_n - msgs.len(),
             t_comm: timers.get("comm") - t_comm0,
             t_aggregate: timers.get("aggregate") - t_aggregate0,
+            tiers: ledger.tier_totals(),
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {

@@ -1,6 +1,8 @@
 //! Transmission policy: scalar LBC vs full-gradient refresh
 //! (paper Alg. 1 line 7 and the Theorem-1 condition).
 
+use anyhow::{ensure, Result};
+
 use super::projection::Projection;
 
 /// Worker decision for one round's uplink.
@@ -22,8 +24,13 @@ pub enum Decision {
 /// * `Fixed` — the paper's experimental setting: send scalar iff
 ///   `sin^2(alpha) <= delta`.
 /// * `AdaptiveDelta2` — the Theorem-1 condition `sin^2 <= Delta^2/||d||^2`,
-///   exposed for the theory-validation harness (`figures/theory`).
-#[derive(Clone, Copy, Debug)]
+///   exposed for the theory-validation harness (`figures/theory`) and —
+///   since the decision runs client-side — servable over the wire via the
+///   [`wire_delta`]/[`from_wire_delta`] encoding.
+///
+/// [`wire_delta`]: ThresholdPolicy::wire_delta
+/// [`from_wire_delta`]: ThresholdPolicy::from_wire_delta
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ThresholdPolicy {
     /// Fixed LBP-error threshold: scalar iff `sin^2(alpha) <= delta`.
     Fixed {
@@ -65,6 +72,63 @@ impl ThresholdPolicy {
             Decision::Full
         }
     }
+
+    /// Encode this policy into the single `delta: f64` slot of the
+    /// `Welcome`/`Welcome3` frame, exploiting that the decision itself
+    /// ([`decide`]) runs client-side so only the *parameters* must cross
+    /// the wire:
+    ///
+    /// * `Fixed { delta >= 0 }` → `delta` verbatim (the v1 surface).
+    /// * `Fixed { delta < 0 }` (vanilla FL) → [`f64::NEG_INFINITY`] — the
+    ///   canonical vanilla sentinel. Every negative (or NaN) fixed delta
+    ///   behaves identically (`sin^2 <= delta` never holds), so the
+    ///   canonicalization is behavior-preserving and keeps finite
+    ///   negatives free for the adaptive encoding.
+    /// * `AdaptiveDelta2 { delta2 }` → `-delta2`, a finite negative. The
+    ///   negation is an exact sign-bit flip, so the client recovers
+    ///   `delta2` bit-for-bit — what keeps an adaptive TCP run
+    ///   bit-identical to the in-memory engines. The policy's `tau` rides
+    ///   in the Welcome frame's own `tau` field.
+    ///
+    /// Errors on a non-finite or non-positive `delta2` (those configs are
+    /// already rejected by `config::validate`; the check here keeps the
+    /// encoding injective for hand-built configs).
+    ///
+    /// [`decide`]: ThresholdPolicy::decide
+    pub fn wire_delta(&self) -> Result<f64> {
+        match *self {
+            ThresholdPolicy::Fixed { delta } if delta >= 0.0 => Ok(delta),
+            ThresholdPolicy::Fixed { .. } => Ok(f64::NEG_INFINITY),
+            ThresholdPolicy::AdaptiveDelta2 { delta2, .. } => {
+                ensure!(
+                    delta2.is_finite() && delta2 > 0.0,
+                    "adaptive policy Delta^2 must be finite and positive to \
+                     cross the wire, got {delta2}"
+                );
+                Ok(-delta2)
+            }
+        }
+    }
+
+    /// Decode a `Welcome` frame's `delta` slot back into a policy — the
+    /// inverse of [`wire_delta`], with the frame's `tau` supplying the
+    /// adaptive policy's local-step count:
+    ///
+    /// * `delta >= 0` → `Fixed { delta }`.
+    /// * `-inf` (or NaN, from a pre-encoding peer) → vanilla
+    ///   `Fixed { delta: -inf }`.
+    /// * finite `delta < 0` → `AdaptiveDelta2 { delta2: -delta, tau }`.
+    ///
+    /// [`wire_delta`]: ThresholdPolicy::wire_delta
+    pub fn from_wire_delta(delta: f64, tau: usize) -> Self {
+        if delta >= 0.0 {
+            ThresholdPolicy::Fixed { delta }
+        } else if delta.is_finite() {
+            ThresholdPolicy::AdaptiveDelta2 { delta2: -delta, tau }
+        } else {
+            ThresholdPolicy::Fixed { delta: f64::NEG_INFINITY }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +168,96 @@ mod tests {
         match p.decide(&proj(0.3, 1.0)) {
             Decision::Scalar { rho } => assert_eq!(rho, 0.5),
             _ => panic!(),
+        }
+    }
+
+    /// Table-driven `AdaptiveDelta2` edge cases against `Projection`
+    /// fixtures: zero and near-zero gradient norms take the `d_norm2 <= 0`
+    /// escape hatch (threshold 1.0 — every geometrically possible sin^2
+    /// goes scalar), tau scales the threshold quadratically, and the
+    /// boundary `sin^2 == Delta^2/||d||^2` itself is scalar (<=, not <).
+    #[test]
+    fn adaptive_edge_case_table() {
+        let scalar = |p: &ThresholdPolicy, pr: &Projection| {
+            matches!(p.decide(pr), Decision::Scalar { .. })
+        };
+        let cases: &[(f64, usize, f64, f64, bool, &str)] = &[
+            // (delta2, tau, sin2, grad_norm2, expect_scalar, why)
+            (0.01, 1, 1.0, 0.0, true, "zero grad norm: threshold caps at 1.0"),
+            (0.01, 1, 1.0, -0.0, true, "negative zero is still the escape hatch"),
+            (1e-300, 4, 1.0, 1e-308, true, "near-zero norm: tau^2 lifts d_norm2 denorm-small"),
+            (0.04, 1, 0.04, 1.0, true, "boundary sin2 == delta2/d_norm2 is scalar"),
+            (0.04, 1, 0.0400001, 1.0, false, "just past the boundary is full"),
+            (0.04, 2, 0.16, 1.0, true, "tau=2 widens the boundary 4x"),
+            (0.04, 2, 0.1600001, 1.0, false, "tau=2 boundary is exact too"),
+            (0.01, 8, 0.5, 0.64, true, "large tau: small effective step, loose threshold"),
+            (0.01, 1, 0.5, 0.64, false, "same projection at tau=1 is full"),
+            (0.01, 1, 0.0, 1e9, true, "sin2 = 0 is scalar under any positive threshold"),
+        ];
+        for &(delta2, tau, sin2, norm2, expect, why) in cases {
+            let p = ThresholdPolicy::AdaptiveDelta2 { delta2, tau };
+            assert_eq!(scalar(&p, &proj(sin2, norm2)), expect, "{why}");
+        }
+    }
+
+    /// `delta < 0` degenerates to vanilla FL exactly: full on every
+    /// projection, including the degenerate zero-gradient one — unlike the
+    /// adaptive policy, whose zero-norm escape hatch goes scalar.
+    #[test]
+    fn vanilla_degeneration_vs_adaptive_escape_hatch() {
+        let vanilla = ThresholdPolicy::fixed(-1.0);
+        let adaptive = ThresholdPolicy::AdaptiveDelta2 { delta2: 0.01, tau: 2 };
+        for pr in [proj(0.0, 0.0), proj(0.0, 1.0), proj(1.0, 0.0), proj(1e-12, 1e-12)] {
+            assert_eq!(vanilla.decide(&pr), Decision::Full);
+        }
+        assert!(matches!(adaptive.decide(&proj(1.0, 0.0)), Decision::Scalar { .. }));
+    }
+
+    /// The Welcome-frame encoding is injective and exact: fixed >= 0 is
+    /// verbatim, vanilla canonicalizes to -inf, adaptive is a sign-bit
+    /// flip (so delta2 survives bit-for-bit), and decode inverts each.
+    #[test]
+    fn wire_delta_round_trips() {
+        // Fixed, servable thresholds: verbatim both ways.
+        for d in [0.0, 0.2, 1.0] {
+            let p = ThresholdPolicy::fixed(d);
+            let w = p.wire_delta().unwrap();
+            assert_eq!(w, d);
+            assert_eq!(ThresholdPolicy::from_wire_delta(w, 3), p);
+        }
+        // Vanilla: every negative fixed delta canonicalizes to -inf, and
+        // -inf decodes to a policy that is still vanilla (always Full).
+        for d in [-1.0, -0.5, f64::NEG_INFINITY] {
+            let w = ThresholdPolicy::fixed(d).wire_delta().unwrap();
+            assert_eq!(w, f64::NEG_INFINITY);
+            let back = ThresholdPolicy::from_wire_delta(w, 3);
+            assert_eq!(back, ThresholdPolicy::fixed(f64::NEG_INFINITY));
+            assert_eq!(back.decide(&proj(0.0, 1.0)), Decision::Full);
+            // Idempotent: re-encoding the decoded policy is stable.
+            assert_eq!(back.wire_delta().unwrap(), f64::NEG_INFINITY);
+        }
+        // Adaptive: finite negatives, exact inverse, tau from the frame.
+        for delta2 in [0.01, 0.1, 1.5, 1e-9] {
+            let p = ThresholdPolicy::AdaptiveDelta2 { delta2, tau: 7 };
+            let w = p.wire_delta().unwrap();
+            assert!(w < 0.0 && w.is_finite());
+            assert_eq!(
+                ThresholdPolicy::from_wire_delta(w, 7),
+                ThresholdPolicy::AdaptiveDelta2 { delta2, tau: 7 }
+            );
+        }
+        // A different frame tau rebinds the decoded policy's tau.
+        let w = ThresholdPolicy::AdaptiveDelta2 { delta2: 0.25, tau: 1 }
+            .wire_delta()
+            .unwrap();
+        assert_eq!(
+            ThresholdPolicy::from_wire_delta(w, 4),
+            ThresholdPolicy::AdaptiveDelta2 { delta2: 0.25, tau: 4 }
+        );
+        // Unencodable adaptive parameters are loud, not silent.
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -0.1] {
+            let p = ThresholdPolicy::AdaptiveDelta2 { delta2: bad, tau: 1 };
+            assert!(p.wire_delta().is_err(), "encoded delta2 {bad}");
         }
     }
 }

@@ -1,5 +1,7 @@
 //! Per-round metric series for a single training run.
 
+use crate::coordinator::accounting::TierTotals;
+
 /// One global aggregation round's metrics.
 #[derive(Clone, Debug, Default)]
 pub struct RoundRecord {
@@ -51,6 +53,11 @@ pub struct RoundRecord {
     pub t_comm: f64,
     /// Seconds spent applying the aggregate this round.
     pub t_aggregate: f64,
+    /// Cumulative per-device-tier communication roll-up, one row per tier
+    /// in the run's [`TierMap`](crate::coordinator::accounting::TierMap)
+    /// order. Empty for untiered runs. JSON-only: the frozen CSV header
+    /// never carries these columns.
+    pub tiers: Vec<TierTotals>,
 }
 
 /// A named training run's full history.
@@ -106,6 +113,13 @@ impl RunSeries {
         self.last()
             .map(|r| (r.wire_up_raw_bytes, r.wire_down_raw_bytes))
             .unwrap_or((0, 0))
+    }
+
+    /// Final per-tier communication roll-up. The ledger counters are
+    /// cumulative, so the last round's snapshot is the run total. Empty
+    /// for untiered runs.
+    pub fn tier_summary(&self) -> &[TierTotals] {
+        self.last().map(|r| r.tiers.as_slice()).unwrap_or(&[])
     }
 
     /// Total fault events over the run (absent planned participants).

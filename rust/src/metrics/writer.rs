@@ -54,7 +54,7 @@ pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
     }
     let items = runs.iter().map(|r| {
         let (t_train, t_compress, t_comm, t_aggregate) = r.total_phase_secs();
-        obj(vec![
+        let mut fields = vec![
             ("name", s(&r.name)),
             ("rounds", num(r.rounds.len() as f64)),
             ("final_metric", num(r.final_metric())),
@@ -73,7 +73,34 @@ pub fn write_json(path: &Path, runs: &[RunSeries]) -> anyhow::Result<()> {
             ("t_compress", num(t_compress)),
             ("t_comm", num(t_comm)),
             ("t_aggregate", num(t_aggregate)),
-        ])
+        ];
+        // Per-device-tier roll-up (heterogeneous fleets). JSON-only: the
+        // frozen CSV header never grows these columns.
+        let tiers = r.tier_summary();
+        if !tiers.is_empty() {
+            fields.push((
+                "tiers",
+                arr(tiers.iter().map(|t| {
+                    obj(vec![
+                        ("name", s(&t.name)),
+                        ("workers", num(t.workers as f64)),
+                        ("floats_up", num(t.floats_up as f64)),
+                        ("bits_up", num(t.bits_up as f64)),
+                        ("floats_down", num(t.floats_down as f64)),
+                        ("bits_down", num(t.bits_down as f64)),
+                        ("wire_up_bytes", num(t.wire_up_bytes as f64)),
+                        ("wire_down_bytes", num(t.wire_down_bytes as f64)),
+                        ("wire_up_raw_bytes", num(t.wire_up_raw_bytes as f64)),
+                        ("wire_down_raw_bytes", num(t.wire_down_raw_bytes as f64)),
+                        ("savings_up_bytes", num(t.savings_up_bytes as f64)),
+                        ("savings_down_bytes", num(t.savings_down_bytes as f64)),
+                        ("faults", num(t.faults as f64)),
+                        ("rejoins", num(t.rejoins as f64)),
+                    ])
+                })),
+            ));
+        }
+        obj(fields)
     });
     fs::write(path, Json::to_string(&arr(items)))?;
     Ok(())
@@ -104,5 +131,45 @@ mod tests {
         assert_eq!(j.as_arr().unwrap()[0].req_str("name").unwrap(), "demo");
         assert_eq!(j.as_arr().unwrap()[0].req_f64("total_faults").unwrap(), 0.0);
         assert_eq!(j.as_arr().unwrap()[0].req_f64("t_aggregate").unwrap(), 0.0);
+        // Untiered runs carry no "tiers" key at all.
+        assert!(j.as_arr().unwrap()[0].get("tiers").is_none());
+    }
+
+    #[test]
+    fn json_carries_tier_rollups_when_present() {
+        use crate::coordinator::accounting::TierTotals;
+        let dir = std::env::temp_dir().join("fedrecycle_metrics_tier_test");
+        let mut run = RunSeries::new("tiered");
+        run.push(RoundRecord {
+            round: 0,
+            tiers: vec![
+                TierTotals {
+                    name: "fiber".into(),
+                    workers: 2,
+                    wire_up_bytes: 10,
+                    wire_up_raw_bytes: 14,
+                    savings_up_bytes: 4,
+                    ..Default::default()
+                },
+                TierTotals { name: "cellular".into(), workers: 3, ..Default::default() },
+            ],
+            ..Default::default()
+        });
+        write_json(&dir.join("t.json"), &[run.clone()]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(dir.join("t.json")).unwrap()).unwrap();
+        let tiers = j.as_arr().unwrap()[0].get("tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].req_str("name").unwrap(), "fiber");
+        assert_eq!(tiers[0].req_f64("workers").unwrap(), 2.0);
+        assert_eq!(tiers[0].req_f64("savings_up_bytes").unwrap(), 4.0);
+        assert_eq!(tiers[1].req_str("name").unwrap(), "cellular");
+        // The CSV header is frozen: tier rows never grow CSV columns.
+        write_csv(&dir.join("t.csv"), &[run]).unwrap();
+        let csv = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("participants,faults,t_train,t_compress,t_comm,t_aggregate"));
     }
 }

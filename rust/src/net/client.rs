@@ -3,7 +3,8 @@
 //! A worker process owns one [`Link`] to the server, its local trainer
 //! (any [`LocalTrainer`] — PJRT works here because the client runs on its
 //! own process/thread), and its LBGM uplink state machine ([`Worker`]).
-//! The session hyperparameters (tau, eta, delta) arrive in the `Welcome`
+//! The session hyperparameters (tau, eta, and the policy's wire delta,
+//! see [`ThresholdPolicy::from_wire_delta`]) arrive in the `Welcome`
 //! frame, so worker processes need no config file beyond the federation
 //! shape used to build their trainer.
 //!
@@ -232,7 +233,11 @@ impl WorkerSession {
             self.residual.clear();
         }
         self.connections += 1;
-        Ok(SessionParams { tau: tau as usize, eta, policy: ThresholdPolicy::fixed(delta) })
+        // The delta slot is the full policy wire encoding: >= 0 fixed, -inf
+        // vanilla, other negatives the adaptive Delta^2 with this session's
+        // tau rebound into the Theorem-1 scaling.
+        let policy = ThresholdPolicy::from_wire_delta(delta, tau as usize);
+        Ok(SessionParams { tau: tau as usize, eta, policy })
     }
 
     /// Round monotonicity: a duplicate or replayed broadcast would advance

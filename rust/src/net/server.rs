@@ -112,15 +112,15 @@ const SHUTDOWN_GRACE: Duration = Duration::from_millis(200);
 /// fault-plan-scheduled rejoin before proceeding without the worker.
 pub const DEFAULT_REJOIN_WAIT: Duration = Duration::from_secs(10);
 
-/// The fixed LBP threshold shipped to workers in the `Welcome` frame.
-/// The adaptive Theorem-1 policy needs server-side state the wire protocol
-/// does not carry yet, so the net transport supports fixed thresholds only
-/// (also rejected earlier, at config load, by `config::validate`).
+/// The policy parameter shipped to workers in the `Welcome` frame's delta
+/// slot. The threshold decision itself runs client-side (the worker holds
+/// the projection), so *every* policy is servable: fixed thresholds ride
+/// verbatim, vanilla FL as the `-inf` sentinel, and the adaptive
+/// Theorem-1 policy as a sign-flipped `Delta^2` with its `tau` in the
+/// frame's own tau field (see [`ThresholdPolicy::wire_delta`]). Errors
+/// only on adaptive parameters that `config::validate` already rejects.
 pub fn policy_delta(policy: ThresholdPolicy) -> Result<f64> {
-    match policy {
-        ThresholdPolicy::Fixed { delta } => Ok(delta),
-        other => bail!("net transport supports only the fixed threshold policy, got {other:?}"),
-    }
+    policy.wire_delta()
 }
 
 /// Domain-separation constant folded into the run seed before deriving
@@ -271,26 +271,26 @@ pub fn handshake_accept(
         }
         _ => bail!("expected Hello or Rejoin, got tag {tag}"),
     };
+    let (worker, codec) = match &outcome {
+        HandshakeOutcome::Fresh { worker, codec }
+        | HandshakeOutcome::Rejoin { worker, codec, .. } => (*worker, *codec),
+    };
+    // Per-session tau: the worker's resolved local-step count (device
+    // compute tiers give heterogeneous fleets per-worker overrides). The
+    // client also rebinds an adaptive policy's tau to this value, so the
+    // Theorem-1 scaling matches the in-memory engines per worker.
+    let tau = cfg.tau_for(worker) as u32;
     if v3 {
-        let (worker, codec) = match &outcome {
-            HandshakeOutcome::Fresh { worker, codec }
-            | HandshakeOutcome::Rejoin { worker, codec, .. } => (*worker, *codec),
-        };
         link.send(&Frame::Welcome3 {
             dim: dim as u64,
-            tau: cfg.tau as u32,
+            tau,
             eta: cfg.eta,
             delta,
             token: session_token(cfg.seed, worker as u32),
             codec: codec.to_wire(),
         })?;
     } else {
-        link.send(&Frame::Welcome {
-            dim: dim as u64,
-            tau: cfg.tau as u32,
-            eta: cfg.eta,
-            delta,
-        })?;
+        link.send(&Frame::Welcome { dim: dim as u64, tau, eta: cfg.eta, delta })?;
     }
     Ok(outcome)
 }
@@ -437,7 +437,7 @@ impl Acceptor {
         handshake_timeout: Duration,
     ) -> Result<Acceptor> {
         ensure!(k > 0, "need at least one worker");
-        // An unservable policy would otherwise reject every connection
+        // An unencodable policy would otherwise reject every connection
         // forever.
         policy_delta(cfg.policy)?;
         listener
@@ -863,6 +863,9 @@ pub fn run_server_rounds_elastic(
     let dim = server.theta.len();
     let mut series = RunSeries::new(name);
     let mut ledger = CommLedger::new(k);
+    if let Some(tiers) = &cfg.tiers {
+        ledger.set_tiers(tiers.clone());
+    }
     let mut rejoins_seen = vec![0usize; k];
     let mut downlink: Vec<DownlinkState> = Vec::with_capacity(k);
     downlink.resize_with(k, DownlinkState::default);
@@ -989,8 +992,8 @@ pub fn run_server_rounds_elastic(
                 match sent {
                     Ok(sent) => {
                         ledger.record_down(w, down);
-                        ledger.record_wire_down(sent as u64);
-                        ledger.record_wire_down_raw(raw_len);
+                        ledger.record_wire_down(w, sent as u64);
+                        ledger.record_wire_down_raw(w, raw_len);
                         record_to(
                             &cfg.trace,
                             Event::BroadcastSent {
@@ -1066,13 +1069,13 @@ pub fn run_server_rounds_elastic(
             if out.stale_bytes > 0 {
                 // Stale frames are ledgered at their measured size on both
                 // counters — they carry no useful raw equivalent.
-                ledger.record_wire_up(out.stale_bytes);
-                ledger.record_wire_up_raw(out.stale_bytes);
+                ledger.record_wire_up(w, out.stale_bytes);
+                ledger.record_wire_up_raw(w, out.stale_bytes);
             }
             match out.result {
                 Ok((msg, bytes, raw_bytes, quantized)) => {
-                    ledger.record_wire_up(bytes);
-                    ledger.record_wire_up_raw(raw_bytes);
+                    ledger.record_wire_up(w, bytes);
+                    ledger.record_wire_up_raw(w, raw_bytes);
                     ledger.record(w, msg.cost, msg.is_scalar());
                     record_to(
                         &cfg.trace,
@@ -1154,6 +1157,7 @@ pub fn run_server_rounds_elastic(
             faults: planned.len() - msgs.len(),
             t_comm: timers.get("comm") - t_comm0,
             t_aggregate: timers.get("aggregate") - t_aggregate0,
+            tiers: ledger.tier_totals(),
             ..Default::default()
         };
         eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
@@ -1749,15 +1753,29 @@ mod tests {
         );
     }
 
+    /// The adaptive policy crosses the wire: the Welcome's delta slot
+    /// carries the sign-flipped Delta^2 and the tau field the per-session
+    /// local-step count, from which the client reconstructs the exact
+    /// policy (`ThresholdPolicy::from_wire_delta`).
     #[test]
-    fn adaptive_policy_rejected_on_the_wire() {
+    fn adaptive_policy_accepted_on_the_wire() {
         let cfg = FlConfig {
             policy: ThresholdPolicy::AdaptiveDelta2 { delta2: 0.1, tau: 2 },
             ..Default::default()
         };
         let (mut srv, mut wrk) = MemLink::pair();
         wrk.send(&Frame::Hello { worker: 0, dim: 4 }).unwrap();
-        assert!(handshake_one(&mut srv, 1, 4, &cfg).is_err());
+        handshake_one(&mut srv, 1, 4, &cfg).unwrap();
+        match wrk.recv().unwrap() {
+            Frame::Welcome { tau, delta, .. } => {
+                assert_eq!(delta, -0.1);
+                assert_eq!(
+                    ThresholdPolicy::from_wire_delta(delta, tau as usize),
+                    ThresholdPolicy::AdaptiveDelta2 { delta2: 0.1, tau: cfg.tau },
+                );
+            }
+            other => panic!("expected Welcome, got {other:?}"),
+        }
     }
 
     /// The tentpole accept-loop property: a connection that handshakes

@@ -2,7 +2,9 @@
 //! property-testing driver with shrinking, plus reusable chaos scenario
 //! builders for the fault-injection harness.
 
+pub mod profiles;
 pub mod prop;
 pub mod scenarios;
 
+pub use profiles::{DeviceTier, FleetSpec, ParticipationWindow, Scenario};
 pub use prop::{forall, Gen};

@@ -1,0 +1,470 @@
+//! `testkit::profiles` — planet-scale heterogeneous-fleet scenario layer.
+//!
+//! A [`FleetSpec`] describes a federation the way a deployment survey
+//! would: named device tiers (bandwidth/latency/loss plus per-device
+//! local-step budgets), a power-law client-availability distribution, and
+//! time-varying participation windows. [`FleetSpec::compile`] lowers the
+//! description onto the primitives the engines already understand — a
+//! [`FaultPlan`] (round absences as [`FaultKind::Disconnect`] spans, link
+//! shaping as [`WorkerProfile`]s) plus a [`TierMap`] and a per-worker tau
+//! vector — so the *same seeded scenario runs bit-identically on every
+//! engine* (fl-seq, threads, mem, tcp), and the round ledgers report
+//! per-tier communication savings.
+//!
+//! Everything here is pure data + a seeded [`Rng`]: the same
+//! `(spec, seed, workers, rounds)` always compiles to the same
+//! [`Scenario`], which is what `tests/hetero_fleet.rs` pins.
+//!
+//! # Availability model
+//!
+//! Worker availability is drawn once per worker from a bounded Pareto
+//! (power-law) tail: `a_w = min(1, floor * u^(-1/alpha))` for uniform
+//! `u ∈ (0, 1)`, so the support is exactly `[floor, 1]` and smaller
+//! `alpha` means a heavier head of always-on clients. Per round, worker
+//! `w` participates with probability `a_w * level(t)` where `level(t)` is
+//! the participation window covering round `t` (default 1.0). Consecutive
+//! misses coalesce into one `Disconnect` span, mirroring a device that
+//! drops off the network for a stretch rather than flapping per round.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::accounting::TierMap;
+use crate::coordinator::round::FlConfig;
+use crate::sim::{ChaosSpec, FaultEvent, FaultKind, FaultPlan, WorkerProfile};
+use crate::util::rng::Rng;
+
+/// One named device class: link shaping plus the per-round local-step
+/// budget its compute affords, and its share of the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceTier {
+    /// Display name ("fiber", "cellular", ...); becomes the ledger's
+    /// per-tier row label.
+    pub name: String,
+    /// One-way link latency attached to the worker's uplink (wall-clock
+    /// only; results are unaffected).
+    pub latency_us: u64,
+    /// Uplink bandwidth for the same shaping.
+    pub bytes_per_sec: u64,
+    /// Frame-loss probability for the shaped link.
+    pub loss: f64,
+    /// Local SGD steps per round this device class can afford (lowered
+    /// into `FlConfig::tau_overrides`).
+    pub local_steps: usize,
+    /// Relative share of the fleet in this tier (any positive scale).
+    pub weight: f64,
+}
+
+/// Participation level `level` for the half-open round span
+/// `[from, until)` — time-varying fleet-wide participation (diurnal dips,
+/// scheduled maintenance). Rounds outside every window run at level 1.0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParticipationWindow {
+    pub from: usize,
+    /// Exclusive span end.
+    pub until: usize,
+    /// Multiplier in `[0, 1]` on every worker's availability.
+    pub level: f64,
+}
+
+/// A declarative heterogeneous-fleet description; [`compile`] it into a
+/// runnable [`Scenario`].
+///
+/// [`compile`]: FleetSpec::compile
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    /// Device tiers; workers are assigned by cumulative weight,
+    /// deterministically (no seed involved).
+    pub tiers: Vec<DeviceTier>,
+    /// Power-law tail exponent of the availability distribution (> 0;
+    /// larger = availabilities concentrate near `floor`).
+    pub alpha: f64,
+    /// Availability floor in `(0, 1]`: no worker participates less often
+    /// than this fraction of rounds (before participation windows).
+    pub floor: f64,
+    /// Time-varying participation; first window covering a round wins.
+    pub windows: Vec<ParticipationWindow>,
+    /// Extra seeded chaos (drops, delays, corruption) layered on top of
+    /// the availability absences.
+    pub chaos: Option<ChaosSpec>,
+}
+
+/// A compiled, engine-ready scenario: the fault plan (absences + link
+/// profiles), the worker→tier map for ledger roll-ups, the per-worker
+/// local-step vector, and the drawn availabilities (diagnostics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub plan: FaultPlan,
+    pub tiers: TierMap,
+    /// `tau[w]` = worker w's local steps (its tier's `local_steps`).
+    pub tau: Vec<usize>,
+    /// `availability[w]` = the worker's drawn per-round presence
+    /// probability, in `[floor, 1]`.
+    pub availability: Vec<f64>,
+}
+
+impl FleetSpec {
+    /// A three-tier "planet-scale" reference fleet: a fiber-connected
+    /// minority doing deep local work, a wifi majority, and a
+    /// cellular tail on slow lossy links with a single local step —
+    /// heavy-tailed availability and a mid-run participation dip.
+    pub fn planet_scale(rounds: usize) -> Self {
+        Self {
+            tiers: vec![
+                DeviceTier {
+                    name: "fiber".into(),
+                    latency_us: 200,
+                    bytes_per_sec: 12_500_000,
+                    loss: 0.0,
+                    local_steps: 4,
+                    weight: 0.2,
+                },
+                DeviceTier {
+                    name: "wifi".into(),
+                    latency_us: 2_000,
+                    bytes_per_sec: 2_500_000,
+                    loss: 0.01,
+                    local_steps: 2,
+                    weight: 0.5,
+                },
+                DeviceTier {
+                    name: "cellular".into(),
+                    latency_us: 20_000,
+                    bytes_per_sec: 500_000,
+                    loss: 0.05,
+                    local_steps: 1,
+                    weight: 0.3,
+                },
+            ],
+            alpha: 2.5,
+            floor: 0.6,
+            // A diurnal-style dip across the middle third of the run
+            // (omitted when the run is too short for the span to be
+            // non-empty — `[rounds/3, rounds/2)` collapses below 4 rounds).
+            windows: if rounds / 3 < rounds / 2 {
+                vec![ParticipationWindow { from: rounds / 3, until: rounds / 2, level: 0.7 }]
+            } else {
+                Vec::new()
+            },
+            chaos: None,
+        }
+    }
+
+    /// The participation level covering round `t` (first matching window
+    /// wins; 1.0 outside every window).
+    pub fn level(&self, t: usize) -> f64 {
+        self.windows
+            .iter()
+            .find(|w| (w.from..w.until).contains(&t))
+            .map(|w| w.level)
+            .unwrap_or(1.0)
+    }
+
+    /// Deterministic stratified tier assignment: worker `w` lands in the
+    /// tier whose cumulative weight band contains `(w + 0.5) / workers`.
+    /// Seed-independent, so tier membership is stable across scenario
+    /// seeds (only availability and chaos re-roll).
+    pub fn tier_of(&self, worker: usize, workers: usize) -> usize {
+        let total: f64 = self.tiers.iter().map(|t| t.weight).sum();
+        let x = (worker as f64 + 0.5) / workers as f64 * total;
+        let mut acc = 0.0;
+        for (i, tier) in self.tiers.iter().enumerate() {
+            acc += tier.weight;
+            if x < acc {
+                return i;
+            }
+        }
+        self.tiers.len() - 1
+    }
+
+    /// Compile the spec for a concrete federation shape. Deterministic:
+    /// the same `(spec, seed, workers, rounds)` yields the same
+    /// [`Scenario`], bit for bit.
+    pub fn compile(&self, seed: u64, workers: usize, rounds: usize) -> Result<Scenario> {
+        ensure!(!self.tiers.is_empty(), "fleet spec needs at least one tier");
+        ensure!(workers >= 1, "workers must be >= 1");
+        ensure!(rounds >= 1, "rounds must be >= 1");
+        ensure!(
+            self.alpha.is_finite() && self.alpha > 0.0,
+            "power-law alpha must be finite and positive, got {}",
+            self.alpha
+        );
+        ensure!(
+            self.floor > 0.0 && self.floor <= 1.0,
+            "availability floor must be in (0, 1], got {}",
+            self.floor
+        );
+        for t in &self.tiers {
+            ensure!(
+                t.weight.is_finite() && t.weight >= 0.0,
+                "tier `{}` has weight {}",
+                t.name,
+                t.weight
+            );
+            ensure!(t.local_steps >= 1, "tier `{}` needs local_steps >= 1", t.name);
+            ensure!(
+                (0.0..1.0).contains(&t.loss),
+                "tier `{}` loss must be in [0, 1), got {}",
+                t.name,
+                t.loss
+            );
+        }
+        let total: f64 = self.tiers.iter().map(|t| t.weight).sum();
+        ensure!(total > 0.0, "tier weights sum to {total}; need a positive total");
+        for w in &self.windows {
+            ensure!(w.from < w.until, "window [{}, {}) is empty", w.from, w.until);
+            ensure!(
+                (0.0..=1.0).contains(&w.level),
+                "window level must be in [0, 1], got {}",
+                w.level
+            );
+        }
+
+        // Tier membership and the derived per-worker knobs.
+        let of: Vec<usize> = (0..workers).map(|w| self.tier_of(w, workers)).collect();
+        let tau: Vec<usize> = of.iter().map(|&i| self.tiers[i].local_steps).collect();
+        let profiles: Vec<WorkerProfile> = (0..workers)
+            .map(|w| {
+                let t = &self.tiers[of[w]];
+                WorkerProfile {
+                    worker: w,
+                    latency_us: t.latency_us,
+                    bytes_per_sec: t.bytes_per_sec,
+                    loss: t.loss,
+                }
+            })
+            .collect();
+
+        // Power-law availability draws: one stream for the draws, then one
+        // forked stream per worker for its round walk, so adding workers
+        // never perturbs earlier workers' schedules.
+        let mut root = Rng::new(seed);
+        let mut availability = Vec::with_capacity(workers);
+        {
+            let mut draws = root.fork(0xA11);
+            for _ in 0..workers {
+                let u = draws.next_f64().max(1e-12);
+                availability.push((self.floor * u.powf(-1.0 / self.alpha)).min(1.0));
+            }
+        }
+        let mut events = Vec::new();
+        for w in 0..workers {
+            let mut walk = root.fork(0x1000 + w as u64);
+            // Exactly one uniform draw per (worker, round): present with
+            // probability `a_w * level(t)`; consecutive misses close into
+            // one Disconnect span.
+            let mut open: Option<usize> = None;
+            for t in 0..rounds {
+                let present = walk.next_f64() < availability[w] * self.level(t);
+                if present {
+                    if let Some(from) = open.take() {
+                        events.push(FaultEvent {
+                            worker: w,
+                            from,
+                            until: t,
+                            kind: FaultKind::Disconnect,
+                        });
+                    }
+                } else if open.is_none() {
+                    open = Some(t);
+                }
+            }
+            if let Some(from) = open {
+                events.push(FaultEvent {
+                    worker: w,
+                    from,
+                    until: rounds,
+                    kind: FaultKind::Disconnect,
+                });
+            }
+        }
+        if let Some(spec) = &self.chaos {
+            // Chaos rides a decorrelated seed so toggling it never changes
+            // the availability schedule above.
+            events.extend(FaultPlan::random(seed ^ 0xC4A0_5EED, workers, rounds, spec).events);
+        }
+
+        Ok(Scenario {
+            plan: FaultPlan { seed, events, profiles },
+            tiers: TierMap {
+                names: self.tiers.iter().map(|t| t.name.clone()).collect(),
+                of,
+            },
+            tau,
+            availability,
+        })
+    }
+}
+
+impl Scenario {
+    /// Number of workers this scenario was compiled for.
+    pub fn workers(&self) -> usize {
+        self.tau.len()
+    }
+
+    /// Install the scenario into an [`FlConfig`]: the fault plan (round
+    /// absences + link profiles), the tier map for per-tier ledger
+    /// roll-ups, and the per-worker local-step overrides. Checks the
+    /// Theorem-1 stability scaling against the *largest* per-tier tau,
+    /// the same guard `config::validate` applies to the uniform knob.
+    pub fn apply(&self, cfg: &mut FlConfig) -> Result<()> {
+        ensure!(
+            self.tiers.well_formed() && self.tiers.of.len() == self.workers(),
+            "scenario tier map is malformed"
+        );
+        let max_tau = self.tau.iter().copied().max().unwrap_or(cfg.tau);
+        ensure!(
+            f64::from(cfg.eta) * max_tau as f64 <= 2.0,
+            "eta*max_tau = {} violates the Theorem-1 stability scaling",
+            f64::from(cfg.eta) * max_tau as f64
+        );
+        cfg.faults = Some(self.plan.clone());
+        cfg.tau_overrides = Some(Arc::new(self.tau.clone()));
+        cfg.tiers = Some(Arc::new(self.tiers.clone()));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planet_scale_compiles_deterministically() {
+        let spec = FleetSpec::planet_scale(24);
+        let a = spec.compile(7, 12, 24).unwrap();
+        let b = spec.compile(7, 12, 24).unwrap();
+        assert_eq!(a, b);
+        let c = spec.compile(8, 12, 24).unwrap();
+        assert_ne!(a.plan, c.plan, "different seeds produced identical plans");
+        // Tier membership is seed-independent.
+        assert_eq!(a.tiers, c.tiers);
+        assert_eq!(a.tau, c.tau);
+    }
+
+    #[test]
+    fn tier_assignment_tracks_cumulative_weights() {
+        let spec = FleetSpec::planet_scale(10);
+        let s = spec.compile(1, 10, 10).unwrap();
+        // Weights 0.2/0.5/0.3 over 10 workers => 2 fiber, 5 wifi, 3 cellular.
+        let count = |tier: usize| s.tiers.of.iter().filter(|&&t| t == tier).count();
+        assert_eq!((count(0), count(1), count(2)), (2, 5, 3));
+        assert!(s.tiers.well_formed());
+        assert_eq!(s.tiers.names, vec!["fiber", "wifi", "cellular"]);
+        // Per-worker tau follows the tier.
+        assert_eq!(s.tau[0], 4);
+        assert_eq!(s.tau[5], 2);
+        assert_eq!(s.tau[9], 1);
+        // Every worker carries its tier's link profile.
+        assert_eq!(s.plan.profiles.len(), 10);
+        assert_eq!(s.plan.profiles[9].bytes_per_sec, 500_000);
+    }
+
+    #[test]
+    fn availability_draws_respect_the_power_law_support() {
+        let spec = FleetSpec::planet_scale(30);
+        let s = spec.compile(3, 40, 30).unwrap();
+        for (w, &a) in s.availability.iter().enumerate() {
+            assert!(
+                (spec.floor..=1.0).contains(&a),
+                "worker {w} availability {a} outside [{}, 1]",
+                spec.floor
+            );
+        }
+        // The tail is non-degenerate: not everyone sits at the floor or
+        // the cap.
+        assert!(s.availability.iter().any(|&a| a < 1.0));
+        assert!(s.availability.iter().any(|&a| a > spec.floor));
+    }
+
+    #[test]
+    fn absence_events_are_coalesced_disconnect_spans_in_range() {
+        let rounds = 40;
+        let spec = FleetSpec::planet_scale(rounds);
+        let s = spec.compile(11, 8, rounds).unwrap();
+        assert!(!s.plan.events.is_empty(), "floor 0.6 over 320 slots drew no absences");
+        for e in &s.plan.events {
+            assert!(e.kind == FaultKind::Disconnect, "unexpected kind {:?}", e.kind);
+            assert!(e.worker < 8);
+            assert!(e.from < e.until && e.until <= rounds, "span [{}, {})", e.from, e.until);
+        }
+        // Coalesced: no two spans of one worker touch or overlap.
+        for w in 0..8 {
+            let mut spans: Vec<_> =
+                s.plan.events.iter().filter(|e| e.worker == w).collect();
+            spans.sort_by_key(|e| e.from);
+            for pair in spans.windows(2) {
+                assert!(pair[0].until < pair[1].from, "uncoalesced spans for worker {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn participation_windows_scale_availability() {
+        let mut spec = FleetSpec::planet_scale(100);
+        spec.windows = vec![ParticipationWindow { from: 50, until: 100, level: 0.0 }];
+        let s = spec.compile(5, 6, 100).unwrap();
+        // Level 0 => every worker absent for every round of the window.
+        for w in 0..6 {
+            for t in 50..100 {
+                assert!(s.plan.absent(w, t), "worker {w} present in a level-0 window, round {t}");
+            }
+        }
+        assert_eq!(spec.level(49), 1.0);
+        assert_eq!(spec.level(50), 0.0);
+    }
+
+    #[test]
+    fn chaos_layer_rides_a_decorrelated_seed() {
+        let rounds = 30;
+        let calm = FleetSpec::planet_scale(rounds);
+        let mut wild = calm.clone();
+        wild.chaos = Some(ChaosSpec::default());
+        let a = calm.compile(9, 6, rounds).unwrap();
+        let b = wild.compile(9, 6, rounds).unwrap();
+        // Toggling chaos never changes the availability schedule: the calm
+        // plan's events are a prefix of the chaotic plan's.
+        assert_eq!(&b.plan.events[..a.plan.events.len()], &a.plan.events[..]);
+        assert!(b.plan.events.len() > a.plan.events.len(), "chaos drew no events");
+    }
+
+    #[test]
+    fn apply_installs_and_guards_the_config() {
+        let spec = FleetSpec::planet_scale(20);
+        let s = spec.compile(2, 10, 20).unwrap();
+        let mut cfg = FlConfig::default();
+        s.apply(&mut cfg).unwrap();
+        assert!(cfg.faults.is_some());
+        assert_eq!(cfg.tau_for(0), 4);
+        assert_eq!(cfg.tau_for(9), 1);
+        assert!(cfg.tiers.is_some());
+        // The stability guard uses the largest per-tier tau.
+        let mut hot = FlConfig { eta: 0.9, ..Default::default() };
+        assert!(s.apply(&mut hot).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        let rounds = 10;
+        let good = FleetSpec::planet_scale(rounds);
+        let mut bad = good.clone();
+        bad.tiers.clear();
+        assert!(bad.compile(1, 4, rounds).is_err());
+        let mut bad = good.clone();
+        bad.alpha = 0.0;
+        assert!(bad.compile(1, 4, rounds).is_err());
+        let mut bad = good.clone();
+        bad.floor = 0.0;
+        assert!(bad.compile(1, 4, rounds).is_err());
+        let mut bad = good.clone();
+        bad.windows = vec![ParticipationWindow { from: 3, until: 3, level: 0.5 }];
+        assert!(bad.compile(1, 4, rounds).is_err());
+        let mut bad = good.clone();
+        bad.tiers[0].weight = f64::NAN;
+        assert!(bad.compile(1, 4, rounds).is_err());
+        let mut bad = good;
+        bad.tiers[1].local_steps = 0;
+        assert!(bad.compile(1, 4, rounds).is_err());
+    }
+}
