@@ -16,8 +16,10 @@
 //! `FEDRECYCLE_BENCH_NO_GATE=1` to report without gating.
 
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use fedrecycle::bench::{check_baseline, load_baseline, CountingAlloc, Regression};
+use fedrecycle::coordinator::messages::{Payload, WorkerMsg, SCALAR_COST};
 use fedrecycle::compress::{reference_topk, Compressor, Identity, TopK, WireCodec};
 use fedrecycle::coordinator::server::Server;
 use fedrecycle::coordinator::worker::Worker;
@@ -25,7 +27,9 @@ use fedrecycle::lbgm::ThresholdPolicy;
 use fedrecycle::linalg::vec_ops::{self, reference};
 use fedrecycle::linalg::{eigh, explained_components, GramPca, Workspace};
 use fedrecycle::net::quant;
+use fedrecycle::net::server::{collect_update, collect_uplinks_ready};
 use fedrecycle::net::wire::{self, Frame};
+use fedrecycle::net::{Link, MemLink};
 use fedrecycle::obs::{self, record_to, Event, UplinkTracker};
 use fedrecycle::util::rng::Rng;
 
@@ -265,6 +269,88 @@ fn main() {
         "round frame sizes at 1M params: raw={}B, q8={}B",
         raw_round.wire_bytes(),
         q8_round.wire_bytes()
+    );
+
+    // --- fleet-scale uplink collection: readiness pool vs threads ----------
+    // 256 in-memory sessions, each with one scalar LBC update queued, then
+    // one whole-fleet collection sweep per op. The gated arm is the round
+    // loop's real uplink path (`collect_uplinks_ready`: a fixed readiness
+    // pool polling every session); the reference arm is the retired
+    // thread-per-worker design (one scoped thread per link blocking in
+    // `collect_update`). The ratio gate pins the refactor's claim: at
+    // fleet scale, collection must not be slower than spawning 256
+    // threads — per-worker stacks cost more than polling already-queued
+    // frames. Each op re-primes the links (collection drains them), and
+    // the priming sends cost both arms identically.
+    const FLEET: usize = 256;
+    const FLEET_DIM: usize = 64;
+    const FLEET_ROUND: usize = 1;
+    let uplink_frames: Vec<Vec<u8>> = (0..FLEET)
+        .map(|w| {
+            Frame::Update(WorkerMsg {
+                worker: w,
+                round: FLEET_ROUND,
+                payload: Payload::Scalar { rho: 0.5 },
+                cost: SCALAR_COST,
+                train_loss: 0.0,
+            })
+            .to_bytes()
+        })
+        .collect();
+    let frame_bytes: u64 = uplink_frames.iter().map(|f| f.len() as u64).sum();
+    let mut pool_servers = Vec::with_capacity(FLEET);
+    let mut pool_workers = Vec::with_capacity(FLEET);
+    let mut naive_servers = Vec::with_capacity(FLEET);
+    let mut naive_workers = Vec::with_capacity(FLEET);
+    for _ in 0..FLEET {
+        let (s, w) = MemLink::pair();
+        pool_servers.push(s);
+        pool_workers.push(w);
+        let (s, w) = MemLink::pair();
+        naive_servers.push(s);
+        naive_workers.push(w);
+    }
+    r.bench_pair(
+        "fleet_uplink_collect_256",
+        frame_bytes,
+        || {
+            for (w, link) in pool_workers.iter_mut().enumerate() {
+                link.send_raw(&uplink_frames[w]).expect("prime uplink");
+            }
+            let tasks: Vec<(usize, &mut dyn Link)> = pool_servers
+                .iter_mut()
+                .enumerate()
+                .map(|(w, l)| (w, l as &mut dyn Link))
+                .collect();
+            let deadline = Instant::now() + Duration::from_secs(10);
+            let outcomes = collect_uplinks_ready(tasks, FLEET_ROUND, FLEET_DIM, deadline);
+            let mut got = 0usize;
+            for (w, o) in &outcomes {
+                let (msg, _, _, _) =
+                    o.result.as_ref().unwrap_or_else(|e| panic!("worker {w}: {e:#}"));
+                assert!(msg.is_scalar());
+                got += 1;
+            }
+            assert_eq!(got, FLEET);
+            got
+        },
+        || {
+            for (w, link) in naive_workers.iter_mut().enumerate() {
+                link.send_raw(&uplink_frames[w]).expect("prime uplink");
+            }
+            let deadline = Instant::now() + Duration::from_secs(10);
+            std::thread::scope(|scope| {
+                for (w, link) in naive_servers.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        let out = collect_update(link, w, FLEET_ROUND, FLEET_DIM, deadline);
+                        let (msg, _, _, _) =
+                            out.result.unwrap_or_else(|e| panic!("worker {w}: {e:#}"));
+                        assert!(msg.is_scalar());
+                    });
+                }
+            });
+            FLEET
+        },
     );
 
     // --- report + gate ------------------------------------------------------

@@ -131,6 +131,13 @@ pub struct ExperimentConfig {
     /// `f16`). `raw` is the default and the bit-parity surface; in-memory
     /// engines ignore the knob entirely.
     pub wire_codec: crate::compress::WireCodec,
+    /// Aggregation-tree fan-in (`--shards`): 1 (default) keeps the flat
+    /// star topology; N >= 2 splits the fleet into N contiguous shards,
+    /// each pre-reduced by a mid-tier aggregator before the root folds
+    /// the partials. Every engine mirrors the tree arithmetic at the same
+    /// setting, so parity is per-`shards` value (see
+    /// `coordinator::server`).
+    pub shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -157,6 +164,7 @@ impl Default for ExperimentConfig {
             transport: Transport::default(),
             faults: None,
             wire_codec: crate::compress::WireCodec::Raw,
+            shards: 1,
         }
     }
 }
@@ -244,6 +252,9 @@ impl ExperimentConfig {
         if let Some(v) = gets("wire_codec") {
             c.wire_codec = crate::compress::WireCodec::parse(&v)?;
         }
+        if let Some(v) = getn("shards") {
+            c.shards = v as usize;
+        }
         Ok(c)
     }
 
@@ -273,6 +284,7 @@ impl ExperimentConfig {
             wire_codec: self.wire_codec,
             tau_overrides: None,
             tiers: None,
+            shards: self.shards,
         }
     }
 }
@@ -411,6 +423,20 @@ mod tests {
             &Json::parse(r#"{"wire_codec":"zstd"}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn shards_parsing_and_lowering() {
+        // Default stays the flat star topology.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.fl_config().shards, 1);
+        let c = ExperimentConfig::from_json(
+            &Json::parse(r#"{"shards":3,"workers":12}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.shards, 3);
+        assert_eq!(c.fl_config().shards, 3);
     }
 
     #[test]

@@ -72,6 +72,36 @@ pub fn validate(c: &ExperimentConfig) -> Result<()> {
             );
         }
     }
+    // Sharded aggregation preconditions. The tree partition needs every
+    // shard non-empty, the sharded wire path speaks raw frames only (the
+    // quantized downlink is per-session delta state the mid-tier cannot
+    // replay), and Sever events are rejected because the sharded topology
+    // has no root-side elastic re-seat for edge workers — a sever would
+    // silently break the rejoin-ledger parity contract.
+    anyhow::ensure!(c.shards >= 1, "shards must be >= 1");
+    anyhow::ensure!(
+        c.shards <= c.workers,
+        "shards ({}) cannot exceed workers ({}): every shard must own at \
+         least one worker",
+        c.shards,
+        c.workers
+    );
+    if c.shards > 1 {
+        anyhow::ensure!(
+            c.wire_codec == crate::compress::WireCodec::Raw,
+            "sharded aggregation (shards={}) requires the raw wire codec, got {}",
+            c.shards,
+            c.wire_codec.name()
+        );
+        if let Some(plan) = &c.faults {
+            anyhow::ensure!(
+                plan.events.iter().all(|e| e.kind != FaultKind::Sever),
+                "sever events are not supported with shards > 1 (the sharded \
+                 topology has no elastic re-seat); model shard outages with \
+                 disconnect spans instead"
+            );
+        }
+    }
     anyhow::ensure!(c.train_n >= c.workers, "need >= 1 sample per worker");
     anyhow::ensure!(c.eval_every >= 1, "eval_every must be >= 1");
     anyhow::ensure!(c.labels_per_worker >= 1, "labels_per_worker >= 1");
@@ -209,6 +239,44 @@ mod tests {
             }],
             profiles: Vec::new(),
         });
+        validate(&c).unwrap();
+    }
+
+    #[test]
+    fn sharded_preconditions() {
+        use crate::sim::{FaultEvent, FaultPlan};
+        // Flat default and a well-formed sharded config both pass.
+        let mut c = ExperimentConfig::default();
+        c.shards = 4;
+        validate(&c).unwrap();
+        // Zero shards / more shards than workers: rejected.
+        let mut c = ExperimentConfig::default();
+        c.shards = 0;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::default();
+        c.shards = c.workers + 1;
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("cannot exceed workers"), "{err}");
+        // Quantized wire codecs are flat-topology-only.
+        let mut c = ExperimentConfig::default();
+        c.shards = 2;
+        c.wire_codec = crate::compress::WireCodec::Q8;
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("raw wire codec"), "{err}");
+        // Sever plans are flat-topology-only; disconnects are fine.
+        let ev = |kind| FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent { worker: 0, from: 1, until: 3, kind }],
+            profiles: Vec::new(),
+        };
+        let mut c = ExperimentConfig::default();
+        c.shards = 2;
+        c.faults = Some(ev(FaultKind::Sever));
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("sever events are not supported"), "{err}");
+        let mut c = ExperimentConfig::default();
+        c.shards = 2;
+        c.faults = Some(ev(FaultKind::Disconnect));
         validate(&c).unwrap();
     }
 

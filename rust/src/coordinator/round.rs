@@ -29,7 +29,7 @@ use crate::util::timer::PhaseTimer;
 use super::accounting::CommLedger;
 use super::messages::WorkerMsg;
 use super::sampling::sample_clients;
-use super::server::Server;
+use super::server::{tree_loss_sum, Server};
 use super::trainer::{LocalTrainer, TrainerShard};
 use super::worker::Worker;
 
@@ -169,6 +169,18 @@ pub struct FlConfig {
     /// rejoins, round start, broadcasts, uplinks, faults, commit —
     /// bit-identical per seed (`tests/trace_parity.rs`).
     pub trace: Option<TraceHandle>,
+    /// Aggregation-tree fan-in: `<= 1` (default) is the historical flat
+    /// topology; `N >= 2` splits the fleet into `N` contiguous worker
+    /// shards, each pre-reduced by a mid-tier aggregator
+    /// (`crate::net::aggregator`) before the root folds the partials in
+    /// shard order. Every engine — in-memory or networked — mirrors the
+    /// same tree arithmetic at the same setting
+    /// ([`Server::apply_grouped`]), so theta, traces, and ledger totals
+    /// stay bit-identical per seed *within* a topology. Flat and sharded
+    /// runs differ in their last float bits (reduction reassociation),
+    /// which is why this lives in the config rather than being a
+    /// deployment detail.
+    pub shards: usize,
 }
 
 impl Default for FlConfig {
@@ -189,6 +201,7 @@ impl Default for FlConfig {
             tau_overrides: None,
             tiers: None,
             trace: None,
+            shards: 1,
         }
     }
 }
@@ -494,10 +507,19 @@ pub fn run_fl(
                 },
             );
         }
+        // Sharded runs re-sum the train loss shard-by-shard and reduce
+        // theta through the same two-stage tree the real aggregator
+        // topology uses, so this engine stays bit-identical to a sharded
+        // TCP deployment at the same `shards` setting.
+        let train_loss_sum = if cfg.shards > 1 {
+            tree_loss_sum(&msgs, cfg.shards, k)
+        } else {
+            train_loss_sum
+        };
         // A round with no arrivals commits without touching the model
         // (the partial-participation degenerate case) instead of erroring.
         if !msgs.is_empty() {
-            timers.time("aggregate", || server.apply(&msgs))?;
+            timers.time("aggregate", || server.apply_grouped(&msgs, cfg.shards, k))?;
         }
         // Absences surface in the trace at commit time, in planned
         // order: the net server cannot know who is missing until the

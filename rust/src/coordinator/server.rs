@@ -9,14 +9,156 @@
 //! `eta/|K'| * omega_k`, which with `omega_k ~ 1/K` rescales the step by
 //! 1/K; we use the renormalized form so the step size is scale-free —
 //! noted in DESIGN.md).
+//!
+//! **Tree-shaped reduction (`shards > 1`).** The sharded deployment
+//! (`crate::net::aggregator`) pre-reduces each contiguous worker shard on
+//! a mid-tier node: stage 1 accumulates `weights[w] * g_w` per shard in
+//! participant order ([`shard_partial`]), stage 2 folds the per-shard
+//! partials into theta in shard order ([`apply_partials`]). The same two
+//! stages are exposed here so the in-memory engines mirror the tree
+//! arithmetic exactly ([`Server::apply_tree`]) — floating-point addition
+//! is not associative, so flat and tree reductions differ in their last
+//! bits, and parity is defined *per topology*: every engine at the same
+//! `shards` setting produces bit-identical theta, traces, and ledgers.
+//! `shards <= 1` keeps the historical flat [`Server::apply`] path,
+//! untouched.
 
 use anyhow::Result;
 
 use crate::lbgm::reconstruct::{apply_full, apply_scalar};
 use crate::lbgm::store::LbgStore;
-use crate::linalg::Workspace;
+use crate::linalg::{vec_ops, Workspace};
 
 use super::messages::{Payload, WorkerMsg};
+
+/// The shard a worker belongs to under the contiguous partition of
+/// `fleet` workers into `shards` balanced ranges: shard `s` owns workers
+/// `[s*fleet/shards, (s+1)*fleet/shards)`. Closed form of the inverse of
+/// [`shard_bounds`].
+pub fn shard_of(worker: usize, fleet: usize, shards: usize) -> usize {
+    debug_assert!(worker < fleet && shards >= 1);
+    ((worker + 1) * shards).saturating_sub(1) / fleet.max(1)
+}
+
+/// The worker range `[lo, hi)` owned by shard `s` (see [`shard_of`]).
+pub fn shard_bounds(s: usize, fleet: usize, shards: usize) -> (usize, usize) {
+    debug_assert!(s < shards && shards >= 1);
+    (s * fleet / shards.max(1), (s + 1) * fleet / shards.max(1))
+}
+
+/// Stage 1 of the tree reduction: accumulate one shard's weighted update
+/// sum into `partial` (zeroed here first) in participant order —
+/// `partial += weights[w] * rho_w * lbg_w` for scalars,
+/// `partial += weights[w] * grad_w` for full gradients — and return the
+/// shard's f32 weight sum. Validates exactly like [`Server::apply`]'s
+/// first pass; an error leaves only this scratch buffer touched, never
+/// server state. This is the arithmetic a mid-tier aggregator node runs
+/// before forwarding its combined `ShardUpdate` to the root.
+pub fn shard_partial(
+    msgs: &[WorkerMsg],
+    weights: &[f32],
+    lbgs: &LbgStore,
+    partial: &mut [f32],
+) -> Result<f32> {
+    for v in partial.iter_mut() {
+        *v = 0.0;
+    }
+    let dim = partial.len();
+    // Validate the whole shard before accumulating anything, mirroring
+    // the flat path's errors-before-arithmetic shape.
+    for m in msgs {
+        anyhow::ensure!(
+            m.worker < weights.len(),
+            "worker {} out of range (fleet {})",
+            m.worker,
+            weights.len()
+        );
+        match &m.payload {
+            Payload::Scalar { .. } => anyhow::ensure!(
+                lbgs.get(m.worker).is_some(),
+                "scalar LBC from worker {} with no server LBG",
+                m.worker
+            ),
+            Payload::Full { grad } => {
+                anyhow::ensure!(grad.len() == dim, "dim mismatch")
+            }
+        }
+    }
+    let mut wsum = 0.0f32;
+    for m in msgs {
+        let w = weights[m.worker];
+        // lint: allow(reduction_order, "per-shard weight sum in participant order — the pinned tree reduction order")
+        wsum += w;
+        match &m.payload {
+            Payload::Scalar { rho } => {
+                let lbg = lbgs.get(m.worker).expect("validated above");
+                vec_ops::axpy(w * rho, lbg, partial);
+            }
+            Payload::Full { grad } => vec_ops::axpy(w, grad.as_slice(), partial),
+        }
+    }
+    Ok(wsum)
+}
+
+/// One shard's stage-1 result, as folded by [`apply_partials`]: the
+/// shard's f32 weight sum, its participant count, and its weighted
+/// partial sum (borrowed from the reducer's scratch, or decoded straight
+/// out of a `ShardUpdate` frame at the root).
+pub struct ShardPartial<'a> {
+    /// f32 sum of the shard's participating FedAvg weights, accumulated
+    /// in participant order.
+    pub wsum: f32,
+    /// Number of messages reduced into `partial` (an empty shard
+    /// contributes `wsum == 0.0` and is skipped in stage 2).
+    pub participants: usize,
+    /// The shard's weighted update sum, length == model dim.
+    pub partial: &'a [f32],
+}
+
+/// Stage 2 of the tree reduction: fold per-shard partials into `theta`
+/// in shard order — `wsum = Σ_s wsum_s`, then
+/// `theta -= (eta/wsum) * partial_s` per shard. Empty shards contribute
+/// their `0.0` to `wsum` (bit-exact: participating weights are positive,
+/// so every partial sum is `>= +0.0` and adding `0.0` is the identity)
+/// but are skipped in the axpy sweep, keeping `-0.0` artifacts out of
+/// theta. Errors if no shard has a participating worker.
+pub fn apply_partials(theta: &mut [f32], eta: f32, parts: &[ShardPartial]) -> Result<()> {
+    let mut wsum = 0.0f32;
+    for p in parts {
+        // lint: allow(reduction_order, "shard-order f32 weight fold — the pinned tree reduction order")
+        wsum += p.wsum;
+    }
+    anyhow::ensure!(wsum > 0.0, "no participating workers");
+    for p in parts {
+        anyhow::ensure!(p.partial.len() == theta.len(), "dim mismatch");
+        if p.participants > 0 {
+            vec_ops::axpy(-(eta / wsum), p.partial, theta);
+        }
+    }
+    Ok(())
+}
+
+/// The round's training-loss sum reduced the way the tree reduces it:
+/// an f64 sum per shard in participant order, the per-shard sums then
+/// folded in shard order. The flat engines sum in plain participant
+/// order instead; the two differ in their last bits, which is exactly
+/// why every `shards > 1` engine must use this helper.
+pub fn tree_loss_sum(msgs: &[WorkerMsg], shards: usize, fleet: usize) -> f64 {
+    let mut total = 0.0f64;
+    let mut idx = 0usize;
+    for s in 0..shards.max(1) {
+        let mut shard_sum = 0.0f64;
+        while idx < msgs.len() && shard_of(msgs[idx].worker, fleet, shards.max(1)) == s {
+            // lint: allow(reduction_order, "two-stage shard-order f64 loss fold — the pinned tree reduction order")
+            shard_sum += msgs[idx].train_loss;
+            idx += 1;
+        }
+        // Stage-2 fold in shard order (`total += shard_sum` carries no
+        // lint marker: the heuristic keys on `sum +=`, not `+= ..sum`).
+        total += shard_sum;
+    }
+    total
+}
 
 /// The aggregation server's persistent state.
 pub struct Server {
@@ -31,6 +173,11 @@ pub struct Server {
     /// Scratch arena for the per-round renormalized weights (§Perf: the
     /// fused apply sweep allocates nothing once warm).
     ws: Workspace,
+    /// Flat `shards * dim` scratch for the per-shard partials of
+    /// [`Server::apply_tree`]; empty until the first sharded round, then
+    /// reused (grown, never shrunk) so tree rounds allocate nothing once
+    /// warm.
+    tree: Vec<f32>,
 }
 
 impl Server {
@@ -43,6 +190,7 @@ impl Server {
             weights,
             eta,
             ws: Workspace::new(),
+            tree: Vec::with_capacity(0),
         }
     }
 
@@ -104,6 +252,87 @@ impl Server {
             }
         }
         ws.put_f32(omegas);
+        Ok(())
+    }
+
+    /// Dispatch one aggregation round by topology: the historical flat
+    /// [`Server::apply`] for `shards <= 1`, the two-stage tree
+    /// [`Server::apply_tree`] otherwise. `fleet` is the federation size
+    /// the contiguous shard partition is defined over.
+    pub fn apply_grouped(
+        &mut self,
+        msgs: &[WorkerMsg],
+        shards: usize,
+        fleet: usize,
+    ) -> Result<()> {
+        if shards <= 1 {
+            self.apply(msgs)
+        } else {
+            self.apply_tree(msgs, shards, fleet)
+        }
+    }
+
+    /// Apply one aggregation round through the tree reduction a sharded
+    /// deployment performs: stage 1 reduces each shard's messages (in
+    /// participant order) into a weighted partial via [`shard_partial`],
+    /// stage 2 folds the partials into theta in shard order via
+    /// [`apply_partials`], stage 3 batches the LBG refreshes exactly like
+    /// the flat path. `msgs` must be sorted ascending by worker (every
+    /// engine's invariant), at most one message per worker.
+    pub fn apply_tree(
+        &mut self,
+        msgs: &[WorkerMsg],
+        shards: usize,
+        fleet: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        anyhow::ensure!(
+            fleet == self.weights.len(),
+            "fleet {fleet} disagrees with {} FedAvg weights",
+            self.weights.len()
+        );
+        debug_assert!(
+            msgs.windows(2).all(|p| p[0].worker < p[1].worker),
+            "messages must be sorted ascending by worker"
+        );
+        let dim = self.theta.len();
+        self.tree.resize(shards * dim, 0.0);
+        let Server { theta, lbgs, weights, eta, tree, .. } = self;
+
+        // Stage 1: one partial per shard, in shard order. Messages are
+        // sorted and the shard partition is contiguous, so each shard's
+        // messages form one run.
+        let mut parts: Vec<ShardPartial> = Vec::with_capacity(shards);
+        let mut idx = 0usize;
+        for (s, slot) in tree.chunks_mut(dim.max(1)).take(shards).enumerate() {
+            let lo = idx;
+            while idx < msgs.len() && shard_of(msgs[idx].worker, fleet, shards) == s {
+                idx += 1;
+            }
+            let shard_msgs = &msgs[lo..idx];
+            let wsum = shard_partial(shard_msgs, weights, lbgs, &mut slot[..dim])?;
+            parts.push(ShardPartial {
+                wsum,
+                participants: shard_msgs.len(),
+                partial: &slot[..dim],
+            });
+        }
+        anyhow::ensure!(
+            idx == msgs.len(),
+            "message for worker {} falls outside the {shards}-shard partition of fleet {fleet}",
+            msgs.get(idx).map_or(0, |m| m.worker)
+        );
+
+        // Stage 2: fold the partials into theta in shard order.
+        apply_partials(theta, *eta, &parts)?;
+        drop(parts);
+
+        // Stage 3: batch the LBG refreshes (Alg. 1 line 17).
+        for m in msgs {
+            if let Payload::Full { grad } = &m.payload {
+                lbgs.refresh(m.worker, grad.as_slice());
+            }
+        }
         Ok(())
     }
 }
@@ -174,5 +403,135 @@ mod tests {
     fn dim_mismatch_rejected() {
         let mut s = Server::new(vec![0.0; 3], vec![1.0], 1.0);
         assert!(s.apply(&[full(0, vec![1.0])]).is_err());
+    }
+
+    /// The contiguous shard partition: `shard_of` is the exact inverse of
+    /// `shard_bounds`, every worker lands in exactly one shard, and shard
+    /// sizes differ by at most one.
+    #[test]
+    fn shard_partition_is_contiguous_and_balanced() {
+        for fleet in 1..=12 {
+            for shards in 1..=fleet {
+                let mut seen = 0usize;
+                for s in 0..shards {
+                    let (lo, hi) = shard_bounds(s, fleet, shards);
+                    assert!(lo <= hi && hi <= fleet);
+                    assert!(
+                        hi - lo <= fleet / shards + 1,
+                        "unbalanced shard {s} of {shards} over {fleet}"
+                    );
+                    for w in lo..hi {
+                        assert_eq!(
+                            shard_of(w, fleet, shards),
+                            s,
+                            "worker {w}, fleet {fleet}, shards {shards}"
+                        );
+                        seen += 1;
+                    }
+                }
+                assert_eq!(seen, fleet, "partition must cover the fleet exactly once");
+            }
+        }
+    }
+
+    /// `apply_grouped` at one shard IS the flat path — bit-identical,
+    /// scratch untouched.
+    #[test]
+    fn one_shard_dispatches_to_the_flat_path() {
+        let msgs = [full(0, vec![1.0, 0.0]), full(1, vec![0.0, 2.0])];
+        let mut flat = Server::new(vec![0.0; 2], vec![0.5, 0.5], 1.0);
+        flat.apply(&msgs).unwrap();
+        let mut grouped = Server::new(vec![0.0; 2], vec![0.5, 0.5], 1.0);
+        grouped.apply_grouped(&msgs, 1, 2).unwrap();
+        assert_eq!(flat.theta, grouped.theta);
+        assert!(grouped.tree.is_empty(), "flat dispatch must not touch tree scratch");
+    }
+
+    /// The tree reduction agrees with the flat reduction up to
+    /// floating-point reassociation (they are deliberately *not*
+    /// bit-identical to each other — parity is pinned per topology), and
+    /// is itself deterministic bit-for-bit.
+    #[test]
+    fn tree_matches_flat_up_to_reassociation_and_is_deterministic() {
+        let msgs = [
+            full(0, vec![1.0, -2.0, 0.5]),
+            full(1, vec![2.0, 0.0, -4.0]),
+            full(2, vec![0.25, 0.75, -1.5]),
+            full(3, vec![-0.125, 3.0, 2.0]),
+        ];
+        let weights = vec![0.25, 0.25, 0.25, 0.25];
+        let mut flat = Server::new(vec![0.0; 3], weights.clone(), 0.5);
+        flat.apply(&msgs).unwrap();
+        let mut tree_a = Server::new(vec![0.0; 3], weights.clone(), 0.5);
+        tree_a.apply_tree(&msgs, 2, 4).unwrap();
+        let mut tree_b = Server::new(vec![0.0; 3], weights, 0.5);
+        tree_b.apply_tree(&msgs, 2, 4).unwrap();
+        assert_eq!(tree_a.theta, tree_b.theta, "tree reduction must be deterministic");
+        for (a, b) in flat.theta.iter().zip(&tree_a.theta) {
+            assert!((a - b).abs() < 1e-5, "flat {a} vs tree {b}");
+        }
+    }
+
+    /// Scalars decode through the LBG store inside a shard partial, and
+    /// stage-3 refreshes keep the store coherent across tree rounds.
+    #[test]
+    fn tree_scalars_reconstruct_through_lbg() {
+        let mut s = Server::new(vec![0.0; 2], vec![0.5, 0.5], 0.5);
+        s.apply_tree(&[full(0, vec![2.0, 4.0]), full(1, vec![2.0, 4.0])], 2, 2).unwrap();
+        let t1 = s.theta.clone();
+        s.apply_tree(&[scalar(0, 0.5), scalar(1, 0.5)], 2, 2).unwrap();
+        // Each shard holds one worker with renormalized weight 1/2:
+        // theta -= (eta/wsum) * (0.5 * 0.5 * lbg) per shard.
+        assert_eq!(s.theta, vec![t1[0] - 0.5, t1[1] - 1.0]);
+    }
+
+    /// An empty shard contributes its zero weight sum (bit-exact) but no
+    /// axpy; a round where only one shard participated still commits.
+    #[test]
+    fn empty_shards_are_skipped_without_poisoning_theta() {
+        let mut s = Server::new(vec![0.0; 2], vec![0.25, 0.25, 0.25, 0.25], 1.0);
+        // Workers 2 and 3 (shard 1) participate; shard 0 is empty.
+        s.apply_tree(&[full(2, vec![1.0, 0.0]), full(3, vec![1.0, 0.0])], 2, 4).unwrap();
+        assert_eq!(s.theta, vec![-1.0, 0.0]);
+        assert!(s.theta.iter().all(|v| v.is_finite()));
+        // A fully absent round is still an error, as on the flat path.
+        assert!(s.apply_tree(&[], 2, 4).is_err());
+    }
+
+    /// A malformed shard errors before any server state mutates — the
+    /// same errors-before-arithmetic shape as the flat path.
+    #[test]
+    fn tree_validation_errors_leave_server_untouched() {
+        let mut s = Server::new(vec![0.0; 2], vec![0.5, 0.5], 1.0);
+        // Dim mismatch in shard 1, valid message in shard 0.
+        let err = s.apply_tree(&[full(0, vec![1.0, 0.0]), full(1, vec![1.0])], 2, 2);
+        assert!(err.is_err());
+        assert_eq!(s.theta, vec![0.0, 0.0], "failed round must not move theta");
+        assert!(s.lbgs.get(0).is_none(), "failed round must not refresh LBGs");
+        // Scalar without an LBG fails inside the shard partial too.
+        assert!(s.apply_tree(&[scalar(0, 1.0)], 2, 2).is_err());
+    }
+
+    /// The tree loss fold: per-shard f64 sums in participant order,
+    /// folded in shard order.
+    #[test]
+    fn tree_loss_sum_folds_per_shard() {
+        let mut msgs = [
+            full(0, vec![0.0]),
+            full(1, vec![0.0]),
+            full(2, vec![0.0]),
+            full(3, vec![0.0]),
+        ];
+        let losses = [0.1f64, 0.7, 0.2, 0.4];
+        for (m, l) in msgs.iter_mut().zip(losses) {
+            m.train_loss = l;
+        }
+        let want = (losses[0] + losses[1]) + (losses[2] + losses[3]);
+        assert_eq!(tree_loss_sum(&msgs, 2, 4), want);
+        // One shard degenerates to the plain participant-order sum.
+        assert_eq!(
+            tree_loss_sum(&msgs, 1, 4),
+            losses.iter().sum::<f64>()
+        );
     }
 }

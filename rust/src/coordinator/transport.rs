@@ -27,7 +27,7 @@ use super::accounting::CommLedger;
 use super::messages::WorkerMsg;
 use super::round::{apply_faults, eval_or_carry, train_loss_or_carry, FlConfig};
 use super::sampling::sample_clients;
-use super::server::Server;
+use super::server::{tree_loss_sum, Server};
 use super::trainer::LocalTrainer;
 use super::worker::Worker;
 
@@ -178,14 +178,21 @@ where
                 },
             );
         }
+        // Sharded runs fold the loss shard-by-shard and reduce theta
+        // through the two-stage tree, mirroring the aggregator topology
+        // exactly (see `run_fl`).
         let train_loss = train_loss_or_carry(
-            // lint: allow(reduction_order, "worker-sorted f64 loss sum, the engines' shared canonical order")
-            msgs.iter().map(|m| m.train_loss).sum::<f64>(),
+            if cfg.shards > 1 {
+                tree_loss_sum(&msgs, cfg.shards, k)
+            } else {
+                // lint: allow(reduction_order, "worker-sorted f64 loss sum, the engines' shared canonical order")
+                msgs.iter().map(|m| m.train_loss).sum::<f64>()
+            },
             msgs.len(),
             &series,
         );
         if !msgs.is_empty() {
-            timers.time("aggregate", || server.apply(&msgs))?;
+            timers.time("aggregate", || server.apply_grouped(&msgs, cfg.shards, k))?;
         }
         // Absences surface in the trace at commit time, in planned
         // order — the shared placement across all engines (see `run_fl`).

@@ -79,6 +79,10 @@ const PANIC_SCOPE: &[&str] = &[
     "rust/src/net/server.rs",
     "rust/src/net/client.rs",
     "rust/src/net/quant.rs",
+    // The mid-tier aggregator parses attacker-reachable worker frames and
+    // forwards them rootward; determinism/reduction coverage comes free
+    // from the `rust/src/net/` prefix above, panic freedom is explicit.
+    "rust/src/net/aggregator.rs",
 ];
 
 /// Workspace-threaded hot paths with a zero-alloc steady-state claim.

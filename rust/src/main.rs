@@ -6,8 +6,14 @@
 //!   analyze --variant V --dataset D   centralized gradient-space analysis
 //!   figure <id|all> [--scale smoke|default|full] [--out results]
 //!       ids: fig1 fig2 fig3 fig5 fig6 fig7 fig8 sampling theory
-//!   serve  --listen ADDR [..]     networked aggregation server (TCP)
-//!   worker --connect ADDR --id K  one networked worker process
+//!   serve  --listen ADDR [..]     networked aggregation server (TCP);
+//!       with --shards N (N>=2) it becomes the sharded-topology root and
+//!       accepts N aggregator trunks instead of worker sessions
+//!   aggregator --connect ROOT --shard S --agg-listen ADDR   one sharded
+//!       mid-tier process: owns the contiguous worker range of shard S,
+//!       pre-reduces its uplinks, forwards one combined ShardUpdate
+//!   worker --connect ADDR --id K  one networked worker process (under
+//!       --shards, point --connect at the worker's shard aggregator)
 //!   lint [--root DIR] [--report FILE]   run the fedlint static-analysis
 //!       pass over the source tree (exits nonzero on any violation; see
 //!       the `lint` module docs for the rules and annotation grammar)
@@ -136,6 +142,7 @@ fn cfg_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("wire-codec") {
         cfg.wire_codec = fedrecycle::compress::WireCodec::parse(v)?;
     }
+    cfg.shards = args.usize_or("shards", cfg.shards);
     Ok(cfg)
 }
 
@@ -197,14 +204,17 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("analyze") => cmd_analyze(args),
         Some("figure") => cmd_figure(args),
         Some("serve") => cmd_serve(args),
+        Some("aggregator") => cmd_aggregator(args),
         Some("worker") => cmd_worker(args),
         Some("lint") => cmd_lint(args),
         Some("trace") => cmd_trace(args),
         _ => {
-            println!("usage: fedrecycle <info|train|analyze|figure|serve|worker|lint|trace> [flags]");
+            println!("usage: fedrecycle <info|train|analyze|figure|serve|aggregator|worker|lint|trace> [flags]");
             println!("       fedrecycle figure all --scale default --out results");
             println!("       fedrecycle serve --listen 127.0.0.1:7878 --workers 4 --dim 64");
             println!("       fedrecycle worker --connect 127.0.0.1:7878 --id 0 --workers 4 --dim 64");
+            println!("       fedrecycle serve --listen 127.0.0.1:7878 --workers 4 --shards 2 [..]  (sharded root)");
+            println!("       fedrecycle aggregator --connect 127.0.0.1:7878 --shard 0 --agg-listen 127.0.0.1:7900 [..]");
             println!("       fedrecycle trace run.jsonl   (written by train/serve --trace)");
             Ok(())
         }
@@ -376,6 +386,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let weights = eval.weights();
     let handshake = Duration::from_secs(args.u64_or("handshake-timeout", 120));
     let deadline = Duration::from_secs(args.u64_or("round-deadline", 600));
+    if fl.shards > 1 {
+        // Sharded-topology root: the listener seats aggregator trunks
+        // (`HelloShard`), not worker sessions; each round is driven over
+        // combined `ShardUpdate`s — see `net::aggregator`.
+        println!(
+            "serve: sharded mode — waiting for {} aggregator trunk(s)",
+            fl.shards
+        );
+        let mut trunks =
+            fedrecycle::net::accept_aggregators(&listener, k, spec.dim, &fl, handshake)?;
+        println!("all {} aggregators connected; training", fl.shards);
+        let (series, ledger, _theta) = fedrecycle::net::run_sharded_root_rounds(
+            &mut trunks,
+            &mut eval,
+            vec![0.0; spec.dim],
+            weights,
+            &fl,
+            deadline,
+            &cfg.name,
+        )?;
+        flush_trace(&trace_path, &trace)?;
+        print_deployment_summary(&series, &ledger);
+        if let Some(out) = args.get("out") {
+            write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[series])?;
+        }
+        return Ok(());
+    }
     let acceptor = Acceptor::spawn(listener, k, spec.dim, &fl, handshake)?;
     let (mut links, codecs) = acceptor.wait_for_fleet(k)?;
     let plan = fl.faults.as_ref().map(|p| std::sync::Arc::new(p.clone()));
@@ -409,6 +446,99 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         write_csv(&Path::new(out).join(format!("{}.csv", cfg.name)), &[series])?;
     }
+    Ok(())
+}
+
+/// `aggregator`: one sharded-topology mid-tier process. Connects its
+/// trunk to the root (`--connect`) as `--shard S`, then binds
+/// `--agg-listen` and accepts shard S's contiguous worker range with the
+/// flat worker handshake (workers point their `--connect` here). Each
+/// round it re-broadcasts the root's `Round` to its shard, collects the
+/// shard's uplinks under `--round-deadline`, pre-reduces them in
+/// participant order, and forwards one combined `ShardUpdate` up the
+/// trunk. Both sides must agree on --workers --shards --dim --spread
+/// --sigma --seed (the trunk handshake checks shard/range/dim and a
+/// seed-derived shard token).
+fn cmd_aggregator(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    fedrecycle::config::validate(&cfg)?;
+    anyhow::ensure!(
+        cfg.shards > 1,
+        "aggregator needs --shards >= 2 (the flat topology has no mid-tier)"
+    );
+    let (trace_path, _trace) = obs_from_args(args)?;
+    if trace_path.is_some() {
+        println!(
+            "aggregator: --trace records the round-event stream root-side; \
+             pass it to `serve` (only --log-level applies here)"
+        );
+    }
+    let spec = mock_spec(args);
+    let k = cfg.workers;
+    let fl = cfg.fl_config();
+    let shard = args.usize_or("shard", 0);
+    anyhow::ensure!(
+        shard < fl.shards,
+        "--shard {shard} out of range (shards={})",
+        fl.shards
+    );
+    let (lo, hi) = fedrecycle::coordinator::server::shard_bounds(shard, k, fl.shards);
+    let root_addr = args.get_or("connect", "127.0.0.1:7878");
+    let listen = args.get_or("agg-listen", "127.0.0.1:7900");
+    let handshake = Duration::from_secs(args.u64_or("handshake-timeout", 120));
+    let deadline = Duration::from_secs(args.u64_or("round-deadline", 600));
+    let listener = TcpListener::bind(&listen)?;
+    println!(
+        "aggregator {shard}: workers [{lo}, {hi}) on {}, trunk -> {root_addr}",
+        listener.local_addr()?
+    );
+    let stream = std::net::TcpStream::connect(root_addr.as_str())
+        .with_context(|| format!("connecting trunk to root {root_addr}"))?;
+    let mut root: Box<dyn fedrecycle::net::Link> =
+        Box::new(fedrecycle::net::TcpLink::new(stream)?);
+    fedrecycle::net::handshake_root(
+        root.as_mut(),
+        shard as u32,
+        lo,
+        hi,
+        spec.dim,
+        fl.seed,
+    )?;
+    let acceptor = Acceptor::spawn(listener, k, spec.dim, &fl, handshake)?;
+    let (mut links, _codecs) = acceptor.wait_for_range(lo, hi)?;
+    drop(acceptor);
+    if let Some(plan) = &fl.faults {
+        let p = std::sync::Arc::new(plan.clone());
+        println!(
+            "chaos: injecting {} fault event(s) from the plan (seed {})",
+            p.events.len(),
+            p.seed
+        );
+        links = links
+            .into_iter()
+            .enumerate()
+            .map(|(i, l)| {
+                Box::new(fedrecycle::sim::ChaosLink::wrap(l, lo + i, p.clone()))
+                    as Box<dyn fedrecycle::net::Link>
+            })
+            .collect();
+    }
+    println!(
+        "aggregator {shard}: all {} shard worker(s) connected; serving",
+        hi - lo
+    );
+    let weights = MockTrainer::new(spec.dim, k, spec.spread, 0.0, cfg.seed).weights();
+    fedrecycle::net::run_aggregator_rounds(
+        root.as_mut(),
+        &mut links,
+        shard as u32,
+        lo,
+        spec.dim,
+        &weights,
+        &fl,
+        deadline,
+    )?;
+    println!("aggregator {shard}: run complete, shut down cleanly");
     Ok(())
 }
 

@@ -1,0 +1,1083 @@
+//! Hierarchical (sharded) aggregation: the mid-tier node and the sharded
+//! root driver (wire protocol v4).
+//!
+//! The flat deployment stars every worker on one server, so per-round
+//! cost at that node is O(fleet). Sharded mode splits the fleet into
+//! `cfg.shards` contiguous worker ranges ([`shard_bounds`]); a mid-tier
+//! **aggregator** node owns each range: it handshakes its shard's
+//! workers (the same `Hello`/`Welcome` protocol — see
+//! [`connect-via-aggregator`](crate::net::client)), fans the root's
+//! `Round` broadcast out to them, pre-reduces their uplinks **in
+//! participant order** ([`shard_partial`], stage 1 of the tree), and
+//! forwards one combined [`Frame::ShardUpdate`] — weighted partial sum,
+//! f32 weight sum, per-shard f64 loss sum, and per-participant
+//! accounting entries — up its trunk link. The root folds the partials
+//! into theta in shard order ([`apply_partials`], stage 2) and replays
+//! the entries into the ledger and trace, so per-node round cost drops
+//! from O(fleet) to O(fleet/shards) while every observable stays
+//! bit-identical to the in-memory engines *at the same `shards`
+//! setting* (`Server::apply_tree` mirrors the exact arithmetic;
+//! `tests/agg_tree.rs` pins it per seed).
+//!
+//! Invariants and deliberate simplifications:
+//!
+//! * **Per-topology parity.** Flat and tree reductions reassociate the
+//!   float sums, so they differ in the last bits; parity is defined per
+//!   `shards` value, never across values (see
+//!   [`crate::coordinator::server`]).
+//! * **Raw codec only.** Quantized downlinks are per-session delta
+//!   state the mid-tier cannot replay; `config::validate` rejects
+//!   `shards > 1` with a non-raw codec, and the handshakes here assume
+//!   raw framing throughout.
+//! * **No elastic re-seat.** Sever plans are rejected up front (the
+//!   root has no session registry for edge workers); shard-scale
+//!   outages are modeled with `Disconnect` spans, which need no rejoin
+//!   handshake. A worker (or whole shard) that misses its deadline is
+//!   fault-counted and skipped, exactly like the flat path.
+//! * **Deterministic trace at the root only.** The root emits the full
+//!   deterministic event stream (`RoundStart`, `BroadcastSent`,
+//!   `WorkerUplink` replayed from shard entries in ascending worker
+//!   order, `FaultInjected`, `RoundCommit`); the mid-tier emits nothing
+//!   into the parity stream, so sharded traces match the in-memory
+//!   engines event-for-event.
+//! * **Stale frames stop at the mid-tier.** The flat server ledgers
+//!   stale uplink bytes; an aggregator drops them with a warning
+//!   instead of replaying them to the root (they occur only on
+//!   desynchronized links, never in a healthy parity run).
+//!
+//! Trunk framing: `HelloShard`/`WelcomeShard` open the trunk (the
+//! [`shard_token`] is domain-separated from worker session tokens, so a
+//! misconfigured node cannot pass one off as the other), and the trunk
+//! receive cap is widened from the per-worker session cap to
+//! [`trunk_max_payload`] — a `ShardUpdate` carries one model-sized
+//! partial plus [`wire::SHARD_ENTRY_LEN`] bytes per participant.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::compress::{dense_cost, Compressor, Cost, WireCodec};
+use crate::coordinator::accounting::CommLedger;
+use crate::coordinator::messages::{Payload, WorkerMsg};
+use crate::coordinator::round::{eval_or_carry, train_loss_or_carry, FlConfig};
+use crate::coordinator::sampling::sample_clients;
+use crate::coordinator::server::{
+    apply_partials, shard_bounds, shard_of, shard_partial, ShardPartial,
+};
+use crate::coordinator::trainer::LocalTrainer;
+use crate::lbgm::store::LbgStore;
+use crate::metrics::{RoundRecord, RunSeries};
+use crate::obs::{record_to, Event, UplinkTracker};
+use crate::sim::chaos::ChaosLink;
+use crate::sim::FaultKind;
+use crate::util::timer::PhaseTimer;
+use crate::{obs_info, obs_warn};
+
+use super::client::{connect_worker_with_retry, ReconnectCfg};
+use super::link::{recv_frame, send_frame, Link, TcpLink};
+use super::server::{collect_uplinks_ready, session_token, Acceptor};
+use super::wire::{self, Frame, ShardEntry};
+use super::{DEFAULT_HANDSHAKE_TIMEOUT, DEFAULT_ROUND_DEADLINE};
+
+/// Domain-separation constant folded into the run seed before deriving
+/// shard trunk tokens, so a shard token never collides with any worker's
+/// [`session_token`] drawn from the same seed.
+const SHARD_TOKEN_DOMAIN: u64 = 0x7368_6172_645f_7634; // "shard_v4"
+
+/// Bound on consecutive failed trunk handshakes before the root gives up
+/// assembling its aggregator tier (a port scanner or a misconfigured
+/// node must not wedge `accept_aggregators` forever).
+const MAX_TRUNK_HANDSHAKE_FAILURES: usize = 64;
+
+/// Bound on already-queued stale `ShardUpdate` frames drained per trunk
+/// per round, mirroring the flat path's post-deadline drain bound: a
+/// desynchronized aggregator streaming old rounds cannot stall the root
+/// open-endedly.
+const MAX_TRUNK_STALE_DRAINS: usize = 16;
+
+/// Floor on the per-recv trunk timeout, so a deadline that has already
+/// passed still yields a valid (nonzero) receive window for frames that
+/// are already buffered locally.
+const MIN_TRUNK_WAIT: Duration = Duration::from_millis(10);
+
+/// The token issued to shard `shard`'s aggregator in `WelcomeShard` and
+/// verified by [`handshake_root`]. Same derivation (and same
+/// anti-footgun, not-cryptography caveats) as [`session_token`], under
+/// [`SHARD_TOKEN_DOMAIN`] so the two token streams never collide.
+pub fn shard_token(seed: u64, shard: u32) -> u64 {
+    session_token(seed ^ SHARD_TOKEN_DOMAIN, shard)
+}
+
+/// Receive cap for a trunk (root↔aggregator) link serving a shard of
+/// `shard_workers` workers at model dimension `dim`. The per-worker
+/// session cap covers the partial (one model vector plus slack), but a
+/// `ShardUpdate` also carries [`wire::SHARD_ENTRY_LEN`] bytes per
+/// participant plus its own fixed header — enough slack that the cap is
+/// never the thing that drops a well-formed frame.
+pub fn trunk_max_payload(dim: usize, shard_workers: usize) -> usize {
+    wire::session_max_payload(dim) + wire::SHARD_ENTRY_LEN * shard_workers + 64
+}
+
+/// Aggregator side of the trunk handshake: introduce this node as
+/// `shard` owning workers `[lo, hi)` at dimension `dim`, and verify the
+/// root's `WelcomeShard` echo and [`shard_token`] (a mismatch means the
+/// two nodes disagree on seed or fleet shape — failing here is cheaper
+/// than diverging silently). Leaves the link capped for `Round`-sized
+/// root frames.
+pub fn handshake_root(
+    link: &mut dyn Link,
+    shard: u32,
+    lo: usize,
+    hi: usize,
+    dim: usize,
+    seed: u64,
+) -> Result<()> {
+    link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
+    link.send(&Frame::HelloShard {
+        shard,
+        lo: lo as u64,
+        hi: hi as u64,
+        dim: dim as u64,
+    })?;
+    let frame = link.recv().context("waiting for WelcomeShard")?;
+    let Frame::WelcomeShard { shard: echoed, token } = frame else {
+        bail!("expected WelcomeShard, got frame tag {}", frame.tag());
+    };
+    ensure!(echoed == shard, "root welcomed shard {echoed}, this node is shard {shard}");
+    ensure!(
+        token == shard_token(seed, shard),
+        "shard-token mismatch: the root is running a different seed or fleet shape"
+    );
+    link.set_recv_limit(wire::session_max_payload(dim));
+    Ok(())
+}
+
+/// Root side of one trunk handshake: expect `HelloShard`, validate the
+/// claimed shard index and worker range against the contiguous
+/// partition of `k` workers into `cfg.shards` shards (and `dim` against
+/// the run), reply `WelcomeShard` with the [`shard_token`], and widen
+/// the link's receive cap to [`trunk_max_payload`]. Returns the
+/// validated shard index.
+pub fn handshake_shard(
+    link: &mut dyn Link,
+    k: usize,
+    dim: usize,
+    cfg: &FlConfig,
+) -> Result<usize> {
+    link.set_recv_limit(wire::HANDSHAKE_MAX_PAYLOAD);
+    let frame = link.recv().context("waiting for HelloShard")?;
+    let Frame::HelloShard { shard, lo, hi, dim: d } = frame else {
+        bail!("expected HelloShard, got frame tag {}", frame.tag());
+    };
+    let s = shard as usize;
+    ensure!(
+        s < cfg.shards,
+        "aggregator claims shard {s}, this run has {} shards",
+        cfg.shards
+    );
+    let (want_lo, want_hi) = shard_bounds(s, k, cfg.shards);
+    ensure!(
+        (lo, hi) == (want_lo as u64, want_hi as u64),
+        "shard {s} claims workers [{lo}, {hi}), the partition owns [{want_lo}, {want_hi})"
+    );
+    ensure!(d == dim as u64, "dim mismatch: aggregator has {d}, run has {dim}");
+    link.send(&Frame::WelcomeShard { shard, token: shard_token(cfg.seed, shard) })?;
+    link.set_recv_limit(trunk_max_payload(dim, want_hi - want_lo));
+    Ok(s)
+}
+
+/// Accept and handshake `cfg.shards` aggregator trunk connections on
+/// `listener`, returning their links indexed by shard. Few and
+/// collocated with run startup, trunks handshake inline (no
+/// [`Acceptor`] thread needed), each bounded by `handshake_timeout`
+/// (zero = none); duplicates and malformed peers are rejected and
+/// counted, and the assembly gives up after
+/// [`MAX_TRUNK_HANDSHAKE_FAILURES`] rejects.
+pub fn accept_aggregators(
+    listener: &TcpListener,
+    k: usize,
+    dim: usize,
+    cfg: &FlConfig,
+    handshake_timeout: Duration,
+) -> Result<Vec<Box<dyn Link>>> {
+    let shards = cfg.shards;
+    ensure!(shards >= 2, "sharded accept needs shards >= 2, got {shards}");
+    ensure!(shards <= k, "shards ({shards}) cannot exceed workers ({k})");
+    let mut slots: Vec<Option<Box<dyn Link>>> = Vec::with_capacity(shards);
+    slots.resize_with(shards, || None);
+    let mut seated = 0usize;
+    let mut failures = 0usize;
+    while seated < shards {
+        let (stream, peer) = listener.accept().context("accepting an aggregator")?;
+        let outcome = TcpLink::new(stream).and_then(|mut link| {
+            if !handshake_timeout.is_zero() {
+                link.set_recv_timeout(Some(handshake_timeout))?;
+            }
+            let s = handshake_shard(&mut link, k, dim, cfg)?;
+            link.set_recv_timeout(None)?;
+            Ok((s, link))
+        });
+        match outcome {
+            Ok((s, link)) => match slots.get_mut(s) {
+                Some(slot) if slot.is_none() => {
+                    *slot = Some(Box::new(link));
+                    seated += 1;
+                    obs_info!("net: aggregator for shard {s} seated ({seated}/{shards})");
+                }
+                _ => {
+                    failures += 1;
+                    obs_warn!("net: rejecting duplicate aggregator for shard {s} from {peer}");
+                }
+            },
+            Err(e) => {
+                failures += 1;
+                obs_warn!("net: aggregator handshake from {peer} failed: {e:#}");
+            }
+        }
+        ensure!(
+            failures <= MAX_TRUNK_HANDSHAKE_FAILURES,
+            "gave up assembling the aggregator tier after {failures} failed trunk \
+             handshakes ({seated}/{shards} seated)"
+        );
+    }
+    Ok(slots.into_iter().flatten().collect())
+}
+
+/// Drive one mid-tier aggregator node: `root` is the handshaken trunk,
+/// `links[i]` is worker `lo + i`'s handshaken connection, `weights` the
+/// *full-fleet* FedAvg weights (only this shard's range is read, but
+/// global worker ids index it directly). Per `Round` from the root:
+/// fan the re-encoded broadcast out to the shard's sampled workers in
+/// ascending order, collect their uplinks under `round_deadline` on the
+/// readiness pool ([`collect_uplinks_ready`]), reduce stage 1 in
+/// participant order ([`shard_partial`]) against a local LBG store
+/// (refreshed from the same fulls the root's in-memory mirror sees),
+/// and send the combined [`Frame::ShardUpdate`] up the trunk. Exits
+/// cleanly on `Shutdown`, forwarding it to every worker.
+#[allow(clippy::too_many_arguments)]
+pub fn run_aggregator_rounds(
+    root: &mut dyn Link,
+    links: &mut [Box<dyn Link>],
+    shard: u32,
+    lo: usize,
+    dim: usize,
+    weights: &[f32],
+    cfg: &FlConfig,
+    round_deadline: Duration,
+) -> Result<()> {
+    let k = weights.len();
+    let hi = lo + links.len();
+    ensure!(lo < hi, "shard {shard} owns no workers");
+    ensure!(hi <= k, "shard {shard} range [{lo}, {hi}) exceeds fleet {k}");
+    // The LBG store is fleet-shaped so global worker ids index it
+    // directly; only this shard's slots are ever touched.
+    let mut lbgs = LbgStore::new(k);
+    let mut partial = vec![0.0f32; dim];
+    let root_max = wire::HEADER_LEN + wire::session_max_payload(dim) + wire::CHECKSUM_LEN;
+    // A root that dies without `Shutdown` must not wedge this node
+    // forever; rounds arrive back-to-back, so a long multiple of the
+    // round deadline separates "slow eval" from "dead root".
+    root.set_recv_timeout(Some(round_deadline * 4))?;
+    loop {
+        let (t, theta) = match recv_frame(root, root_max)? {
+            Frame::Shutdown => {
+                for link in links.iter_mut() {
+                    let _ = link.send(&Frame::Shutdown);
+                }
+                return Ok(());
+            }
+            Frame::Round { t, theta } => (t as usize, theta),
+            f => bail!("aggregator {shard}: unexpected frame tag {} from root", f.tag()),
+        };
+        ensure!(
+            theta.len() == dim,
+            "aggregator {shard}: round {t} broadcast has dim {}, expected {dim}",
+            theta.len()
+        );
+
+        // Re-encode and fan out. Frame encoding is deterministic, so the
+        // bytes reaching each worker are identical to a flat broadcast.
+        let encoded = Frame::Round { t: t as u64, theta }.to_bytes();
+        let planned_shard: Vec<usize> = sample_clients(t, k, cfg.sample_fraction, cfg.seed)
+            .into_iter()
+            .filter(|&w| lo <= w && w < hi)
+            .collect();
+        let mut reachable = Vec::with_capacity(planned_shard.len());
+        for &w in &planned_shard {
+            let Some(link) = links.get_mut(w - lo) else { continue };
+            match link.send_raw(&encoded) {
+                Ok(_) => reachable.push(w),
+                Err(e) => {
+                    obs_warn!(
+                        "net: aggregator {shard}: worker {w} unreachable for round {t}: {e:#}"
+                    );
+                }
+            }
+        }
+
+        // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
+        let deadline = Instant::now() + round_deadline;
+        let mut tasks: Vec<(usize, &mut dyn Link)> = Vec::with_capacity(reachable.len());
+        {
+            let mut wanted = vec![false; links.len()];
+            for &w in &reachable {
+                if let Some(m) = wanted.get_mut(w - lo) {
+                    *m = true;
+                }
+            }
+            for (i, link) in links.iter_mut().enumerate() {
+                if wanted.get(i).copied().unwrap_or(false) {
+                    tasks.push((lo + i, link.as_mut()));
+                }
+            }
+        }
+        let collected = collect_uplinks_ready(tasks, t, dim, deadline);
+
+        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(collected.len());
+        let mut entries: Vec<ShardEntry> = Vec::with_capacity(collected.len());
+        // Participant-order f64 loss accumulation — stage 1 of the
+        // pinned tree fold (`tree_loss_sum` mirrors it in-memory).
+        let mut loss = 0.0f64;
+        for (w, out) in collected {
+            if out.stale_bytes > 0 {
+                // Deliberately not replayed to the root ledger (module docs).
+                obs_warn!(
+                    "net: aggregator {shard}: dropping {} stale uplink bytes from \
+                     worker {w} (round {t})",
+                    out.stale_bytes
+                );
+            }
+            match out.result {
+                Ok((msg, bytes, _raw_bytes, _quantized)) => {
+                    entries.push(ShardEntry {
+                        worker: w as u32,
+                        scalar: msg.is_scalar(),
+                        floats: msg.cost.floats,
+                        bits: msg.cost.bits,
+                        wire: bytes,
+                    });
+                    loss += msg.train_loss;
+                    msgs.push(msg);
+                }
+                Err(e) => {
+                    obs_warn!(
+                        "net: aggregator {shard}: worker {w} absent from round {t}: {e:#}"
+                    );
+                }
+            }
+        }
+
+        // Stage 1 in participant order, then the LBG refreshes — the same
+        // deferred-refresh shape as `Server::apply_tree` (no scalar can
+        // reference an LBG refreshed in its own round).
+        let wsum = shard_partial(&msgs, weights, &lbgs, &mut partial)?;
+        for m in &msgs {
+            if let Payload::Full { grad } = &m.payload {
+                lbgs.refresh(m.worker, grad.as_slice());
+            }
+        }
+        let update = Frame::ShardUpdate {
+            shard,
+            round: t as u64,
+            wsum,
+            train_loss_sum: loss,
+            // An empty shard forwards an empty partial (the root skips it
+            // in stage 2 — bit-exact, see `apply_partials`).
+            partial: if msgs.is_empty() { Vec::new() } else { partial.clone() },
+            entries,
+        };
+        send_frame(root, &update)?;
+    }
+}
+
+/// One shard's `ShardUpdate` as accepted by the root for the current
+/// round.
+struct ShardArrival {
+    wsum: f32,
+    loss: f64,
+    partial: Vec<f32>,
+    entries: Vec<ShardEntry>,
+}
+
+/// Validate one decoded `ShardUpdate` against the round: echoed shard
+/// and round, entries strictly ascending and inside the shard's range
+/// and this round's sample, partial sized to the model when the shard
+/// participated, and a sane weight sum. A frame that fails here marks
+/// the shard absent — never poisons theta or the ledger.
+fn validate_shard_update(
+    s: usize,
+    t: usize,
+    lo: usize,
+    hi: usize,
+    dim: usize,
+    planned: &[bool],
+    echoed: u32,
+    round: u64,
+    wsum: f32,
+    partial: &[f32],
+    entries: &[ShardEntry],
+) -> Result<()> {
+    ensure!(echoed as usize == s, "trunk {s} answered as shard {echoed}");
+    ensure!(round == t as u64, "shard {s} answered round {round}, expected {t}");
+    ensure!(
+        wsum.is_finite() && wsum >= 0.0,
+        "shard {s} sent a malformed weight sum {wsum}"
+    );
+    let mut prev: Option<u32> = None;
+    for e in entries {
+        let w = e.worker as usize;
+        ensure!(
+            lo <= w && w < hi,
+            "shard {s} entry for worker {w} outside its range [{lo}, {hi})"
+        );
+        ensure!(
+            planned.get(w).copied().unwrap_or(false),
+            "shard {s} entry for worker {w} not in this round's sample"
+        );
+        if let Some(p) = prev {
+            ensure!(e.worker > p, "shard {s} entries not strictly ascending");
+        }
+        prev = Some(e.worker);
+    }
+    if !entries.is_empty() {
+        ensure!(
+            partial.len() == dim,
+            "shard {s} partial has dim {}, expected {dim}",
+            partial.len()
+        );
+    }
+    Ok(())
+}
+
+/// Drive a full federated run as the *root* of an aggregation tree:
+/// `trunks[s]` is shard `s`'s handshaken trunk link (from
+/// [`accept_aggregators`]). Per round: broadcast theta down every
+/// trunk, account the logical per-worker downlink exactly like the flat
+/// engines, collect one `ShardUpdate` per live shard *in shard order*,
+/// replay the per-participant entries into the ledger and trace in
+/// ascending worker order, fold the loss and the partials in shard
+/// order (stage 2, [`apply_partials`]), and commit. The root holds only
+/// theta — no LBG store, no per-worker sessions — which is what makes
+/// its round cost O(shards).
+///
+/// Bit-identical to `run_fl` at the same `cfg.shards` per seed: same
+/// sampling, same tree arithmetic, same event stream, same ledger
+/// totals (wire-byte columns measure real frames and are excluded from
+/// cross-engine comparison, as in the flat suites).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_root_rounds(
+    trunks: &mut [Box<dyn Link>],
+    eval_trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    weights: Vec<f32>,
+    cfg: &FlConfig,
+    round_deadline: Duration,
+    name: &str,
+) -> Result<(RunSeries, CommLedger, Vec<f32>)> {
+    let shards = trunks.len();
+    let k = weights.len();
+    ensure!(shards >= 2, "sharded root needs >= 2 trunks, got {shards}");
+    ensure!(
+        cfg.shards == shards,
+        "cfg.shards = {} but {shards} trunks are connected",
+        cfg.shards
+    );
+    ensure!(shards <= k, "shards ({shards}) cannot exceed workers ({k})");
+    ensure!(
+        cfg.wire_codec == WireCodec::Raw,
+        "sharded aggregation requires the raw wire codec"
+    );
+    if let Some(plan) = &cfg.faults {
+        ensure!(
+            plan.events.iter().all(|e| e.kind != FaultKind::Sever),
+            "sever events are not supported with shards > 1"
+        );
+    }
+    let mut theta = theta0;
+    let dim = theta.len();
+    let eta = cfg.eta;
+    let mut series = RunSeries::new(name);
+    let mut ledger = CommLedger::new(k);
+    if let Some(tiers) = &cfg.tiers {
+        ledger.set_tiers(tiers.clone());
+    }
+    let mut timers = PhaseTimer::new();
+    let mut uplink_kinds = UplinkTracker::new(k);
+
+    for t in 0..cfg.rounds {
+        let start = Instant::now(); // lint: allow(determinism, "round wall-clock metric: observability only, never fed into aggregation")
+        let t_comm0 = timers.get("comm");
+        let t_aggregate0 = timers.get("aggregate");
+
+        let planned = sample_clients(t, k, cfg.sample_fraction, cfg.seed);
+        record_to(
+            &cfg.trace,
+            Event::RoundStart { t: t as u32, sampled: planned.len() as u32 },
+        );
+
+        // Downlink: one encoded Round frame fanned down every trunk in
+        // shard order. A trunk whose send fails marks its whole shard
+        // absent for the round (its workers are fault-counted below)
+        // instead of killing the run.
+        let frame = Frame::Round { t: t as u64, theta: theta.clone() };
+        let encoded = frame.to_bytes();
+        let raw_len = encoded.len() as u64;
+        let down = dense_cost(dim);
+        let mut live: Vec<bool> = Vec::with_capacity(shards);
+        timers.time("comm", || {
+            for (s, trunk) in trunks.iter_mut().enumerate() {
+                match trunk.send_raw(&encoded) {
+                    Ok(_) => live.push(true),
+                    Err(e) => {
+                        obs_warn!("net: shard {s} trunk unreachable for round {t}: {e:#}");
+                        live.push(false);
+                    }
+                }
+            }
+        });
+        // Per-worker downlink accounting in planned order, mirroring the
+        // flat engines: the aggregator relays the identical Round bytes,
+        // so each sampled worker of a live shard is charged one raw
+        // broadcast. Workers behind a dead trunk are faulted here (the
+        // flat path's send-failure branch).
+        let mut planned_mask = vec![false; k];
+        for &w in &planned {
+            if let Some(m) = planned_mask.get_mut(w) {
+                *m = true;
+            }
+            if live.get(shard_of(w, k, shards)).copied().unwrap_or(false) {
+                ledger.record_down(w, down);
+                ledger.record_wire_down(w, raw_len);
+                ledger.record_wire_down_raw(w, raw_len);
+                record_to(
+                    &cfg.trace,
+                    Event::BroadcastSent { t: t as u32, worker: w as u32, floats: down.floats },
+                );
+            } else {
+                record_to(&cfg.trace, Event::Sever { t: t as u32, worker: w as u32 });
+                ledger.record_fault(w);
+            }
+        }
+
+        // Uplink: one ShardUpdate per live trunk, received in shard
+        // order. The trunk window nests the mid-tier's own collection
+        // window (which starts later and runs `round_deadline` itself),
+        // so it spans two deadlines.
+        // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
+        let deadline = Instant::now() + round_deadline + round_deadline;
+        let mut arrivals: Vec<Option<ShardArrival>> = Vec::with_capacity(shards);
+        timers.time("comm", || {
+            for (s, trunk) in trunks.iter_mut().enumerate() {
+                if !live.get(s).copied().unwrap_or(false) {
+                    arrivals.push(None);
+                    continue;
+                }
+                let (lo, hi) = shard_bounds(s, k, shards);
+                let max_total =
+                    wire::HEADER_LEN + trunk_max_payload(dim, hi - lo) + wire::CHECKSUM_LEN;
+                let mut arrival = None;
+                let mut drains = 0usize;
+                loop {
+                    // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
+                    let remaining = deadline.saturating_duration_since(Instant::now()).max(MIN_TRUNK_WAIT);
+                    if let Err(e) = trunk.set_recv_timeout(Some(remaining)) {
+                        obs_warn!("net: shard {s} trunk lost its clock (round {t}): {e:#}");
+                        break;
+                    }
+                    match recv_frame(trunk.as_mut(), max_total) {
+                        Ok(Frame::ShardUpdate {
+                            shard: echoed,
+                            round,
+                            wsum,
+                            train_loss_sum,
+                            partial,
+                            entries,
+                        }) => {
+                            if round < t as u64 {
+                                drains += 1;
+                                if drains > MAX_TRUNK_STALE_DRAINS {
+                                    obs_warn!(
+                                        "net: shard {s} streaming stale rounds; marking \
+                                         it absent from round {t}"
+                                    );
+                                    break;
+                                }
+                                continue;
+                            }
+                            match validate_shard_update(
+                                s, t, lo, hi, dim, &planned_mask, echoed, round, wsum,
+                                &partial, &entries,
+                            ) {
+                                Ok(()) => {
+                                    arrival = Some(ShardArrival {
+                                        wsum,
+                                        loss: train_loss_sum,
+                                        partial,
+                                        entries,
+                                    });
+                                }
+                                Err(e) => obs_warn!(
+                                    "net: shard {s} update rejected (round {t}): {e:#}"
+                                ),
+                            }
+                            break;
+                        }
+                        Ok(f) => {
+                            obs_warn!(
+                                "net: shard {s} sent unexpected frame tag {} (round {t})",
+                                f.tag()
+                            );
+                            break;
+                        }
+                        Err(e) => {
+                            obs_warn!("net: shard {s} absent from round {t}: {e:#}");
+                            break;
+                        }
+                    }
+                }
+                arrivals.push(arrival);
+            }
+        });
+
+        // Replay the per-participant accounting in ascending worker
+        // order (shards are contiguous ascending ranges; entries are
+        // ascending within each), so the WorkerUplink stream matches the
+        // flat engines' collect loop event-for-event.
+        let mut arrived_mask = vec![false; k];
+        let mut participants = 0usize;
+        let mut full_sends = 0usize;
+        let mut scalar_sends = 0usize;
+        for a in arrivals.iter().flatten() {
+            for e in &a.entries {
+                let w = e.worker as usize;
+                ledger.record_wire_up(w, e.wire);
+                ledger.record_wire_up_raw(w, e.wire);
+                ledger.record(w, Cost { floats: e.floats, bits: e.bits }, e.scalar);
+                record_to(
+                    &cfg.trace,
+                    Event::WorkerUplink {
+                        t: t as u32,
+                        worker: e.worker,
+                        kind: uplink_kinds.classify_wire(w, e.scalar, false),
+                        floats: e.floats,
+                    },
+                );
+                if let Some(m) = arrived_mask.get_mut(w) {
+                    *m = true;
+                }
+                participants += 1;
+                if e.scalar {
+                    scalar_sends += 1;
+                } else {
+                    full_sends += 1;
+                }
+            }
+        }
+
+        // Stage-2 loss fold in shard order. An absent or empty shard
+        // contributes exactly +0.0 in `tree_loss_sum`, which is the
+        // additive identity here (the accumulator starts at +0.0 and
+        // per-shard sums are finite), so skipping them is bit-exact.
+        let mut loss_total = 0.0f64;
+        for a in arrivals.iter().flatten() {
+            loss_total += a.loss;
+        }
+
+        // Stage 2: fold the partials into theta in shard order. Shards
+        // with no participants are skipped — the same bit-exact identity
+        // as `Server::apply_tree`'s empty-shard handling.
+        if participants > 0 {
+            let parts: Vec<ShardPartial> = arrivals
+                .iter()
+                .flatten()
+                .filter(|a| !a.entries.is_empty())
+                .map(|a| ShardPartial {
+                    wsum: a.wsum,
+                    participants: a.entries.len(),
+                    partial: &a.partial,
+                })
+                .collect();
+            timers.time("aggregate", || apply_partials(&mut theta, eta, &parts))?;
+        }
+
+        // Absences surface at commit time in planned order — the shared
+        // placement across all engines. Workers behind a dead trunk were
+        // already fault-counted at broadcast, so only live shards'
+        // no-shows are counted here.
+        for &w in &planned {
+            if arrived_mask.get(w).copied().unwrap_or(false) {
+                continue;
+            }
+            if cfg.trace.is_some() {
+                record_to(&cfg.trace, Event::FaultInjected { t: t as u32, worker: w as u32 });
+            }
+            if live.get(shard_of(w, k, shards)).copied().unwrap_or(false) {
+                ledger.record_fault(w);
+            }
+        }
+        record_to(
+            &cfg.trace,
+            Event::RoundCommit {
+                t: t as u32,
+                participants: participants as u32,
+                faults: (planned.len() - participants) as u32,
+            },
+        );
+
+        let mut rec = RoundRecord {
+            round: t,
+            train_loss: train_loss_or_carry(loss_total, participants, &series),
+            floats_up: ledger.total_floats,
+            bits_up: ledger.total_bits,
+            floats_down: ledger.down_floats,
+            bits_down: ledger.down_bits,
+            wire_up_bytes: ledger.wire_up_bytes,
+            wire_down_bytes: ledger.wire_down_bytes,
+            wire_up_raw_bytes: ledger.wire_up_raw_bytes,
+            wire_down_raw_bytes: ledger.wire_down_raw_bytes,
+            full_sends,
+            scalar_sends,
+            wall_secs: start.elapsed().as_secs_f64(),
+            participants,
+            faults: planned.len() - participants,
+            t_comm: timers.get("comm") - t_comm0,
+            t_aggregate: timers.get("aggregate") - t_aggregate0,
+            tiers: ledger.tier_totals(),
+            ..Default::default()
+        };
+        eval_or_carry(&mut rec, &series, t, cfg.rounds, cfg.eval_every, &mut || {
+            eval_trainer.eval(&theta)
+        })?;
+        series.push(rec);
+    }
+
+    // Orderly teardown: every trunk gets a Shutdown (forwarded by the
+    // aggregators to their workers); one that already died is not fatal.
+    for trunk in trunks.iter_mut() {
+        let _ = trunk.send(&Frame::Shutdown);
+    }
+    Ok((series, ledger, theta))
+}
+
+/// Run a full *sharded* federated deployment over TCP loopback in one
+/// process: a root listener, `cfg.shards` aggregator threads (each
+/// connecting its trunk, then accepting its worker range on its own
+/// ephemeral listener), and one worker thread per federation member
+/// connecting to its shard's aggregator through the stock
+/// [`connect_worker_with_retry`] loop. Chaos plans wrap the
+/// *aggregator-side* worker links (global worker ids), exactly where
+/// the flat engines wrap theirs. [`run_tcp_fl`](super::run_tcp_fl)
+/// delegates here when `cfg.shards > 1`.
+pub fn run_sharded_tcp_fl<T, F>(
+    make_trainer: F,
+    eval_trainer: &mut dyn LocalTrainer,
+    theta0: Vec<f32>,
+    weights: Vec<f32>,
+    cfg: &FlConfig,
+    codec: &dyn Fn() -> Box<dyn Compressor>,
+    name: &str,
+) -> Result<(RunSeries, CommLedger, Vec<f32>)>
+where
+    T: LocalTrainer + Send + 'static,
+    F: Fn(usize) -> T,
+{
+    let k = weights.len();
+    let shards = cfg.shards;
+    ensure!(shards >= 2, "run_sharded_tcp_fl needs cfg.shards >= 2, got {shards}");
+    ensure!(shards <= k, "shards ({shards}) cannot exceed workers ({k})");
+    let dim = theta0.len();
+    let root_listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let root_addr = root_listener.local_addr()?;
+
+    // Aggregator tier: each node binds its worker listener first (so
+    // worker connects queue in the kernel backlog), then handshakes its
+    // trunk, assembles its shard, and serves rounds.
+    let mut shard_addrs = Vec::with_capacity(shards);
+    let mut agg_handles = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        shard_addrs.push(listener.local_addr()?);
+        let (lo, hi) = shard_bounds(s, k, shards);
+        let cfg = cfg.clone();
+        let weights = weights.clone();
+        agg_handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut root = TcpLink::new(TcpStream::connect(root_addr)?)?;
+            root.set_recv_timeout(Some(DEFAULT_HANDSHAKE_TIMEOUT))?;
+            handshake_root(&mut root, s as u32, lo, hi, dim, cfg.seed)?;
+            root.set_recv_timeout(None)?;
+            let acceptor = Acceptor::spawn(listener, k, dim, &cfg, DEFAULT_HANDSHAKE_TIMEOUT)?;
+            let (mut links, _codecs) = acceptor.wait_for_range(lo, hi)?;
+            drop(acceptor); // no mid-run re-seat in sharded mode
+            if let Some(plan) = &cfg.faults {
+                let plan = Arc::new(plan.clone());
+                links = links
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, l)| {
+                        Box::new(ChaosLink::wrap(l, lo + i, Arc::clone(&plan)))
+                            as Box<dyn Link>
+                    })
+                    .collect();
+            }
+            run_aggregator_rounds(
+                &mut root,
+                &mut links,
+                s as u32,
+                lo,
+                dim,
+                &weights,
+                &cfg,
+                DEFAULT_ROUND_DEADLINE,
+            )
+        }));
+    }
+
+    // Worker tier: stock clients, pointed at their shard's aggregator.
+    let wire_codec = cfg.wire_codec;
+    let mut worker_handles = Vec::with_capacity(k);
+    for id in 0..k {
+        let addr = *shard_addrs
+            .get(shard_of(id, k, shards))
+            .context("shard address table shorter than the partition")?;
+        let mut trainer = make_trainer(id);
+        let codec = codec();
+        worker_handles.push(std::thread::spawn(move || -> Result<usize> {
+            connect_worker_with_retry(
+                addr,
+                id,
+                &mut trainer,
+                codec,
+                wire_codec,
+                &ReconnectCfg::default(),
+            )
+        }));
+    }
+
+    let mut trunks =
+        accept_aggregators(&root_listener, k, dim, cfg, DEFAULT_HANDSHAKE_TIMEOUT)?;
+    let out = run_sharded_root_rounds(
+        &mut trunks,
+        eval_trainer,
+        theta0,
+        weights,
+        cfg,
+        DEFAULT_ROUND_DEADLINE,
+        name,
+    )?;
+    for h in agg_handles {
+        h.join().map_err(|_| anyhow::anyhow!("aggregator thread panicked"))??;
+    }
+    for h in worker_handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::MemLink;
+
+    #[test]
+    fn shard_tokens_are_domain_separated() {
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            for id in 0..8u32 {
+                assert_ne!(
+                    shard_token(seed, id),
+                    session_token(seed, id),
+                    "seed {seed} id {id}: shard and worker token streams collided"
+                );
+            }
+        }
+        // Deterministic per (seed, shard), distinct across shards.
+        assert_eq!(shard_token(42, 1), shard_token(42, 1));
+        assert_ne!(shard_token(42, 0), shard_token(42, 1));
+    }
+
+    #[test]
+    fn trunk_cap_covers_a_worst_case_shard_update() {
+        for (dim, workers) in [(1usize, 1usize), (24, 3), (64, 17), (1000, 256)] {
+            let entries: Vec<ShardEntry> = (0..workers)
+                .map(|i| ShardEntry {
+                    worker: i as u32,
+                    scalar: false,
+                    floats: dim as u64,
+                    bits: 32 * dim as u64,
+                    wire: u64::MAX,
+                })
+                .collect();
+            let f = Frame::ShardUpdate {
+                shard: 0,
+                round: u64::MAX,
+                wsum: 1.0,
+                train_loss_sum: 0.5,
+                partial: vec![0.0; dim],
+                entries,
+            };
+            assert!(
+                f.wire_bytes()
+                    <= wire::HEADER_LEN + trunk_max_payload(dim, workers) + wire::CHECKSUM_LEN,
+                "dim {dim} x {workers} workers overflows the trunk cap"
+            );
+        }
+    }
+
+    #[test]
+    fn trunk_handshake_happy_path_and_rejections() {
+        let cfg = FlConfig { shards: 2, seed: 42, ..FlConfig::default() };
+        let (k, dim) = (4usize, 8usize);
+
+        // Happy path: shard 1 owns [2, 4) under (k=4, shards=2).
+        let (mut root_side, agg_side) = MemLink::pair();
+        let h = std::thread::spawn(move || {
+            let mut l = agg_side;
+            handshake_root(&mut l, 1, 2, 4, dim, 42)
+        });
+        let s = handshake_shard(&mut root_side, k, dim, &cfg).unwrap();
+        assert_eq!(s, 1);
+        h.join().unwrap().unwrap();
+
+        // Wrong worker range for the claimed shard: rejected.
+        let (mut root_side, agg_side) = MemLink::pair();
+        let h = std::thread::spawn(move || {
+            let mut l = agg_side;
+            handshake_root(&mut l, 1, 0, 4, dim, 42)
+        });
+        let err = handshake_shard(&mut root_side, k, dim, &cfg).unwrap_err().to_string();
+        assert!(err.contains("partition owns"), "{err}");
+        drop(root_side);
+        assert!(h.join().unwrap().is_err());
+
+        // Out-of-range shard index: rejected.
+        let (mut root_side, agg_side) = MemLink::pair();
+        let h = std::thread::spawn(move || {
+            let mut l = agg_side;
+            handshake_root(&mut l, 5, 2, 4, dim, 42)
+        });
+        let err = handshake_shard(&mut root_side, k, dim, &cfg).unwrap_err().to_string();
+        assert!(err.contains("claims shard"), "{err}");
+        drop(root_side);
+        assert!(h.join().unwrap().is_err());
+
+        // Seed disagreement: the aggregator rejects the token.
+        let (mut root_side, agg_side) = MemLink::pair();
+        let h = std::thread::spawn(move || {
+            let mut l = agg_side;
+            handshake_root(&mut l, 1, 2, 4, dim, 43)
+        });
+        handshake_shard(&mut root_side, k, dim, &cfg).unwrap();
+        let err = h.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("shard-token mismatch"), "{err}");
+    }
+
+    /// One full aggregator round over MemLinks: a fake root broadcasts,
+    /// fake workers answer with full gradients, and the forwarded
+    /// `ShardUpdate` must carry exactly the stage-1 reduction
+    /// `shard_partial` computes in-memory.
+    #[test]
+    fn aggregator_round_matches_stage_one() {
+        let (k, dim, shards) = (4usize, 6usize, 2usize);
+        let s = 1usize;
+        let (lo, hi) = shard_bounds(s, k, shards); // [2, 4)
+        let weights = vec![0.25f32; k];
+        let cfg = FlConfig { sample_fraction: 1.0, seed: 5, shards, ..FlConfig::default() };
+
+        // Fake workers: answer every Round with a deterministic full grad.
+        let mut agg_links: Vec<Box<dyn Link>> = Vec::new();
+        let mut worker_threads = Vec::new();
+        for w in lo..hi {
+            let (agg_side, wrk_side) = MemLink::pair();
+            agg_links.push(Box::new(agg_side));
+            worker_threads.push(std::thread::spawn(move || {
+                let mut l = wrk_side;
+                loop {
+                    match l.recv() {
+                        Ok(Frame::Round { t, theta }) => {
+                            let grad: Vec<f32> =
+                                theta.iter().map(|x| x + 1.0 + w as f32).collect();
+                            let msg = WorkerMsg {
+                                worker: w,
+                                round: t as usize,
+                                payload: Payload::Full { grad: Arc::new(grad) },
+                                cost: dense_cost(theta.len()),
+                                train_loss: 0.5 + w as f64,
+                            };
+                            l.send(&Frame::Update(msg)).unwrap();
+                        }
+                        _ => break,
+                    }
+                }
+            }));
+        }
+
+        // The aggregator under test, driven by a fake root.
+        let (mut root_side, agg_root_side) = MemLink::pair();
+        let weights2 = weights.clone();
+        let agg = std::thread::spawn(move || {
+            let mut root = agg_root_side;
+            run_aggregator_rounds(
+                &mut root,
+                &mut agg_links,
+                s as u32,
+                lo,
+                dim,
+                &weights2,
+                &cfg,
+                Duration::from_secs(10),
+            )
+        });
+
+        let theta = vec![0.5f32; dim];
+        root_side.send(&Frame::Round { t: 0, theta: theta.clone() }).unwrap();
+        root_side.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        root_side.set_recv_limit(trunk_max_payload(dim, hi - lo));
+        let up = recv_frame(
+            &mut root_side,
+            wire::HEADER_LEN + trunk_max_payload(dim, hi - lo) + wire::CHECKSUM_LEN,
+        )
+        .unwrap();
+        let Frame::ShardUpdate { shard, round, wsum, train_loss_sum, partial, entries } = up
+        else {
+            panic!("expected ShardUpdate");
+        };
+        assert_eq!((shard, round), (s as u32, 0));
+        assert_eq!(
+            entries.iter().map(|e| e.worker as usize).collect::<Vec<_>>(),
+            (lo..hi).collect::<Vec<_>>()
+        );
+        assert!(entries.iter().all(|e| !e.scalar && e.wire > 0));
+
+        // Expected stage-1 reduction, computed directly.
+        let msgs: Vec<WorkerMsg> = (lo..hi)
+            .map(|w| WorkerMsg {
+                worker: w,
+                round: 0,
+                payload: Payload::Full {
+                    grad: Arc::new(
+                        theta.iter().map(|x| x + 1.0 + w as f32).collect::<Vec<f32>>(),
+                    ),
+                },
+                cost: dense_cost(dim),
+                train_loss: 0.5 + w as f64,
+            })
+            .collect();
+        let mut want = vec![0.0f32; dim];
+        let want_wsum =
+            shard_partial(&msgs, &weights, &LbgStore::new(k), &mut want).unwrap();
+        assert_eq!(wsum.to_bits(), want_wsum.to_bits());
+        let want_loss: f64 = msgs.iter().map(|m| m.train_loss).sum();
+        assert_eq!(train_loss_sum.to_bits(), want_loss.to_bits());
+        assert_eq!(
+            partial.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        root_side.send(&Frame::Shutdown).unwrap();
+        agg.join().unwrap().unwrap();
+        for h in worker_threads {
+            h.join().unwrap();
+        }
+    }
+}

@@ -41,6 +41,17 @@
 //! *dequantized* values so both ends keep scaling the same basis vector.
 //! Scalar uplinks and raw sessions use the plain v1/v2 frames, which is
 //! what keeps a raw session byte-identical to protocol v2.
+//!
+//! # Connecting via an aggregator (sharded topology)
+//!
+//! Under sharded aggregation ([`super::aggregator`]) a worker does not
+//! talk to the root at all: it connects to its shard's mid-tier
+//! aggregator address and speaks *exactly* this protocol — the same
+//! `Hello`/`Welcome` handshake, the same `Round`/`Update`/`Shutdown`
+//! frames. The aggregator terminates the session locally (it owns the
+//! shard's per-worker LBG state), so nothing in this module changes for
+//! the sharded topology; only the address the worker dials differs
+//! (`shard_of(id, fleet, shards)` picks the shard).
 
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;

@@ -24,7 +24,7 @@
 //! [`ChaosLink`](crate::sim::ChaosLink), decorates any link with a seeded
 //! fault-injection schedule for torture tests.
 
-use std::io::{BufReader, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
 use std::time::Duration;
@@ -50,6 +50,19 @@ pub trait Link: Send {
 
     /// Block until the next frame arrives (or the receive timeout fires).
     fn recv(&mut self) -> Result<Frame>;
+
+    /// Nonblocking receive: `Ok(Some(frame))` when a complete frame is
+    /// available *now*, `Ok(None)` when no complete frame has arrived yet
+    /// (poll again later), `Err` on a dead or desynchronized link. This
+    /// is the readiness primitive the pooled uplink collector drives —
+    /// one thread multiplexes many links by polling instead of parking
+    /// one blocked thread per link. Byte-stream transports accumulate
+    /// partial frames internally across polls; a later blocking
+    /// [`Link::recv`] on the same link drains that accumulation first, so
+    /// the two receive styles can be mixed without desyncing the stream.
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
+        anyhow::bail!("this link does not support nonblocking receive")
+    }
 
     /// Bound subsequent [`Link::recv`] calls; `None` blocks indefinitely.
     /// The timeout must be nonzero.
@@ -105,6 +118,11 @@ pub struct TcpLink {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     recv_limit: usize,
+    /// Partial-frame accumulation for [`Link::try_recv`]: bytes of the
+    /// in-flight frame read so far. A blocking [`Link::recv`] drains this
+    /// before touching the stream, so mixing the two receive styles never
+    /// desyncs the frame boundary.
+    rx_buf: Vec<u8>,
 }
 
 impl TcpLink {
@@ -115,7 +133,19 @@ impl TcpLink {
             reader: BufReader::new(stream),
             writer,
             recv_limit: wire::MAX_PAYLOAD,
+            rx_buf: Vec::with_capacity(0),
         })
+    }
+
+    /// If `rx_buf` holds a complete frame, split it off and decode it.
+    fn take_buffered_frame(&mut self) -> Result<Option<Frame>> {
+        if let Some(total) = wire::frame_len(&self.rx_buf, self.recv_limit)? {
+            if self.rx_buf.len() >= total {
+                let bytes: Vec<u8> = self.rx_buf.drain(..total).collect();
+                return Frame::from_bytes(&bytes).map(Some);
+            }
+        }
+        Ok(None)
     }
 }
 
@@ -126,7 +156,56 @@ impl Link for TcpLink {
     }
 
     fn recv(&mut self) -> Result<Frame> {
+        // Finish any frame a try_recv poll left half-buffered first.
+        if !self.rx_buf.is_empty() {
+            loop {
+                if let Some(frame) = self.take_buffered_frame()? {
+                    return Ok(frame);
+                }
+                let mut tmp = [0u8; 4096];
+                let n = self.reader.read(&mut tmp).context("TCP recv")?;
+                anyhow::ensure!(n > 0, "connection closed mid-frame");
+                self.rx_buf.extend_from_slice(&tmp[..n]);
+            }
+        }
         Frame::read_from_limit(&mut self.reader, self.recv_limit)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
+        // Reads go through the BufReader (which may hold bytes from an
+        // earlier blocking read), with the socket toggled nonblocking for
+        // the duration of the poll.
+        self.reader
+            .get_ref()
+            .set_nonblocking(true)
+            .context("enabling nonblocking TCP receive")?;
+        let polled = (|| -> Result<Option<Frame>> {
+            loop {
+                if let Some(frame) = self.take_buffered_frame()? {
+                    return Ok(Some(frame));
+                }
+                let mut tmp = [0u8; 4096];
+                match self.reader.read(&mut tmp) {
+                    Ok(0) => anyhow::bail!("connection closed"),
+                    Ok(n) => self.rx_buf.extend_from_slice(&tmp[..n]),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        return Ok(None)
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("TCP try_recv"),
+                }
+            }
+        })();
+        let restored = self
+            .reader
+            .get_ref()
+            .set_nonblocking(false)
+            .context("restoring blocking TCP receive");
+        match (polled, restored) {
+            (Err(e), _) => Err(e),
+            (Ok(_), Err(e)) => Err(e),
+            (Ok(v), Ok(())) => Ok(v),
+        }
     }
 
     fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
@@ -206,6 +285,22 @@ impl Link for MemLink {
             self.recv_limit
         );
         Frame::from_bytes(&bytes)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
+        let bytes = match self.rx.try_recv() {
+            Ok(bytes) => bytes,
+            Err(mpsc::TryRecvError::Empty) => return Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => anyhow::bail!("peer hung up"),
+        };
+        // Same protocol rules as the blocking path.
+        anyhow::ensure!(
+            bytes.len() <= wire::HEADER_LEN + self.recv_limit + wire::CHECKSUM_LEN,
+            "frame of {} bytes exceeds receive limit {}",
+            bytes.len(),
+            self.recv_limit
+        );
+        Frame::from_bytes(&bytes).map(Some)
     }
 
     fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
@@ -293,6 +388,11 @@ impl Link for SimLink {
         self.inner.recv()
     }
 
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
+        // Shaping is send-side; the receive path just delegates.
+        self.inner.try_recv()
+    }
+
     fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
         self.inner.set_recv_timeout(timeout)
     }
@@ -340,6 +440,96 @@ mod tests {
         b.set_recv_limit(wire::MAX_PAYLOAD);
         a.send(&Frame::Round { t: 1, theta: vec![0.0; 64] }).unwrap();
         assert!(b.recv().is_ok());
+    }
+
+    #[test]
+    fn mem_link_try_recv_is_nonblocking() {
+        let (mut a, mut b) = MemLink::pair();
+        assert!(a.try_recv().unwrap().is_none());
+        b.send(&Frame::Hello { worker: 2, dim: 8 }).unwrap();
+        match a.try_recv().unwrap() {
+            Some(Frame::Hello { worker, dim }) => {
+                assert_eq!(worker, 2);
+                assert_eq!(dim, 8);
+            }
+            other => panic!("wrong poll result {other:?}"),
+        }
+        assert!(a.try_recv().unwrap().is_none());
+        drop(b);
+        assert!(a.try_recv().is_err());
+    }
+
+    #[test]
+    fn tcp_try_recv_accumulates_partial_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let encoded = Frame::Round { t: 6, theta: vec![0.5; 32] }.to_bytes();
+        let (head, tail) = encoded.split_at(7);
+        let (head, tail) = (head.to_vec(), tail.to_vec());
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&head).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(50));
+            s.write_all(&tail).unwrap();
+            s.flush().unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut link = TcpLink::new(stream).unwrap();
+        // Poll until the split frame assembles; partial bytes must yield
+        // Ok(None), never an error or a garbled frame.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let frame = loop {
+            match link.try_recv().unwrap() {
+                Some(f) => break f,
+                None => {
+                    assert!(std::time::Instant::now() < deadline, "frame never assembled");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        };
+        match frame {
+            Frame::Round { t, theta } => {
+                assert_eq!(t, 6);
+                assert_eq!(theta, vec![0.5; 32]);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let _stream = client.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_blocking_recv_drains_try_recv_accumulation() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let encoded = Frame::Round { t: 9, theta: vec![1.0; 16] }.to_bytes();
+        let (head, tail) = encoded.split_at(20);
+        let (head, tail) = (head.to_vec(), tail.to_vec());
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&head).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(50));
+            s.write_all(&tail).unwrap();
+            s.flush().unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut link = TcpLink::new(stream).unwrap();
+        link.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        // One poll buffers the head; the blocking recv must then complete
+        // the same frame instead of desyncing at byte 20.
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(link.try_recv().unwrap().is_none());
+        match link.recv().unwrap() {
+            Frame::Round { t, theta } => {
+                assert_eq!(t, 9);
+                assert_eq!(theta, vec![1.0; 16]);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let _stream = client.join().unwrap();
     }
 
     #[test]

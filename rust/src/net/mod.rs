@@ -13,17 +13,30 @@
 //!   shaping for straggler and slow-uplink scenarios).
 //! * [`server`] — the concurrent, elastic round driver: a dedicated
 //!   accept thread handshakes connections in parallel and keeps listening
-//!   for mid-run rejoins, per-worker collector threads gather uplinks
-//!   concurrently under the shared round deadline, and aggregation still
-//!   reduces in deterministic participant order (partial participation: a
-//!   worker that misses the deadline is fault-counted and skipped, not
-//!   fatal — and free to rejoin).
+//!   for mid-run rejoins, a small fixed readiness pool polls every live
+//!   session's recv state machine under the shared round deadline
+//!   ([`collect_uplinks_ready`] — no O(fleet) collector threads), and
+//!   aggregation still reduces in deterministic participant order
+//!   (partial participation: a worker that misses the deadline is
+//!   fault-counted and skipped, not fatal — and free to rejoin).
 //! * [`client`] — the worker loop: handshake, train on `Round`, uplink an
 //!   `Update`, exit on `Shutdown`; [`connect_worker_with_retry`] adds a
 //!   capped-backoff reconnect loop that re-handshakes with `Rejoin` (or
 //!   the token-authenticated `Rejoin3`) and carries the LBGM state across
 //!   connections, plus a bounded serve-phase recv deadline so a server
 //!   that dies without closing its sockets cannot wedge the worker.
+//! * [`aggregator`] — wire protocol v4's sharded aggregation tier: a
+//!   mid-tier node handshakes its contiguous worker shard with the flat
+//!   protocol, pre-reduces uplinks in participant order
+//!   ([`shard_partial`](crate::coordinator::server::shard_partial)), and
+//!   forwards one `ShardUpdate` (combined partial + per-worker ledger
+//!   entries) up a trunk link to the root, which folds trunk partials in
+//!   shard order
+//!   ([`apply_partials`](crate::coordinator::server::apply_partials)).
+//!   Per-node
+//!   round cost drops from O(fleet) to O(fleet/shards) while theta,
+//!   traces, and ledger totals stay bit-identical to the in-memory
+//!   engines *at the same `shards` setting*.
 //! * [`quant`] — wire protocol v3's value codecs (`q8`/`f16`), selected
 //!   per session by `FlConfig::wire_codec`: quantized `RoundQ`/`UpdateQ`
 //!   frames with error feedback on both ends, delta-encoded broadcasts,
@@ -53,17 +66,23 @@
 //!
 //! [`CommLedger`]: crate::coordinator::CommLedger
 
+pub mod aggregator;
 pub mod client;
 pub mod link;
 pub mod quant;
 pub mod server;
 pub mod wire;
 
+pub use aggregator::{
+    accept_aggregators, handshake_root, handshake_shard, run_aggregator_rounds,
+    run_sharded_root_rounds, run_sharded_tcp_fl, shard_token, trunk_max_payload,
+};
 pub use client::{connect_worker, connect_worker_with_retry, run_worker, ReconnectCfg};
 pub use link::{recv_frame, send_frame, Link, LinkProfile, MemLink, SimLink, TcpLink};
 pub use server::{
-    accept_workers, handshake_accept, handshake_one, run_server_rounds,
-    run_server_rounds_elastic, Acceptor, ElasticOpts, HandshakeOutcome, Session,
+    accept_workers, collect_uplinks_ready, handshake_accept, handshake_one,
+    run_server_rounds, run_server_rounds_elastic, Acceptor, CollectOutcome,
+    ElasticOpts, HandshakeOutcome, Session,
 };
 pub use wire::{Decode, Encode, Frame};
 
@@ -112,6 +131,20 @@ where
     T: LocalTrainer + Send + 'static,
     F: Fn(usize) -> T,
 {
+    if cfg.shards > 1 {
+        // Sharded topology: one mid-tier aggregator per shard between the
+        // workers and the root. Same seed + same `shards` is bit-identical
+        // to the in-memory engines at that `shards` setting.
+        return aggregator::run_sharded_tcp_fl(
+            make_trainer,
+            eval_trainer,
+            theta0,
+            weights,
+            cfg,
+            codec,
+            name,
+        );
+    }
     let k = weights.len();
     let listener = TcpListener::bind(("127.0.0.1", 0))?;
     let addr = listener.local_addr()?;

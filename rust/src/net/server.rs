@@ -3,20 +3,29 @@
 //!
 //! Three cooperating pieces:
 //!
-//! * **A dedicated accept thread** ([`Acceptor`]) that listens for the
-//!   whole run and handshakes every connection on its own short-lived
-//!   thread — one silent or slow socket can no longer stall the accept
-//!   loop for `handshake_timeout` while honest workers wait. Handshaken
-//!   connections flow to the round loop through an mpsc registry of
-//!   [`Session`]s (fresh `Hello`s and mid-run `Rejoin`s alike).
-//! * **Concurrent uplink collection**: each round, every reachable
-//!   worker's update is collected on its own scoped thread against the
-//!   *shared absolute deadline* — a straggler burns only its own budget,
-//!   instead of starving every worker later in participant order down to
-//!   a clamped 1 ms receive window. The main thread still reduces the
-//!   arrived updates in **participant order**, so aggregation stays
-//!   bit-identical to the sequential engine per seed (asserted by
-//!   `tests/net_loopback.rs` and `tests/engine_parity.rs`).
+//! * **A dedicated accept thread** ([`Acceptor`]) that blocks in
+//!   `accept` for the whole run — no polling cadence; [`Acceptor::stop`]
+//!   wakes it with a throwaway loopback connection — and hands every
+//!   connection to a small fixed handshake pool, so one silent or slow
+//!   socket can no longer stall the accept loop for `handshake_timeout`
+//!   while honest workers wait, and an idle server burns ~no CPU.
+//!   Handshaken connections flow to the round loop through an mpsc
+//!   registry of [`Session`]s (fresh `Hello`s and mid-run `Rejoin`s
+//!   alike); a connection that fails its handshake — or that no pool
+//!   thread could take — is counted ([`Acceptor::rejected`]) and
+//!   surfaced as a `HandshakeRejected` diagnostic, never silently lost.
+//! * **Readiness-loop uplink collection**: each round, every reachable
+//!   worker's update is driven by a per-session receive state machine
+//!   polled via [`Link::try_recv`] from a fixed pool of at most
+//!   [`COLLECT_POOL_MAX`] scoped threads ([`collect_uplinks_ready`]) —
+//!   never one thread per worker, so fleet size costs sessions, not
+//!   stacks — against the *shared absolute deadline*: a straggler burns
+//!   only its own budget, instead of starving every worker later in
+//!   participant order down to a clamped 1 ms receive window. The main
+//!   thread still reduces the arrived updates in **participant order**,
+//!   so aggregation stays bit-identical to the sequential engine per
+//!   seed (asserted by `tests/net_loopback.rs` and
+//!   `tests/engine_parity.rs`).
 //! * **Mid-run rejoin**: the accept thread keeps listening after round 0.
 //!   A returning worker re-handshakes with `Frame::Rejoin { worker,
 //!   last_round }` (wire protocol v2; v1 `Hello` is still accepted) or —
@@ -31,6 +40,17 @@
 //!   look-back state by forcing its first post-rejoin uplink to be `Full`
 //!   (see [`connect_worker_with_retry`]), which restores LBG coherence no
 //!   matter what was in flight when the connection died.
+//!
+//! **Sharded aggregation (protocol v4).** With `--shards N` (N ≥ 2) the
+//! fleet splits into contiguous worker shards, each fronted by a
+//! mid-tier [`aggregator`](crate::net::aggregator) node that pre-reduces
+//! its shard's updates in participant order and forwards one combined
+//! `ShardUpdate` to the root, so per-node round cost drops from O(fleet)
+//! to O(fleet/shards). The in-memory engines (including
+//! [`run_server_rounds_elastic`] here) mirror the same two-stage tree
+//! arithmetic whenever `cfg.shards > 1`, so theta, traces, and ledger
+//! totals stay bit-identical between the flat and sharded deployments
+//! per seed.
 //!
 //! **Wire value codecs (protocol v3).** A peer that opens with `Hello3`
 //! negotiates a value codec for the session: the server replies with its
@@ -65,9 +85,10 @@
 //! [`run_fl`]: crate::coordinator::round::run_fl
 //! [`connect_worker_with_retry`]: crate::net::client::connect_worker_with_retry
 
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -78,7 +99,7 @@ use crate::coordinator::accounting::CommLedger;
 use crate::coordinator::messages::{Payload, WorkerMsg};
 use crate::coordinator::round::{eval_or_carry, train_loss_or_carry, FlConfig};
 use crate::coordinator::sampling::sample_clients;
-use crate::coordinator::server::Server;
+use crate::coordinator::server::{tree_loss_sum, Server};
 use crate::coordinator::trainer::LocalTrainer;
 use crate::lbgm::ThresholdPolicy;
 use crate::metrics::{RoundRecord, RunSeries};
@@ -93,9 +114,25 @@ use super::link::{recv_frame, send_frame, Link, TcpLink};
 use super::quant;
 use super::wire::{self, Frame};
 
-/// Poll cadence of the nonblocking accept loop (how quickly a stop request
-/// is honored; accepted connections are handed off immediately).
+/// Backoff between consecutive *failing* `accept` calls. The accept loop
+/// itself blocks in the kernel (no polling cadence — [`Acceptor::stop`]
+/// wakes it with a loopback connection); this bound only keeps a
+/// persistent error like fd exhaustion from spinning the thread.
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Cap on handshake-pool threads (actually spawned:
+/// `min(available_parallelism, this)`). Handshakes are short and mostly
+/// waiting on the peer, so a few threads cover bursts; if *none* can
+/// spawn, the accept loop handshakes inline — degraded, never lossy.
+const HANDSHAKE_POOL_MAX: usize = 4;
+/// Cap on readiness-pool threads driving per-session receive state
+/// machines during uplink collection (see [`collect_uplinks_ready`]):
+/// the pool is `min(available_parallelism, this, sessions)`, never
+/// O(fleet).
+const COLLECT_POOL_MAX: usize = 8;
+/// Nap between readiness sweeps that made no progress: long enough that
+/// an idle fleet costs ~no CPU, short enough to add at most a
+/// sub-millisecond tail to any uplink.
+const IDLE_SWEEP_NAP: Duration = Duration::from_micros(500);
 /// Bound on post-deadline queue-drain attempts in [`collect_update`]: once
 /// the round deadline has expired, at most this many already-queued frames
 /// (stale or current) are read before the worker is declared absent — a
@@ -344,62 +381,151 @@ fn handshake_stream(
     })
 }
 
-/// The accept loop body: accept without blocking (so a stop request is
-/// honored promptly) and hand every connection to its own handshake
-/// thread. Handshake threads are deliberately detached — with a zero
-/// (= unbounded) handshake timeout a silent socket may sit in `recv`
-/// forever, and joining it would hang teardown; an orphaned thread dies
-/// with its socket instead.
 /// Consecutive hard `accept` failures tolerated before the accept loop
 /// gives up (closing the session registry, which surfaces as "accept
 /// thread exited" to anyone still waiting on it) instead of spinning and
 /// spamming stderr forever on a persistent error like fd exhaustion.
 const MAX_ACCEPT_ERRORS: u32 = 16;
 
+/// The queue between the accept thread and the handshake pool. Closed
+/// (waking every idle pool thread to exit) when the accept loop ends.
+/// Pool threads mid-handshake are deliberately not joined — with a zero
+/// (= unbounded) handshake timeout a silent socket may sit in `recv`
+/// forever, and joining it would hang teardown; an orphaned thread dies
+/// with its socket instead.
+struct HandshakeQueue {
+    /// Pending `(stream, peer)` jobs plus the closed flag, under one lock
+    /// so close-vs-push can never race a job into a dead queue.
+    jobs: Mutex<(VecDeque<(TcpStream, SocketAddr)>, bool)>,
+    ready: Condvar,
+}
+
+impl HandshakeQueue {
+    fn new() -> HandshakeQueue {
+        HandshakeQueue { jobs: Mutex::new((VecDeque::new(), false)), ready: Condvar::new() }
+    }
+
+    /// Enqueue one accepted connection; `false` if the queue is closed
+    /// (the caller then owns the rejection accounting).
+    fn push(&self, job: (TcpStream, SocketAddr)) -> bool {
+        let Ok(mut guard) = self.jobs.lock() else { return false };
+        if guard.1 {
+            return false;
+        }
+        guard.0.push_back(job);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Block for the next job; `None` once the queue is closed and drained.
+    fn pop(&self) -> Option<(TcpStream, SocketAddr)> {
+        let mut guard = self.jobs.lock().ok()?;
+        loop {
+            if let Some(job) = guard.0.pop_front() {
+                return Some(job);
+            }
+            if guard.1 {
+                return None;
+            }
+            guard = self.ready.wait(guard).ok()?;
+        }
+    }
+
+    fn close(&self) {
+        if let Ok(mut guard) = self.jobs.lock() {
+            guard.1 = true;
+        }
+        self.ready.notify_all();
+    }
+}
+
+/// Handshake one accepted stream and deliver the verdict: a [`Session`]
+/// into the registry on success; on failure, the shared rejection counter
+/// plus a `HandshakeRejected` diagnostic — so the fleet arithmetic stays
+/// accurate whether the handshake ran on a pool thread or inline.
+fn handshake_job(
+    stream: TcpStream,
+    peer: SocketAddr,
+    k: usize,
+    dim: usize,
+    cfg: &FlConfig,
+    timeout: Option<Duration>,
+    tx: &mpsc::Sender<Session>,
+    rejected: &AtomicU64,
+) {
+    match handshake_stream(stream, k, dim, cfg, timeout) {
+        Ok(session) => {
+            let (worker, rejoin) = match &session {
+                Session::Fresh { worker, .. } => (*worker, false),
+                Session::Rejoin { worker, .. } => (*worker, true),
+            };
+            record_to(
+                &cfg.trace,
+                Event::HandshakeAccepted { worker: worker as u32, rejoin },
+            );
+            // The round loop may already be gone (run over);
+            // a dropped registry just closes the socket.
+            let _ = tx.send(session);
+        }
+        Err(e) => {
+            rejected.fetch_add(1, Ordering::Relaxed);
+            record_to(&cfg.trace, Event::HandshakeRejected { code: 0 });
+            obs_warn!("net: rejecting connection from {peer}: {e:#}");
+        }
+    }
+}
+
+/// The accept loop body: block in `accept` (no polling — a stop request
+/// wakes the loop with a loopback connection) and enqueue every
+/// connection for the handshake pool; with no pool (`queue` is `None`:
+/// every pool-thread spawn failed), handshake inline instead, so a
+/// connection is never dropped without a verdict.
+#[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
+    queue: Option<Arc<HandshakeQueue>>,
     k: usize,
     dim: usize,
     cfg: FlConfig,
     timeout: Option<Duration>,
     tx: mpsc::Sender<Session>,
     stop: Arc<AtomicBool>,
+    rejected: Arc<AtomicU64>,
 ) {
     let mut hard_errors = 0u32;
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, peer)) => {
                 hard_errors = 0;
-                let tx = tx.clone();
-                let cfg = cfg.clone();
-                let spawned = thread::Builder::new()
-                    .name("fl-handshake".into())
-                    .spawn(move || match handshake_stream(stream, k, dim, &cfg, timeout) {
-                        Ok(session) => {
-                            let (worker, rejoin) = match &session {
-                                Session::Fresh { worker, .. } => (*worker, false),
-                                Session::Rejoin { worker, .. } => (*worker, true),
-                            };
-                            record_to(
-                                &cfg.trace,
-                                Event::HandshakeAccepted { worker: worker as u32, rejoin },
+                // A connection racing `stop()` — including the throwaway
+                // wake connection `stop()` itself makes — is dropped
+                // unhandshaken.
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match &queue {
+                    Some(q) => {
+                        if !q.push((stream, peer)) {
+                            // Queue closed under us: route the connection
+                            // through the rejection accounting rather than
+                            // dropping it silently.
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                            record_to(&cfg.trace, Event::HandshakeRejected { code: 1 });
+                            obs_warn!(
+                                "net: rejecting connection from {peer}: \
+                                 handshake pool is closed"
                             );
-                            // The round loop may already be gone (run over);
-                            // a dropped registry just closes the socket.
-                            let _ = tx.send(session);
                         }
-                        Err(e) => {
-                            record_to(&cfg.trace, Event::HandshakeRejected { code: 0 });
-                            obs_warn!("net: rejecting connection from {peer}: {e:#}");
-                        }
-                    });
-                if let Err(e) = spawned {
-                    obs_warn!("net: cannot spawn handshake thread for {peer}: {e}");
+                    }
+                    None => handshake_job(
+                        stream, peer, k, dim, &cfg, timeout, &tx, &rejected,
+                    ),
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // The listener blocks, so this is only ever a spurious
+                // wakeup; retry immediately.
                 hard_errors = 0;
-                thread::sleep(ACCEPT_POLL);
             }
             Err(e) => {
                 hard_errors += 1;
@@ -408,12 +534,15 @@ fn accept_loop(
                         "net: accept failing persistently ({e}); giving up on new \
                          connections — workers can no longer rejoin this run"
                     );
-                    return;
+                    break;
                 }
                 obs_warn!("net: accept failed: {e}");
                 thread::sleep(ACCEPT_POLL);
             }
         }
+    }
+    if let Some(q) = &queue {
+        q.close();
     }
 }
 
@@ -423,12 +552,19 @@ fn accept_loop(
 pub struct Acceptor {
     rx: mpsc::Receiver<Session>,
     stop: Arc<AtomicBool>,
+    /// Where `stop()` connects to wake the blocking accept; `None` for
+    /// channel-fed acceptors with no live listener.
+    wake: Option<SocketAddr>,
+    /// Connections that never became sessions: handshake failures plus
+    /// connections a closed pool had to turn away.
+    rejected: Arc<AtomicU64>,
     handle: Option<thread::JoinHandle<()>>,
 }
 
 impl Acceptor {
-    /// Spawn the accept thread on `listener`. Connections handshake in
-    /// parallel, each bounded by `handshake_timeout` (zero = no timeout).
+    /// Spawn the accept thread on `listener`. Connections handshake on a
+    /// small fixed pool, each bounded by `handshake_timeout` (zero = no
+    /// timeout).
     pub fn spawn(
         listener: TcpListener,
         k: usize,
@@ -440,25 +576,105 @@ impl Acceptor {
         // An unencodable policy would otherwise reject every connection
         // forever.
         policy_delta(cfg.policy)?;
-        listener
-            .set_nonblocking(true)
-            .context("setting the listener nonblocking for the accept loop")?;
+        // The accept loop blocks in the kernel; `stop()` wakes it with a
+        // throwaway connection to this address. A wildcard bind is not
+        // connectable, so substitute the loopback of the same family.
+        let mut wake = listener.local_addr().context("resolving the accept wake address")?;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake {
+                SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
         let stop = Arc::new(AtomicBool::new(false));
+        let rejected = Arc::new(AtomicU64::new(0));
         let (tx, rx) = mpsc::channel();
-        let flag = Arc::clone(&stop);
-        let cfg = cfg.clone();
         let timeout = (!handshake_timeout.is_zero()).then_some(handshake_timeout);
+        // Fixed handshake pool: a few long-lived threads drain the accept
+        // queue instead of one short-lived thread per connection. Pool
+        // threads are detached (see `HandshakeQueue`); a spawn failure
+        // shrinks the pool, and if the pool comes up empty the accept
+        // loop handshakes inline — no connection is ever lost to a failed
+        // spawn.
+        // Floor of 2: one silent peer must never serialize the honest
+        // worker behind it, even on a single-core host.
+        let pool_size = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(HANDSHAKE_POOL_MAX)
+            .max(2);
+        let queue = Arc::new(HandshakeQueue::new());
+        let mut pooled = 0usize;
+        for i in 0..pool_size {
+            let q = Arc::clone(&queue);
+            let pool_tx = tx.clone();
+            let pool_cfg = cfg.clone();
+            let pool_rejected = Arc::clone(&rejected);
+            let spawned = thread::Builder::new()
+                .name(format!("fl-handshake-{i}"))
+                .spawn(move || {
+                    while let Some((stream, peer)) = q.pop() {
+                        handshake_job(
+                            stream,
+                            peer,
+                            k,
+                            dim,
+                            &pool_cfg,
+                            timeout,
+                            &pool_tx,
+                            &pool_rejected,
+                        );
+                    }
+                });
+            match spawned {
+                Ok(_) => pooled += 1,
+                Err(e) => obs_warn!("net: cannot spawn handshake pool thread {i}: {e}"),
+            }
+        }
+        if pooled == 0 {
+            obs_warn!(
+                "net: no handshake pool threads available; \
+                 handshaking inline on the accept thread"
+            );
+        }
+        let pool = (pooled > 0).then(|| Arc::clone(&queue));
+        let flag = Arc::clone(&stop);
+        let loop_rejected = Arc::clone(&rejected);
+        let cfg = cfg.clone();
         let handle = thread::Builder::new()
             .name("fl-accept".into())
-            .spawn(move || accept_loop(listener, k, dim, cfg, timeout, tx, flag))
-            .context("spawning the accept thread")?;
-        Ok(Acceptor { rx, stop, handle: Some(handle) })
+            .spawn(move || {
+                accept_loop(listener, pool, k, dim, cfg, timeout, tx, flag, loop_rejected)
+            });
+        let handle = match handle {
+            Ok(h) => h,
+            Err(e) => {
+                // The pool threads would otherwise wait on a queue nobody
+                // will ever close.
+                queue.close();
+                return Err(e).context("spawning the accept thread");
+            }
+        };
+        Ok(Acceptor { rx, stop, wake: Some(wake), rejected, handle: Some(handle) })
     }
 
     /// Test/embedding hook: an acceptor fed by an external channel instead
     /// of a live TCP accept thread.
     pub fn from_channel(rx: mpsc::Receiver<Session>) -> Acceptor {
-        Acceptor { rx, stop: Arc::new(AtomicBool::new(false)), handle: None }
+        Acceptor {
+            rx,
+            stop: Arc::new(AtomicBool::new(false)),
+            wake: None,
+            rejected: Arc::new(AtomicU64::new(0)),
+            handle: None,
+        }
+    }
+
+    /// Connections that never became sessions — handshake failures plus
+    /// connections a closed pool had to turn away — for diagnostics and
+    /// fleet-count accounting.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
     }
 
     /// A queued session, if any (never blocks).
@@ -486,10 +702,25 @@ impl Acceptor {
         &self,
         k: usize,
     ) -> Result<(Vec<Box<dyn Link>>, Vec<WireCodec>)> {
+        self.wait_for_range(0, k)
+    }
+
+    /// [`wait_for_fleet`](Self::wait_for_fleet) restricted to the worker
+    /// range `[lo, hi)` — the shard a mid-tier aggregator fronts. Returned
+    /// vectors are indexed by `worker - lo`. Workers outside the range
+    /// (valid federation members that connected to the wrong tier node)
+    /// are rejected and dropped like duplicates.
+    pub fn wait_for_range(
+        &self,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(Vec<Box<dyn Link>>, Vec<WireCodec>)> {
+        ensure!(lo < hi, "worker range [{lo}, {hi}) is empty");
+        let n = hi - lo;
         let mut slots: Vec<Option<(Box<dyn Link>, WireCodec)>> =
-            (0..k).map(|_| None).collect();
+            (0..n).map(|_| None).collect();
         let mut connected = 0usize;
-        while connected < k {
+        while connected < n {
             let session = self.rx.recv().map_err(|_| {
                 anyhow::anyhow!("accept thread exited before the fleet connected")
             })?;
@@ -497,32 +728,45 @@ impl Acceptor {
                 Session::Fresh { worker, link, codec } => (worker, link, codec),
                 Session::Rejoin { worker, link, codec, .. } => (worker, link, codec),
             };
-            match slots.get_mut(w) {
+            match w.checked_sub(lo).and_then(|i| slots.get_mut(i)) {
                 Some(slot) if slot.is_none() => {
                     *slot = Some((link, codec));
                     connected += 1;
                 }
                 Some(_) => obs_warn!("net: rejecting duplicate worker {w}"),
-                None => obs_warn!("net: rejecting out-of-range worker {w}"),
+                None => obs_warn!(
+                    "net: rejecting worker {w} outside this node's range [{lo}, {hi})"
+                ),
             }
         }
-        let mut fleet: Vec<Box<dyn Link>> = Vec::with_capacity(k);
-        let mut codecs: Vec<WireCodec> = Vec::with_capacity(k);
-        for (w, slot) in slots.into_iter().enumerate() {
+        let mut fleet: Vec<Box<dyn Link>> = Vec::with_capacity(n);
+        let mut codecs: Vec<WireCodec> = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
             match slot {
                 Some((link, codec)) => {
                     fleet.push(link);
                     codecs.push(codec);
                 }
-                None => anyhow::bail!("fleet assembly finished with worker {w} unseated"),
+                None => anyhow::bail!(
+                    "fleet assembly finished with worker {} unseated",
+                    lo + i
+                ),
             }
         }
         Ok((fleet, codecs))
     }
 
-    /// Ask the accept thread to exit (honored within its poll interval).
+    /// Ask the accept thread to exit. The blocking `accept` is woken with
+    /// a throwaway loopback connection (dropped unhandshaken by the
+    /// loop's post-accept stop check); if that connect fails the loop
+    /// still exits on its next real connection or accept error.
     pub fn stop(&self) {
-        self.stop.store(true, Ordering::Relaxed);
+        if self.stop.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        if let Some(addr) = self.wake {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(100));
+        }
     }
 }
 
@@ -559,27 +803,26 @@ pub fn accept_workers(
         handshake_timeout,
     )?;
     let fleet = acceptor.wait_for_fleet(k).map(|(links, _codecs)| links);
-    // O_NONBLOCK is a file-*description* flag shared with the caller's
-    // handle through the dup; restore blocking mode so this borrowed
-    // listener comes back the way it was lent — but only after the accept
-    // thread is gone (a blocking clone would wedge its accept loop).
+    // The borrowed listener's mode is untouched (the accept loop blocks;
+    // it never sets O_NONBLOCK), so there is nothing to restore — just
+    // tear the accept thread down before handing the listener back.
     drop(acceptor);
-    let _ = listener.set_nonblocking(false);
     fleet
 }
 
-/// One worker's round collection outcome (see [`collect_update`]).
-struct CollectOutcome {
+/// One worker's round collection outcome (see [`collect_update`] and
+/// [`collect_uplinks_ready`]).
+pub struct CollectOutcome {
     /// The round update, its measured wire bytes, its raw-equivalent
     /// bytes (what a v3 `raw` session would have measured for the same
     /// logical update; equal to the measured bytes on raw sessions), and
     /// whether it arrived quantized — or the failure that marks the
     /// worker absent for the round.
-    result: Result<(WorkerMsg, u64, u64, bool)>,
+    pub result: Result<(WorkerMsg, u64, u64, bool)>,
     /// Measured bytes of stale frames discarded along the way — they
     /// really crossed the link, so the ledger records them even when the
     /// collection ultimately fails.
-    stale_bytes: u64,
+    pub stale_bytes: u64,
 }
 
 /// Collect worker `w`'s round-`t` update from its link under the shared
@@ -600,7 +843,13 @@ struct CollectOutcome {
 /// v2 `Rejoin` path carries no dim in its handshake, so this check is
 /// where an impostor or misconfigured rejoiner with the wrong model shape
 /// is caught on v2 sessions.
-fn collect_update(
+///
+/// This blocking, one-thread-per-link collector is no longer the round
+/// loop's uplink path — [`collect_uplinks_ready`] drives the same
+/// semantics from a fixed readiness pool. It stays `pub` as the
+/// thread-per-worker baseline the fleet-scale bench regresses the
+/// readiness pool against (`benches/regress.rs`).
+pub fn collect_update(
     link: &mut dyn Link,
     w: usize,
     t: usize,
@@ -685,6 +934,259 @@ fn collect_update(
         }
     })();
     CollectOutcome { result, stale_bytes }
+}
+
+/// What one readiness step observed (see [`RecvMachine::poll`]).
+enum Sweep {
+    /// `try_recv` surfaced nothing; the session is waiting on the wire.
+    Idle,
+    /// A frame (or a fatal link error) was consumed — poll again before
+    /// napping.
+    Progress,
+}
+
+/// One session's receive state machine for readiness-loop collection:
+/// the nonblocking counterpart of [`collect_update`], fed one frame at a
+/// time by [`Link::try_recv`]. Chunked uplinks reassemble incrementally
+/// through [`wire::ChunkAssembly`]; stale frames are discarded (their
+/// measured bytes kept for the ledger) without ever blocking the sweep.
+struct RecvMachine<'a> {
+    w: usize,
+    link: &'a mut dyn Link,
+    /// A multi-chunk uplink mid-reassembly.
+    assembly: Option<wire::ChunkAssembly>,
+    /// Logical frames consumed after the deadline expired — bounded by
+    /// [`MAX_DEADLINE_DRAINS`], the same queue-drain exception the
+    /// blocking collector enforces.
+    drains: u32,
+    stale_bytes: u64,
+    done: Option<Result<(WorkerMsg, u64, u64, bool)>>,
+}
+
+impl<'a> RecvMachine<'a> {
+    fn new(w: usize, link: &'a mut dyn Link) -> RecvMachine<'a> {
+        RecvMachine { w, link, assembly: None, drains: 0, stale_bytes: 0, done: None }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done.is_some()
+    }
+
+    /// One readiness step: poll the link once and advance the machine.
+    /// `draining` marks post-deadline sweeps, where each *logical* frame
+    /// consumed counts against [`MAX_DEADLINE_DRAINS`].
+    fn poll(&mut self, t: usize, dim: usize, max_total: usize, draining: bool) -> Sweep {
+        if self.done.is_some() {
+            return Sweep::Idle;
+        }
+        let frame = match self.link.try_recv() {
+            Ok(Some(frame)) => frame,
+            Ok(None) => return Sweep::Idle,
+            Err(e) => {
+                self.done = Some(Err(e));
+                return Sweep::Progress;
+            }
+        };
+        match self.ingest(frame, t, dim, max_total, draining) {
+            Ok(Some(result)) => self.done = Some(Ok(result)),
+            Ok(None) => {}
+            Err(e) => self.done = Some(Err(e)),
+        }
+        Sweep::Progress
+    }
+
+    /// Feed one received frame through chunk reassembly and — when a
+    /// logical frame completes — through exactly the validation rules of
+    /// [`collect_update`]. `Ok(None)` means "keep polling": mid-assembly,
+    /// or a stale frame discarded.
+    fn ingest(
+        &mut self,
+        frame: Frame,
+        t: usize,
+        dim: usize,
+        max_total: usize,
+        draining: bool,
+    ) -> Result<Option<(WorkerMsg, u64, u64, bool)>> {
+        let w = self.w;
+        let completed = match self.assembly.take() {
+            Some(mut asm) => match asm.push(frame)? {
+                Some(whole) => whole,
+                None => {
+                    self.assembly = Some(asm);
+                    return Ok(None);
+                }
+            },
+            None => match wire::ChunkAssembly::begin(frame, max_total)? {
+                wire::ChunkStep::Done(whole) => whole,
+                wire::ChunkStep::More(asm) => {
+                    self.assembly = Some(asm);
+                    return Ok(None);
+                }
+            },
+        };
+        if draining {
+            self.drains += 1;
+            ensure!(
+                self.drains <= MAX_DEADLINE_DRAINS,
+                "worker {w} missed the round-{t} deadline"
+            );
+        }
+        // Like the blocking path, a chunked uplink is ledgered at its
+        // assembled logical frame's wire size.
+        let bytes = completed.wire_bytes() as u64;
+        let tag = completed.tag();
+        let (msg, raw_bytes, quantized) = match completed {
+            Frame::Update(msg) => {
+                if let Payload::Full { grad } = &msg.payload {
+                    ensure!(
+                        grad.len() == dim,
+                        "worker {w} uplinked a {}-dim gradient, model dim is {dim}",
+                        grad.len()
+                    );
+                }
+                (msg, bytes, false)
+            }
+            Frame::UpdateQ { worker, round, train_loss, floats, bits, codec, count, data } => {
+                let codec = WireCodec::from_wire(codec)
+                    .with_context(|| format!("worker {w}'s UpdateQ codec"))?;
+                ensure!(
+                    count as usize == dim,
+                    "worker {w} uplinked a {count}-dim quantized gradient, \
+                     model dim is {dim}"
+                );
+                let effective = quant::decode(codec, dim, &data)?;
+                let msg = WorkerMsg {
+                    worker: worker as usize,
+                    round: round as usize,
+                    payload: Payload::Full { grad: Arc::new(effective) },
+                    cost: Cost { floats, bits },
+                    train_loss,
+                };
+                // Raw equivalent: the same logical update as a dense
+                // v3 `Update` frame (an Arc refcount bump, no copy).
+                let raw = Frame::Update(msg.clone()).wire_bytes() as u64;
+                (msg, raw, true)
+            }
+            _ => bail!("worker {w} sent tag {tag} mid-round"),
+        };
+        ensure!(msg.worker == w, "link {w} carried an update from {}", msg.worker);
+        if msg.round < t {
+            obs_debug!(
+                "net: discarding worker {w}'s stale round-{} update in round {t}",
+                msg.round
+            );
+            self.stale_bytes += bytes;
+            return Ok(None);
+        }
+        ensure!(msg.round == t, "worker {w} answered round {} in round {t}", msg.round);
+        Ok(Some((msg, bytes, raw_bytes, quantized)))
+    }
+
+    /// Consume the machine into its worker's outcome; a session still
+    /// unresolved is stamped with the deadline miss.
+    fn finish(self, t: usize) -> (usize, CollectOutcome) {
+        let w = self.w;
+        let result = self.done.unwrap_or_else(|| {
+            Err(anyhow::anyhow!("worker {w} missed the round-{t} deadline"))
+        });
+        (w, CollectOutcome { result, stale_bytes: self.stale_bytes })
+    }
+}
+
+/// Sweep one partition of receive machines until every session resolves
+/// or the deadline (plus its bounded queue drain) expires.
+fn drive_partition(
+    machines: &mut [RecvMachine],
+    t: usize,
+    dim: usize,
+    max_total: usize,
+    deadline: Instant,
+) {
+    loop {
+        let mut progressed = false;
+        let mut pending = false;
+        for m in machines.iter_mut() {
+            if m.is_done() {
+                continue;
+            }
+            pending = true;
+            if matches!(m.poll(t, dim, max_total, false), Sweep::Progress) {
+                progressed = true;
+            }
+        }
+        if !pending {
+            return;
+        }
+        // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
+        if Instant::now() >= deadline {
+            break;
+        }
+        if !progressed {
+            thread::sleep(IDLE_SWEEP_NAP);
+        }
+    }
+    // Post-deadline queue drain: frames already buffered arrived in time —
+    // the server was merely slow to read them — so pull what is readable
+    // *now*, bounded per session by `RecvMachine::drains`, without ever
+    // waiting for bytes still in flight.
+    for _ in 0..MAX_DEADLINE_DRAINS {
+        let mut pending = false;
+        for m in machines.iter_mut() {
+            while !m.is_done() {
+                if matches!(m.poll(t, dim, max_total, true), Sweep::Idle) {
+                    break;
+                }
+            }
+            pending |= !m.is_done();
+        }
+        if !pending {
+            return;
+        }
+        thread::sleep(QUEUE_DRAIN_TIMEOUT);
+    }
+    // Whatever is still unresolved is absent; `finish` stamps the miss.
+}
+
+/// Collect every task's round-`t` update by driving per-session
+/// [`RecvMachine`]s from a fixed readiness pool:
+/// `min(available_parallelism, `[`COLLECT_POOL_MAX`]`, tasks)` scoped
+/// threads over disjoint partitions of the session set — never one
+/// thread per worker, so 10k+ sockets cost sessions, not stacks. A sweep
+/// that makes no progress naps [`IDLE_SWEEP_NAP`]; once `deadline`
+/// passes, already-queued frames drain (at most [`MAX_DEADLINE_DRAINS`]
+/// logical frames per session, matching [`collect_update`]) and every
+/// unresolved session is declared absent.
+///
+/// Outcomes return in the order of `tasks` (participant order), so the
+/// caller's reduction stays bit-identical to the sequential engine. This
+/// is the round loop's uplink path; it is `pub` so the fleet-scale bench
+/// can pit it against the thread-per-worker baseline.
+pub fn collect_uplinks_ready(
+    tasks: Vec<(usize, &mut dyn Link)>,
+    t: usize,
+    dim: usize,
+    deadline: Instant,
+) -> Vec<(usize, CollectOutcome)> {
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let max_total = wire::HEADER_LEN + wire::session_max_payload(dim) + wire::CHECKSUM_LEN;
+    let pool = thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(COLLECT_POOL_MAX)
+        .min(n)
+        .max(1);
+    let mut machines: Vec<RecvMachine> =
+        tasks.into_iter().map(|(w, link)| RecvMachine::new(w, link)).collect();
+    let per = (n + pool - 1) / pool;
+    thread::scope(|scope| {
+        for part in machines.chunks_mut(per) {
+            scope.spawn(move || drive_partition(part, t, dim, max_total, deadline));
+        }
+    });
+    machines.into_iter().map(|m| m.finish(t)).collect()
 }
 
 /// Per-worker downlink delta-encoding state for quantized sessions.
@@ -1019,16 +1521,17 @@ pub fn run_server_rounds_elastic(
             }
         });
 
-        // Uplink: collect every reachable worker's update concurrently —
-        // one scoped thread per worker against the shared absolute
-        // deadline, so a straggler early in participant order cannot
-        // starve the workers after it. The reduction below still runs in
-        // participant order (reachable is sorted), which keeps
-        // aggregation bit-identical to the sequential engine.
+        // Uplink: drive every reachable worker's receive state machine
+        // from the fixed readiness pool against the shared absolute
+        // deadline — a straggler early in participant order cannot
+        // starve the workers after it, and fleet size costs sessions,
+        // not threads. The reduction below still runs in participant
+        // order (`collect_uplinks_ready` returns outcomes in task
+        // order, and reachable is sorted), which keeps aggregation
+        // bit-identical to the sequential engine.
         // lint: allow(determinism, "deadline seam: bounds waiting only, never ordering or arithmetic")
         let deadline = Instant::now() + round_deadline;
-        let mut order = Vec::with_capacity(reachable.len());
-        let mut tasks: Vec<(usize, &mut Box<dyn Link>)> =
+        let mut tasks: Vec<(usize, &mut dyn Link)> =
             Vec::with_capacity(reachable.len());
         // lint: allow(panic_freedom, "wanted.len() == k and every index comes from sample_clients over 0..k")
         {
@@ -1038,34 +1541,16 @@ pub fn run_server_rounds_elastic(
             }
             for (w, link) in links.iter_mut().enumerate() {
                 if wanted[w] {
-                    order.push(w);
-                    tasks.push((w, link));
+                    tasks.push((w, link.as_mut()));
                 }
             }
         }
-        let mut collected: Vec<Option<CollectOutcome>> = Vec::new();
-        collected.resize_with(tasks.len(), || None);
-        timers.time("comm", || {
-            thread::scope(|scope| {
-                for ((w, link), out) in tasks.into_iter().zip(collected.iter_mut()) {
-                    scope.spawn(move || {
-                        *out = Some(collect_update(link.as_mut(), w, t, dim, deadline));
-                    });
-                }
-            });
-        });
+        let collected =
+            timers.time("comm", || collect_uplinks_ready(tasks, t, dim, deadline));
 
-        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(order.len());
+        let mut msgs: Vec<WorkerMsg> = Vec::with_capacity(collected.len());
         let mut train_loss_sum = 0f64;
-        for (w, out) in order.into_iter().zip(collected) {
-            let Some(out) = out else {
-                // A scoped collector thread always writes its slot before
-                // the scope joins; if one ever vanished, count the worker
-                // absent for the round rather than killing the fleet.
-                obs_warn!("net: no collector result for worker {w} (round {t})");
-                ledger.record_fault(w);
-                continue;
-            };
+        for (w, out) in collected {
             if out.stale_bytes > 0 {
                 // Stale frames are ledgered at their measured size on both
                 // counters — they carry no useful raw equivalent.
@@ -1115,8 +1600,17 @@ pub fn run_server_rounds_elastic(
                 *ds = DownlinkState::default();
             }
         }
+        // Sharded runs re-sum the train loss shard-by-shard and reduce
+        // theta through the same two-stage tree the real aggregator
+        // topology uses, so this engine stays bit-identical to a
+        // `--shards N` deployment per seed.
+        let train_loss_sum = if cfg.shards > 1 {
+            tree_loss_sum(&msgs, cfg.shards, k)
+        } else {
+            train_loss_sum
+        };
         if !msgs.is_empty() {
-            timers.time("aggregate", || server.apply(&msgs))?;
+            timers.time("aggregate", || server.apply_grouped(&msgs, cfg.shards, k))?;
         }
         // Absences surface in the trace at commit time, in planned order —
         // the shared placement across all engines (see `run_fl`).
@@ -1192,7 +1686,8 @@ pub fn run_server_rounds_elastic(
 /// Drive a full federated run over handshaken links (`links[w]` is worker
 /// w's connection). Each round: broadcast theta to the sampled
 /// participants, collect their updates concurrently under `round_deadline`
-/// (each worker gets the full deadline on its own collector thread),
+/// (a fixed readiness pool drives every session against the shared
+/// deadline — see [`collect_uplinks_ready`]),
 /// aggregate the arrived subset in participant order (absent workers are
 /// logged, fault-counted, and skipped — see the module docs), evaluate on
 /// the cadence. Sends `Shutdown` on every link when training completes.
@@ -1897,5 +2392,86 @@ mod tests {
             assert_eq!(r.participants, 2);
         }
         assert!(ledger.consistent());
+    }
+
+    /// The tentpole pin: the readiness pool resolves a mixed fleet —
+    /// a worker with a stale frame queued ahead of its update, a silent
+    /// worker that misses the deadline, and a chunked full-gradient
+    /// uplink reassembled incrementally — with outcomes in task order
+    /// and the same semantics as the blocking collector.
+    #[test]
+    fn readiness_pool_collects_mixed_outcomes() {
+        let dim = 8;
+        let t = 3;
+        let (mut srv0, mut wrk0) = MemLink::pair();
+        let (mut srv1, _wrk1_alive) = MemLink::pair();
+        let (mut srv2, mut wrk2) = MemLink::pair();
+
+        // Worker 0: one stale update queued ahead of the real one.
+        wrk0.send(&Frame::Update(scalar_update(0, 1))).unwrap();
+        wrk0.send(&Frame::Update(scalar_update(0, t))).unwrap();
+        // Worker 2: a full gradient, hand-chunked small so reassembly
+        // takes several readiness steps.
+        let full = Frame::Update(WorkerMsg {
+            worker: 2,
+            round: t,
+            payload: Payload::Full { grad: Arc::new(vec![0.25; dim]) },
+            cost: crate::compress::dense_cost(dim),
+            train_loss: 0.5,
+        });
+        let chunks = full.chunk_frames(16).expect("16-byte chunks must split the frame");
+        assert!(chunks.len() > 2, "want a genuinely multi-chunk uplink");
+        for c in &chunks {
+            wrk2.send(c).unwrap();
+        }
+
+        let deadline = Instant::now() + Duration::from_millis(300);
+        let tasks: Vec<(usize, &mut dyn Link)> =
+            vec![(0, &mut srv0), (1, &mut srv1), (2, &mut srv2)];
+        let out = collect_uplinks_ready(tasks, t, dim, deadline);
+        assert_eq!(out.len(), 3);
+        assert_eq!(
+            out.iter().map(|(w, _)| *w).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "outcomes must return in task (participant) order"
+        );
+
+        let (msg, bytes, raw, quantized) = out[0].1.result.as_ref().unwrap();
+        assert_eq!(msg.round, t);
+        assert_eq!(*bytes, Frame::Update(scalar_update(0, t)).wire_bytes() as u64);
+        assert_eq!(raw, bytes);
+        assert!(!quantized);
+        assert_eq!(
+            out[0].1.stale_bytes,
+            Frame::Update(scalar_update(0, 1)).wire_bytes() as u64,
+            "discarded stale bytes must still be reported for the ledger"
+        );
+
+        let err = out[1].1.result.as_ref().unwrap_err().to_string();
+        assert!(err.contains("deadline"), "{err}");
+
+        let (msg, bytes, _, _) = out[2].1.result.as_ref().unwrap();
+        let Payload::Full { grad } = &msg.payload else { panic!("full uplink expected") };
+        assert_eq!(grad.as_slice(), &[0.25; 8]);
+        // Chunked transfers are ledgered at the assembled logical frame's
+        // size, exactly like the blocking path.
+        assert_eq!(*bytes, full.wire_bytes() as u64);
+    }
+
+    /// Satellite pin: `stop()` wakes the *blocking* accept loop promptly —
+    /// no poll cadence, no lingering accept thread at teardown.
+    #[test]
+    fn stop_wakes_the_blocking_accept_loop() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let acceptor =
+            Acceptor::spawn(listener, 1, 4, &cfg(), Duration::from_secs(30)).unwrap();
+        assert_eq!(acceptor.rejected(), 0);
+        let begin = Instant::now();
+        drop(acceptor); // stop() + join
+        assert!(
+            begin.elapsed() < Duration::from_secs(5),
+            "stop did not wake the accept loop: {:?}",
+            begin.elapsed()
+        );
     }
 }

@@ -6,18 +6,20 @@
 //! frames). Hand-rolled on purpose: no serde, no external deps, and a
 //! byte-stable layout the tests can assert against.
 //!
-//! # Frame layout (protocol version 3; all integers little-endian)
+//! # Frame layout (protocol version 4; all integers little-endian)
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic  "FRLB" (FedRecycle Look-Back)
 //! 4       2     protocol version (u16) — the lowest version that defines
 //!               the frame's tag (1 for the PR-2 frames, 2 for Rejoin,
-//!               3 for the quantized/auth/chunk frames); this build
-//!               accepts 1..=3 (see the version table below)
+//!               3 for the quantized/auth/chunk frames, 4 for the sharded
+//!               aggregation-tree frames); this build accepts 1..=4 (see
+//!               the version table below)
 //! 6       1     frame tag (Hello=1 Welcome=2 Round=3 Shutdown=4 Update=5
 //!               Rejoin=6 Hello3=7 Welcome3=8 Rejoin3=9 RoundQ=10
-//!               UpdateQ=11 Chunk=12)
+//!               UpdateQ=11 Chunk=12 HelloShard=13 WelcomeShard=14
+//!               ShardUpdate=15)
 //! 7       1     reserved, must be 0 (room for flags in a later version)
 //! 8       4     payload length n (u32, capped at 1 GiB)
 //! 12      n     payload (tag-specific, see below)
@@ -31,7 +33,8 @@
 //! | 1            | yes      | the PR-2 protocol: `Hello`..`Update` only; a v1 `Rejoin` tag is a decode error |
 //! | 2            | yes      | adds `Rejoin` (mid-run worker re-handshake) |
 //! | 3            | yes      | adds quantized payloads (`RoundQ`/`UpdateQ`), delta-encoded broadcasts, session tokens (`Hello3`/`Welcome3`/`Rejoin3`), and bounded `Chunk` streaming |
-//! | >= 4         | no       | rejected at the header, before any payload read |
+//! | 4            | yes      | adds the aggregation-tree frames (`HelloShard`/`WelcomeShard`/`ShardUpdate`) spoken only on aggregator↔root links |
+//! | >= 5         | no       | rejected at the header, before any payload read |
 //!
 //! Negotiation is per *frame*, not per session, and compatibility is
 //! two-way by construction: the encoder stamps each frame with the
@@ -95,6 +98,25 @@
 //!   with the full validation chain instead of trusting one
 //!   1 GiB-capped length field.
 //!
+//! Protocol v4 adds the aggregation-tree frames, spoken only on the
+//! aggregator ↔ root links of a sharded deployment (workers never see
+//! them — worker sessions stay on the v1..=3 frame set):
+//!
+//! * `HelloShard`   — shard index `u32`, worker range `lo`/`hi` `u64`
+//!   (half-open `[lo, hi)`), dim `u64` (aggregator → root handshake).
+//! * `WelcomeShard` — shard index `u32` (echoed), session token `u64`
+//!   (root → aggregator handshake reply).
+//! * `ShardUpdate`  — shard `u32`, round `u64`, wsum `f32` (the shard's
+//!   f32 participant-weight sum), train_loss_sum `f64` (the shard's
+//!   participant-order f64 loss sum), count `u64` + `count` f32s (the
+//!   stage-1 pre-reduced partial, `Σ weights[w]·rho_w·lbg_w` /
+//!   `Σ weights[w]·grad_w` in participant order), then n_entries `u64` +
+//!   per-participant accounting entries ([`ShardEntry`]: worker `u32`,
+//!   scalar flag `u8`, cost floats `u64`, cost bits `u64`, measured
+//!   uplink wire bytes `u64`) in ascending-worker order, so the root can
+//!   replay ledger records and `WorkerUplink` events bit-identically to
+//!   a flat run.
+//!
 //! Every decoder rejects wrong magic, unknown versions, nonzero reserved
 //! bytes, length mismatches, trailing bytes, and checksum failures — the
 //! property tests assert that *any* single-byte corruption or truncation
@@ -112,7 +134,7 @@ use crate::coordinator::messages::{Payload, WorkerMsg};
 pub const MAGIC: [u8; 4] = *b"FRLB";
 /// The newest protocol version this build understands. Outbound frames
 /// carry [`Frame::min_version`], not this, so v1/v2 peers stay served.
-pub const PROTO_VERSION: u16 = 3;
+pub const PROTO_VERSION: u16 = 4;
 /// The oldest protocol version this build still accepts. v1 peers speak
 /// the same frames minus [`Frame::Rejoin`] and the v3 set; see the
 /// module-level version table.
@@ -163,6 +185,9 @@ const TAG_REJOIN3: u8 = 9;
 const TAG_ROUND_Q: u8 = 10;
 const TAG_UPDATE_Q: u8 = 11;
 const TAG_CHUNK: u8 = 12;
+const TAG_HELLO_SHARD: u8 = 13;
+const TAG_WELCOME_SHARD: u8 = 14;
+const TAG_SHARD_UPDATE: u8 = 15;
 
 /// FNV-1a 32-bit hash. A single-byte change anywhere in the input is
 /// guaranteed to change the digest (xor then multiply by an odd prime is
@@ -223,6 +248,33 @@ pub fn peek_round(bytes: &[u8]) -> Option<u64> {
     let mut t = [0u8; 8];
     t.copy_from_slice(&bytes[HEADER_LEN..HEADER_LEN + 8]);
     Some(u64::from_le_bytes(t))
+}
+
+/// Header-level peek at a byte-stream accumulation: the total wire length
+/// (header + payload + checksum) of the frame the buffered bytes begin
+/// with, or `None` while fewer than [`HEADER_LEN`] bytes are buffered.
+/// Validates the envelope prefix — magic, version window, reserved byte,
+/// and the `max_payload` receive cap — so a desynced or hostile stream
+/// errors out before the nonblocking receive path buffers an
+/// attacker-controlled length ([`Link::try_recv`] is the caller).
+///
+/// [`Link::try_recv`]: crate::net::Link::try_recv
+// lint: allow(panic_freedom, "every index sits below the HEADER_LEN length check")
+pub fn frame_len(buf: &[u8], max_payload: usize) -> Result<Option<usize>> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    ensure!(buf[0..4] == MAGIC, "bad frame magic {:02x?}", &buf[0..4]);
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    ensure!(
+        (MIN_PROTO_VERSION..=PROTO_VERSION).contains(&version),
+        "protocol version {version} (this build speaks {MIN_PROTO_VERSION}..={PROTO_VERSION})"
+    );
+    ensure!(buf[7] == 0, "nonzero reserved byte {:#x}", buf[7]);
+    let n = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    let cap = max_payload.min(MAX_PAYLOAD);
+    ensure!(n <= cap, "payload length {n} exceeds receive limit {cap}");
+    Ok(Some(HEADER_LEN + n + CHECKSUM_LEN))
 }
 
 // ---------------------------------------------------------------------------
@@ -421,6 +473,54 @@ impl Decode for WorkerMsg {
     }
 }
 
+/// Per-participant accounting entry inside a [`Frame::ShardUpdate`]: what
+/// the root needs to replay ledger records and `WorkerUplink` events for
+/// a worker whose raw update only the mid-tier aggregator ever saw.
+/// 29 bytes on the wire: worker `u32`, scalar flag `u8`, cost floats
+/// `u64`, cost bits `u64`, measured uplink wire bytes `u64`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Global worker id.
+    pub worker: u32,
+    /// True when the uplink was a scalar look-back coefficient.
+    pub scalar: bool,
+    /// Modeled uplink cost: float count.
+    pub floats: u64,
+    /// Modeled uplink cost: bit count.
+    pub bits: u64,
+    /// Measured uplink wire bytes the aggregator received.
+    pub wire: u64,
+}
+
+/// Exact encoded size of one [`ShardEntry`].
+pub const SHARD_ENTRY_LEN: usize = 4 + 1 + 8 + 8 + 8;
+
+impl Encode for ShardEntry {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.worker);
+        out.push(self.scalar as u8);
+        put_u64(out, self.floats);
+        put_u64(out, self.bits);
+        put_u64(out, self.wire);
+    }
+
+    fn encoded_len(&self) -> usize {
+        SHARD_ENTRY_LEN
+    }
+}
+
+impl Decode for ShardEntry {
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let worker = r.u32()?;
+        let scalar = match r.u8()? {
+            0 => false,
+            1 => true,
+            t => bail!("unknown shard-entry scalar flag {t}"),
+        };
+        Ok(ShardEntry { worker, scalar, floats: r.u64()?, bits: r.u64()?, wire: r.u64()? })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Frames.
 // ---------------------------------------------------------------------------
@@ -478,6 +578,27 @@ pub enum Frame {
     /// `data` is `total`-byte inner frame bytes `[offset, offset+len)`.
     /// See [`chunk_frames`]/[`assemble_chunks`].
     Chunk { total: u64, offset: u64, data: Vec<u8> },
+    /// Aggregator → root handshake (protocol v4): this mid-tier node
+    /// pre-reduces the half-open worker range `[lo, hi)` of shard
+    /// `shard` for a `dim`-sized model.
+    HelloShard { shard: u32, lo: u64, hi: u64, dim: u64 },
+    /// Root → aggregator handshake reply (protocol v4): the shard index
+    /// echoed plus a session token (mirrors `Welcome3`'s auth shape).
+    WelcomeShard { shard: u32, token: u64 },
+    /// Aggregator → root uplink (protocol v4): one shard's pre-reduced
+    /// round. `partial` is the stage-1 sum in participant order, `wsum`
+    /// the shard's f32 participant-weight sum, `train_loss_sum` its
+    /// participant-order f64 loss sum, and `entries` the per-worker
+    /// accounting records in ascending-worker order (see the module
+    /// docs for the exact reduction the root applies on top).
+    ShardUpdate {
+        shard: u32,
+        round: u64,
+        wsum: f32,
+        train_loss_sum: f64,
+        partial: Vec<f32>,
+        entries: Vec<ShardEntry>,
+    },
 }
 
 impl Frame {
@@ -495,6 +616,9 @@ impl Frame {
             Frame::RoundQ { .. } => TAG_ROUND_Q,
             Frame::UpdateQ { .. } => TAG_UPDATE_Q,
             Frame::Chunk { .. } => TAG_CHUNK,
+            Frame::HelloShard { .. } => TAG_HELLO_SHARD,
+            Frame::WelcomeShard { .. } => TAG_WELCOME_SHARD,
+            Frame::ShardUpdate { .. } => TAG_SHARD_UPDATE,
         }
     }
 
@@ -512,6 +636,11 @@ impl Frame {
             Frame::RoundQ { data, .. } => 8 + 8 + 1 + 8 + data.len(),
             Frame::UpdateQ { data, .. } => 4 + 8 + 8 + 8 + 8 + 1 + 8 + data.len(),
             Frame::Chunk { data, .. } => 8 + 8 + data.len(),
+            Frame::HelloShard { .. } => 4 + 8 + 8 + 8,
+            Frame::WelcomeShard { .. } => 4 + 8,
+            Frame::ShardUpdate { partial, entries, .. } => {
+                4 + 8 + 4 + 8 + 8 + 4 * partial.len() + 8 + SHARD_ENTRY_LEN * entries.len()
+            }
         }
     }
 
@@ -521,6 +650,9 @@ impl Frame {
     /// see the module-level version table).
     pub fn min_version(&self) -> u16 {
         match self {
+            Frame::HelloShard { .. }
+            | Frame::WelcomeShard { .. }
+            | Frame::ShardUpdate { .. } => 4,
             Frame::Hello3 { .. }
             | Frame::Welcome3 { .. }
             | Frame::Rejoin3 { .. }
@@ -619,6 +751,28 @@ impl Frame {
                 put_u64(&mut out, *total);
                 put_u64(&mut out, *offset);
                 out.extend_from_slice(data);
+            }
+            Frame::HelloShard { shard, lo, hi, dim } => {
+                put_u32(&mut out, *shard);
+                put_u64(&mut out, *lo);
+                put_u64(&mut out, *hi);
+                put_u64(&mut out, *dim);
+            }
+            Frame::WelcomeShard { shard, token } => {
+                put_u32(&mut out, *shard);
+                put_u64(&mut out, *token);
+            }
+            Frame::ShardUpdate { shard, round, wsum, train_loss_sum, partial, entries } => {
+                put_u32(&mut out, *shard);
+                put_u64(&mut out, *round);
+                put_f32(&mut out, *wsum);
+                put_f64(&mut out, *train_loss_sum);
+                put_u64(&mut out, partial.len() as u64);
+                put_f32s(&mut out, partial);
+                put_u64(&mut out, entries.len() as u64);
+                for e in entries {
+                    e.encode(&mut out);
+                }
             }
         }
         debug_assert_eq!(out.len(), HEADER_LEN + n);
@@ -769,6 +923,42 @@ impl Frame {
                 );
                 Frame::Chunk { total, offset, data }
             }
+            TAG_HELLO_SHARD => {
+                ensure!(version >= 4, "HelloShard frame requires protocol v4, got v{version}");
+                let shard = r.u32()?;
+                let lo = r.u64()?;
+                let hi = r.u64()?;
+                let dim = r.u64()?;
+                ensure!(lo < hi, "HelloShard worker range [{lo}, {hi}) is empty");
+                Frame::HelloShard { shard, lo, hi, dim }
+            }
+            TAG_WELCOME_SHARD => {
+                ensure!(version >= 4, "WelcomeShard frame requires protocol v4, got v{version}");
+                Frame::WelcomeShard { shard: r.u32()?, token: r.u64()? }
+            }
+            TAG_SHARD_UPDATE => {
+                ensure!(version >= 4, "ShardUpdate frame requires protocol v4, got v{version}");
+                let shard = r.u32()?;
+                let round = r.u64()?;
+                let wsum = r.f32()?;
+                let train_loss_sum = r.f64()?;
+                let count = r.u64()? as usize;
+                let partial = r.f32s(count)?;
+                let n_entries = r.u64()? as usize;
+                let want = n_entries.checked_mul(SHARD_ENTRY_LEN).ok_or_else(|| {
+                    anyhow::anyhow!("shard-entry count overflow: {n_entries}")
+                })?;
+                ensure!(
+                    r.remaining() == want,
+                    "ShardUpdate entry bytes {} != {want} for {n_entries} entries",
+                    r.remaining()
+                );
+                let mut entries = Vec::with_capacity(n_entries);
+                for _ in 0..n_entries {
+                    entries.push(ShardEntry::decode(&mut r)?);
+                }
+                Frame::ShardUpdate { shard, round, wsum, train_loss_sum, partial, entries }
+            }
             other => bail!("unknown frame tag {other}"),
         };
         r.done()?;
@@ -853,36 +1043,95 @@ pub fn assemble_chunks(
     max_total: usize,
     next: &mut dyn FnMut() -> Result<Frame>,
 ) -> Result<Frame> {
-    let Frame::Chunk { total, offset, data } = first else {
-        return Ok(first);
+    let mut asm = match ChunkAssembly::begin(first, max_total)? {
+        ChunkStep::Done(frame) => return Ok(frame),
+        ChunkStep::More(asm) => asm,
     };
-    ensure!(offset == 0, "chunk stream starts at offset {offset}, not 0");
-    let cap = max_total.min(HEADER_LEN + MAX_PAYLOAD + CHECKSUM_LEN);
-    ensure!(
-        total <= cap as u64,
-        "chunked frame of {total} bytes exceeds receive limit {cap}"
-    );
-    let want = total as usize;
-    let mut buf = Vec::with_capacity(want);
-    buf.extend_from_slice(&data);
-    while buf.len() < want {
-        let Frame::Chunk { total: t2, offset: o2, data: d2 } = next()? else {
+    loop {
+        if let Some(inner) = asm.push(next()?)? {
+            return Ok(inner);
+        }
+    }
+}
+
+/// Outcome of seeding a chunk reassembly with a stream's first frame.
+pub enum ChunkStep {
+    /// The frame was already complete: either not a [`Frame::Chunk`] at
+    /// all, or a single-chunk stream whose inner frame decoded cleanly.
+    Done(Frame),
+    /// A multi-chunk stream is in flight; feed the following frames to
+    /// [`ChunkAssembly::push`].
+    More(ChunkAssembly),
+}
+
+/// Incremental reassembly state for one bounded chunk stream — the
+/// resumable form of [`assemble_chunks`], which the nonblocking recv
+/// state machines hold across `try_recv` polls instead of blocking until
+/// the stream completes. Both paths share this validation: offsets
+/// strictly increasing from 0, a stable `total` capped by the session
+/// receive limit, the full [`Frame::from_bytes`] chain over the
+/// reassembled bytes, and no nested chunks.
+pub struct ChunkAssembly {
+    total: usize,
+    buf: Vec<u8>,
+}
+
+impl ChunkAssembly {
+    /// Seed a reassembly with the first frame a receiver decoded.
+    /// `max_total` caps the assembled inner frame's wire bytes (receivers
+    /// derive it from their session receive limit, so a hostile `total`
+    /// cannot force a large allocation).
+    pub fn begin(first: Frame, max_total: usize) -> Result<ChunkStep> {
+        let Frame::Chunk { total, offset, data } = first else {
+            return Ok(ChunkStep::Done(first));
+        };
+        ensure!(offset == 0, "chunk stream starts at offset {offset}, not 0");
+        let cap = max_total.min(HEADER_LEN + MAX_PAYLOAD + CHECKSUM_LEN);
+        ensure!(
+            total <= cap as u64,
+            "chunked frame of {total} bytes exceeds receive limit {cap}"
+        );
+        let want = total as usize;
+        let mut buf = Vec::with_capacity(want);
+        buf.extend_from_slice(&data);
+        let mut asm = ChunkAssembly { total: want, buf };
+        match asm.finish_if_complete()? {
+            Some(inner) => Ok(ChunkStep::Done(inner)),
+            None => Ok(ChunkStep::More(asm)),
+        }
+    }
+
+    /// Feed the next frame of the stream; `Some(inner)` once the last
+    /// chunk landed and the inner frame decoded cleanly.
+    pub fn push(&mut self, frame: Frame) -> Result<Option<Frame>> {
+        let Frame::Chunk { total, offset, data } = frame else {
             bail!("non-Chunk frame interleaved in a chunk stream");
         };
-        ensure!(t2 == total, "chunk total changed mid-stream: {t2} != {total}");
         ensure!(
-            o2 as usize == buf.len(),
-            "chunk offset {o2} out of order (have {} bytes)",
-            buf.len()
+            total as usize == self.total,
+            "chunk total changed mid-stream: {total} != {}",
+            self.total
         );
-        buf.extend_from_slice(&d2);
+        ensure!(
+            offset as usize == self.buf.len(),
+            "chunk offset {offset} out of order (have {} bytes)",
+            self.buf.len()
+        );
+        self.buf.extend_from_slice(&data);
+        self.finish_if_complete()
     }
-    let inner = Frame::from_bytes(&buf)?;
-    ensure!(
-        !matches!(inner, Frame::Chunk { .. }),
-        "nested Chunk inside a chunk stream"
-    );
-    Ok(inner)
+
+    fn finish_if_complete(&mut self) -> Result<Option<Frame>> {
+        if self.buf.len() < self.total {
+            return Ok(None);
+        }
+        let inner = Frame::from_bytes(&self.buf)?;
+        ensure!(
+            !matches!(inner, Frame::Chunk { .. }),
+            "nested Chunk inside a chunk stream"
+        );
+        Ok(Some(inner))
+    }
 }
 
 #[cfg(test)]
@@ -971,6 +1220,22 @@ mod tests {
                 data: vec![0; 6],
             },
             Frame::Chunk { total: 40, offset: 8, data: vec![1, 2, 3, 4] },
+            Frame::HelloShard { shard: 1, lo: 3, hi: 6, dim: 1024 },
+            Frame::WelcomeShard { shard: 1, token: 0xFEED },
+            Frame::ShardUpdate {
+                shard: 1,
+                round: 9,
+                wsum: 0.375,
+                train_loss_sum: 1.25,
+                partial: vec![0.5, -0.25],
+                entries: vec![ShardEntry {
+                    worker: 3,
+                    scalar: true,
+                    floats: 1,
+                    bits: 32,
+                    wire: 45,
+                }],
+            },
         ];
         for f in &frames {
             assert_eq!(f.to_bytes().len(), f.wire_bytes(), "{f:?}");
@@ -1400,7 +1665,7 @@ mod tests {
     #[test]
     fn foreign_version_rejected() {
         let mut bytes = Frame::Shutdown.to_bytes();
-        bytes[4] = 4; // future protocol version (this build speaks 1..=3)
+        bytes[4] = 5; // future protocol version (this build speaks 1..=4)
         let err = Frame::from_bytes(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
         let err2 = Frame::read_from(&mut std::io::Cursor::new(bytes))
@@ -1411,5 +1676,99 @@ mod tests {
         let mut zero = Frame::Shutdown.to_bytes();
         zero[4..6].copy_from_slice(&0u16.to_le_bytes());
         assert!(Frame::from_bytes(&zero).is_err());
+    }
+
+    #[test]
+    fn shard_frames_round_trip_and_stamp_v4() {
+        let hello = Frame::HelloShard { shard: 2, lo: 4, hi: 9, dim: 64 };
+        assert_eq!(hello.min_version(), 4);
+        match Frame::from_bytes(&hello.to_bytes()).unwrap() {
+            Frame::HelloShard { shard, lo, hi, dim } => {
+                assert_eq!((shard, lo, hi, dim), (2, 4, 9, 64));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let up = Frame::ShardUpdate {
+            shard: 2,
+            round: 7,
+            wsum: 0.5,
+            train_loss_sum: -0.75,
+            partial: vec![1.0, -2.0, 0.25],
+            entries: vec![
+                ShardEntry { worker: 4, scalar: true, floats: 1, bits: 32, wire: 45 },
+                ShardEntry { worker: 5, scalar: false, floats: 3, bits: 96, wire: 61 },
+            ],
+        };
+        match Frame::from_bytes(&up.to_bytes()).unwrap() {
+            Frame::ShardUpdate { shard, round, wsum, train_loss_sum, partial, entries } => {
+                assert_eq!((shard, round), (2, 7));
+                assert_eq!(wsum.to_bits(), 0.5f32.to_bits());
+                assert_eq!(train_loss_sum.to_bits(), (-0.75f64).to_bits());
+                assert_eq!(partial, vec![1.0, -2.0, 0.25]);
+                assert_eq!(
+                    entries,
+                    vec![
+                        ShardEntry { worker: 4, scalar: true, floats: 1, bits: 32, wire: 45 },
+                        ShardEntry { worker: 5, scalar: false, floats: 3, bits: 96, wire: 61 },
+                    ]
+                );
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // A v3 peer cannot legally emit the v4 tags.
+        let err = Frame::from_bytes(&reversion(up.to_bytes(), 3))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("protocol v4"), "{err}");
+        // An empty worker range is malformed.
+        let empty = Frame::HelloShard { shard: 0, lo: 5, hi: 5, dim: 8 };
+        assert!(Frame::from_bytes(&empty.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn chunk_assembly_is_incremental() {
+        let inner = Frame::Round { t: 3, theta: (0..64).map(|i| i as f32).collect() };
+        let chunks = inner.chunk_frames(50).expect("must chunk");
+        assert!(chunks.len() > 2);
+        let mut iter = chunks.into_iter();
+        let mut asm = match ChunkAssembly::begin(iter.next().unwrap(), MAX_PAYLOAD).unwrap() {
+            ChunkStep::More(asm) => asm,
+            ChunkStep::Done(f) => panic!("stream completed early: {f:?}"),
+        };
+        let mut done = None;
+        for c in iter {
+            assert!(done.is_none(), "frames after stream completion");
+            done = asm.push(c).unwrap();
+        }
+        match done.expect("stream must complete") {
+            Frame::Round { t, theta } => {
+                assert_eq!(t, 3);
+                assert_eq!(theta.len(), 64);
+            }
+            other => panic!("wrong inner frame {other:?}"),
+        }
+        // Out-of-order offsets and mid-stream totals are still rejected.
+        let chunks = inner.chunk_frames(50).unwrap();
+        let mut asm = match ChunkAssembly::begin(chunks[0].clone(), MAX_PAYLOAD).unwrap() {
+            ChunkStep::More(asm) => asm,
+            ChunkStep::Done(_) => unreachable!(),
+        };
+        assert!(asm.push(chunks[2].clone()).is_err());
+    }
+
+    #[test]
+    fn frame_len_peeks_header() {
+        let bytes = Frame::Hello { worker: 1, dim: 4 }.to_bytes();
+        assert_eq!(frame_len(&bytes[..4], MAX_PAYLOAD).unwrap(), None);
+        assert_eq!(
+            frame_len(&bytes, MAX_PAYLOAD).unwrap(),
+            Some(bytes.len())
+        );
+        // A header whose payload exceeds the receive limit errors instead
+        // of asking the caller to buffer it.
+        assert!(frame_len(&bytes, 4).is_err());
+        let mut bad = bytes;
+        bad[0] = b'X';
+        assert!(frame_len(&bad, MAX_PAYLOAD).is_err());
     }
 }

@@ -58,6 +58,12 @@ pub struct ChaosLink {
     plan: Arc<FaultPlan>,
     /// Armed by a swallowed downlink; consumed by the next `recv`.
     pending: Option<(u64, FaultKind)>,
+    /// Armed by a nonblocking poll that hit a pending [`FaultKind::Delay`]:
+    /// the round plus the wall-clock instant at which the injected
+    /// straggler delay elapses. Until then `try_recv` reports "nothing
+    /// yet" instead of sleeping — a pooled readiness thread must never be
+    /// stalled by one worker's chaos schedule.
+    delay_until: Option<(u64, std::time::Instant)>,
     /// Optional trace handle: transport teardowns at a sever-span start
     /// surface as diagnostic [`Event::Sever`] trace events.
     trace: Option<TraceHandle>,
@@ -75,6 +81,10 @@ impl Link for DeadLink {
     }
 
     fn recv(&mut self) -> Result<Frame> {
+        anyhow::bail!("chaos: connection severed")
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
         anyhow::bail!("chaos: connection severed")
     }
 
@@ -98,18 +108,28 @@ impl ChaosLink {
         plan: Arc<FaultPlan>,
         trace: Option<TraceHandle>,
     ) -> Self {
-        Self { inner, worker, plan, pending: None, trace }
+        Self { inner, worker, plan, pending: None, delay_until: None, trace }
     }
 
-    /// The fault-kind-specific receive failure for round `t`.
+    /// The fault-kind-specific receive failure for round `t`. Blocking
+    /// callers sleep out an injected [`FaultKind::Delay`] here; the
+    /// nonblocking path arms [`ChaosLink::delay_until`] instead and builds
+    /// the final error with [`ChaosLink::fault_error`] directly.
     fn raise(&self, t: u64, kind: FaultKind) -> anyhow::Error {
+        if let FaultKind::Delay { ms } = kind {
+            std::thread::sleep(Duration::from_millis(ms).min(MAX_INJECTED_DELAY));
+        }
+        self.fault_error(t, kind)
+    }
+
+    /// The error a fault surfaces as, with no side effects (no sleeping).
+    fn fault_error(&self, t: u64, kind: FaultKind) -> anyhow::Error {
         let w = self.worker;
         match kind {
             FaultKind::DropUplink => {
                 anyhow::anyhow!("chaos: worker {w}'s round-{t} uplink was dropped")
             }
-            FaultKind::Delay { ms } => {
-                std::thread::sleep(Duration::from_millis(ms).min(MAX_INJECTED_DELAY));
+            FaultKind::Delay { .. } => {
                 anyhow::anyhow!("chaos: worker {w} answered round {t} after the deadline")
             }
             FaultKind::Disconnect => {
@@ -178,7 +198,41 @@ impl Link for ChaosLink {
         if let Some((t, kind)) = self.pending.take() {
             return Err(self.raise(t, kind));
         }
+        if let Some((t, due)) = self.delay_until.take() {
+            // A poll armed this straggler's deadline; a blocking caller
+            // sleeps out whatever is left of it.
+            let now = std::time::Instant::now(); // lint: allow(determinism, "injected-delay pacing bounds waiting only, never ordering or arithmetic")
+            if let Some(left) = due.checked_duration_since(now) {
+                std::thread::sleep(left);
+            }
+            return Err(self.fault_error(t, FaultKind::Delay { ms: 0 }));
+        }
         self.inner.recv()
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
+        if let Some((t, kind)) = self.pending.take() {
+            if let FaultKind::Delay { ms } = kind {
+                // Convert the straggler sleep into an armed deadline: the
+                // poll reports "nothing yet" until the injected delay has
+                // elapsed, then fails exactly like the blocking path —
+                // without ever stalling the polling thread.
+                let due = std::time::Instant::now() // lint: allow(determinism, "injected-delay pacing bounds waiting only, never ordering or arithmetic")
+                    + Duration::from_millis(ms).min(MAX_INJECTED_DELAY);
+                self.delay_until = Some((t, due));
+                return Ok(None);
+            }
+            return Err(self.fault_error(t, kind));
+        }
+        if let Some((t, due)) = self.delay_until {
+            let now = std::time::Instant::now(); // lint: allow(determinism, "injected-delay pacing bounds waiting only, never ordering or arithmetic")
+            if now < due {
+                return Ok(None);
+            }
+            self.delay_until = None;
+            return Err(self.fault_error(t, FaultKind::Delay { ms: 0 }));
+        }
+        self.inner.try_recv()
     }
 
     fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
@@ -301,6 +355,47 @@ mod tests {
         assert!(matches!(wrk2.recv().unwrap(), Frame::Round { t: 3, .. }));
         wrk2.send(&Frame::Hello { worker: 0, dim: 1 }).unwrap();
         assert!(matches!(reseated.recv().unwrap(), Frame::Hello { .. }));
+    }
+
+    #[test]
+    fn try_recv_raises_faults_without_sleeping() {
+        // Non-delay fault: the poll fails immediately, once.
+        let (srv, _wrk) = MemLink::pair();
+        let ev = FaultEvent { worker: 1, from: 0, until: 1, kind: FaultKind::DropUplink };
+        let mut chaos = ChaosLink::wrap(Box::new(srv), 1, plan(vec![ev]));
+        chaos.send(&Frame::Round { t: 0, theta: vec![0.5] }).unwrap();
+        let err = chaos.try_recv().unwrap_err().to_string();
+        assert!(err.contains("dropped"), "{err}");
+        assert!(chaos.try_recv().unwrap().is_none(), "fault fired twice");
+
+        // Delay fault: polls stay Ok(None) while the injected straggler
+        // delay runs, then fail — the polling thread itself never sleeps.
+        let (srv, _wrk) = MemLink::pair();
+        let ev = FaultEvent { worker: 2, from: 0, until: 1, kind: FaultKind::Delay { ms: 60 } };
+        let mut chaos = ChaosLink::wrap(Box::new(srv), 2, plan(vec![ev]));
+        chaos.send(&Frame::Round { t: 0, theta: vec![0.5] }).unwrap();
+        let start = std::time::Instant::now();
+        assert!(chaos.try_recv().unwrap().is_none(), "delay must arm, not fail");
+        assert!(
+            start.elapsed() < Duration::from_millis(50),
+            "try_recv slept out the injected delay"
+        );
+        let deadline = start + Duration::from_secs(10);
+        let err = loop {
+            match chaos.try_recv() {
+                Ok(None) => {
+                    assert!(std::time::Instant::now() < deadline, "delay never elapsed");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(Some(f)) => panic!("unexpected frame {f:?}"),
+                Err(e) => break e.to_string(),
+            }
+        };
+        assert!(err.contains("after the deadline"), "{err}");
+        assert!(
+            start.elapsed() >= Duration::from_millis(60),
+            "armed delay elapsed early"
+        );
     }
 
     #[test]

@@ -43,6 +43,28 @@ pub fn blackout(workers: &[usize], from: usize, until: usize) -> FaultPlan {
     }
 }
 
+/// A whole shard's contiguous worker range goes dark for `[from, until)`
+/// and rejoins after — the severed-aggregator scenario of the sharded
+/// topology ([`crate::net::aggregator`]): when every worker of shard `s`
+/// is absent, the mid-tier forwards an *empty* `ShardUpdate` (or, if the
+/// aggregator process itself died, the root times its trunk out), and
+/// either way the whole shard is fault-counted and the round commits
+/// without it. Built on [`blackout`] over
+/// [`shard_bounds`](crate::coordinator::server::shard_bounds), so the
+/// same plan replays bit-identically on the in-memory engines at the
+/// same `shards` setting. Keep `until <= rounds` for a clean rejoin.
+pub fn shard_blackout(
+    shard: usize,
+    fleet: usize,
+    shards: usize,
+    from: usize,
+    until: usize,
+) -> FaultPlan {
+    let (lo, hi) = crate::coordinator::server::shard_bounds(shard, fleet, shards);
+    let workers: Vec<usize> = (lo..hi).collect();
+    blackout(&workers, from, until)
+}
+
 /// One worker's connection is genuinely torn down at round `from` and the
 /// worker rejoins in time for round `until`: absent for `[from, until)`,
 /// reconnected through the elastic server's accept thread (`Rejoin`
@@ -165,6 +187,19 @@ mod tests {
         assert!(!plan.absent(1, 1));
         let s = straggler(1, 0, 2, 5);
         assert_eq!(s.events[0].kind, FaultKind::Delay { ms: 5 });
+    }
+
+    #[test]
+    fn shard_blackout_covers_exactly_the_shard_range() {
+        // Fleet of 5 over 2 shards: shard 0 owns [0,2), shard 1 owns [2,5).
+        let plan = shard_blackout(1, 5, 2, 3, 6);
+        for w in 0..5 {
+            let in_shard = w >= 2;
+            assert_eq!(plan.absent(w, 3), in_shard, "worker {w} round 3");
+            assert_eq!(plan.absent(w, 5), in_shard, "worker {w} round 5");
+            assert!(!plan.absent(w, 6), "worker {w} rejoined");
+        }
+        assert!(plan.events.iter().all(|e| e.kind == FaultKind::Disconnect));
     }
 
     #[test]

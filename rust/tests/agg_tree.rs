@@ -1,0 +1,449 @@
+//! Aggregation-tree parity suite: with `cfg.shards = N` (N >= 2), the
+//! sharded TCP topology — root, N mid-tier aggregators, K workers — must
+//! be **bit-identical** to the in-memory engines configured with the same
+//! `shards` setting: same final theta, same deterministic trace stream,
+//! same modeled ledger totals (global, per worker, and per-tier
+//! roll-ups), same per-round loss curves and send counts. The in-memory
+//! engines mirror the tree's two-stage reduction (`shard_partial` /
+//! `apply_partials` / `tree_loss_sum`) exactly, which is what makes them
+//! the reference for the sharded wire path. Wire-byte columns measure
+//! real frames and are excluded from cross-engine comparison, as in the
+//! flat suites (`tests/net_loopback.rs`).
+//!
+//! Chaos coverage: a whole shard blacking out (the severed-aggregator
+//! scenario modeled worker-side) replays bit-identically across engines
+//! and rejoins cleanly, and a trunk that genuinely dies marks its whole
+//! shard absent at the root without hanging or poisoning the run.
+//!
+//! The base seed honors `FL_SEED` so CI sweeps a seed matrix; set
+//! `FEDRECYCLE_TRACE=1` to dump each engine's JSONL under `target/trace/`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fedrecycle::compress::{Compressor, Identity};
+use fedrecycle::coordinator::accounting::{CommLedger, TierMap, TierTotals};
+use fedrecycle::coordinator::round::{run_fl, FlConfig, Parallelism};
+use fedrecycle::coordinator::trainer::MockTrainer;
+use fedrecycle::lbgm::ThresholdPolicy;
+use fedrecycle::metrics::RunSeries;
+use fedrecycle::net::{
+    handshake_one, run_aggregator_rounds, run_mem_fl, run_sharded_root_rounds,
+    run_tcp_fl, run_worker, Link, MemLink,
+};
+use fedrecycle::obs::{self, Encoded, Event, TraceHandle};
+use fedrecycle::sim::FaultPlan;
+use fedrecycle::testkit::scenarios;
+
+const DIM: usize = 16;
+const K: usize = 5;
+const ROUNDS: usize = 10;
+const SPREAD: f32 = 0.25;
+const SIGMA: f32 = 0.03;
+
+fn base_seed() -> u64 {
+    std::env::var("FL_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+fn codec() -> Box<dyn Compressor> {
+    Box::new(Identity)
+}
+
+/// A two-tier map splitting the fleet front/back, so the per-tier
+/// roll-ups are non-trivial and must agree across engines.
+fn tiers() -> Arc<TierMap> {
+    Arc::new(TierMap {
+        names: vec!["edge".into(), "core".into()],
+        of: (0..K).map(|w| usize::from(w >= K / 2)).collect(),
+    })
+}
+
+fn cfg(
+    seed: u64,
+    shards: usize,
+    faults: Option<FaultPlan>,
+    trace: TraceHandle,
+) -> FlConfig {
+    FlConfig {
+        rounds: ROUNDS,
+        tau: 2,
+        eta: 0.05,
+        policy: ThresholdPolicy::fixed(0.4),
+        sample_fraction: 1.0,
+        eval_every: 4,
+        seed,
+        check_coherence: false,
+        parallelism: Parallelism::Sequential,
+        faults,
+        tiers: Some(tiers()),
+        trace: Some(trace),
+        shards,
+        ..Default::default()
+    }
+}
+
+/// One engine's observable output: the deterministic trace stream plus
+/// the run artifacts the parity contract covers.
+struct RunOut {
+    stream: Vec<Encoded>,
+    series: RunSeries,
+    ledger: CommLedger,
+    theta: Vec<f32>,
+}
+
+/// Drain one engine's recorder: optionally dump the full JSONL (CI
+/// failure artifact), then return the parity-checked stream.
+fn stream_of(name: &str, trace: &TraceHandle) -> Vec<Encoded> {
+    let rec = trace.lock().unwrap();
+    assert_eq!(rec.dropped(), 0, "{name}: ring wrapped — raise the test capacity");
+    if std::env::var("FEDRECYCLE_TRACE").is_ok() {
+        let dir = std::path::Path::new("target").join("trace");
+        obs::sink::write_jsonl(&dir.join(format!("{name}.jsonl")), &rec).unwrap();
+    }
+    rec.deterministic_stream()
+}
+
+/// The in-memory sequential engine at `shards = N`: `run_fl` groups the
+/// reduction into the same contiguous shards and folds partials in shard
+/// order, so it is the reference for the sharded wire topology.
+fn engine_fl(
+    name: &str,
+    seed: u64,
+    shards: usize,
+    faults: Option<FaultPlan>,
+    par: Parallelism,
+) -> RunOut {
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let mut c = cfg(seed, shards, faults, Arc::clone(&trace));
+    c.parallelism = par;
+    let mut t = MockTrainer::new(DIM, K, SPREAD, SIGMA, seed);
+    let out = run_fl(&mut t, vec![0.0; DIM], &c, &|| codec(), name).unwrap();
+    RunOut {
+        stream: stream_of(name, &trace),
+        series: out.series,
+        ledger: out.ledger,
+        theta: out.final_theta,
+    }
+}
+
+/// The MemLink star at `shards = N` (`run_server_rounds` applies the
+/// same tree mirror in-process).
+fn engine_mem(name: &str, seed: u64, shards: usize, faults: Option<FaultPlan>) -> RunOut {
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let c = cfg(seed, shards, faults, Arc::clone(&trace));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, seed);
+    let weights = eval.weights();
+    let (series, ledger, theta) = run_mem_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| codec(),
+        name,
+        None,
+    )
+    .unwrap();
+    RunOut { stream: stream_of(name, &trace), series, ledger, theta }
+}
+
+/// The real sharded topology over TCP loopback: `run_tcp_fl` delegates
+/// to `run_sharded_tcp_fl` when `cfg.shards > 1` (root + N aggregator
+/// threads + K stock worker clients).
+fn engine_tcp(name: &str, seed: u64, shards: usize, faults: Option<FaultPlan>) -> RunOut {
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let c = cfg(seed, shards, faults, Arc::clone(&trace));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, seed);
+    let weights = eval.weights();
+    let (series, ledger, theta) = run_tcp_fl(
+        |_id| MockTrainer::new(DIM, K, SPREAD, SIGMA, seed),
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        &|| codec(),
+        name,
+    )
+    .unwrap();
+    RunOut { stream: stream_of(name, &trace), series, ledger, theta }
+}
+
+/// Bit-diff every stream against the first, reporting the first
+/// diverging event decoded rather than a wall of hex.
+fn assert_streams_identical(streams: &[(&str, &[Encoded])]) {
+    let (ref_name, ref_stream) = &streams[0];
+    assert!(!ref_stream.is_empty(), "{ref_name}: empty deterministic stream");
+    for (name, stream) in &streams[1..] {
+        for (i, (a, b)) in ref_stream.iter().zip(stream.iter()).enumerate() {
+            assert_eq!(
+                a, b,
+                "{name} diverged from {ref_name} at event {i}: {:?} vs {:?}",
+                b.decode(),
+                a.decode()
+            );
+        }
+        assert_eq!(
+            stream.len(),
+            ref_stream.len(),
+            "{name} vs {ref_name}: stream lengths differ"
+        );
+    }
+}
+
+/// The tier fields every engine models identically (wire bytes differ:
+/// in-process engines move no frames, the sharded topology measures real
+/// ones).
+fn modeled(t: &TierTotals) -> (&str, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        t.name.as_str(),
+        t.workers,
+        t.floats_up,
+        t.bits_up,
+        t.floats_down,
+        t.bits_down,
+        t.faults,
+        t.rejoins,
+    )
+}
+
+/// Everything observable except wall-clock and wire bytes must be equal
+/// bit-for-bit between two engines at the same `shards` setting.
+fn assert_runs_match(a: &RunOut, b: &RunOut, an: &str, bn: &str) {
+    assert_streams_identical(&[(an, a.stream.as_slice()), (bn, b.stream.as_slice())]);
+    assert_eq!(a.theta, b.theta, "{an} vs {bn}: final theta diverged");
+    assert!(a.ledger.consistent(), "{an}: ledger inconsistent");
+    assert!(b.ledger.consistent(), "{bn}: ledger inconsistent");
+    assert_eq!(a.ledger.total_floats, b.ledger.total_floats, "{an} vs {bn}");
+    assert_eq!(a.ledger.total_bits, b.ledger.total_bits, "{an} vs {bn}");
+    assert_eq!(a.ledger.scalar_msgs, b.ledger.scalar_msgs, "{an} vs {bn}");
+    assert_eq!(a.ledger.full_msgs, b.ledger.full_msgs, "{an} vs {bn}");
+    assert_eq!(a.ledger.total_faults, b.ledger.total_faults, "{an} vs {bn}");
+    assert_eq!(
+        a.ledger.total_down_floats(),
+        b.ledger.total_down_floats(),
+        "{an} vs {bn}"
+    );
+    assert_eq!(a.ledger.total_down_bits(), b.ledger.total_down_bits(), "{an} vs {bn}");
+    for w in 0..K {
+        assert_eq!(
+            a.ledger.worker_floats(w),
+            b.ledger.worker_floats(w),
+            "{an} vs {bn}: worker {w} uplink floats diverged"
+        );
+        assert_eq!(a.ledger.worker_bits(w), b.ledger.worker_bits(w), "worker {w}");
+        assert_eq!(
+            a.ledger.worker_down_floats(w),
+            b.ledger.worker_down_floats(w),
+            "{an} vs {bn}: worker {w} downlink floats diverged"
+        );
+    }
+    let (ta, tb) = (a.ledger.tier_totals(), b.ledger.tier_totals());
+    assert_eq!(ta.len(), tb.len(), "{an} vs {bn}: tier row counts differ");
+    for (x, y) in ta.iter().zip(&tb) {
+        assert_eq!(modeled(x), modeled(y), "{an} vs {bn}: tier {} diverged", x.name);
+    }
+    assert_eq!(a.series.rounds.len(), b.series.rounds.len(), "{an} vs {bn}");
+    for (x, y) in a.series.rounds.iter().zip(&b.series.rounds) {
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{an} vs {bn}: round {} train loss diverged",
+            x.round
+        );
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "round {}", x.round);
+        assert_eq!(x.test_metric.to_bits(), y.test_metric.to_bits(), "round {}", x.round);
+        assert_eq!(x.floats_up, y.floats_up, "round {}", x.round);
+        assert_eq!(x.floats_down, y.floats_down, "round {}", x.round);
+        assert_eq!(x.full_sends, y.full_sends, "round {}", x.round);
+        assert_eq!(x.scalar_sends, y.scalar_sends, "round {}", x.round);
+        assert_eq!(x.participants, y.participants, "round {}", x.round);
+        assert_eq!(x.faults, y.faults, "round {}", x.round);
+    }
+}
+
+fn count(stream: &[Encoded], pred: impl Fn(&Event) -> bool) -> usize {
+    stream.iter().filter_map(Encoded::decode).filter(|e| pred(e)).count()
+}
+
+/// Clean full-participation runs at `shards` ∈ {2, 3}: the sequential
+/// and scoped-thread branches of `run_fl`, the MemLink star, and the
+/// real sharded TCP topology all emit one bit-identical stream with the
+/// canonical per-round shape.
+#[test]
+fn sharded_runs_are_bit_identical_across_engines() {
+    for shards in [2usize, 3] {
+        let seed = 17 + base_seed();
+        let runs = [
+            (
+                "shard_fl_seq",
+                engine_fl("shard_fl_seq", seed, shards, None, Parallelism::Sequential),
+            ),
+            (
+                "shard_fl_thr",
+                engine_fl("shard_fl_thr", seed, shards, None, Parallelism::Threads(2)),
+            ),
+            ("shard_mem", engine_mem("shard_mem", seed, shards, None)),
+            ("shard_tcp", engine_tcp("shard_tcp", seed, shards, None)),
+        ];
+        for (name, run) in &runs[1..] {
+            assert_runs_match(&runs[0].1, run, runs[0].0, name);
+        }
+        let s = runs[0].1.stream.as_slice();
+        assert_eq!(count(s, |e| matches!(e, Event::RoundStart { .. })), ROUNDS);
+        assert_eq!(count(s, |e| matches!(e, Event::RoundCommit { .. })), ROUNDS);
+        assert_eq!(count(s, |e| matches!(e, Event::BroadcastSent { .. })), K * ROUNDS);
+        assert_eq!(count(s, |e| matches!(e, Event::WorkerUplink { .. })), K * ROUNDS);
+        assert_eq!(count(s, |e| matches!(e, Event::FaultInjected { .. })), 0);
+        // The LBGM path engaged (scalars crossed the tree) and the tier
+        // roll-ups are real rows.
+        assert!(runs[0].1.ledger.scalar_msgs > 0, "shards={shards}: no scalars");
+        assert!(runs[3].1.ledger.wire_up_bytes > 0, "sharded TCP measured no bytes");
+        assert_eq!(runs[0].1.ledger.tier_totals().len(), 2);
+    }
+}
+
+/// The severed-aggregator chaos scenario, modeled worker-side: shard 1's
+/// whole contiguous range goes dark for rounds 3..6 and rejoins for
+/// round 6. All engines replay it bit-identically, the dark rounds
+/// commit with only shard 0's workers, and full participation resumes.
+#[test]
+fn shard_blackout_goes_dark_and_rejoins_cleanly() {
+    let shards = 2usize;
+    let seed = 5 + base_seed();
+    // Shard 1 of a K=5 fleet over 2 shards owns [2, 5).
+    let plan = || Some(scenarios::shard_blackout(1, K, shards, 3, 6));
+    let dark = K - K / shards; // 3 workers in [2, 5)
+    let runs = [
+        (
+            "dark_fl_seq",
+            engine_fl("dark_fl_seq", seed, shards, plan(), Parallelism::Sequential),
+        ),
+        ("dark_mem", engine_mem("dark_mem", seed, shards, plan())),
+        ("dark_tcp", engine_tcp("dark_tcp", seed, shards, plan())),
+    ];
+    for (name, run) in &runs[1..] {
+        assert_runs_match(&runs[0].1, run, runs[0].0, name);
+    }
+    let s = runs[0].1.stream.as_slice();
+    // Swallowed broadcasts still count as sent (they die in the network).
+    assert_eq!(count(s, |e| matches!(e, Event::BroadcastSent { .. })), K * ROUNDS);
+    // Exactly the shard's workers miss exactly the blackout span...
+    assert_eq!(
+        count(s, |e| matches!(e, Event::FaultInjected { t, worker }
+            if (3..6).contains(t) && *worker as usize >= K - dark)),
+        3 * dark
+    );
+    assert_eq!(count(s, |e| matches!(e, Event::FaultInjected { .. })), 3 * dark);
+    // ...every dark round commits with only shard 0's workers...
+    assert_eq!(
+        count(s, |e| matches!(e, Event::RoundCommit { t, participants, faults }
+            if (3..6).contains(t)
+                && *participants == (K - dark) as u32
+                && *faults == dark as u32)),
+        3
+    );
+    // ...and the whole fleet is back from round 6 on.
+    assert_eq!(
+        count(s, |e| matches!(e, Event::RoundCommit { t, participants, .. }
+            if *t >= 6 && *participants == K as u32)),
+        ROUNDS - 6
+    );
+    assert_eq!(runs[0].1.ledger.total_faults, (3 * dark) as u64);
+}
+
+/// A trunk that genuinely dies (the aggregator process is gone, not just
+/// its workers): the root marks the whole shard absent every round —
+/// without hanging on the dead link — commits with the surviving shard,
+/// and tears down cleanly. Built by hand from MemLink trunks: shard 0 is
+/// a real aggregator driving real protocol workers; shard 1's trunk peer
+/// is dropped before the first round.
+#[test]
+fn severed_aggregator_marks_its_whole_shard_absent() {
+    let shards = 2usize;
+    let seed = 23 + base_seed();
+    let trace = obs::shared(obs::recorder::DEFAULT_CAPACITY);
+    let c = cfg(seed, shards, None, Arc::clone(&trace));
+    let mut eval = MockTrainer::new(DIM, K, SPREAD, 0.0, seed);
+    let weights = eval.weights();
+    let (lo, hi) = (0usize, K / shards); // shard 0 owns [0, 2)
+
+    // Shard 0: a real mid-tier node over MemLinks, serving real
+    // `run_worker` clients through the flat handshake.
+    let (root_side0, agg_side0) = MemLink::pair();
+    let mut worker_handles = Vec::new();
+    let mut shard_links: Vec<Box<dyn Link>> = Vec::new();
+    for id in lo..hi {
+        let (agg_end, wrk_end) = MemLink::pair();
+        let mut wlink: Box<dyn Link> = Box::new(wrk_end);
+        worker_handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut t = MockTrainer::new(DIM, K, SPREAD, SIGMA, seed);
+            run_worker(wlink.as_mut(), id, &mut t, Box::new(Identity))
+        }));
+        shard_links.push(Box::new(agg_end));
+    }
+    let agg_cfg = c.clone();
+    let agg_weights = weights.clone();
+    let agg = std::thread::spawn(move || -> anyhow::Result<()> {
+        let mut root: Box<dyn Link> = Box::new(agg_side0);
+        for (i, link) in shard_links.iter_mut().enumerate() {
+            link.set_recv_timeout(Some(Duration::from_secs(30)))?;
+            let w = handshake_one(link.as_mut(), K, DIM, &agg_cfg)?;
+            anyhow::ensure!(w == lo + i, "link {i} handshook as worker {w}");
+            link.set_recv_timeout(None)?;
+        }
+        run_aggregator_rounds(
+            root.as_mut(),
+            &mut shard_links,
+            0,
+            lo,
+            DIM,
+            &agg_weights,
+            &agg_cfg,
+            Duration::from_secs(60),
+        )
+    });
+
+    // Shard 1: the trunk's far side is dropped — a dead aggregator.
+    let (root_side1, dead_side) = MemLink::pair();
+    drop(dead_side);
+    let mut trunks: Vec<Box<dyn Link>> =
+        vec![Box::new(root_side0), Box::new(root_side1)];
+    let (series, ledger, theta) = run_sharded_root_rounds(
+        &mut trunks,
+        &mut eval,
+        vec![0.0; DIM],
+        weights,
+        &c,
+        Duration::from_secs(60),
+        "dead_trunk",
+    )
+    .unwrap();
+    agg.join().unwrap().unwrap();
+    for h in worker_handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // Every round committed with exactly the surviving shard's workers;
+    // the dead shard's are fault-counted each round.
+    assert_eq!(series.rounds.len(), ROUNDS);
+    for r in &series.rounds {
+        assert_eq!(r.participants, hi - lo, "round {}", r.round);
+        assert_eq!(r.faults, K - (hi - lo), "round {}", r.round);
+    }
+    assert_eq!(ledger.total_faults, (ROUNDS * (K - (hi - lo))) as u64);
+    assert!(ledger.consistent());
+    assert!(theta.iter().all(|x| x.is_finite()), "theta poisoned by the dead trunk");
+    // The surviving shard kept training: theta moved off the origin.
+    assert!(theta.iter().any(|&x| x != 0.0), "no aggregation happened");
+}
+
+/// Rerun determinism: the same seed reproduces the sharded TCP stream
+/// bit-for-bit (timestamps and sequence numbers live outside the parity
+/// surface).
+#[test]
+fn repeat_sharded_runs_reproduce_the_stream() {
+    let seed = 29 + base_seed();
+    let a = engine_tcp("shard_repeat_a", seed, 2, None);
+    let b = engine_tcp("shard_repeat_b", seed, 2, None);
+    assert_runs_match(&a, &b, "shard_repeat_a", "shard_repeat_b");
+}

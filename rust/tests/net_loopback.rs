@@ -189,6 +189,23 @@ fn tcp_loopback_matches_sequential_sampled_topk() {
 }
 
 #[test]
+fn sharded_tcp_matches_in_memory_at_same_shards() {
+    // `--shards 2`: `run_tcp_fl` delegates to the aggregation tree (root
+    // + 2 mid-tier aggregators + K workers). The parity reference is the
+    // in-memory engine at the *same* `shards` setting — it mirrors the
+    // tree's two-stage reduction exactly (`tests/agg_tree.rs` is the full
+    // suite; this pins the delegation seam in the loopback suite).
+    let mut c = cfg(0.4, 1.0, 19);
+    c.shards = 2;
+    let seq = sequential(&c, &|| Box::new(Identity));
+    let net = deployed_tcp(&c, &|| Box::new(Identity));
+    assert_deployment_matches(&seq, &net);
+    let ledger = &net.1;
+    assert!(ledger.scalar_msgs > 0, "LBGM path never crossed the tree");
+    assert!(ledger.wire_up_bytes > 0, "no measured uplink bytes");
+}
+
+#[test]
 fn sim_link_straggler_run_is_bit_identical() {
     // A lossy, slow, high-latency profile changes wall-clock only: the
     // shaped MemLink deployment still reproduces the sequential run
